@@ -1,0 +1,97 @@
+//! Perf probe: phase-by-phase timing of the Algorithm-1 load path
+//! (hardware perf counters are unavailable in this container, so the
+//! §Perf pass uses section timing over many iterations).
+//!
+//! ```sh
+//! cargo run --release --example profile_load
+//! ```
+
+use abhsf::abhsf::cost::CostModel;
+use abhsf::abhsf::{load_csr, store_data, visit_elements, AbhsfData};
+use abhsf::formats::Csr;
+use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::h5::H5Reader;
+
+fn time<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:<38} {:>9.3} ms/iter", per * 1e3);
+    per
+}
+
+fn main() {
+    let gen = KroneckerGen::new(SeedMatrix::cage_like(24, 5), 2);
+    let map = gen.balanced_rowwise(1);
+    let coo = gen.local_coo(&map, 0);
+    let nnz = coo.nnz() as f64;
+    let data = AbhsfData::from_coo(&coo, 16, &CostModel::default()).unwrap();
+    let path = std::env::temp_dir().join("profile-load.h5spm");
+    store_data(&path, &data).unwrap();
+    let fsize = std::fs::metadata(&path).unwrap().len();
+    println!("workload: {} nnz, file {} bytes, s=16\n", nnz as u64, fsize);
+    let iters = 200;
+
+    // Phase 1: container open (superblock + directory parse).
+    time("open (directory parse)", iters, || {
+        std::hint::black_box(H5Reader::open(&path).unwrap());
+    });
+
+    // Phase 2: raw dataset reads (I/O + CRC + typed decode).
+    time("read_all payload datasets", iters, || {
+        let r = H5Reader::open(&path).unwrap();
+        std::hint::black_box(r.read_all::<u16>("coo_lrows").unwrap());
+        std::hint::black_box(r.read_all::<u16>("coo_lcols").unwrap());
+        std::hint::black_box(r.read_all::<f64>("coo_vals").unwrap());
+        std::hint::black_box(r.read_all::<u8>("bitmap_bitmap").unwrap());
+        std::hint::black_box(r.read_all::<f64>("bitmap_vals").unwrap());
+        std::hint::black_box(r.read_all::<f64>("dense_vals").unwrap());
+        std::hint::black_box(r.read_all::<u16>("csr_lcolinds").unwrap());
+        std::hint::black_box(r.read_all::<u32>("csr_rowptrs").unwrap());
+        std::hint::black_box(r.read_all::<f64>("csr_vals").unwrap());
+    });
+
+    // Phase 2b: same with checksum verification disabled.
+    time("read_all (no CRC verify)", iters, || {
+        let mut r = H5Reader::open(&path).unwrap();
+        r.verify_checksums = false;
+        std::hint::black_box(r.read_all::<u16>("coo_lrows").unwrap());
+        std::hint::black_box(r.read_all::<u16>("coo_lcols").unwrap());
+        std::hint::black_box(r.read_all::<f64>("coo_vals").unwrap());
+        std::hint::black_box(r.read_all::<u8>("bitmap_bitmap").unwrap());
+        std::hint::black_box(r.read_all::<f64>("bitmap_vals").unwrap());
+        std::hint::black_box(r.read_all::<f64>("dense_vals").unwrap());
+        std::hint::black_box(r.read_all::<u16>("csr_lcolinds").unwrap());
+        std::hint::black_box(r.read_all::<u32>("csr_rowptrs").unwrap());
+        std::hint::black_box(r.read_all::<f64>("csr_vals").unwrap());
+    });
+
+    // Phase 3: streaming element decode only (no CSR assembly).
+    time("visit_elements (decode only)", iters, || {
+        let r = H5Reader::open(&path).unwrap();
+        let mut acc = 0.0f64;
+        visit_elements(&r, |_, _, v| acc += v).unwrap();
+        std::hint::black_box(acc);
+    });
+
+    // Phase 4: the full Algorithm 1.
+    let per = time("load_csr (Algorithm 1, full)", iters, || {
+        let r = H5Reader::open(&path).unwrap();
+        std::hint::black_box(load_csr(&r).unwrap());
+    });
+    println!(
+        "\nAlgorithm 1: {:.1} Mnnz/s | {:.0} MB/s of file bytes",
+        nnz / per / 1e6,
+        fsize as f64 / per / 1e6
+    );
+
+    // References: in-memory conversion and raw file read.
+    time("COO -> CSR (in-memory reference)", iters, || {
+        std::hint::black_box(Csr::from_coo(&coo));
+    });
+    time("std::fs::read (raw I/O bound)", iters, || {
+        std::hint::black_box(std::fs::read(&path).unwrap());
+    });
+}

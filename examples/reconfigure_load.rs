@@ -1,0 +1,51 @@
+//! Mini Figure 1: store once, reload under different configurations and
+//! strategies, reporting wall times and the calibrated Lustre simulation.
+//!
+//! ```sh
+//! cargo run --release --example reconfigure_load
+//! ```
+
+use abhsf::experiments::{run_fig1, Fig1Config};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Fig1Config {
+        seed_n: 14,
+        order: 2,
+        p_store: 6,
+        p_loads: vec![2, 3, 4, 6, 8],
+        block_size: 32,
+        rng_seed: 2014,
+        reps: 3,
+    };
+    let rows = run_fig1(&cfg, true)?;
+
+    // Assert the paper's qualitative conclusions on the simulated times.
+    let same = rows
+        .iter()
+        .find(|r| r.scenario == "same-config")
+        .expect("same-config row");
+    let indep: Vec<_> = rows
+        .iter()
+        .filter(|r| r.scenario == "diff/independent")
+        .collect();
+    let coll: Vec<_> = rows
+        .iter()
+        .filter(|r| r.scenario == "diff/collective")
+        .collect();
+    for (i, c) in indep.iter().zip(&coll) {
+        assert!(same.sim_s < i.sim_s, "same-config must be fastest");
+        assert!(i.sim_s < c.sim_s, "independent must beat collective");
+    }
+    let tmin = indep.iter().map(|r| r.sim_s).fold(f64::INFINITY, f64::min);
+    let tmax = indep.iter().map(|r| r.sim_s).fold(0.0, f64::max);
+    println!(
+        "\nindependent flatness: max/min = {:.3} (paper: nearly independent of P)",
+        tmax / tmin
+    );
+    println!(
+        "vs proportional bound: T_indep_max = {:.3} s << T_same x P = {:.3} s",
+        tmax,
+        same.sim_s * indep.last().unwrap().p_load as f64
+    );
+    Ok(())
+}

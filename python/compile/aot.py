@@ -1,0 +1,156 @@
+"""AOT pipeline: lower the Layer-2 JAX functions to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); the Rust coordinator loads the
+text with `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+client, and executes it on the request path with no Python anywhere.
+
+HLO text — NOT `lowered.compiler_ir(...).serialize()` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which
+the pinned xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo/ and its README.
+
+Every artifact is registered in `manifest.json` with its input/output
+shapes so the Rust runtime can size its buffers without re-parsing HLO.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Artifact configurations. Shapes are chosen so that (a) the end-to-end
+# example's matrix fits, (b) VMEM-per-grid-step stays TPU-plausible
+# (DESIGN.md §Perf), and (c) CPU interpret-mode execution stays fast.
+CONFIGS = [
+    # name, R (block rows), K (blocks/row), s (block size), n (vector len)
+    # Low-K variants suit block-banded matrices; the K=R*? full-width
+    # variants accept any structure (cage-like Kronecker rows scatter
+    # across most block columns).
+    {"name": "spmv_r64_k8_s16_n1024", "r": 64, "k": 8, "s": 16, "n": 1024},
+    {"name": "spmv_r32_k8_s16_n512", "r": 32, "k": 8, "s": 16, "n": 512},
+    {"name": "spmv_r16_k4_s8_n128", "r": 16, "k": 4, "s": 8, "n": 128},
+    {"name": "spmv_r64_k64_s16_n1024", "r": 64, "k": 64, "s": 16, "n": 1024},
+    {"name": "spmv_r32_k32_s16_n512", "r": 32, "k": 32, "s": 16, "n": 512},
+]
+
+ASSEMBLE_CONFIGS = [
+    # name, Z (blocks), t (padded triplets/block), s
+    {"name": "assemble_z128_t64_s16", "z": 128, "t": 64, "s": 16},
+    {"name": "assemble_z32_t32_s8", "z": 32, "t": 32, "s": 8},
+]
+
+POWER_CONFIGS = [
+    # closed iteration: R*s == n
+    {"name": "power_r64_k8_s16_n1024", "r": 64, "k": 8, "s": 16, "n": 1024},
+]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_spmv(cfg):
+    r, k, s, n = cfg["r"], cfg["k"], cfg["s"], cfg["n"]
+    lowered = jax.jit(model.spmv).lower(f32(r, k, s, s), i32(r, k), f32(n))
+    return lowered, {
+        "kind": "spmv",
+        "inputs": [
+            {"name": "blocks", "dtype": "f32", "shape": [r, k, s, s]},
+            {"name": "cols", "dtype": "i32", "shape": [r, k]},
+            {"name": "x", "dtype": "f32", "shape": [n]},
+        ],
+        "outputs": [{"name": "y", "dtype": "f32", "shape": [r * s]}],
+        "params": {"r": r, "k": k, "s": s, "n": n},
+    }
+
+
+def lower_power(cfg):
+    r, k, s, n = cfg["r"], cfg["k"], cfg["s"], cfg["n"]
+    assert r * s == n, "power iteration needs R*s == n"
+    lowered = jax.jit(model.power_step).lower(f32(r, k, s, s), i32(r, k), f32(n))
+    return lowered, {
+        "kind": "power_step",
+        "inputs": [
+            {"name": "blocks", "dtype": "f32", "shape": [r, k, s, s]},
+            {"name": "cols", "dtype": "i32", "shape": [r, k]},
+            {"name": "x", "dtype": "f32", "shape": [n]},
+        ],
+        "outputs": [
+            {"name": "x_next", "dtype": "f32", "shape": [n]},
+            {"name": "norm", "dtype": "f32", "shape": []},
+        ],
+        "params": {"r": r, "k": k, "s": s, "n": n},
+    }
+
+
+def lower_assemble(cfg):
+    z, t, s = cfg["z"], cfg["t"], cfg["s"]
+    fn = functools.partial(model.assemble, s=s)
+    lowered = jax.jit(fn).lower(i32(z, t), i32(z, t), f32(z, t))
+    return lowered, {
+        "kind": "assemble",
+        "inputs": [
+            {"name": "lrows", "dtype": "i32", "shape": [z, t]},
+            {"name": "lcols", "dtype": "i32", "shape": [z, t]},
+            {"name": "vals", "dtype": "f32", "shape": [z, t]},
+        ],
+        "outputs": [{"name": "blocks", "dtype": "f32", "shape": [z, s, s]}],
+        "params": {"z": z, "t": t, "s": s},
+    }
+
+
+def build_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    jobs = (
+        [(c, lower_spmv) for c in CONFIGS]
+        + [(c, lower_power) for c in POWER_CONFIGS]
+        + [(c, lower_assemble) for c in ASSEMBLE_CONFIGS]
+    )
+    for cfg, lower in jobs:
+        lowered, meta = lower(cfg)
+        text = to_hlo_text(lowered)
+        fname = cfg["name"] + ".hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        meta["name"] = cfg["name"]
+        meta["file"] = fname
+        manifest["artifacts"].append(meta)
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

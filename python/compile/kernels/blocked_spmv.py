@@ -1,0 +1,62 @@
+"""Pallas kernel: blocked SpMV over the ABHSF block-dense representation.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hot loop
+is per-block decode + multiply on a CPU cluster. On TPU we tile by *block
+row*: one grid step holds a block row's K dense s*s blocks plus the full
+input vector in VMEM, contracts them on the MXU, and writes one s-segment
+of y. BlockSpec expresses the HBM->VMEM schedule that the paper's code
+does with per-process loops.
+
+VMEM per grid step ~= (K*s*s + n + s) * 4 bytes; K=16, s=32, n=16384 ->
+~2.1 MiB, comfortably inside a TPU core's ~16 MiB VMEM.
+
+Must be lowered with interpret=True for CPU PJRT execution (real TPU
+lowering emits a Mosaic custom-call the CPU plugin cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(cols_ref, blocks_ref, x_ref, y_ref, *, k, s):
+    """One grid step: y[r*s:(r+1)*s] = sum_k blocks[r,k] @ x[cols[r,k]*s : +s]."""
+    acc = jnp.zeros((s,), dtype=y_ref.dtype)
+    for kk in range(k):  # static K, unrolled
+        c = cols_ref[0, kk]
+        xseg = x_ref[pl.dslice(c * s, s)]
+        acc = acc + blocks_ref[0, kk] @ xseg
+    y_ref[...] = acc
+
+
+def blocked_spmv(blocks, cols, x, *, interpret=True):
+    """Blocked SpMV via a Pallas kernel; matches `ref.blocked_spmv_ref`.
+
+    Args:
+      blocks: f32[R, K, s, s] padded dense blocks.
+      cols: i32[R, K] block-column index per block.
+      x: f32[n] input vector (n a multiple of s).
+      interpret: lower in interpret mode (required for CPU PJRT).
+
+    Returns:
+      f32[R * s].
+    """
+    r, k, s, s2 = blocks.shape
+    assert s == s2, f"blocks must be square, got {s}x{s2}"
+    (n,) = x.shape
+    assert n % s == 0, f"n={n} not a multiple of s={s}"
+    kernel = functools.partial(_spmv_kernel, k=k, s=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),  # cols
+            pl.BlockSpec((1, k, s, s), lambda i: (i, 0, 0, 0)),  # blocks
+            pl.BlockSpec((n,), lambda i: (0,)),  # x, whole vector
+        ],
+        out_specs=pl.BlockSpec((s,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r * s,), x.dtype),
+        interpret=interpret,
+    )(cols, blocks, x)

@@ -1,0 +1,62 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These definitions are the correctness contract: pytest compares every
+Pallas kernel against them (exact math, no kernel tricks), and the Rust
+side validates the AOT artifacts against its own native implementation of
+the same contract.
+"""
+
+import jax.numpy as jnp
+
+
+def blocked_spmv_ref(blocks, cols, x):
+    """Reference blocked SpMV.
+
+    Args:
+      blocks: f32[R, K, s, s] — up to K dense s*s blocks per block row
+        (zero-padded when a block row has fewer).
+      cols: i32[R, K] — block-column index of each block (padding entries
+        must point at any valid column, conventionally 0, with zero
+        blocks).
+      x: f32[n] — input vector, n a multiple of s.
+
+    Returns:
+      f32[R * s] — y = A @ x for the block-sparse matrix A.
+    """
+    r, k, s, _ = blocks.shape
+    xb = x.reshape(-1, s)  # [n/s, s]
+    xsel = xb[cols]  # [R, K, s]
+    y = jnp.einsum("rkij,rkj->ri", blocks, xsel)
+    return y.reshape(r * s)
+
+
+def block_assemble_ref(lrows, lcols, vals, s):
+    """Reference block assembly (ABHSF COO-block decode).
+
+    Scatters per-block COO triplets into dense s*s blocks. Padding slots
+    must carry val == 0 (their coordinates are ignored by construction
+    since they contribute zero).
+
+    Args:
+      lrows: i32[Z, t] — in-block row index per element slot.
+      lcols: i32[Z, t] — in-block column index per element slot.
+      vals: f32[Z, t] — element values, 0 for padding slots.
+      s: int — block size.
+
+    Returns:
+      f32[Z, s, s] — dense blocks.
+    """
+    oh_r = (lrows[..., None] == jnp.arange(s)).astype(vals.dtype)  # [Z,t,s]
+    oh_c = (lcols[..., None] == jnp.arange(s)).astype(vals.dtype)  # [Z,t,s]
+    return jnp.einsum("zti,ztj,zt->zij", oh_r, oh_c, vals)
+
+
+def power_step_ref(blocks, cols, x):
+    """One normalized power-iteration step over the blocked matrix.
+
+    Returns (x_next, norm) with x_next = A@x / ||A@x||_2 (zero-safe).
+    """
+    y = blocked_spmv_ref(blocks, cols, x)
+    norm = jnp.sqrt(jnp.sum(y * y))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    return y / safe, norm

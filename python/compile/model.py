@@ -1,0 +1,62 @@
+"""Layer 2: the JAX compute graph a loaded matrix feeds.
+
+The loading paper's matrices exist to be computed with after restart; the
+canonical downstream consumer is SpMV / power iteration. This module
+composes the Layer-1 Pallas kernels into the functions that get
+AOT-lowered (aot.py) and executed from the Rust coordinator via PJRT:
+
+* `spmv` — y = A @ x over the blocked representation (Pallas kernel);
+* `power_step` — one normalized power-iteration step (kernel + jnp);
+* `assemble` — ABHSF COO-block decode into dense blocks (Pallas kernel);
+* `assemble_spmv` — fused decode + SpMV, the full "load consumes file
+  bytes, compute consumes blocks" path in one HLO module.
+
+All functions are shape-polymorphic in Python but are lowered at fixed
+shapes chosen in `aot.py` (PJRT artifacts are static-shape).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.block_assemble import block_assemble
+from compile.kernels.blocked_spmv import blocked_spmv
+
+
+def spmv(blocks, cols, x):
+    """y = A @ x; blocks f32[R,K,s,s], cols i32[R,K], x f32[n] -> f32[R*s]."""
+    return (blocked_spmv(blocks, cols, x),)
+
+
+def power_step(blocks, cols, x):
+    """One normalized power-iteration step.
+
+    Returns (x_next f32[R*s], norm f32[]). R*s must equal n for the
+    iteration to be closed under repeated application.
+    """
+    y = blocked_spmv(blocks, cols, x)
+    norm = jnp.sqrt(jnp.sum(y * y))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    return y / safe, norm
+
+
+def assemble(lrows, lcols, vals, *, s):
+    """Dense blocks from padded COO triplets; see block_assemble."""
+    return (block_assemble(lrows, lcols, vals, s),)
+
+
+def assemble_spmv(lrows, lcols, vals, cols, x, *, s, k):
+    """Decode COO-triplet blocks, then SpMV — one fused HLO module.
+
+    Args:
+      lrows/lcols/vals: [Z, t] padded triplets, Z = R*K blocks in block-row
+        major order (K per block row, zero-padded).
+      cols: i32[R, K] block-column indexes.
+      x: f32[n].
+
+    Returns:
+      (y f32[R*s],)
+    """
+    z, _t = lrows.shape
+    r = z // k
+    dense = block_assemble(lrows, lcols, vals, s)  # [Z, s, s]
+    blocks = dense.reshape(r, k, s, s)
+    return (blocked_spmv(blocks, cols, x),)

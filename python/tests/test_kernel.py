@@ -1,0 +1,177 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and data; fixed cases pin the exact contracts
+(padding semantics, dtype handling, degenerate shapes).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.block_assemble import block_assemble
+from compile.kernels.blocked_spmv import blocked_spmv
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def make_spmv_case(rng, r, k, s, nb):
+    """Random blocked matrix with nb block columns (n = nb * s)."""
+    blocks = rng.normal(size=(r, k, s, s)).astype(np.float32)
+    cols = rng.integers(0, nb, size=(r, k)).astype(np.int32)
+    x = rng.normal(size=(nb * s,)).astype(np.float32)
+    return jnp.asarray(blocks), jnp.asarray(cols), jnp.asarray(x)
+
+
+class TestBlockedSpmv:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        r=st.integers(1, 6),
+        k=st.integers(1, 5),
+        s=st.sampled_from([2, 4, 8, 16]),
+        nb=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, r, k, s, nb, seed):
+        rng = np.random.default_rng(seed)
+        blocks, cols, x = make_spmv_case(rng, r, k, s, nb)
+        got = blocked_spmv(blocks, cols, x)
+        want = ref.blocked_spmv_ref(blocks, cols, x)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_matches_dense_oracle(self):
+        """Assemble the implied dense matrix and compare with full matmul."""
+        rng = np.random.default_rng(7)
+        r, k, s, nb = 4, 3, 8, 4
+        blocks, cols, x = make_spmv_case(rng, r, k, s, nb)
+        dense = np.zeros((r * s, nb * s), dtype=np.float64)
+        for ri in range(r):
+            for ki in range(k):
+                c = int(cols[ri, ki])
+                dense[ri * s:(ri + 1) * s, c * s:(c + 1) * s] += np.asarray(
+                    blocks[ri, ki], dtype=np.float64
+                )
+        want = dense @ np.asarray(x, dtype=np.float64)
+        got = blocked_spmv(blocks, cols, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_padding_blocks_are_inert(self):
+        rng = np.random.default_rng(3)
+        blocks, cols, x = make_spmv_case(rng, 3, 4, 4, 3)
+        # Zero out the last two blocks of each row, point them anywhere.
+        blocks = blocks.at[:, 2:].set(0.0)
+        cols2 = cols.at[:, 2:].set(0)
+        y1 = blocked_spmv(blocks, cols, x)
+        y2 = blocked_spmv(blocks, cols2, x)
+        np.testing.assert_allclose(y1, y2, **TOL)
+
+    def test_identity_blocks(self):
+        s, nb = 8, 4
+        r, k = nb, 1
+        blocks = jnp.eye(s, dtype=jnp.float32)[None, None].repeat(r, axis=0)
+        cols = jnp.arange(r, dtype=jnp.int32)[:, None]
+        x = jnp.arange(nb * s, dtype=jnp.float32)
+        y = blocked_spmv(blocks, cols, x)
+        np.testing.assert_allclose(y, x, **TOL)
+
+    def test_single_block(self):
+        rng = np.random.default_rng(11)
+        blocks, cols, x = make_spmv_case(rng, 1, 1, 2, 1)
+        got = blocked_spmv(blocks, cols, x)
+        want = np.asarray(blocks[0, 0]) @ np.asarray(x)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(AssertionError):
+            blocked_spmv(
+                jnp.zeros((1, 1, 4, 4), jnp.float32),
+                jnp.zeros((1, 1), jnp.int32),
+                jnp.zeros((6,), jnp.float32),  # not a multiple of s
+            )
+
+
+class TestBlockAssemble:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        z=st.integers(1, 8),
+        t=st.integers(1, 32),
+        s=st.sampled_from([2, 4, 8, 16]),
+        fill=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, z, t, s, fill, seed):
+        rng = np.random.default_rng(seed)
+        lrows = rng.integers(0, s, size=(z, t)).astype(np.int32)
+        lcols = rng.integers(0, s, size=(z, t)).astype(np.int32)
+        vals = rng.normal(size=(z, t)).astype(np.float32)
+        # Zero a suffix to emulate padding.
+        keep = int(round(fill * t))
+        vals[:, keep:] = 0.0
+        got = block_assemble(
+            jnp.asarray(lrows), jnp.asarray(lcols), jnp.asarray(vals), s
+        )
+        want = ref.block_assemble_ref(
+            jnp.asarray(lrows), jnp.asarray(lcols), jnp.asarray(vals), s
+        )
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_scatter_semantics_exact(self):
+        """Hand-built case: distinct coordinates land exactly."""
+        s = 4
+        lrows = jnp.asarray([[0, 1, 3, 0]], dtype=jnp.int32)
+        lcols = jnp.asarray([[0, 2, 3, 0]], dtype=jnp.int32)
+        vals = jnp.asarray([[1.0, 2.0, 3.0, 0.0]], dtype=jnp.float32)
+        out = np.asarray(block_assemble(lrows, lcols, vals, s))[0]
+        want = np.zeros((s, s), dtype=np.float32)
+        want[0, 0] = 1.0
+        want[1, 2] = 2.0
+        want[3, 3] = 3.0
+        np.testing.assert_array_equal(out, want)
+
+    def test_duplicate_coordinates_sum(self):
+        """Matmul scatter accumulates duplicates (COO semantics)."""
+        s = 2
+        lrows = jnp.asarray([[1, 1]], dtype=jnp.int32)
+        lcols = jnp.asarray([[0, 0]], dtype=jnp.int32)
+        vals = jnp.asarray([[2.0, 3.0]], dtype=jnp.float32)
+        out = np.asarray(block_assemble(lrows, lcols, vals, s))[0]
+        assert out[1, 0] == 5.0
+
+    def test_all_padding_gives_zero_block(self):
+        s = 4
+        lrows = jnp.zeros((2, 5), jnp.int32)
+        lcols = jnp.zeros((2, 5), jnp.int32)
+        vals = jnp.zeros((2, 5), jnp.float32)
+        out = np.asarray(block_assemble(lrows, lcols, vals, s))
+        assert (out == 0).all()
+
+
+class TestComposition:
+    def test_assemble_then_spmv_matches_ref_pipeline(self):
+        """The fused assemble_spmv model path equals ref composition."""
+        from compile import model
+
+        rng = np.random.default_rng(5)
+        r, k, s, t = 3, 2, 4, 6
+        z = r * k
+        lrows = rng.integers(0, s, size=(z, t)).astype(np.int32)
+        lcols = rng.integers(0, s, size=(z, t)).astype(np.int32)
+        vals = rng.normal(size=(z, t)).astype(np.float32)
+        vals[:, 4:] = 0.0
+        cols = rng.integers(0, 3, size=(r, k)).astype(np.int32)
+        x = rng.normal(size=(3 * s,)).astype(np.float32)
+        (got,) = model.assemble_spmv(
+            jnp.asarray(lrows),
+            jnp.asarray(lcols),
+            jnp.asarray(vals),
+            jnp.asarray(cols),
+            jnp.asarray(x),
+            s=s,
+            k=k,
+        )
+        dense = ref.block_assemble_ref(
+            jnp.asarray(lrows), jnp.asarray(lcols), jnp.asarray(vals), s
+        ).reshape(r, k, s, s)
+        want = ref.blocked_spmv_ref(dense, jnp.asarray(cols), jnp.asarray(x))
+        np.testing.assert_allclose(got, want, **TOL)

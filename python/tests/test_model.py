@@ -1,0 +1,132 @@
+"""Layer-2 model tests: shapes, power-iteration math, AOT lowering."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+class TestModel:
+    def test_spmv_shapes(self):
+        r, k, s, n = 3, 2, 4, 16
+        (y,) = model.spmv(
+            jnp.zeros((r, k, s, s), jnp.float32),
+            jnp.zeros((r, k), jnp.int32),
+            jnp.zeros((n,), jnp.float32),
+        )
+        assert y.shape == (r * s,)
+
+    def test_power_step_normalizes(self):
+        rng = np.random.default_rng(0)
+        r, k, s = 4, 2, 4
+        n = r * s
+        blocks = jnp.asarray(rng.normal(size=(r, k, s, s)).astype(np.float32))
+        cols = jnp.asarray(rng.integers(0, n // s, size=(r, k)).astype(np.int32))
+        x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        x2, norm = model.power_step(blocks, cols, x)
+        assert x2.shape == (n,)
+        assert float(norm) > 0
+        np.testing.assert_allclose(float(jnp.linalg.norm(x2)), 1.0, rtol=1e-5)
+        # Reference agreement.
+        want, wnorm = ref.power_step_ref(blocks, cols, x)
+        np.testing.assert_allclose(x2, want, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(float(norm), float(wnorm), rtol=2e-5)
+
+    def test_power_step_zero_matrix_is_safe(self):
+        r, k, s = 2, 1, 4
+        n = r * s
+        x2, norm = model.power_step(
+            jnp.zeros((r, k, s, s), jnp.float32),
+            jnp.zeros((r, k), jnp.int32),
+            jnp.ones((n,), jnp.float32),
+        )
+        assert float(norm) == 0.0
+        assert not bool(jnp.isnan(x2).any())
+
+    def test_power_iteration_converges_on_diagonal(self):
+        """Dominant eigenvector of diag(1..n) is e_n."""
+        s, r, k = 4, 2, 1
+        n = r * s
+        diag = jnp.arange(1, n + 1, dtype=jnp.float32)
+        blocks = jnp.stack(
+            [jnp.diag(diag[i * s:(i + 1) * s])[None] for i in range(r)]
+        )  # [r, 1, s, s]
+        cols = jnp.arange(r, dtype=jnp.int32)[:, None]
+        x = jnp.ones((n,), jnp.float32) / np.sqrt(n)
+        norm = 0.0
+        for _ in range(120):
+            x, norm = model.power_step(blocks, cols, x)
+        assert float(norm) == pytest.approx(float(n), rel=1e-2)
+        assert abs(float(x[-1])) == pytest.approx(1.0, rel=1e-2)
+
+
+class TestAot:
+    def test_hlo_text_lowering(self):
+        cfg = {"name": "t", "r": 2, "k": 2, "s": 4, "n": 16}
+        lowered, meta = aot.lower_spmv(cfg)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "HloModule" in text
+        assert meta["outputs"][0]["shape"] == [8]
+
+    def test_manifest_schema(self, tmp_path):
+        # Build a reduced artifact set into a temp dir and check the
+        # manifest describes every file.
+        old_configs = aot.CONFIGS, aot.ASSEMBLE_CONFIGS, aot.POWER_CONFIGS
+        aot.CONFIGS = [{"name": "spmv_tiny", "r": 2, "k": 2, "s": 4, "n": 16}]
+        aot.ASSEMBLE_CONFIGS = [{"name": "asm_tiny", "z": 4, "t": 8, "s": 4}]
+        aot.POWER_CONFIGS = [{"name": "pow_tiny", "r": 2, "k": 2, "s": 4, "n": 8}]
+        try:
+            aot.build_all(str(tmp_path))
+        finally:
+            aot.CONFIGS, aot.ASSEMBLE_CONFIGS, aot.POWER_CONFIGS = old_configs
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["format"] == "hlo-text"
+        assert len(manifest["artifacts"]) == 3
+        for art in manifest["artifacts"]:
+            assert (tmp_path / art["file"]).exists()
+            assert {"name", "kind", "inputs", "outputs", "params"} <= set(art)
+
+    def test_repo_artifacts_match_manifest(self):
+        """If `make artifacts` has run, the manifest must be consistent."""
+        art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        manifest_path = os.path.join(art_dir, "manifest.json")
+        if not os.path.exists(manifest_path):
+            pytest.skip("artifacts not built")
+        manifest = json.loads(open(manifest_path).read())
+        for art in manifest["artifacts"]:
+            path = os.path.join(art_dir, art["file"])
+            assert os.path.exists(path), art["file"]
+            head = open(path).read(64)
+            assert head.startswith("HloModule"), art["file"]
+
+
+class TestNumericsAcrossDtypes:
+    def test_f32_inputs_required_by_artifacts(self):
+        """The artifact contract is f32/i32; confirm kernels accept and
+        produce f32 without silent upcasts."""
+        r, k, s, n = 2, 1, 4, 8
+        (y,) = model.spmv(
+            jnp.zeros((r, k, s, s), jnp.float32),
+            jnp.zeros((r, k), jnp.int32),
+            jnp.zeros((n,), jnp.float32),
+        )
+        assert y.dtype == jnp.float32
+
+    def test_kernel_f64_mode(self):
+        """Interpret-mode kernels also run in f64 (used by oracle checks)."""
+        with jax.enable_x64(True):
+            rng = np.random.default_rng(1)
+            blocks = jnp.asarray(rng.normal(size=(2, 2, 4, 4)))
+            cols = jnp.asarray(rng.integers(0, 2, size=(2, 2)).astype(np.int32))
+            x = jnp.asarray(rng.normal(size=(8,)))
+            from compile.kernels.blocked_spmv import blocked_spmv
+
+            got = blocked_spmv(blocks, cols, x)
+            want = ref.blocked_spmv_ref(blocks, cols, x)
+            np.testing.assert_allclose(got, want, rtol=1e-12)

@@ -1,0 +1,84 @@
+//! Bench: **Table B** (ablation, ref [1]) — conversion throughput
+//! COO→ABHSF and CSR→ABHSF (the storing-side overhead the paper's
+//! pipeline pays to get small files), plus container write and the
+//! loading-side inverse (ABHSF→CSR, Algorithm 1).
+//!
+//! Run: `cargo bench --bench conversion`
+
+use abhsf::abhsf::cost::CostModel;
+use abhsf::abhsf::{load_csr, store_data, AbhsfData};
+use abhsf::formats::{Coo, Csr};
+use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::h5::H5Reader;
+use abhsf::util::bench::{fmt_rate, fmt_time, Bencher, Table};
+use abhsf::util::human;
+
+fn main() -> anyhow::Result<()> {
+    println!("== Table B: conversion + store/load throughput (ref [1] ablation) ==\n");
+    let gen = KroneckerGen::new(SeedMatrix::cage_like(24, 5), 2);
+    let map = gen.balanced_rowwise(1);
+    let coo = gen.local_coo(&map, 0);
+    let csr = Csr::from_coo(&coo);
+    let nnz = coo.nnz() as f64;
+    println!(
+        "workload: cage-kron {} x {}, {} nnz\n",
+        human::count(gen.dim()),
+        human::count(gen.dim()),
+        human::count(coo.nnz() as u64)
+    );
+
+    let b = Bencher::default();
+    let dir = std::env::temp_dir().join("abhsf-conversion-bench");
+    std::fs::create_dir_all(&dir)?;
+
+    let mut t = Table::new(&["operation", "time/iter", "throughput", "rsd"]);
+    let mut add = |label: &str, m: &abhsf::util::bench::Measurement| {
+        t.row(&[
+            label.to_string(),
+            fmt_time(m.mean_s()),
+            fmt_rate(m.throughput().unwrap(), "nnz"),
+            format!("{:.1}%", m.summary.rsd() * 100.0),
+        ]);
+    };
+
+    for s in [16u64, 64] {
+        let model = CostModel::default();
+        let m1 = b.run_with_items(&format!("coo->abhsf s={s}"), nnz, || {
+            std::hint::black_box(AbhsfData::from_coo(&coo, s, &model).unwrap());
+        });
+        add(&format!("COO -> ABHSF (s={s})"), &m1);
+        let m2 = b.run_with_items(&format!("csr->abhsf s={s}"), nnz, || {
+            std::hint::black_box(AbhsfData::from_csr(&csr, s, &model).unwrap());
+        });
+        add(&format!("CSR -> ABHSF (s={s})"), &m2);
+
+        let data = AbhsfData::from_coo(&coo, s, &model)?;
+        let path = dir.join(format!("conv-{s}.h5spm"));
+        let m3 = b.run_with_items(&format!("store s={s}"), nnz, || {
+            store_data(&path, &data).unwrap();
+        });
+        add(&format!("ABHSF -> file (s={s})"), &m3);
+
+        let m4 = b.run_with_items(&format!("load s={s}"), nnz, || {
+            let r = H5Reader::open(&path).unwrap();
+            std::hint::black_box(load_csr(&r).unwrap());
+        });
+        add(&format!("file -> CSR, Alg. 1 (s={s})"), &m4);
+    }
+
+    // Baselines: the format conversions the loader competes against.
+    let m5 = b.run_with_items("coo->csr", nnz, || {
+        std::hint::black_box(Csr::from_coo(&coo));
+    });
+    add("COO -> CSR (in-memory baseline)", &m5);
+    let mut coo2 = coo.clone();
+    let m6 = b.run_with_items("sort", nnz, || {
+        coo2.sort();
+        std::hint::black_box(&coo2);
+    });
+    add("COO sort (lower bound)", &m6);
+
+    t.print();
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Bench: **Table E** (stack) — the compute path a loaded matrix feeds:
+//! native Rust CSR SpMV vs the PJRT-executed Pallas artifacts (blocked
+//! SpMV, block assembly, power step), with FLOP rates and the TPU
+//! structure estimates from DESIGN.md §Perf (VMEM per grid step, MXU slot
+//! utilization).
+//!
+//! Run: `make artifacts && cargo bench --bench spmv_bench`
+
+use abhsf::formats::{Coo, Csr, LocalInfo};
+use abhsf::runtime::pack::blocked_spmv_native;
+use abhsf::runtime::{BlockedTensors, Runtime};
+use abhsf::util::bench::{fmt_rate, fmt_time, Bencher, Table};
+use abhsf::util::human;
+use abhsf::util::rng::Xoshiro256;
+
+fn block_banded_csr(seed: u64, m: u64, n: u64, per_row: usize) -> Csr {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let info = LocalInfo::whole(m, n, (m as usize * per_row) as u64);
+    let mut coo = Coo::with_info(info);
+    let mut seen = std::collections::HashSet::new();
+    let groups = m.div_ceil(16);
+    let bases: Vec<u64> = (0..groups)
+        .map(|_| rng.next_below(n.saturating_sub(64).max(1)))
+        .collect();
+    for r in 0..m {
+        let base = bases[(r / 16) as usize];
+        for _ in 0..per_row {
+            let c = (base + rng.next_below(64)).min(n - 1);
+            if seen.insert((r, c)) {
+                coo.push(r, c, rng.range_f64(-1.0, 1.0));
+            }
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== Table E: SpMV across the stack (native vs PJRT artifacts) ==\n");
+    let rt = match Runtime::from_default_dir() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP: {e}\nrun `make artifacts` first");
+            return Ok(());
+        }
+    };
+    println!("PJRT platform: {}\n", rt.platform());
+    let b = Bencher::default();
+
+    let mut t = Table::new(&[
+        "path",
+        "config",
+        "time/iter",
+        "rate",
+        "VMEM/step",
+        "slot util",
+    ]);
+
+    for art in rt.manifest().of_kind("spmv") {
+        let r = art.param("r")? as u64;
+        let k = art.param("k")?;
+        let s = art.param("s")? as u64;
+        let n = art.param("n")? as u64;
+        let m_rows = r * s;
+        let per_row = (k.min(6) * 2) as usize;
+        let csr = block_banded_csr(7, m_rows, n, per_row);
+        let Ok(tensors) = BlockedTensors::pack_csr(&csr, art) else {
+            continue;
+        };
+        let x64: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).cos()).collect();
+        let xf = tensors.pack_x(&x64)?;
+        let nnz = csr.nnz() as f64;
+        let flops_csr = 2.0 * nnz;
+        // The blocked kernel multiplies every (padded) slot: R*K*s*s MACs.
+        let flops_blocked = 2.0 * (tensors.r * tensors.k * tensors.s * tensors.s) as f64;
+
+        // Native CSR (f64).
+        let mut y = vec![0.0f64; m_rows as usize];
+        let m1 = b.run_with_items("native", flops_csr, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            csr.spmv_into(&x64, &mut y);
+            std::hint::black_box(&y);
+        });
+        t.row(&[
+            "native CSR f64".into(),
+            art.name.clone(),
+            fmt_time(m1.mean_s()),
+            fmt_rate(m1.throughput().unwrap(), "FLOP"),
+            "-".into(),
+            "-".into(),
+        ]);
+
+        // Native blocked (f32) — the artifact's own algorithm in Rust.
+        let m2 = b.run_with_items("blocked-native", flops_blocked, || {
+            std::hint::black_box(blocked_spmv_native(&tensors, &xf));
+        });
+        t.row(&[
+            "native blocked f32".into(),
+            art.name.clone(),
+            fmt_time(m2.mean_s()),
+            fmt_rate(m2.throughput().unwrap(), "FLOP"),
+            human::bytes(tensors.vmem_per_grid_step() as u64),
+            format!("{:.1}%", tensors.slot_utilization() * 100.0),
+        ]);
+
+        // PJRT artifact (interpret-lowered Pallas on CPU).
+        let art2 = art.clone();
+        let m3 = b.run_with_items("pjrt", flops_blocked, || {
+            std::hint::black_box(rt.spmv(&art2, &tensors, &xf).unwrap());
+        });
+        t.row(&[
+            "PJRT pallas f32".into(),
+            art.name.clone(),
+            fmt_time(m3.mean_s()),
+            fmt_rate(m3.throughput().unwrap(), "FLOP"),
+            human::bytes(tensors.vmem_per_grid_step() as u64),
+            format!("{:.1}%", tensors.slot_utilization() * 100.0),
+        ]);
+
+        // Correctness gate while we're here.
+        let y_pjrt = rt.spmv(art, &tensors, &xf)?;
+        let y_nat = blocked_spmv_native(&tensors, &xf);
+        let maxd = y_pjrt
+            .iter()
+            .zip(&y_nat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        anyhow::ensure!(maxd < 1e-3, "{}: pjrt/native divergence {maxd}", art.name);
+    }
+
+    // Assemble artifacts.
+    for art in rt.manifest().of_kind("assemble") {
+        let z = art.param("z")? as usize;
+        let tt = art.param("t")? as usize;
+        let s = art.param("s")? as usize;
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let lrows: Vec<i32> = (0..z * tt).map(|_| rng.next_below(s as u64) as i32).collect();
+        let lcols: Vec<i32> = (0..z * tt).map(|_| rng.next_below(s as u64) as i32).collect();
+        let vals: Vec<f32> = (0..z * tt).map(|_| rng.next_f64() as f32).collect();
+        let elems = (z * tt) as f64;
+        let m = b.run_with_items("assemble", elems, || {
+            std::hint::black_box(rt.assemble(art, &lrows, &lcols, &vals).unwrap());
+        });
+        t.row(&[
+            "PJRT assemble".into(),
+            art.name.clone(),
+            fmt_time(m.mean_s()),
+            fmt_rate(m.throughput().unwrap(), "elem"),
+            human::bytes(((2 * tt * s + 3 * tt + s * s) * 4) as u64),
+            "-".into(),
+        ]);
+    }
+
+    // Power step.
+    for art in rt.manifest().of_kind("power_step") {
+        let r = art.param("r")? as u64;
+        let s = art.param("s")? as u64;
+        let n = art.param("n")? as u64;
+        let csr = block_banded_csr(9, r * s, n, 8);
+        let Ok(tensors) = BlockedTensors::pack_csr(&csr, art) else {
+            continue;
+        };
+        let x = vec![1.0f32; n as usize];
+        let flops = 2.0 * (tensors.r * tensors.k * tensors.s * tensors.s) as f64;
+        let art2 = art.clone();
+        let m = b.run_with_items("power", flops, || {
+            std::hint::black_box(rt.power_step(&art2, &tensors, &x).unwrap());
+        });
+        t.row(&[
+            "PJRT power_step".into(),
+            art.name.clone(),
+            fmt_time(m.mean_s()),
+            fmt_rate(m.throughput().unwrap(), "FLOP"),
+            human::bytes(tensors.vmem_per_grid_step() as u64),
+            format!("{:.1}%", tensors.slot_utilization() * 100.0),
+        ]);
+    }
+
+    t.print();
+    println!(
+        "\nnote: PJRT numbers execute the *interpret-lowered* Pallas kernel on \
+         CPU — a correctness artifact, not a TPU performance proxy. TPU \
+         estimates (VMEM fit, MXU utilization) are structural; see DESIGN.md \
+         §Perf and EXPERIMENTS.md."
+    );
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Partitioning a local submatrix into fixed `s × s` blocks.
+
+use crate::formats::Element;
+
+/// One nonzero block: its block coordinates and the contained elements in
+/// *in-block* coordinates (`0 ≤ lrow, lcol < s`), sorted lexicographically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    /// Block row index (`brow * s` = first covered local row).
+    pub brow: u64,
+    /// Block column index.
+    pub bcol: u64,
+    /// Elements as `(lrow, lcol, val)`, lexicographically sorted.
+    pub elems: Vec<(u16, u16, f64)>,
+}
+
+impl Block {
+    /// Nonzero count ζ of this block.
+    pub fn zeta(&self) -> u64 {
+        self.elems.len() as u64
+    }
+}
+
+/// Partition local-coordinate elements into nonzero blocks, ordered
+/// row-major by `(brow, bcol)` — the dataset order Algorithms 1–6 expect
+/// (all blocks of one block row are contiguous, block rows ascending).
+///
+/// Duplicate coordinates must have been combined beforehand; `s` must fit
+/// in-block indexes in u16 (`s ≤ 65536`).
+pub fn partition_into_blocks(elements: &[Element], s: u64) -> Vec<Block> {
+    assert!(s > 0 && s <= u16::MAX as u64 + 1, "block size {s} out of range");
+    // Key each element by (brow, bcol, lrow, lcol) and sort.
+    let mut keyed: Vec<(u64, u64, u16, u16, f64)> = elements
+        .iter()
+        .map(|e| {
+            (
+                e.row / s,
+                e.col / s,
+                (e.row % s) as u16,
+                (e.col % s) as u16,
+                e.val,
+            )
+        })
+        .collect();
+    keyed.sort_unstable_by(|a, b| (a.0, a.1, a.2, a.3).partial_cmp(&(b.0, b.1, b.2, b.3)).unwrap());
+
+    let mut blocks: Vec<Block> = Vec::new();
+    for (brow, bcol, lrow, lcol, val) in keyed {
+        match blocks.last_mut() {
+            Some(b) if b.brow == brow && b.bcol == bcol => b.elems.push((lrow, lcol, val)),
+            _ => blocks.push(Block {
+                brow,
+                bcol,
+                elems: vec![(lrow, lcol, val)],
+            }),
+        }
+    }
+    blocks
+}
+
+/// Reassemble local-coordinate elements from blocks (inverse of
+/// [`partition_into_blocks`] up to ordering).
+pub fn blocks_to_elements(blocks: &[Block], s: u64) -> Vec<Element> {
+    let mut out = Vec::with_capacity(blocks.iter().map(|b| b.elems.len()).sum());
+    for b in blocks {
+        for &(lr, lc, v) in &b.elems {
+            out.push(Element::new(b.brow * s + lr as u64, b.bcol * s + lc as u64, v));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::element::sort_lex;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn partitions_into_expected_blocks() {
+        let s = 4;
+        let elements = vec![
+            Element::new(0, 0, 1.0),  // block (0,0)
+            Element::new(3, 3, 2.0),  // block (0,0)
+            Element::new(0, 4, 3.0),  // block (0,1)
+            Element::new(5, 1, 4.0),  // block (1,0)
+            Element::new(7, 7, 5.0),  // block (1,1)
+        ];
+        let blocks = partition_into_blocks(&elements, s);
+        let keys: Vec<(u64, u64, u64)> = blocks.iter().map(|b| (b.brow, b.bcol, b.zeta())).collect();
+        assert_eq!(keys, vec![(0, 0, 2), (0, 1, 1), (1, 0, 1), (1, 1, 1)]);
+        assert_eq!(blocks[0].elems, vec![(0, 0, 1.0), (3, 3, 2.0)]);
+    }
+
+    #[test]
+    fn block_order_is_row_major() {
+        let s = 2;
+        let elements = vec![
+            Element::new(3, 3, 1.0),
+            Element::new(0, 3, 2.0),
+            Element::new(2, 0, 3.0),
+            Element::new(0, 0, 4.0),
+        ];
+        let blocks = partition_into_blocks(&elements, s);
+        let keys: Vec<(u64, u64)> = blocks.iter().map(|b| (b.brow, b.bcol)).collect();
+        assert_eq!(keys, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn in_block_elements_sorted() {
+        let s = 8;
+        let elements = vec![
+            Element::new(1, 7, 1.0),
+            Element::new(1, 2, 2.0),
+            Element::new(0, 5, 3.0),
+        ];
+        let blocks = partition_into_blocks(&elements, s);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].elems, vec![(0, 5, 3.0), (1, 2, 2.0), (1, 7, 1.0)]);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Xoshiro256::seed_from_u64(2024);
+        for s in [3u64, 4, 16] {
+            let mut elements = Vec::new();
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..300 {
+                let r = rng.next_below(100);
+                let c = rng.next_below(100);
+                if seen.insert((r, c)) {
+                    elements.push(Element::new(r, c, rng.next_f64()));
+                }
+            }
+            let blocks = partition_into_blocks(&elements, s);
+            let mut back = blocks_to_elements(&blocks, s);
+            sort_lex(&mut back);
+            sort_lex(&mut elements);
+            assert_eq!(elements.len(), back.len());
+            for (a, b) in elements.iter().zip(&back) {
+                assert_eq!((a.row, a.col), (b.row, b.col));
+                assert_eq!(a.val, b.val);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(partition_into_blocks(&[], 8).is_empty());
+    }
+}

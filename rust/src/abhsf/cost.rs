@@ -1,0 +1,159 @@
+//! Space cost model and adaptive scheme selection (Langr et al. [5]).
+//!
+//! For each nonzero block the builder picks the scheme minimizing stored
+//! bytes. The model mirrors the *exact* byte layout this crate writes (u16
+//! in-block indexes, u32 per-block row pointers, f64 values, LSB-packed
+//! bitmap), so the adaptive choice literally minimizes file size.
+
+use crate::abhsf::Scheme;
+
+/// Byte widths of the on-disk representation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostModel {
+    /// Bytes per in-block row/column index (COO lrows/lcols, CSR lcolinds).
+    pub idx_bytes: u64,
+    /// Bytes per value.
+    pub val_bytes: u64,
+    /// Bytes per CSR in-block row pointer.
+    pub rowptr_bytes: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            idx_bytes: 2,
+            val_bytes: 8,
+            rowptr_bytes: 4,
+        }
+    }
+}
+
+impl CostModel {
+    /// Storage cost in bytes of one `s × s` block holding `zeta` nonzeros
+    /// under `scheme`. Excludes the per-block descriptor overhead
+    /// (scheme tag, zeta, brow, bcol), which is identical for all schemes
+    /// and therefore irrelevant to the choice.
+    pub fn block_cost(&self, scheme: Scheme, s: u64, zeta: u64) -> u64 {
+        debug_assert!(zeta <= s * s, "zeta {zeta} exceeds s^2 {}", s * s);
+        match scheme {
+            Scheme::Coo => zeta * (2 * self.idx_bytes + self.val_bytes),
+            Scheme::Csr => zeta * (self.idx_bytes + self.val_bytes) + (s + 1) * self.rowptr_bytes,
+            Scheme::Bitmap => (s * s).div_ceil(8) + zeta * self.val_bytes,
+            Scheme::Dense => s * s * self.val_bytes,
+        }
+    }
+
+    /// The cheapest scheme for a block (ties broken toward the lower tag,
+    /// i.e. the more general scheme).
+    pub fn choose(&self, s: u64, zeta: u64) -> Scheme {
+        let mut best = Scheme::Coo;
+        let mut best_cost = self.block_cost(best, s, zeta);
+        for scheme in [Scheme::Csr, Scheme::Bitmap, Scheme::Dense] {
+            let c = self.block_cost(scheme, s, zeta);
+            if c < best_cost {
+                best = scheme;
+                best_cost = c;
+            }
+        }
+        best
+    }
+}
+
+/// Cost of one block under the default model.
+pub fn scheme_cost(scheme: Scheme, s: u64, zeta: u64) -> u64 {
+    CostModel::default().block_cost(scheme, s, zeta)
+}
+
+/// Adaptive scheme choice under the default model.
+pub fn choose_scheme(s: u64, zeta: u64) -> Scheme {
+    CostModel::default().choose(s, zeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_blocks_prefer_coo_or_csr() {
+        // One element in a 64x64 block: COO = 12 B, CSR = 10 + 65*4 = 270 B,
+        // bitmap = 512 + 8 B, dense = 32 KiB.
+        assert_eq!(choose_scheme(64, 1), Scheme::Coo);
+    }
+
+    #[test]
+    fn half_full_blocks_prefer_bitmap() {
+        let s = 64;
+        let zeta = s * s / 2;
+        // COO: 2048*12 = 24576; CSR: 2048*10 + 260 = 20740;
+        // bitmap: 512 + 16384 = 16896; dense: 32768.
+        assert_eq!(choose_scheme(s, zeta), Scheme::Bitmap);
+    }
+
+    #[test]
+    fn full_blocks_prefer_dense() {
+        let s = 64;
+        assert_eq!(choose_scheme(s, s * s), Scheme::Dense);
+        // 90% full is still bitmap (bitmap = 512 + 0.9*32768 < 32768).
+        assert_eq!(choose_scheme(s, s * s * 9 / 10), Scheme::Bitmap);
+        // ~99% full: bitmap = 512 + 32440 > 32768 -> dense.
+        assert_eq!(choose_scheme(s, s * s - 10), Scheme::Dense);
+    }
+
+    #[test]
+    fn csr_wins_at_moderate_fill() {
+        // CSR beats COO once zeta > 2(s+1) and beats bitmap while
+        // zeta < (s*s/8 - (s+1)*4) / 2; the window is nonempty for s >= 96.
+        // s=128, zeta=300: COO 3600, CSR 3516, bitmap 4448, dense 131072.
+        assert_eq!(choose_scheme(128, 300), Scheme::Csr);
+        // For small blocks the bitmap's fixed cost is tiny and CSR never
+        // wins under the default widths.
+        assert_ne!(choose_scheme(8, 20), Scheme::Csr);
+    }
+
+    #[test]
+    fn cost_formulas_exact() {
+        let m = CostModel::default();
+        assert_eq!(m.block_cost(Scheme::Coo, 8, 5), 5 * 12);
+        assert_eq!(m.block_cost(Scheme::Csr, 8, 5), 5 * 10 + 9 * 4);
+        assert_eq!(m.block_cost(Scheme::Bitmap, 8, 5), 8 + 5 * 8);
+        assert_eq!(m.block_cost(Scheme::Dense, 8, 5), 64 * 8);
+    }
+
+    #[test]
+    fn choice_is_argmin_for_all_fills() {
+        let m = CostModel::default();
+        for s in [4u64, 8, 16, 32] {
+            for zeta in 1..=s * s {
+                let chosen = m.choose(s, zeta);
+                let cmin = Scheme::ALL
+                    .iter()
+                    .map(|&sch| m.block_cost(sch, s, zeta))
+                    .min()
+                    .unwrap();
+                assert_eq!(
+                    m.block_cost(chosen, s, zeta),
+                    cmin,
+                    "s={s} zeta={zeta}: {chosen:?} not argmin"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn selection_monotone_regions() {
+        // As fill grows for fixed s the chosen scheme should move through
+        // COO/CSR -> bitmap -> dense without returning.
+        let s = 32u64;
+        let mut stage = 0; // 0 = coo/csr, 1 = bitmap, 2 = dense
+        for zeta in 1..=s * s {
+            let next = match choose_scheme(s, zeta) {
+                Scheme::Coo | Scheme::Csr => 0,
+                Scheme::Bitmap => 1,
+                Scheme::Dense => 2,
+            };
+            assert!(next >= stage, "regression at zeta={zeta}");
+            stage = next;
+        }
+        assert_eq!(stage, 2);
+    }
+}

@@ -1,0 +1,384 @@
+//! In-memory image of one ABHSF file and the COO/CSR → ABHSF builders
+//! (the storing-side conversions of refs [1, 3], needed so the loading
+//! algorithms have files to load).
+
+use crate::abhsf::cost::CostModel;
+use crate::abhsf::{block, AbhsfError, Result, Scheme};
+use crate::formats::{Coo, Csr, Element, LocalInfo};
+use crate::util::bitset::BitSet;
+
+/// All attributes and datasets of one `matrix-<k>.h5spm` file, mirroring
+/// the paper's `abhsf` structure field for field.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AbhsfData {
+    /// Shared matrix/submatrix metadata (m, n, z, locals, offsets).
+    pub info: LocalInfo,
+    /// Block size `s`.
+    pub block_size: u64,
+    /// Scheme tag per nonzero block.
+    pub schemes: Vec<u8>,
+    /// Nonzero count per block.
+    pub zetas: Vec<u32>,
+    /// Block row index per block.
+    pub brows: Vec<u32>,
+    /// Block column index per block.
+    pub bcols: Vec<u32>,
+    /// COO blocks: in-block row indexes.
+    pub coo_lrows: Vec<u16>,
+    /// COO blocks: in-block column indexes.
+    pub coo_lcols: Vec<u16>,
+    /// COO blocks: values.
+    pub coo_vals: Vec<f64>,
+    /// CSR blocks: in-block column indexes.
+    pub csr_lcolinds: Vec<u16>,
+    /// CSR blocks: row pointers, `s + 1` per block, block-relative.
+    pub csr_rowptrs: Vec<u32>,
+    /// CSR blocks: values.
+    pub csr_vals: Vec<f64>,
+    /// Bitmap blocks: packed occupancy, `ceil(s*s/8)` bytes per block,
+    /// row-major, LSB-first (Algorithm 5 bit order).
+    pub bitmap_bitmap: Vec<u8>,
+    /// Bitmap blocks: values of set cells in row-major order.
+    pub bitmap_vals: Vec<f64>,
+    /// Dense blocks: all `s*s` values row-major, zeros included.
+    pub dense_vals: Vec<f64>,
+}
+
+impl AbhsfData {
+    /// Number of nonzero blocks `Z`.
+    pub fn blocks(&self) -> u64 {
+        self.schemes.len() as u64
+    }
+
+    /// Build from a local COO submatrix with block size `s`, choosing each
+    /// block's scheme adaptively under `model`.
+    pub fn from_coo(coo: &Coo, s: u64, model: &CostModel) -> Result<Self> {
+        let mut canonical = coo.clone();
+        canonical.sort_dedup();
+        Self::from_elements(canonical.info, &canonical.to_elements(), s, model)
+    }
+
+    /// Build from a local CSR submatrix.
+    pub fn from_csr(csr: &Csr, s: u64, model: &CostModel) -> Result<Self> {
+        Self::from_elements(csr.info, &csr.to_elements(), s, model)
+    }
+
+    /// Build from canonical (sorted, duplicate-free) local elements.
+    pub fn from_elements(
+        info: LocalInfo,
+        elements: &[Element],
+        s: u64,
+        model: &CostModel,
+    ) -> Result<Self> {
+        if s == 0 || s > u16::MAX as u64 + 1 {
+            return Err(AbhsfError::Invalid(format!("block size {s} out of range")));
+        }
+        // Block coordinates must fit the u32 descriptor datasets.
+        if info.m_local.div_ceil(s) > u32::MAX as u64 || info.n_local.div_ceil(s) > u32::MAX as u64 {
+            return Err(AbhsfError::Invalid("submatrix too large for u32 block indexes".into()));
+        }
+        let mut data = AbhsfData {
+            info,
+            block_size: s,
+            ..Default::default()
+        };
+        data.info.z_local = elements.len() as u64;
+        let blocks = block::partition_into_blocks(elements, s);
+        for b in &blocks {
+            let zeta = b.zeta();
+            if zeta > u32::MAX as u64 {
+                return Err(AbhsfError::Invalid("block zeta exceeds u32".into()));
+            }
+            let scheme = model.choose(s, zeta);
+            data.schemes.push(scheme as u8);
+            data.zetas.push(zeta as u32);
+            data.brows.push(b.brow as u32);
+            data.bcols.push(b.bcol as u32);
+            data.encode_block(scheme, b, s);
+        }
+        Ok(data)
+    }
+
+    /// Append one block's payload to the per-scheme streams.
+    fn encode_block(&mut self, scheme: Scheme, b: &block::Block, s: u64) {
+        match scheme {
+            Scheme::Coo => {
+                for &(lr, lc, v) in &b.elems {
+                    self.coo_lrows.push(lr);
+                    self.coo_lcols.push(lc);
+                    self.coo_vals.push(v);
+                }
+            }
+            Scheme::Csr => {
+                // s+1 block-relative row pointers + column indexes + values.
+                let mut ptr = 0u32;
+                let mut iter = b.elems.iter().peekable();
+                self.csr_rowptrs.push(0);
+                for lrow in 0..s as u16 {
+                    while let Some(&&(lr, lc, v)) = iter.peek() {
+                        if lr != lrow {
+                            break;
+                        }
+                        self.csr_lcolinds.push(lc);
+                        self.csr_vals.push(v);
+                        ptr += 1;
+                        iter.next();
+                    }
+                    self.csr_rowptrs.push(ptr);
+                }
+            }
+            Scheme::Bitmap => {
+                let mut bits = BitSet::zeros((s * s) as usize);
+                for &(lr, lc, v) in &b.elems {
+                    bits.set(lr as usize * s as usize + lc as usize, true);
+                    self.bitmap_vals.push(v);
+                }
+                self.bitmap_bitmap.extend_from_slice(bits.as_bytes());
+            }
+            Scheme::Dense => {
+                let base = self.dense_vals.len();
+                self.dense_vals.extend(std::iter::repeat(0.0).take((s * s) as usize));
+                for &(lr, lc, v) in &b.elems {
+                    self.dense_vals[base + lr as usize * s as usize + lc as usize] = v;
+                }
+            }
+        }
+    }
+
+    /// Structural validation: dataset lengths consistent with descriptors.
+    pub fn validate(&self) -> Result<()> {
+        self.info.validate().map_err(AbhsfError::Invalid)?;
+        let z = self.blocks() as usize;
+        if self.zetas.len() != z || self.brows.len() != z || self.bcols.len() != z {
+            return Err(AbhsfError::Invalid("descriptor dataset lengths differ".into()));
+        }
+        let s = self.block_size;
+        let bitmap_block_bytes = ((s * s).div_ceil(8)) as usize;
+        let mut want = [0usize; 8]; // coo_n, csr_n, csr_ptrs, bitmap_bytes, bitmap_n, dense_n
+        let mut total_zeta = 0u64;
+        for (i, &tag) in self.schemes.iter().enumerate() {
+            let scheme = Scheme::from_tag(tag)
+                .ok_or_else(|| AbhsfError::Invalid(format!("bad scheme tag {tag} at block {i}")))?;
+            let zeta = self.zetas[i] as usize;
+            if zeta == 0 || zeta as u64 > s * s {
+                return Err(AbhsfError::Invalid(format!("block {i}: zeta {zeta} out of range")));
+            }
+            total_zeta += zeta as u64;
+            match scheme {
+                Scheme::Coo => want[0] += zeta,
+                Scheme::Csr => {
+                    want[1] += zeta;
+                    want[2] += s as usize + 1;
+                }
+                Scheme::Bitmap => {
+                    want[3] += bitmap_block_bytes;
+                    want[4] += zeta;
+                }
+                Scheme::Dense => want[5] += (s * s) as usize,
+            }
+        }
+        let checks = [
+            (self.coo_lrows.len(), want[0], "coo_lrows"),
+            (self.coo_lcols.len(), want[0], "coo_lcols"),
+            (self.coo_vals.len(), want[0], "coo_vals"),
+            (self.csr_lcolinds.len(), want[1], "csr_lcolinds"),
+            (self.csr_vals.len(), want[1], "csr_vals"),
+            (self.csr_rowptrs.len(), want[2], "csr_rowptrs"),
+            (self.bitmap_bitmap.len(), want[3], "bitmap_bitmap"),
+            (self.bitmap_vals.len(), want[4], "bitmap_vals"),
+            (self.dense_vals.len(), want[5], "dense_vals"),
+        ];
+        for (got, expect, name) in checks {
+            if got != expect {
+                return Err(AbhsfError::Invalid(format!(
+                    "{name} length {got}, descriptors imply {expect}"
+                )));
+            }
+        }
+        if total_zeta != self.info.z_local {
+            return Err(AbhsfError::Invalid(format!(
+                "sum of zetas {total_zeta} != z_local {}",
+                self.info.z_local
+            )));
+        }
+        Ok(())
+    }
+
+    /// Payload bytes this image occupies on disk (datasets only), i.e. the
+    /// quantity the adaptive scheme choice minimizes.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.schemes.len()
+            + self.zetas.len() * 4
+            + self.brows.len() * 4
+            + self.bcols.len() * 4
+            + self.coo_lrows.len() * 2
+            + self.coo_lcols.len() * 2
+            + self.coo_vals.len() * 8
+            + self.csr_lcolinds.len() * 2
+            + self.csr_rowptrs.len() * 4
+            + self.csr_vals.len() * 8
+            + self.bitmap_bitmap.len()
+            + self.bitmap_vals.len() * 8
+            + self.dense_vals.len() * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixed_coo(s: u64) -> Coo {
+        // Construct a matrix with one very sparse block (COO), one
+        // moderately filled (CSR for s >= 96), one half-full (bitmap) and
+        // one full (dense).
+        let info = LocalInfo::whole(2 * s, 2 * s, 0);
+        let mut coo = Coo::with_info(info);
+        // Block (0,0): 1 element -> COO.
+        coo.push(0, 0, 1.0);
+        // Block (0,1): ~2.5(s+1) elements, spread over rows.
+        let target = (5 * (s + 1) / 2) as usize;
+        let mut cnt = 0;
+        'outer: for r in 0..s {
+            for c in 0..s {
+                if (r + 2 * c) % 3 == 0 {
+                    coo.push(r, s + c, (r * s + c) as f64 + 0.5);
+                    cnt += 1;
+                    if cnt >= target {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        // Block (1,0): half full -> bitmap.
+        for r in 0..s {
+            for c in 0..s {
+                if (r + c) % 2 == 0 {
+                    coo.push(s + r, c, 1.0 + (r + c) as f64);
+                }
+            }
+        }
+        // Block (1,1): completely full -> dense.
+        for r in 0..s {
+            for c in 0..s {
+                coo.push(s + r, s + c, -((r * s + c) as f64) - 1.0);
+            }
+        }
+        coo.info.z = coo.nnz() as u64;
+        coo
+    }
+
+    #[test]
+    fn builder_selects_all_four_schemes() {
+        // s = 128 gives CSR a nonempty optimality window (see cost tests).
+        let s = 128;
+        let data = AbhsfData::from_coo(&mixed_coo(s), s, &CostModel::default()).unwrap();
+        data.validate().unwrap();
+        assert_eq!(data.blocks(), 4);
+        let schemes: Vec<Scheme> = data
+            .schemes
+            .iter()
+            .map(|&t| Scheme::from_tag(t).unwrap())
+            .collect();
+        assert_eq!(
+            schemes,
+            vec![Scheme::Coo, Scheme::Csr, Scheme::Bitmap, Scheme::Dense]
+        );
+    }
+
+    #[test]
+    fn csr_block_rowptrs_structure() {
+        let s = 16u64;
+        let info = LocalInfo::whole(s, s, 0);
+        let mut coo = Coo::with_info(info);
+        // Rows 0 and 2 hold elements; zero-cost row pointers make CSR the
+        // cheapest scheme (COO 36, CSR 30, bitmap 56 bytes).
+        coo.push(0, 1, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(2, 0, 3.0);
+        let model = CostModel {
+            idx_bytes: 2,
+            val_bytes: 8,
+            rowptr_bytes: 0,
+        };
+        let data = AbhsfData::from_coo(&coo, s, &model).unwrap();
+        assert_eq!(data.schemes, vec![Scheme::Csr as u8]);
+        let mut want_ptrs = vec![0u32, 2, 2];
+        want_ptrs.extend(std::iter::repeat(3).take(s as usize - 2));
+        assert_eq!(data.csr_rowptrs, want_ptrs);
+        assert_eq!(data.csr_rowptrs.len() as u64, s + 1);
+        assert_eq!(data.csr_lcolinds, vec![1, 3, 0]);
+        assert_eq!(data.csr_vals, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn bitmap_block_bit_layout() {
+        let s = 4u64;
+        let info = LocalInfo::whole(s, s, 0);
+        let mut coo = Coo::with_info(info);
+        // Fill half the 4x4 block (diagonal-ish) and force bitmap.
+        for i in 0..4 {
+            coo.push(i, i, i as f64 + 1.0);
+            coo.push(i, (i + 1) % 4, -(i as f64) - 1.0);
+        }
+        let model = CostModel {
+            idx_bytes: 1000,
+            val_bytes: 8,
+            rowptr_bytes: 1000,
+        };
+        let data = AbhsfData::from_coo(&coo, s, &model).unwrap();
+        assert_eq!(data.schemes, vec![Scheme::Bitmap as u8]);
+        assert_eq!(data.bitmap_bitmap.len(), 2); // ceil(16/8)
+        // Row 0 cells (0,0) and (0,1) set -> bits 0,1 of byte 0;
+        // row 1 cells (1,1),(1,2) -> bits 5,6.
+        assert_eq!(data.bitmap_bitmap[0], 0b0110_0011);
+        // Values in row-major order of set cells.
+        assert_eq!(data.bitmap_vals, vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0, -4.0, 4.0]);
+    }
+
+    #[test]
+    fn dense_block_layout() {
+        let s = 2u64;
+        let info = LocalInfo::whole(s, s, 0);
+        let mut coo = Coo::with_info(info);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 0, 3.0);
+        coo.push(1, 1, 4.0);
+        let data = AbhsfData::from_coo(&coo, s, &CostModel::default()).unwrap();
+        assert_eq!(data.schemes, vec![Scheme::Dense as u8]);
+        assert_eq!(data.dense_vals, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let s = 8;
+        let mut data = AbhsfData::from_coo(&mixed_coo(s), s, &CostModel::default()).unwrap();
+        data.coo_vals.pop();
+        assert!(data.validate().is_err());
+    }
+
+    #[test]
+    fn payload_smaller_than_coo_for_dense_blocks() {
+        let s = 8;
+        let coo = mixed_coo(s);
+        let data = AbhsfData::from_coo(&coo, s, &CostModel::default()).unwrap();
+        assert!(data.payload_bytes() < coo.payload_bytes_paper() + 200,
+            "abhsf {} vs coo {}", data.payload_bytes(), coo.payload_bytes_paper());
+    }
+
+    #[test]
+    fn empty_matrix_builds() {
+        let info = LocalInfo::whole(16, 16, 0);
+        let coo = Coo::with_info(info);
+        let data = AbhsfData::from_coo(&coo, 4, &CostModel::default()).unwrap();
+        data.validate().unwrap();
+        assert_eq!(data.blocks(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_block_size() {
+        let info = LocalInfo::whole(4, 4, 0);
+        let coo = Coo::with_info(info);
+        assert!(AbhsfData::from_coo(&coo, 0, &CostModel::default()).is_err());
+    }
+}

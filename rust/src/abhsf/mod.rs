@@ -1,0 +1,155 @@
+//! Adaptive-Blocking Hierarchical Storage Format (ABHSF).
+//!
+//! The local submatrix of each process is partitioned into fixed `s × s`
+//! blocks; every nonzero block is stored in whichever of four *schemes* —
+//! COO, CSR, bitmap, dense — costs the fewest bytes for its fill pattern
+//! (Langr et al. [5], FedCSIS 2012). Block descriptors and per-scheme
+//! payload streams become datasets of one `matrix-<k>.h5spm` container per
+//! process (single-file-per-process strategy).
+//!
+//! * [`cost`] — the per-scheme space cost model and adaptive selection;
+//! * [`block`] — partitioning a local submatrix into nonzero blocks;
+//! * [`data`] — the in-memory image of one ABHSF file (attributes +
+//!   datasets) and the COO/CSR → ABHSF builders (refs [1, 3]);
+//! * [`store`] — writing that image into an h5spm container;
+//! * [`load`] — **the paper's contribution**: streaming Algorithms 1–6
+//!   that reconstruct an in-memory CSR (or visit raw elements, for
+//!   different-configuration loading) from a stored file;
+//! * [`stats`] — size accounting and scheme histograms for the benches.
+
+pub mod block;
+pub mod cost;
+pub mod data;
+pub mod load;
+pub mod stats;
+pub mod store;
+
+pub use block::{partition_into_blocks, Block};
+pub use cost::{choose_scheme, scheme_cost, CostModel};
+pub use data::AbhsfData;
+pub use load::{load_coo, load_csr, visit_elements};
+pub use store::{matrix_file_path, store_data};
+
+/// Block storage scheme tags, as stored in the `schemes[]` dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Scheme {
+    /// Coordinate list: `(lrow, lcol, val)` triplets.
+    Coo = 0,
+    /// Compressed sparse rows within the block.
+    Csr = 1,
+    /// `s*s` occupancy bitmap + packed values.
+    Bitmap = 2,
+    /// All `s*s` values, zeros included.
+    Dense = 3,
+}
+
+impl Scheme {
+    /// Decode a stored tag.
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => Scheme::Coo,
+            1 => Scheme::Csr,
+            2 => Scheme::Bitmap,
+            3 => Scheme::Dense,
+            _ => return None,
+        })
+    }
+
+    /// All schemes, in tag order.
+    pub const ALL: [Scheme; 4] = [Scheme::Coo, Scheme::Csr, Scheme::Bitmap, Scheme::Dense];
+
+    /// Human-readable name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Coo => "COO",
+            Scheme::Csr => "CSR",
+            Scheme::Bitmap => "bitmap",
+            Scheme::Dense => "dense",
+        }
+    }
+}
+
+/// Dataset and attribute names inside a `matrix-<k>.h5spm` container —
+/// exactly the fields of the paper's `abhsf` structure (§2).
+pub mod names {
+    /// Global rows attribute.
+    pub const M: &str = "m";
+    /// Global columns attribute.
+    pub const N: &str = "n";
+    /// Global nonzeros attribute.
+    pub const Z: &str = "z";
+    /// Local rows attribute.
+    pub const M_LOCAL: &str = "m_local";
+    /// Local columns attribute.
+    pub const N_LOCAL: &str = "n_local";
+    /// Local nonzeros attribute.
+    pub const Z_LOCAL: &str = "z_local";
+    /// First local row attribute.
+    pub const M_OFFSET: &str = "m_offset";
+    /// First local column attribute.
+    pub const N_OFFSET: &str = "n_offset";
+    /// Block size attribute.
+    pub const BLOCK_SIZE: &str = "block_size";
+    /// Nonzero block count attribute.
+    pub const BLOCKS: &str = "blocks";
+    /// Scheme tag per nonzero block.
+    pub const SCHEMES: &str = "schemes";
+    /// Nonzero count per block.
+    pub const ZETAS: &str = "zetas";
+    /// Block row index per block.
+    pub const BROWS: &str = "brows";
+    /// Block column index per block.
+    pub const BCOLS: &str = "bcols";
+    /// COO-scheme in-block row indexes.
+    pub const COO_LROWS: &str = "coo_lrows";
+    /// COO-scheme in-block column indexes.
+    pub const COO_LCOLS: &str = "coo_lcols";
+    /// COO-scheme values.
+    pub const COO_VALS: &str = "coo_vals";
+    /// CSR-scheme in-block column indexes.
+    pub const CSR_LCOLINDS: &str = "csr_lcolinds";
+    /// CSR-scheme per-block row pointers (s+1 per block).
+    pub const CSR_ROWPTRS: &str = "csr_rowptrs";
+    /// CSR-scheme values.
+    pub const CSR_VALS: &str = "csr_vals";
+    /// Bitmap-scheme packed occupancy bytes.
+    pub const BITMAP_BITMAP: &str = "bitmap_bitmap";
+    /// Bitmap-scheme values.
+    pub const BITMAP_VALS: &str = "bitmap_vals";
+    /// Dense-scheme values (s*s per block).
+    pub const DENSE_VALS: &str = "dense_vals";
+}
+
+/// Errors raised by ABHSF building, storing and loading.
+#[derive(Debug, thiserror::Error)]
+pub enum AbhsfError {
+    /// Container-level failure.
+    #[error(transparent)]
+    H5(#[from] crate::h5::H5Error),
+    /// Malformed stored data (bad scheme tag, inconsistent counts, …).
+    #[error("invalid ABHSF data: {0}")]
+    Invalid(String),
+}
+
+/// Result alias.
+pub type Result<T> = std::result::Result<T, AbhsfError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_tags_roundtrip() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::from_tag(s as u8), Some(s));
+        }
+        assert_eq!(Scheme::from_tag(4), None);
+    }
+
+    #[test]
+    fn scheme_names() {
+        assert_eq!(Scheme::Coo.name(), "COO");
+        assert_eq!(Scheme::Dense.name(), "dense");
+    }
+}

@@ -1,0 +1,149 @@
+//! Size accounting and scheme histograms over ABHSF images/files —
+//! the measurements behind the file-size and block-size ablation benches
+//! (Tables A and C in DESIGN.md §5).
+
+use std::collections::BTreeMap;
+
+use crate::abhsf::{AbhsfData, Scheme};
+use crate::formats::{Coo, Csr};
+
+/// Per-scheme block/element histogram of one ABHSF image.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SchemeHistogram {
+    /// Blocks per scheme.
+    pub blocks: BTreeMap<u8, u64>,
+    /// Nonzeros per scheme.
+    pub nonzeros: BTreeMap<u8, u64>,
+}
+
+impl SchemeHistogram {
+    /// Compute from an image.
+    pub fn of(data: &AbhsfData) -> Self {
+        let mut h = Self::default();
+        for (i, &tag) in data.schemes.iter().enumerate() {
+            *h.blocks.entry(tag).or_insert(0) += 1;
+            *h.nonzeros.entry(tag).or_insert(0) += data.zetas[i] as u64;
+        }
+        h
+    }
+
+    /// Blocks stored under `scheme`.
+    pub fn blocks_of(&self, scheme: Scheme) -> u64 {
+        self.blocks.get(&(scheme as u8)).copied().unwrap_or(0)
+    }
+
+    /// Nonzeros stored under `scheme`.
+    pub fn nonzeros_of(&self, scheme: Scheme) -> u64 {
+        self.nonzeros.get(&(scheme as u8)).copied().unwrap_or(0)
+    }
+
+    /// Total block count.
+    pub fn total_blocks(&self) -> u64 {
+        self.blocks.values().sum()
+    }
+}
+
+/// Size comparison of one local submatrix across storage formats, in the
+/// paper's experimental representation (f64 values, 32-bit indexes for
+/// COO/CSR files).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SizeReport {
+    /// Nonzeros.
+    pub nnz: u64,
+    /// ABHSF payload bytes (what this crate writes).
+    pub abhsf_bytes: u64,
+    /// Raw COO file bytes (values + 2 × 32-bit indexes).
+    pub coo_bytes: u64,
+    /// Raw CSR file bytes (values + 32-bit colinds + 32-bit rowptrs).
+    pub csr_bytes: u64,
+    /// Dense binary bytes (m_local × n_local f64).
+    pub dense_bytes: u64,
+}
+
+impl SizeReport {
+    /// Build a report for a local COO and its ABHSF image.
+    pub fn of(coo: &Coo, data: &AbhsfData) -> Self {
+        let csr = Csr::from_coo(coo);
+        Self {
+            nnz: coo.nnz() as u64,
+            abhsf_bytes: data.payload_bytes(),
+            coo_bytes: coo.payload_bytes_paper(),
+            csr_bytes: csr.payload_bytes_paper(),
+            dense_bytes: coo.info.m_local * coo.info.n_local * 8,
+        }
+    }
+
+    /// ABHSF size relative to COO (< 1 means ABHSF is smaller).
+    pub fn ratio_vs_coo(&self) -> f64 {
+        self.abhsf_bytes as f64 / self.coo_bytes as f64
+    }
+
+    /// ABHSF size relative to CSR.
+    pub fn ratio_vs_csr(&self) -> f64 {
+        self.abhsf_bytes as f64 / self.csr_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abhsf::cost::CostModel;
+    use crate::formats::LocalInfo;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_coo(seed: u64, m: u64, n: u64, nnz: usize) -> Coo {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut coo = Coo::with_info(LocalInfo::whole(m, n, nnz as u64));
+        let mut seen = std::collections::HashSet::new();
+        while coo.nnz() < nnz {
+            let r = rng.next_below(m);
+            let c = rng.next_below(n);
+            if seen.insert((r, c)) {
+                coo.push(r, c, rng.next_f64() + 0.1);
+            }
+        }
+        coo
+    }
+
+    #[test]
+    fn histogram_counts_blocks_and_nonzeros() {
+        let coo = random_coo(3, 64, 64, 800);
+        let data = AbhsfData::from_coo(&coo, 8, &CostModel::default()).unwrap();
+        let h = SchemeHistogram::of(&data);
+        assert_eq!(h.total_blocks(), data.blocks());
+        let total_nnz: u64 = Scheme::ALL.iter().map(|&s| h.nonzeros_of(s)).sum();
+        assert_eq!(total_nnz, coo.nnz() as u64);
+    }
+
+    #[test]
+    fn dense_matrix_compresses_well() {
+        // Fully dense local matrix: ABHSF should pick dense blocks and beat
+        // COO by ~2x (no index storage).
+        let m = 64u64;
+        let mut coo = Coo::with_info(LocalInfo::whole(m, m, m * m));
+        for r in 0..m {
+            for c in 0..m {
+                coo.push(r, c, (r * m + c) as f64 + 1.0);
+            }
+        }
+        let data = AbhsfData::from_coo(&coo, 8, &CostModel::default()).unwrap();
+        let rep = SizeReport::of(&coo, &data);
+        assert!(rep.ratio_vs_coo() < 0.6, "ratio {}", rep.ratio_vs_coo());
+        let h = SchemeHistogram::of(&data);
+        assert_eq!(h.blocks_of(Scheme::Dense), h.total_blocks());
+    }
+
+    #[test]
+    fn hypersparse_matrix_close_to_coo() {
+        // At ~1 element per occupied block ABHSF's best case is COO blocks;
+        // payload ~ nnz*(4+8) + descriptors.
+        let coo = random_coo(9, 1000, 1000, 300);
+        let data = AbhsfData::from_coo(&coo, 8, &CostModel::default()).unwrap();
+        let rep = SizeReport::of(&coo, &data);
+        // Descriptor overhead dominates at this sparsity; just require the
+        // blowup stays bounded and the scheme mix is COO-dominated.
+        assert!(rep.ratio_vs_coo() < 2.0, "ratio {}", rep.ratio_vs_coo());
+        let h = SchemeHistogram::of(&data);
+        assert!(h.blocks_of(Scheme::Coo) > h.total_blocks() / 2);
+    }
+}

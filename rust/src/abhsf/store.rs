@@ -1,0 +1,73 @@
+//! Writing an [`AbhsfData`] image into an h5spm container
+//! (the storage side of refs [1, 3], single-file-per-process strategy).
+
+use std::path::{Path, PathBuf};
+
+use crate::abhsf::{names, AbhsfData, Result};
+use crate::h5::{H5Writer, IoStats};
+
+/// Path of process `k`'s file inside the matrix directory:
+/// `<dir>/matrix-<k>.h5spm` (paper §2).
+pub fn matrix_file_path<P: AsRef<Path>>(dir: P, rank: usize) -> PathBuf {
+    dir.as_ref().join(format!("matrix-{rank}.h5spm"))
+}
+
+/// Write `data` to `path`, returning writer I/O statistics.
+///
+/// Attribute and dataset names follow the paper's `abhsf` structure; empty
+/// datasets are written too so loaders can open cursors unconditionally.
+pub fn store_data<P: AsRef<Path>>(path: P, data: &AbhsfData) -> Result<IoStats> {
+    store_data_chunked(path, data, crate::h5::DEFAULT_CHUNK_ELEMS)
+}
+
+/// [`store_data`] with an explicit dataset chunk size (elements).
+pub fn store_data_chunked<P: AsRef<Path>>(
+    path: P,
+    data: &AbhsfData,
+    chunk_elems: u64,
+) -> Result<IoStats> {
+    data.validate()?;
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent).map_err(crate::h5::H5Error::Io)?;
+    }
+    let mut w = H5Writer::create(&path)?;
+    w.set_chunk_elems(chunk_elems);
+
+    w.set_attr(names::M, data.info.m)?;
+    w.set_attr(names::N, data.info.n)?;
+    w.set_attr(names::Z, data.info.z)?;
+    w.set_attr(names::M_LOCAL, data.info.m_local)?;
+    w.set_attr(names::N_LOCAL, data.info.n_local)?;
+    w.set_attr(names::Z_LOCAL, data.info.z_local)?;
+    w.set_attr(names::M_OFFSET, data.info.m_offset)?;
+    w.set_attr(names::N_OFFSET, data.info.n_offset)?;
+    w.set_attr(names::BLOCK_SIZE, data.block_size)?;
+    w.set_attr(names::BLOCKS, data.blocks())?;
+
+    w.write_dataset(names::SCHEMES, &data.schemes)?;
+    w.write_dataset(names::ZETAS, &data.zetas)?;
+    w.write_dataset(names::BROWS, &data.brows)?;
+    w.write_dataset(names::BCOLS, &data.bcols)?;
+    w.write_dataset(names::COO_LROWS, &data.coo_lrows)?;
+    w.write_dataset(names::COO_LCOLS, &data.coo_lcols)?;
+    w.write_dataset(names::COO_VALS, &data.coo_vals)?;
+    w.write_dataset(names::CSR_LCOLINDS, &data.csr_lcolinds)?;
+    w.write_dataset(names::CSR_ROWPTRS, &data.csr_rowptrs)?;
+    w.write_dataset(names::CSR_VALS, &data.csr_vals)?;
+    w.write_dataset(names::BITMAP_BITMAP, &data.bitmap_bitmap)?;
+    w.write_dataset(names::BITMAP_VALS, &data.bitmap_vals)?;
+    w.write_dataset(names::DENSE_VALS, &data.dense_vals)?;
+
+    Ok(w.finish()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_path_naming() {
+        let p = matrix_file_path("/tmp/matrix", 7);
+        assert_eq!(p, PathBuf::from("/tmp/matrix/matrix-7.h5spm"));
+    }
+}

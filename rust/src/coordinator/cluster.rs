@@ -1,0 +1,334 @@
+//! MPI-like leader/worker runtime on OS threads.
+//!
+//! A [`Cluster`] owns `P` persistent worker threads. The leader broadcasts
+//! a job closure; every worker runs it against its private [`WorkerCtx`]
+//! (rank, barrier, point-to-point channels) and sends one result back.
+//! Workers keep no shared mutable state — all cross-rank communication
+//! goes through the bounded element channels, which is what makes the
+//! exchange loader's backpressure measurable.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+
+/// A global element in transit between ranks: `(row, col, value)`.
+pub type GlobalElement = (u64, u64, f64);
+
+/// Message on the inter-worker element channels.
+pub enum Msg {
+    /// A batch of elements routed to the receiving rank.
+    Elements(Vec<GlobalElement>),
+    /// Sender `rank` has finished producing for the receiver.
+    Done(usize),
+}
+
+type Job = Box<dyn FnOnce(&WorkerCtx) -> Box<dyn Any + Send> + Send>;
+
+/// Per-worker context handed to every job.
+pub struct WorkerCtx {
+    /// This worker's rank `k ∈ [0, P)`.
+    pub rank: usize,
+    /// Worker count `P`.
+    pub nprocs: usize,
+    barrier: Arc<Barrier>,
+    peer_senders: Vec<SyncSender<Msg>>,
+    inbox: Mutex<Receiver<Msg>>,
+    /// Nanoseconds this worker spent blocked on full peer channels
+    /// (backpressure) during the current job.
+    pub send_blocked_ns: AtomicU64,
+}
+
+impl WorkerCtx {
+    /// Synchronize all workers (an MPI_Barrier equivalent).
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// Send a message to `dest`, blocking when the channel is full and
+    /// accounting the blocked time (credit-based backpressure).
+    pub fn send(&self, dest: usize, msg: Msg) {
+        match self.peer_senders[dest].try_send(msg) {
+            Ok(()) => {}
+            Err(TrySendError::Full(m)) => {
+                let t0 = std::time::Instant::now();
+                // Fall back to a blocking send and record the wait.
+                self.peer_senders[dest]
+                    .send(m)
+                    .unwrap_or_else(|_| panic!("worker {dest} channel closed"));
+                self.send_blocked_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            Err(TrySendError::Disconnected(_)) => panic!("worker {dest} channel closed"),
+        }
+    }
+
+    /// Receive the next message destined to this rank (blocking).
+    pub fn recv(&self) -> Msg {
+        self.inbox
+            .lock()
+            .expect("inbox poisoned")
+            .recv()
+            .expect("inbox closed")
+    }
+
+    /// Non-blocking send; on a full channel the message is handed back.
+    pub fn try_send(&self, dest: usize, msg: Msg) -> std::result::Result<(), Msg> {
+        match self.peer_senders[dest].try_send(msg) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(m)) => Err(m),
+            Err(TrySendError::Disconnected(_)) => panic!("worker {dest} channel closed"),
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<Msg> {
+        self.inbox.lock().expect("inbox poisoned").try_recv().ok()
+    }
+
+    /// Deadlock-free send for all-to-all exchanges: when `dest`'s inbox is
+    /// full, drain our own inbox through `on_msg` instead of blocking (a
+    /// cycle of ranks all blocked on full channels would otherwise
+    /// deadlock at small capacities). Blocked-and-draining time is
+    /// accounted as backpressure.
+    pub fn send_draining<F: FnMut(Msg)>(&self, dest: usize, msg: Msg, mut on_msg: F) {
+        let mut pending = msg;
+        let mut t0: Option<std::time::Instant> = None;
+        loop {
+            match self.try_send(dest, pending) {
+                Ok(()) => {
+                    if let Some(t) = t0 {
+                        self.send_blocked_ns
+                            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                    return;
+                }
+                Err(m) => {
+                    t0.get_or_insert_with(std::time::Instant::now);
+                    pending = m;
+                    // Make progress on our own inbox, then retry.
+                    let mut drained = false;
+                    while let Some(incoming) = self.try_recv() {
+                        on_msg(incoming);
+                        drained = true;
+                    }
+                    if !drained {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+    }
+}
+
+enum Command {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed pool of `P` workers with private contexts.
+pub struct Cluster {
+    nprocs: usize,
+    cmd_txs: Vec<Sender<Command>>,
+    result_rx: Receiver<(usize, Box<dyn Any + Send>)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Cluster {
+    /// Spawn `P` workers. `channel_capacity` bounds each rank's inbox
+    /// (messages, not elements) — the backpressure knob.
+    pub fn new(nprocs: usize, channel_capacity: usize) -> Self {
+        assert!(nprocs > 0, "cluster needs at least one worker");
+        let barrier = Arc::new(Barrier::new(nprocs));
+        // Build the P x P mesh: one bounded inbox per rank, senders cloned
+        // to every rank.
+        let mut inbox_txs = Vec::with_capacity(nprocs);
+        let mut inbox_rxs = Vec::with_capacity(nprocs);
+        for _ in 0..nprocs {
+            let (tx, rx) = sync_channel::<Msg>(channel_capacity);
+            inbox_txs.push(tx);
+            inbox_rxs.push(rx);
+        }
+        let (result_tx, result_rx) = std::sync::mpsc::channel();
+
+        let mut cmd_txs = Vec::with_capacity(nprocs);
+        let mut handles = Vec::with_capacity(nprocs);
+        for (rank, inbox) in inbox_rxs.into_iter().enumerate() {
+            let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<Command>();
+            cmd_txs.push(cmd_tx);
+            let ctx = WorkerCtx {
+                rank,
+                nprocs,
+                barrier: Arc::clone(&barrier),
+                peer_senders: inbox_txs.clone(),
+                inbox: Mutex::new(inbox),
+                send_blocked_ns: AtomicU64::new(0),
+            };
+            let result_tx = result_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("abhsf-worker-{rank}"))
+                    .spawn(move || {
+                        let ctx = ctx;
+                        while let Ok(cmd) = cmd_rx.recv() {
+                            match cmd {
+                                Command::Run(job) => {
+                                    let out = job(&ctx);
+                                    if result_tx.send((ctx.rank, out)).is_err() {
+                                        return;
+                                    }
+                                }
+                                Command::Shutdown => return,
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self {
+            nprocs,
+            cmd_txs,
+            result_rx,
+            handles,
+        }
+    }
+
+    /// Worker count.
+    pub fn nprocs(&self) -> usize {
+        self.nprocs
+    }
+
+    /// Run `job` on every worker; returns the results indexed by rank.
+    ///
+    /// The closure receives the worker's context; its return value is sent
+    /// back to the leader. Panics in workers propagate as a leader panic.
+    pub fn run<R, F>(&self, job: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(&WorkerCtx) -> R + Send + Sync + 'static,
+    {
+        let job = Arc::new(job);
+        for tx in &self.cmd_txs {
+            let job = Arc::clone(&job);
+            tx.send(Command::Run(Box::new(move |ctx| Box::new(job(ctx)))))
+                .expect("worker command channel closed");
+        }
+        let mut slots: Vec<Option<R>> = (0..self.nprocs).map(|_| None).collect();
+        for _ in 0..self.nprocs {
+            let (rank, boxed) = self
+                .result_rx
+                .recv()
+                .expect("a worker died (panicked) during the job");
+            let value = boxed
+                .downcast::<R>()
+                .expect("worker returned unexpected type");
+            slots[rank] = Some(*value);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Command::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_jobs_on_all_ranks() {
+        let cluster = Cluster::new(4, 16);
+        let out = cluster.run(|ctx| ctx.rank * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        // Reusable for a second job.
+        let out2 = cluster.run(|ctx| ctx.nprocs);
+        assert_eq!(out2, vec![4; 4]);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cluster = Cluster::new(4, 16);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let out = cluster.run(move |ctx| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            ctx.barrier();
+            // After the barrier every rank must observe all increments.
+            c2.load(Ordering::SeqCst)
+        });
+        assert_eq!(out, vec![4; 4]);
+    }
+
+    #[test]
+    fn point_to_point_exchange() {
+        let cluster = Cluster::new(3, 8);
+        // Every rank sends (rank -> dest) batches to all peers, then
+        // receives Done markers from everyone.
+        let out = cluster.run(|ctx| {
+            for dest in 0..ctx.nprocs {
+                ctx.send(
+                    dest,
+                    Msg::Elements(vec![(ctx.rank as u64, dest as u64, 1.0)]),
+                );
+                ctx.send(dest, Msg::Done(ctx.rank));
+            }
+            let mut got = Vec::new();
+            let mut done = 0;
+            while done < ctx.nprocs {
+                match ctx.recv() {
+                    Msg::Elements(batch) => got.extend(batch),
+                    Msg::Done(_) => done += 1,
+                }
+            }
+            got.sort_by_key(|&(s, _, _)| s);
+            got
+        });
+        for (rank, msgs) in out.iter().enumerate() {
+            assert_eq!(msgs.len(), 3, "rank {rank}");
+            for (s, d, _) in msgs {
+                assert_eq!(*d as usize, rank);
+                assert!((*s as usize) < 3);
+            }
+        }
+    }
+
+    #[test]
+    fn backpressure_accounted_under_tiny_capacity() {
+        let cluster = Cluster::new(2, 1);
+        let out = cluster.run(|ctx| {
+            if ctx.rank == 0 {
+                // Flood rank 1 with more messages than its inbox holds;
+                // rank 1 drains slowly.
+                for i in 0..64u64 {
+                    ctx.send(1, Msg::Elements(vec![(i, 0, 0.0)]));
+                }
+                ctx.send(1, Msg::Done(0));
+                ctx.send_blocked_ns.load(Ordering::Relaxed)
+            } else {
+                let mut n = 0u64;
+                loop {
+                    match ctx.recv() {
+                        Msg::Elements(_) => {
+                            n += 1;
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Msg::Done(_) => break,
+                    }
+                }
+                n
+            }
+        });
+        assert_eq!(out[1], 64);
+        assert!(out[0] > 0, "sender never blocked despite capacity 1");
+    }
+}

@@ -1,0 +1,614 @@
+//! Parallel loading orchestration — the paper's §3 in executable form.
+//!
+//! Three scenarios:
+//!
+//! * [`load_same_config`] — the storing and loading configurations match:
+//!   rank `k` streams its own `matrix-<k>.h5spm` through Algorithm 1.
+//! * [`load_different_config`] — the general case: *all* ranks read *all*
+//!   files and keep only elements with `M(i, j) = k` under the new
+//!   mapping; with [`IoStrategy::Collective`], ranks advance file by file
+//!   in lockstep (each read is a synchronizing collective), with
+//!   [`IoStrategy::Independent`] each rank streams at its own pace.
+//! * [`load_exchange`] — the paper's future-work direction, implemented
+//!   as an ablation: stored files are assigned round-robin to loading
+//!   ranks, each file is read *once*, and decoded elements are routed to
+//!   their new owners over the bounded (backpressured) element channels.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::abhsf::{load_coo, load_csr, matrix_file_path, visit_elements};
+use crate::coordinator::cluster::{Cluster, Msg};
+use crate::coordinator::metrics::LoadReport;
+use crate::coordinator::InMemFormat;
+use crate::formats::element::tight_window;
+use crate::formats::{Coo, Csr, LocalInfo};
+use crate::h5::{H5Reader, IoStats};
+use crate::mapping::ProcessMapping;
+use crate::parfs::IoStrategy;
+
+/// A loaded local submatrix in the requested in-memory format.
+#[derive(Debug, Clone)]
+pub enum LoadedMatrix {
+    /// CSR output (Algorithm 1's native form).
+    Csr(Csr),
+    /// COO output.
+    Coo(Coo),
+}
+
+impl LoadedMatrix {
+    /// Nonzero count.
+    pub fn nnz(&self) -> usize {
+        match self {
+            LoadedMatrix::Csr(c) => c.nnz(),
+            LoadedMatrix::Coo(c) => c.nnz(),
+        }
+    }
+
+    /// Borrow metadata.
+    pub fn info(&self) -> &LocalInfo {
+        match self {
+            LoadedMatrix::Csr(c) => &c.info,
+            LoadedMatrix::Coo(c) => &c.info,
+        }
+    }
+
+    /// Convert to CSR (no-op if already CSR).
+    pub fn into_csr(self) -> Csr {
+        match self {
+            LoadedMatrix::Csr(c) => c,
+            LoadedMatrix::Coo(c) => Csr::from_coo(&c),
+        }
+    }
+
+    /// Convert to COO (no-op if already COO).
+    pub fn into_coo(self) -> Coo {
+        match self {
+            LoadedMatrix::Csr(c) => c.to_coo(),
+            LoadedMatrix::Coo(c) => c,
+        }
+    }
+
+    /// Validate the contained structure.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            LoadedMatrix::Csr(c) => c.validate(),
+            LoadedMatrix::Coo(c) => c.validate(),
+        }
+    }
+}
+
+/// Options for different-configuration loading.
+#[derive(Clone)]
+pub struct DiffLoadOptions {
+    /// Number of stored files (storing-side process count).
+    pub stored_files: usize,
+    /// I/O strategy (paper §4 measures both).
+    pub strategy: IoStrategy,
+    /// Requested in-memory format.
+    pub format: InMemFormat,
+}
+
+/// Sum of on-disk sizes of the stored files (distinct bytes; every re-read
+/// hits server caches in the cost model).
+fn unique_bytes(dir: &Path, stored_files: usize) -> u64 {
+    (0..stored_files)
+        .map(|k| {
+            std::fs::metadata(matrix_file_path(dir, k))
+                .map(|m| m.len())
+                .unwrap_or(0)
+        })
+        .sum()
+}
+
+type RankLoad = anyhow::Result<(LoadedMatrix, IoStats, f64)>;
+
+/// Same-configuration load: rank `k` runs Algorithm 1 on its own file.
+/// The cluster size must equal the storing process count.
+pub fn load_same_config(
+    cluster: &Cluster,
+    dir: &Path,
+    format: InMemFormat,
+) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
+    let dirb = dir.to_path_buf();
+    let t0 = Instant::now();
+    let results: Vec<RankLoad> = cluster.run(move |ctx| {
+        let t = Instant::now();
+        let path = matrix_file_path(&dirb, ctx.rank);
+        let reader = H5Reader::open(&path)?;
+        let loaded = match format {
+            InMemFormat::Csr => LoadedMatrix::Csr(load_csr(&reader)?),
+            InMemFormat::Coo => LoadedMatrix::Coo(load_coo(&reader)?),
+        };
+        Ok((loaded, reader.stats(), t.elapsed().as_secs_f64()))
+    });
+    let unique = unique_bytes(dir, cluster.nprocs());
+    assemble(
+        "same-config",
+        cluster.nprocs(),
+        results,
+        unique,
+        IoStrategy::Independent,
+        t0,
+    )
+}
+
+/// Different-configuration load (paper §3): every rank reads every stored
+/// file and keeps the elements the new `mapping` assigns to it.
+pub fn load_different_config(
+    cluster: &Cluster,
+    dir: &Path,
+    mapping: &Arc<dyn ProcessMapping>,
+    opts: &DiffLoadOptions,
+) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
+    assert_eq!(
+        cluster.nprocs(),
+        mapping.nprocs(),
+        "cluster size != new mapping process count"
+    );
+    let dirb = dir.to_path_buf();
+    let mapping = Arc::clone(mapping);
+    let opts_c = opts.clone();
+    let t0 = Instant::now();
+    let results: Vec<RankLoad> = cluster.run(move |ctx| {
+        let t = Instant::now();
+        let mut io = IoStats::default();
+        let mut mine: Vec<(u64, u64, f64)> = Vec::new();
+        let mut global: Option<(u64, u64, u64)> = None;
+        // The outer loop over *all* stored files (paper §3 step 1).
+        for file in 0..opts_c.stored_files {
+            if opts_c.strategy == IoStrategy::Collective {
+                // Collective I/O: every read is a collective operation, so
+                // ranks advance through the shared file sequence together.
+                ctx.barrier();
+            }
+            let path = matrix_file_path(&dirb, file);
+            let reader = H5Reader::open(&path)?;
+            let hdr = crate::abhsf::load::read_header(&reader)?;
+            global.get_or_insert((hdr.info.m, hdr.info.n, hdr.info.z));
+            let rank = ctx.rank;
+            let map = mapping.as_ref();
+            // Keep only elements mapped to this rank (paper §3 step 2).
+            visit_elements(&reader, |i, j, v| {
+                if map.owner(i, j) == rank {
+                    mine.push((i, j, v));
+                }
+            })?;
+            io.add(reader.stats());
+        }
+        let (m, n, z) = global.ok_or_else(|| anyhow::anyhow!("no stored files"))?;
+        let loaded = build_local(
+            mine,
+            mapping.as_ref(),
+            ctx.rank,
+            m,
+            n,
+            z,
+            opts_c.format,
+        );
+        Ok((loaded, io, t.elapsed().as_secs_f64()))
+    });
+    let unique = unique_bytes(dir, opts.stored_files);
+    assemble(
+        &format!("diff-config/{}", opts.strategy.label()),
+        cluster.nprocs(),
+        results,
+        unique,
+        opts.strategy,
+        t0,
+    )
+}
+
+/// Exchange-based different-configuration load (ablation / future-work):
+/// stored files are read once each (round-robin over loading ranks) and
+/// elements are routed to their new owners through the bounded channels.
+pub fn load_exchange(
+    cluster: &Cluster,
+    dir: &Path,
+    mapping: &Arc<dyn ProcessMapping>,
+    stored_files: usize,
+    format: InMemFormat,
+) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
+    assert_eq!(cluster.nprocs(), mapping.nprocs());
+    const BATCH: usize = 4096;
+    let dirb = dir.to_path_buf();
+    let mapping = Arc::clone(mapping);
+    let t0 = Instant::now();
+    type ExchangeOut = anyhow::Result<(LoadedMatrix, IoStats, f64, u64)>;
+    let results: Vec<ExchangeOut> = cluster.run(move |ctx| {
+        let t = Instant::now();
+        ctx.send_blocked_ns
+            .store(0, std::sync::atomic::Ordering::Relaxed);
+        let p = ctx.nprocs;
+        let rank = ctx.rank;
+        let map = mapping.as_ref();
+        let mut io = IoStats::default();
+        let mut global: Option<(u64, u64, u64)> = None;
+        // Reader half: stream my assigned files, batch per destination.
+        // `mine`/`done` live in cells so the inbox can be drained while a
+        // send is blocked (see `send_draining`: a cycle of ranks blocked
+        // on full channels would otherwise deadlock).
+        let mut outboxes: Vec<Vec<(u64, u64, f64)>> = vec![Vec::with_capacity(BATCH); p];
+        let mine: std::cell::RefCell<Vec<(u64, u64, f64)>> =
+            std::cell::RefCell::new(Vec::new());
+        let done = std::cell::Cell::new(1usize); // counts self
+        let handle = |msg: Msg| match msg {
+            Msg::Elements(batch) => mine.borrow_mut().extend(batch),
+            Msg::Done(_) => done.set(done.get() + 1),
+        };
+        let mut file = rank;
+        while file < stored_files {
+            let path = matrix_file_path(&dirb, file);
+            let reader = H5Reader::open(&path)?;
+            let hdr = crate::abhsf::load::read_header(&reader)?;
+            global.get_or_insert((hdr.info.m, hdr.info.n, hdr.info.z));
+            visit_elements(&reader, |i, j, v| {
+                let owner = map.owner(i, j);
+                if owner == rank {
+                    mine.borrow_mut().push((i, j, v));
+                } else {
+                    let out = &mut outboxes[owner];
+                    out.push((i, j, v));
+                    if out.len() >= BATCH {
+                        ctx.send_draining(owner, Msg::Elements(std::mem::take(out)), &handle);
+                    }
+                }
+            })?;
+            io.add(reader.stats());
+            file += p;
+        }
+        // Flush tails and signal completion to every peer.
+        for dest in 0..p {
+            if dest != rank {
+                if !outboxes[dest].is_empty() {
+                    ctx.send_draining(
+                        dest,
+                        Msg::Elements(std::mem::take(&mut outboxes[dest])),
+                        &handle,
+                    );
+                }
+                ctx.send_draining(dest, Msg::Done(rank), &handle);
+            }
+        }
+        // Receiver half: collect until every peer is done.
+        while done.get() < p {
+            handle(ctx.recv());
+        }
+        let mine = mine.into_inner();
+        // Global dims: ranks that read no file learn them from peers'
+        // silence — take them from any file if unread.
+        let (m, n, z) = match global {
+            Some(g) => g,
+            None => {
+                let reader = H5Reader::open(matrix_file_path(&dirb, 0))?;
+                let hdr = crate::abhsf::load::read_header(&reader)?;
+                (hdr.info.m, hdr.info.n, hdr.info.z)
+            }
+        };
+        let loaded = build_local(mine, map, rank, m, n, z, format);
+        let blocked = ctx
+            .send_blocked_ns
+            .load(std::sync::atomic::Ordering::Relaxed);
+        Ok((loaded, io, t.elapsed().as_secs_f64(), blocked))
+    });
+    let unique = unique_bytes(dir, stored_files);
+    let mut plain: Vec<RankLoad> = Vec::with_capacity(results.len());
+    let mut blocked = Vec::with_capacity(results.len());
+    for r in results {
+        match r {
+            Ok((lm, io, wall, b)) => {
+                blocked.push(b);
+                plain.push(Ok((lm, io, wall)));
+            }
+            Err(e) => {
+                blocked.push(0);
+                plain.push(Err(e));
+            }
+        }
+    }
+    let (matrices, mut report) = assemble(
+        "diff-config/exchange",
+        cluster.nprocs(),
+        plain,
+        unique,
+        IoStrategy::Independent,
+        t0,
+    )?;
+    report.send_blocked_ns = blocked;
+    Ok((matrices, report))
+}
+
+/// Build a rank's local matrix from its collected global elements.
+fn build_local(
+    mut elems: Vec<(u64, u64, f64)>,
+    mapping: &dyn ProcessMapping,
+    rank: usize,
+    m: u64,
+    n: u64,
+    z: u64,
+    format: InMemFormat,
+) -> LoadedMatrix {
+    // Window: the mapping's declared region, tightened to the actual
+    // bounding box when the mapping declares the whole matrix (paper §2
+    // defines the window as min/max over owned nonzeros).
+    let (ro, co, ml, nl) = {
+        let (ro, co, ml, nl) = mapping.window(rank);
+        if ml == m && nl == n && !elems.is_empty() {
+            tight_window(&elems).unwrap()
+        } else {
+            (ro, co, ml, nl)
+        }
+    };
+    let info = LocalInfo {
+        m,
+        n,
+        z,
+        m_local: ml,
+        n_local: nl,
+        z_local: 0,
+        m_offset: ro,
+        n_offset: co,
+    };
+    elems.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    let mut coo = Coo::with_info(info);
+    for (i, j, v) in elems {
+        coo.push(i - ro, j - co, v);
+    }
+    match format {
+        InMemFormat::Coo => LoadedMatrix::Coo(coo),
+        InMemFormat::Csr => LoadedMatrix::Csr(Csr::from_coo(&coo)),
+    }
+}
+
+fn assemble(
+    scenario: &str,
+    nprocs: usize,
+    results: Vec<RankLoad>,
+    unique_bytes: u64,
+    strategy: IoStrategy,
+    t0: Instant,
+) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut matrices = Vec::with_capacity(nprocs);
+    let mut per_rank_io = Vec::with_capacity(nprocs);
+    let mut per_rank_wall = Vec::with_capacity(nprocs);
+    let mut per_rank_nnz = Vec::with_capacity(nprocs);
+    for r in results {
+        let (lm, io, rank_wall) = r?;
+        per_rank_nnz.push(lm.nnz() as u64);
+        per_rank_io.push(io);
+        per_rank_wall.push(rank_wall);
+        matrices.push(lm);
+    }
+    let report = LoadReport {
+        scenario: scenario.to_string(),
+        nprocs,
+        wall_s,
+        per_rank_wall_s: per_rank_wall,
+        per_rank_io,
+        per_rank_nnz,
+        unique_bytes,
+        send_blocked_ns: vec![0; nprocs],
+        strategy,
+    };
+    Ok((matrices, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    use crate::coordinator::storer::{store_distributed, StoreOptions};
+    use crate::gen::{KroneckerGen, SeedMatrix};
+    use crate::mapping::{Block2d, Colwise, Rowwise};
+    use crate::spmv::{max_abs_diff, spmv_distributed_csr};
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("abhsf-loader-tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Store a cage-like Kronecker matrix with `p_store` ranks row-wise.
+    fn setup(name: &str, p_store: usize) -> (PathBuf, Arc<KroneckerGen>, u64) {
+        let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 42), 2));
+        let n = gen.dim();
+        let mapping: Arc<dyn ProcessMapping> =
+            Arc::new(Rowwise::regular(n, n, p_store));
+        let cluster = Cluster::new(p_store, 64);
+        let dir = tmpdir(name);
+        store_distributed(
+            &cluster,
+            &gen,
+            &mapping,
+            &dir,
+            StoreOptions {
+                block_size: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        (dir, gen, n)
+    }
+
+    /// Reference y = A x via direct generation.
+    fn reference_spmv(gen: &KroneckerGen, x: &[f64]) -> Vec<f64> {
+        let n = gen.dim() as usize;
+        let mut y = vec![0.0; n];
+        gen.visit_row_range(0, n as u64, |i, j, v| {
+            y[i as usize] += v * x[j as usize];
+        });
+        y
+    }
+
+    fn test_vector(n: u64) -> Vec<f64> {
+        (0..n).map(|i| ((i % 17) as f64) * 0.25 + 1.0).collect()
+    }
+
+    #[test]
+    fn same_config_load_reconstructs_matrix() {
+        let p = 4;
+        let (dir, gen, n) = setup("same", p);
+        let cluster = Cluster::new(p, 64);
+        let (mats, report) = load_same_config(&cluster, &dir, InMemFormat::Csr).unwrap();
+        assert_eq!(report.total_nnz(), gen.nnz());
+        let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
+        let x = test_vector(n);
+        let y = spmv_distributed_csr(&parts, &x);
+        assert!(max_abs_diff(&y, &reference_spmv(&gen, &x)) < 1e-9);
+        assert!(report.unique_bytes > 0);
+        assert_eq!(report.per_rank_io.len(), p);
+        for io in &report.per_rank_io {
+            assert_eq!(io.opens, 1, "same-config rank must open exactly 1 file");
+        }
+    }
+
+    #[test]
+    fn diff_config_colwise_independent() {
+        let p_store = 4;
+        let (dir, gen, n) = setup("diff-ind", p_store);
+        for p_load in [2usize, 3, 6] {
+            let cluster = Cluster::new(p_load, 64);
+            let mapping: Arc<dyn ProcessMapping> =
+                Arc::new(Colwise::regular(n, n, p_load));
+            let (mats, report) = load_different_config(
+                &cluster,
+                &dir,
+                &mapping,
+                &DiffLoadOptions {
+                    stored_files: p_store,
+                    strategy: IoStrategy::Independent,
+                    format: InMemFormat::Csr,
+                },
+            )
+            .unwrap();
+            assert_eq!(report.total_nnz(), gen.nnz(), "P={p_load}");
+            // Every rank reads all files.
+            for io in &report.per_rank_io {
+                assert_eq!(io.opens as usize, p_store);
+            }
+            let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
+            let x = test_vector(n);
+            let y = spmv_distributed_csr(&parts, &x);
+            assert!(max_abs_diff(&y, &reference_spmv(&gen, &x)) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn diff_config_collective_matches_independent() {
+        let p_store = 3;
+        let (dir, gen, n) = setup("diff-coll", p_store);
+        let p_load = 4;
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+        let cluster = Cluster::new(p_load, 64);
+        let (mats, report) = load_different_config(
+            &cluster,
+            &dir,
+            &mapping,
+            &DiffLoadOptions {
+                stored_files: p_store,
+                strategy: IoStrategy::Collective,
+                format: InMemFormat::Coo,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.total_nnz(), gen.nnz());
+        assert_eq!(report.strategy, IoStrategy::Collective);
+        for m in &mats {
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn diff_config_2d_mapping() {
+        let p_store = 4;
+        let (dir, gen, n) = setup("diff-2d", p_store);
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Block2d::regular(n, n, 2, 3));
+        let cluster = Cluster::new(6, 64);
+        let (mats, report) = load_different_config(
+            &cluster,
+            &dir,
+            &mapping,
+            &DiffLoadOptions {
+                stored_files: p_store,
+                strategy: IoStrategy::Independent,
+                format: InMemFormat::Csr,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.total_nnz(), gen.nnz());
+        let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
+        let x = test_vector(n);
+        let y = spmv_distributed_csr(&parts, &x);
+        assert!(max_abs_diff(&y, &reference_spmv(&gen, &x)) < 1e-9);
+    }
+
+    #[test]
+    fn exchange_loader_equivalent_to_all_read_all() {
+        let p_store = 4;
+        let (dir, gen, n) = setup("exch", p_store);
+        let p_load = 4;
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+        let cluster = Cluster::new(p_load, 8);
+        let (mats, report) =
+            load_exchange(&cluster, &dir, &mapping, p_store, InMemFormat::Csr).unwrap();
+        assert_eq!(report.total_nnz(), gen.nnz());
+        // Each file was opened exactly once across all ranks.
+        let opens: u64 = report.per_rank_io.iter().map(|s| s.opens).sum();
+        assert_eq!(opens as usize, p_store);
+        let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
+        let x = test_vector(n);
+        let y = spmv_distributed_csr(&parts, &x);
+        assert!(max_abs_diff(&y, &reference_spmv(&gen, &x)) < 1e-9);
+    }
+
+    #[test]
+    fn exchange_with_fewer_loaders_than_files() {
+        let p_store = 6;
+        let (dir, gen, n) = setup("exch-few", p_store);
+        let p_load = 2;
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p_load));
+        let cluster = Cluster::new(p_load, 8);
+        let (mats, report) =
+            load_exchange(&cluster, &dir, &mapping, p_store, InMemFormat::Coo).unwrap();
+        assert_eq!(report.total_nnz(), gen.nnz());
+        for m in &mats {
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn diff_config_reads_p_times_the_bytes() {
+        // The central quantitative fact behind Figure 1: all-read-all
+        // moves P_load x unique bytes, same-config moves them once.
+        let p_store = 3;
+        let (dir, _gen, n) = setup("bytes", p_store);
+        let same_cluster = Cluster::new(p_store, 64);
+        let (_, same) = load_same_config(&same_cluster, &dir, InMemFormat::Csr).unwrap();
+        let p_load = 5;
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+        let cluster = Cluster::new(p_load, 64);
+        let (_, diff) = load_different_config(
+            &cluster,
+            &dir,
+            &mapping,
+            &DiffLoadOptions {
+                stored_files: p_store,
+                strategy: IoStrategy::Independent,
+                format: InMemFormat::Csr,
+            },
+        )
+        .unwrap();
+        assert_eq!(same.unique_bytes, diff.unique_bytes);
+        // Same-config readers touch roughly the unique bytes (payload +
+        // directory); diff-config touches ~P_load times as much.
+        let ratio = diff.total_read_bytes() as f64 / same.total_read_bytes() as f64;
+        assert!(
+            (ratio - p_load as f64).abs() < 0.2 * p_load as f64,
+            "ratio {ratio} expected ~{p_load}"
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Reports produced by the parallel store/load orchestration, and the
+//! bridge from measured I/O traces into the [`crate::parfs`] cost model.
+
+use crate::h5::IoStats;
+use crate::parfs::{FsModel, IoStrategy, RankLoadProfile, SimReport};
+
+/// Outcome of a parallel store.
+#[derive(Debug, Clone)]
+pub struct StoreReport {
+    /// Wall time of the whole store (leader-observed), s.
+    pub wall_s: f64,
+    /// Per-rank writer I/O statistics.
+    pub per_rank_io: Vec<IoStats>,
+    /// Per-rank nonzeros stored.
+    pub per_rank_nnz: Vec<u64>,
+    /// Per-rank file payload bytes (ABHSF datasets).
+    pub per_rank_bytes: Vec<u64>,
+}
+
+impl StoreReport {
+    /// Total stored nonzeros.
+    pub fn total_nnz(&self) -> u64 {
+        self.per_rank_nnz.iter().sum()
+    }
+
+    /// Total file bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.per_rank_io.iter().map(|s| s.bytes).sum()
+    }
+}
+
+/// Outcome of a parallel load.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Scenario label (`same-config`, `diff-config/independent`, …).
+    pub scenario: String,
+    /// Loading process count.
+    pub nprocs: usize,
+    /// Wall time of the whole load (leader-observed), s.
+    pub wall_s: f64,
+    /// Per-rank wall times, s.
+    pub per_rank_wall_s: Vec<f64>,
+    /// Per-rank reader I/O statistics.
+    pub per_rank_io: Vec<IoStats>,
+    /// Per-rank loaded nonzeros.
+    pub per_rank_nnz: Vec<u64>,
+    /// Distinct file bytes touched by the job (counted once).
+    pub unique_bytes: u64,
+    /// Per-rank nanoseconds blocked on backpressure (exchange loader).
+    pub send_blocked_ns: Vec<u64>,
+    /// I/O strategy used.
+    pub strategy: IoStrategy,
+}
+
+impl LoadReport {
+    /// Total loaded nonzeros.
+    pub fn total_nnz(&self) -> u64 {
+        self.per_rank_nnz.iter().sum()
+    }
+
+    /// Total bytes transferred to readers (with re-reads).
+    pub fn total_read_bytes(&self) -> u64 {
+        self.per_rank_io.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Extract the per-rank footprints for the cost model.
+    pub fn profiles(&self) -> Vec<RankLoadProfile> {
+        self.per_rank_io
+            .iter()
+            .map(|s| RankLoadProfile {
+                opens: s.opens,
+                ops: s.ops,
+                bytes: s.bytes,
+            })
+            .collect()
+    }
+
+    /// Run the parallel-FS cost model over this load's measured I/O trace.
+    pub fn simulate(&self, model: &FsModel) -> SimReport {
+        model.simulate(&self.profiles(), self.unique_bytes, self.strategy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_report() -> LoadReport {
+        LoadReport {
+            scenario: "test".into(),
+            nprocs: 2,
+            wall_s: 0.5,
+            per_rank_wall_s: vec![0.4, 0.5],
+            per_rank_io: vec![
+                IoStats {
+                    bytes: 1000,
+                    ops: 10,
+                    opens: 1,
+                },
+                IoStats {
+                    bytes: 2000,
+                    ops: 20,
+                    opens: 1,
+                },
+            ],
+            per_rank_nnz: vec![50, 70],
+            unique_bytes: 3000,
+            send_blocked_ns: vec![0, 0],
+            strategy: IoStrategy::Independent,
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let r = dummy_report();
+        assert_eq!(r.total_nnz(), 120);
+        assert_eq!(r.total_read_bytes(), 3000);
+    }
+
+    #[test]
+    fn profiles_match_io() {
+        let r = dummy_report();
+        let p = r.profiles();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[1].bytes, 2000);
+        assert_eq!(p[1].ops, 20);
+    }
+
+    #[test]
+    fn simulate_runs() {
+        let r = dummy_report();
+        let sim = r.simulate(&FsModel::anselm_lustre());
+        assert!(sim.makespan_s > 0.0);
+        assert_eq!(sim.per_rank_s.len(), 2);
+    }
+}

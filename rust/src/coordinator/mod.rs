@@ -1,0 +1,42 @@
+//! Layer-3 coordinator: leader/worker runtime and the parallel
+//! store/load orchestration — the paper's system contribution.
+//!
+//! [`cluster`] provides the MPI-like substrate the paper assumes: a fixed
+//! set of worker threads with private state ("address spaces"), a
+//! broadcastable job primitive, barriers, and point-to-point element
+//! channels with bounded capacity (backpressure).
+//!
+//! On top of it:
+//! * [`storer`] — parallel matrix storage: every rank builds its local
+//!   submatrix (from a generator or provided parts), converts it to ABHSF
+//!   on the fly and writes `matrix-<k>.h5spm` (single-file-per-process);
+//! * [`loader`] — the paper's loading algorithms: same-configuration
+//!   (Algorithm 1 per rank on its own file), different-configuration
+//!   (all-read-all with `M(i,j)` filtering, independent or collective
+//!   I/O), and the exchange-based extension (each rank reads its own file
+//!   and routes elements to their new owners — the paper's "future
+//!   research" direction);
+//! * [`metrics`] — per-rank I/O traces, wall times, and the bridge into
+//!   the [`crate::parfs`] cost model.
+
+pub mod cluster;
+pub mod loader;
+pub mod metrics;
+pub mod storer;
+
+pub use cluster::{Cluster, WorkerCtx};
+pub use loader::{
+    load_different_config, load_exchange, load_same_config, DiffLoadOptions, LoadedMatrix,
+};
+pub use metrics::{LoadReport, StoreReport};
+pub use storer::{store_distributed, store_parts};
+
+/// In-memory format requested for loaded submatrices (third leg of the
+/// paper's "configuration" triple).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InMemFormat {
+    /// Compressed sparse rows (Algorithm 1's native output).
+    Csr,
+    /// Coordinate list.
+    Coo,
+}

@@ -1,0 +1,266 @@
+//! Figure 1 experiment: "Measured time of the process of loading matrices
+//! from the file system to memory for different configurations."
+//!
+//! Reproduces the paper's §4 protocol, scaled to this testbed:
+//!
+//! * workload — cage-like seed enlarged by a Kronecker product (the
+//!   paper's cage12-based generator, ref [4]);
+//! * storage — `P_store` processes, **balanced row-wise** mapping (equal
+//!   amortized nonzeros per process), ABHSF files;
+//! * case 1 — loading with the same configuration;
+//! * case 2 — loading with `P_load` processes and a **regular
+//!   column-wise** mapping, for both HDF5-style I/O strategies
+//!   (independent / collective), sweeping `P_load`;
+//! * extension — the exchange loader (paper's future-work) as a third
+//!   series.
+//!
+//! Each case reports the measured wall time on the local FS and the
+//! simulated Anselm/Lustre makespan from the calibrated cost model fed
+//! with the *measured* per-rank I/O traces.
+
+use std::sync::Arc;
+
+use crate::coordinator::storer::StoreOptions;
+use crate::coordinator::{
+    load_different_config, load_exchange, load_same_config, Cluster, DiffLoadOptions, InMemFormat,
+};
+use crate::gen::{KroneckerGen, SeedMatrix};
+use crate::mapping::{Colwise, ProcessMapping};
+use crate::parfs::{FsModel, IoStrategy};
+use crate::util::bench::Table;
+use crate::util::human;
+
+/// Configuration for one Figure-1 run.
+#[derive(Debug, Clone)]
+pub struct Fig1Config {
+    /// Cage-like seed dimension.
+    pub seed_n: u64,
+    /// Kronecker order.
+    pub order: u32,
+    /// Storing process count (the paper used 60).
+    pub p_store: usize,
+    /// Loading process counts to sweep (the paper used 15..60).
+    pub p_loads: Vec<usize>,
+    /// ABHSF block size.
+    pub block_size: u64,
+    /// RNG seed for the matrix.
+    pub rng_seed: u64,
+    /// Repetitions per point (wall-clock median).
+    pub reps: usize,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Self {
+            seed_n: 12,
+            order: 2,
+            p_store: 6,
+            p_loads: vec![2, 3, 4, 6, 8],
+            block_size: 32,
+            rng_seed: 42,
+            reps: 3,
+        }
+    }
+}
+
+/// One row of the Figure-1 table.
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    /// Scenario label.
+    pub scenario: String,
+    /// Loading process count.
+    pub p_load: usize,
+    /// Median measured wall time, s.
+    pub wall_s: f64,
+    /// Simulated Lustre makespan, s.
+    pub sim_s: f64,
+    /// Bytes read (sum over ranks).
+    pub read_bytes: u64,
+    /// Loaded nonzeros.
+    pub nnz: u64,
+}
+
+/// Run the experiment; returns all rows (and prints them when `verbose`).
+pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>> {
+    let model = FsModel::anselm_lustre();
+    let gen = Arc::new(KroneckerGen::new(
+        SeedMatrix::cage_like(cfg.seed_n, cfg.rng_seed),
+        cfg.order,
+    ));
+    let n = gen.dim();
+    let dir = std::env::temp_dir().join(format!(
+        "abhsf-fig1-{}-{}-{}",
+        std::process::id(),
+        cfg.seed_n,
+        cfg.p_store
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Store once with the paper's configuration: balanced row-wise.
+    let store_map: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(cfg.p_store));
+    let store_cluster = Cluster::new(cfg.p_store, 64);
+    let sreport = crate::coordinator::store_distributed(
+        &store_cluster,
+        &gen,
+        &store_map,
+        &dir,
+        StoreOptions {
+            block_size: cfg.block_size,
+            ..Default::default()
+        },
+    )?;
+    if verbose {
+        println!(
+            "workload: {} x {}, {} nnz, {} ABHSF payload in {} files\n",
+            human::count(n),
+            human::count(n),
+            human::count(gen.nnz()),
+            human::bytes(sreport.total_bytes()),
+            cfg.p_store,
+        );
+    }
+
+    let mut rows = Vec::new();
+
+    // Case 1: same configuration.
+    {
+        let cluster = Cluster::new(cfg.p_store, 64);
+        let mut walls = Vec::new();
+        let mut last = None;
+        for _ in 0..cfg.reps {
+            let (_, report) = load_same_config(&cluster, &dir, InMemFormat::Csr)?;
+            walls.push(report.wall_s);
+            last = Some(report);
+        }
+        let report = last.unwrap();
+        rows.push(Fig1Row {
+            scenario: "same-config".into(),
+            p_load: cfg.p_store,
+            wall_s: median(&mut walls),
+            sim_s: report.simulate(&model).makespan_s,
+            read_bytes: report.total_read_bytes(),
+            nnz: report.total_nnz(),
+        });
+    }
+
+    // Case 2: different configuration (column-wise regular), both
+    // strategies, plus the exchange extension.
+    for &p_load in &cfg.p_loads {
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+        let cluster = Cluster::new(p_load, 64);
+        for strategy in [IoStrategy::Independent, IoStrategy::Collective] {
+            let mut walls = Vec::new();
+            let mut last = None;
+            for _ in 0..cfg.reps {
+                let (_, report) = load_different_config(
+                    &cluster,
+                    &dir,
+                    &mapping,
+                    &DiffLoadOptions {
+                        stored_files: cfg.p_store,
+                        strategy,
+                        format: InMemFormat::Csr,
+                    },
+                )?;
+                walls.push(report.wall_s);
+                last = Some(report);
+            }
+            let report = last.unwrap();
+            rows.push(Fig1Row {
+                scenario: format!("diff/{}", strategy.label()),
+                p_load,
+                wall_s: median(&mut walls),
+                sim_s: report.simulate(&model).makespan_s,
+                read_bytes: report.total_read_bytes(),
+                nnz: report.total_nnz(),
+            });
+        }
+        // Exchange extension.
+        {
+            let mut walls = Vec::new();
+            let mut last = None;
+            for _ in 0..cfg.reps {
+                let (_, report) =
+                    load_exchange(&cluster, &dir, &mapping, cfg.p_store, InMemFormat::Csr)?;
+                walls.push(report.wall_s);
+                last = Some(report);
+            }
+            let report = last.unwrap();
+            rows.push(Fig1Row {
+                scenario: "diff/exchange".into(),
+                p_load,
+                wall_s: median(&mut walls),
+                sim_s: report.simulate(&model).makespan_s,
+                read_bytes: report.total_read_bytes(),
+                nnz: report.total_nnz(),
+            });
+        }
+    }
+
+    if verbose {
+        let mut t = Table::new(&["scenario", "P_load", "wall [s]", "sim Lustre [s]", "read", "nnz"]);
+        for r in &rows {
+            t.row(&[
+                r.scenario.clone(),
+                r.p_load.to_string(),
+                format!("{:.4}", r.wall_s),
+                format!("{:.3}", r.sim_s),
+                human::bytes(r.read_bytes),
+                human::count(r.nnz),
+            ]);
+        }
+        t.print();
+        let same = rows.iter().find(|r| r.scenario == "same-config").unwrap();
+        println!(
+            "\npaper shape checks: same-config fastest (sim {:.3}s); \
+             independent ~flat and << T_same x P; collective slowest",
+            same.sim_s
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(rows)
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_small_run_has_expected_shape() {
+        let cfg = Fig1Config {
+            seed_n: 8,
+            order: 2,
+            p_store: 3,
+            p_loads: vec![2, 4],
+            block_size: 16,
+            rng_seed: 7,
+            reps: 1,
+        };
+        let rows = run_fig1(&cfg, false).unwrap();
+        // 1 same-config + 3 scenarios x 2 loader counts.
+        assert_eq!(rows.len(), 1 + 3 * 2);
+        let same = rows.iter().find(|r| r.scenario == "same-config").unwrap();
+        let nnz = same.nnz;
+        for r in &rows {
+            assert_eq!(r.nnz, nnz, "{}: loaded nnz differs", r.scenario);
+        }
+        // Simulated ordering (the paper's headline): same < indep < coll.
+        for &p in &[2usize, 4] {
+            let indep = rows
+                .iter()
+                .find(|r| r.scenario == "diff/independent" && r.p_load == p)
+                .unwrap();
+            let coll = rows
+                .iter()
+                .find(|r| r.scenario == "diff/collective" && r.p_load == p)
+                .unwrap();
+            assert!(same.sim_s < indep.sim_s, "P={p}");
+            assert!(indep.sim_s < coll.sim_s, "P={p}");
+        }
+    }
+}

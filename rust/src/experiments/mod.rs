@@ -1,0 +1,8 @@
+//! Shared experiment drivers: the code that regenerates the paper's
+//! figure and the ablation tables. Used by both the CLI (`abhsf fig1`)
+//! and the bench binaries (`cargo bench`), so numbers in either path come
+//! from the same implementation.
+
+pub mod fig1;
+
+pub use fig1::{run_fig1, Fig1Config, Fig1Row};

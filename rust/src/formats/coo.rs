@@ -1,0 +1,240 @@
+//! Coordinate (COO) in-memory sparse format.
+//!
+//! Stores the local submatrix of one process as parallel `rows/cols/vals`
+//! arrays in *local* coordinates. This is one of the two in-memory formats
+//! the paper's store/load pipeline converts from/to (refs [1, 6]).
+
+use crate::formats::element::{Element, LocalInfo};
+
+/// COO storage of a local submatrix.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Coo {
+    /// Shared matrix/submatrix metadata.
+    pub info: LocalInfo,
+    /// Local row indices of nonzeros.
+    pub rows: Vec<u64>,
+    /// Local column indices of nonzeros.
+    pub cols: Vec<u64>,
+    /// Values of nonzeros.
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// Empty COO with the given metadata (z_local is updated as elements
+    /// are pushed).
+    pub fn with_info(info: LocalInfo) -> Self {
+        Self {
+            info,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append a nonzero in local coordinates.
+    pub fn push(&mut self, row: u64, col: u64, val: f64) {
+        debug_assert!(row < self.info.m_local, "row {row} >= m_local {}", self.info.m_local);
+        debug_assert!(col < self.info.n_local, "col {col} >= n_local {}", self.info.n_local);
+        self.rows.push(row);
+        self.cols.push(col);
+        self.vals.push(val);
+        self.info.z_local = self.vals.len() as u64;
+    }
+
+    /// Build from a list of elements (local coordinates).
+    pub fn from_elements(info: LocalInfo, elements: &[Element]) -> Self {
+        let mut coo = Self::with_info(info);
+        coo.rows.reserve(elements.len());
+        coo.cols.reserve(elements.len());
+        coo.vals.reserve(elements.len());
+        for e in elements {
+            coo.push(e.row, e.col, e.val);
+        }
+        coo
+    }
+
+    /// View as a vector of elements (local coordinates).
+    pub fn to_elements(&self) -> Vec<Element> {
+        (0..self.nnz())
+            .map(|i| Element::new(self.rows[i], self.cols[i], self.vals[i]))
+            .collect()
+    }
+
+    /// Iterate `(local_row, local_col, val)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64, f64)> + '_ {
+        (0..self.nnz()).map(move |i| (self.rows[i], self.cols[i], self.vals[i]))
+    }
+
+    /// Sort in place lexicographically by (row, col).
+    pub fn sort(&mut self) {
+        let mut perm: Vec<usize> = (0..self.nnz()).collect();
+        perm.sort_unstable_by_key(|&i| (self.rows[i], self.cols[i]));
+        self.rows = perm.iter().map(|&i| self.rows[i]).collect();
+        self.cols = perm.iter().map(|&i| self.cols[i]).collect();
+        self.vals = perm.iter().map(|&i| self.vals[i]).collect();
+    }
+
+    /// Sort and sum duplicate coordinates.
+    pub fn sort_dedup(&mut self) {
+        self.sort();
+        let n = self.nnz();
+        if n == 0 {
+            return;
+        }
+        let mut w = 0usize;
+        for r in 1..n {
+            if self.rows[r] == self.rows[w] && self.cols[r] == self.cols[w] {
+                self.vals[w] += self.vals[r];
+            } else {
+                w += 1;
+                self.rows[w] = self.rows[r];
+                self.cols[w] = self.cols[r];
+                self.vals[w] = self.vals[r];
+            }
+        }
+        self.rows.truncate(w + 1);
+        self.cols.truncate(w + 1);
+        self.vals.truncate(w + 1);
+        self.info.z_local = self.vals.len() as u64;
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        self.info.validate()?;
+        if self.rows.len() != self.vals.len() || self.cols.len() != self.vals.len() {
+            return Err("rows/cols/vals length mismatch".into());
+        }
+        if self.info.z_local as usize != self.vals.len() {
+            return Err(format!(
+                "z_local={} but {} stored elements",
+                self.info.z_local,
+                self.vals.len()
+            ));
+        }
+        for i in 0..self.nnz() {
+            if self.rows[i] >= self.info.m_local {
+                return Err(format!("element {i}: row {} >= m_local {}", self.rows[i], self.info.m_local));
+            }
+            if self.cols[i] >= self.info.n_local {
+                return Err(format!("element {i}: col {} >= n_local {}", self.cols[i], self.info.n_local));
+            }
+        }
+        Ok(())
+    }
+
+    /// Local SpMV contribution: `y[global_i] += val * x[global_j]` for every
+    /// stored nonzero. `x` has global length `n`, `y` global length `m`.
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len() as u64, self.info.n, "x length != n");
+        assert_eq!(y.len() as u64, self.info.m, "y length != m");
+        let ro = self.info.m_offset as usize;
+        let co = self.info.n_offset as usize;
+        for i in 0..self.nnz() {
+            y[ro + self.rows[i] as usize] += self.vals[i] * x[co + self.cols[i] as usize];
+        }
+    }
+
+    /// In-memory size in bytes of the payload arrays, using the paper's
+    /// experimental representation (f64 values, 32-bit indexes).
+    pub fn payload_bytes_paper(&self) -> u64 {
+        (self.nnz() as u64) * (8 + 4 + 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        // 4x5 local window at global offset (2, 1) of a 10x10 matrix.
+        let info = LocalInfo {
+            m: 10,
+            n: 10,
+            z: 4,
+            m_local: 4,
+            n_local: 5,
+            z_local: 0,
+            m_offset: 2,
+            n_offset: 1,
+        };
+        let mut coo = Coo::with_info(info);
+        coo.push(3, 0, 1.0);
+        coo.push(0, 4, 2.0);
+        coo.push(0, 1, 3.0);
+        coo.push(2, 2, 4.0);
+        coo
+    }
+
+    #[test]
+    fn push_and_validate() {
+        let coo = sample();
+        assert_eq!(coo.nnz(), 4);
+        assert!(coo.validate().is_ok());
+    }
+
+    #[test]
+    fn sort_orders_lexicographically() {
+        let mut coo = sample();
+        coo.sort();
+        let order: Vec<(u64, u64)> = coo.iter().map(|(r, c, _)| (r, c)).collect();
+        assert_eq!(order, vec![(0, 1), (0, 4), (2, 2), (3, 0)]);
+        assert!(coo.validate().is_ok());
+    }
+
+    #[test]
+    fn dedup_sums_duplicates() {
+        let info = LocalInfo::whole(3, 3, 0);
+        let mut coo = Coo::with_info(info);
+        coo.push(1, 1, 2.0);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 1, 3.0);
+        coo.sort_dedup();
+        assert_eq!(coo.nnz(), 2);
+        assert_eq!(coo.iter().collect::<Vec<_>>(), vec![(0, 0, 1.0), (1, 1, 5.0)]);
+    }
+
+    #[test]
+    fn element_roundtrip() {
+        let coo = sample();
+        let elems = coo.to_elements();
+        let coo2 = Coo::from_elements(coo.info, &elems);
+        assert_eq!(coo, coo2);
+    }
+
+    #[test]
+    fn spmv_offsets_respected() {
+        let coo = sample();
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut y = vec![0.0; 10];
+        coo.spmv_into(&x, &mut y);
+        // element (3,0,1.0) -> y[5] += 1.0 * x[1] = 1
+        // element (0,4,2.0) -> y[2] += 2.0 * x[5] = 10
+        // element (0,1,3.0) -> y[2] += 3.0 * x[2] = 6
+        // element (2,2,4.0) -> y[4] += 4.0 * x[3] = 12
+        assert_eq!(y[5], 1.0);
+        assert_eq!(y[2], 16.0);
+        assert_eq!(y[4], 12.0);
+        assert_eq!(y.iter().sum::<f64>(), 29.0);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_window() {
+        let mut coo = sample();
+        coo.rows.push(99);
+        coo.cols.push(0);
+        coo.vals.push(1.0);
+        coo.info.z_local += 1;
+        assert!(coo.validate().is_err());
+    }
+
+    #[test]
+    fn paper_payload_bytes() {
+        let coo = sample();
+        assert_eq!(coo.payload_bytes_paper(), 4 * 16);
+    }
+}

@@ -1,0 +1,261 @@
+//! Compressed Sparse Rows (CSR) in-memory format.
+//!
+//! Mirrors the paper's `csr` structure: shared metadata plus
+//! `vals[] / colinds[] / rowptrs[]` in local coordinates. This is the output
+//! format of the loading Algorithms 1–6.
+
+use crate::formats::coo::Coo;
+use crate::formats::element::{Element, LocalInfo};
+
+/// CSR storage of a local submatrix.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Csr {
+    /// Shared matrix/submatrix metadata.
+    pub info: LocalInfo,
+    /// Values of nonzero elements, row-major.
+    pub vals: Vec<f64>,
+    /// Local column indexes of nonzero elements.
+    pub colinds: Vec<u64>,
+    /// Row pointers: `rowptrs[i]..rowptrs[i+1]` indexes row i's data.
+    /// Length `m_local + 1` when complete.
+    pub rowptrs: Vec<u64>,
+}
+
+impl Csr {
+    /// Empty CSR (no rows finalized yet) with given metadata.
+    pub fn with_info(info: LocalInfo) -> Self {
+        Self {
+            info,
+            vals: Vec::new(),
+            colinds: Vec::new(),
+            rowptrs: Vec::new(),
+        }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Build from a COO (sorted + deduplicated internally; the input is not
+    /// required to be sorted).
+    pub fn from_coo(coo: &Coo) -> Self {
+        let mut sorted = coo.clone();
+        sorted.sort_dedup();
+        let mut csr = Csr::with_info(sorted.info);
+        csr.vals.reserve(sorted.nnz());
+        csr.colinds.reserve(sorted.nnz());
+        csr.rowptrs.reserve(sorted.info.m_local as usize + 1);
+        let mut row = 0u64;
+        csr.rowptrs.push(0);
+        for (r, c, v) in sorted.iter() {
+            while row < r {
+                csr.rowptrs.push(csr.vals.len() as u64);
+                row += 1;
+            }
+            csr.colinds.push(c);
+            csr.vals.push(v);
+        }
+        while row < sorted.info.m_local {
+            csr.rowptrs.push(csr.vals.len() as u64);
+            row += 1;
+        }
+        csr.info.z_local = csr.vals.len() as u64;
+        csr
+    }
+
+    /// Convert to COO (sorted by construction).
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_info(self.info);
+        for r in 0..self.info.m_local as usize {
+            let (lo, hi) = self.row_range(r);
+            for k in lo..hi {
+                coo.push(r as u64, self.colinds[k], self.vals[k]);
+            }
+        }
+        coo
+    }
+
+    /// Elements in lexicographic order.
+    pub fn to_elements(&self) -> Vec<Element> {
+        self.to_coo().to_elements()
+    }
+
+    /// Index range of row `r`'s data.
+    pub fn row_range(&self, r: usize) -> (usize, usize) {
+        (self.rowptrs[r] as usize, self.rowptrs[r + 1] as usize)
+    }
+
+    /// Iterate one row's `(local_col, val)` pairs.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (u64, f64)> + '_ {
+        let (lo, hi) = self.row_range(r);
+        (lo..hi).map(move |k| (self.colinds[k], self.vals[k]))
+    }
+
+    /// Validate the CSR invariants: monotone rowptrs of full length,
+    /// column indexes within the window, columns sorted within rows.
+    pub fn validate(&self) -> Result<(), String> {
+        self.info.validate()?;
+        if self.rowptrs.len() != self.info.m_local as usize + 1 {
+            return Err(format!(
+                "rowptrs length {} != m_local+1 = {}",
+                self.rowptrs.len(),
+                self.info.m_local + 1
+            ));
+        }
+        if self.rowptrs[0] != 0 {
+            return Err("rowptrs[0] != 0".into());
+        }
+        if *self.rowptrs.last().unwrap() as usize != self.vals.len() {
+            return Err(format!(
+                "rowptrs last {} != nnz {}",
+                self.rowptrs.last().unwrap(),
+                self.vals.len()
+            ));
+        }
+        if self.colinds.len() != self.vals.len() {
+            return Err("colinds/vals length mismatch".into());
+        }
+        if self.info.z_local as usize != self.vals.len() {
+            return Err(format!(
+                "z_local={} but {} stored elements",
+                self.info.z_local,
+                self.vals.len()
+            ));
+        }
+        for r in 0..self.info.m_local as usize {
+            let (lo, hi) = self.row_range(r);
+            if lo > hi {
+                return Err(format!("rowptrs not monotone at row {r}"));
+            }
+            for k in lo..hi {
+                if self.colinds[k] >= self.info.n_local {
+                    return Err(format!(
+                        "row {r}: col {} >= n_local {}",
+                        self.colinds[k], self.info.n_local
+                    ));
+                }
+                if k > lo && self.colinds[k] <= self.colinds[k - 1] {
+                    return Err(format!("row {r}: columns not strictly increasing at {k}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Local SpMV contribution into global vectors (see [`Coo::spmv_into`]).
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len() as u64, self.info.n, "x length != n");
+        assert_eq!(y.len() as u64, self.info.m, "y length != m");
+        let ro = self.info.m_offset as usize;
+        let co = self.info.n_offset as usize;
+        for r in 0..self.info.m_local as usize {
+            let (lo, hi) = self.row_range(r);
+            let mut acc = 0.0;
+            for k in lo..hi {
+                acc += self.vals[k] * x[co + self.colinds[k] as usize];
+            }
+            y[ro + r] += acc;
+        }
+    }
+
+    /// In-memory payload bytes with the paper's representation
+    /// (f64 values, 32-bit column indexes and row pointers).
+    pub fn payload_bytes_paper(&self) -> u64 {
+        self.nnz() as u64 * (8 + 4) + self.rowptrs.len() as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_coo() -> Coo {
+        let info = LocalInfo {
+            m: 8,
+            n: 8,
+            z: 5,
+            m_local: 4,
+            n_local: 4,
+            z_local: 0,
+            m_offset: 4,
+            n_offset: 4,
+        };
+        let mut coo = Coo::with_info(info);
+        coo.push(2, 3, 5.0);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(3, 1, 4.0);
+        coo.push(2, 0, 3.0);
+        coo
+    }
+
+    #[test]
+    fn from_coo_structure() {
+        let csr = Csr::from_coo(&sample_coo());
+        assert!(csr.validate().is_ok());
+        assert_eq!(csr.rowptrs, vec![0, 2, 2, 4, 5]);
+        assert_eq!(csr.colinds, vec![0, 2, 0, 3, 1]);
+        assert_eq!(csr.vals, vec![1.0, 2.0, 3.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    fn coo_roundtrip_canonical() {
+        let mut coo = sample_coo();
+        let csr = Csr::from_coo(&coo);
+        let back = csr.to_coo();
+        coo.sort_dedup();
+        assert_eq!(coo, back);
+    }
+
+    #[test]
+    fn spmv_matches_coo() {
+        let coo = sample_coo();
+        let csr = Csr::from_coo(&coo);
+        let x: Vec<f64> = (0..8).map(|i| (i as f64) * 0.5 + 1.0).collect();
+        let mut y1 = vec![0.0; 8];
+        let mut y2 = vec![0.0; 8];
+        coo.spmv_into(&x, &mut y1);
+        csr.spmv_into(&x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let info = LocalInfo::whole(5, 5, 0);
+        let coo = Coo::with_info(info);
+        let csr = Csr::from_coo(&coo);
+        assert!(csr.validate().is_ok());
+        assert_eq!(csr.rowptrs, vec![0; 6]);
+        assert_eq!(csr.nnz(), 0);
+    }
+
+    #[test]
+    fn row_iteration() {
+        let csr = Csr::from_coo(&sample_coo());
+        let row2: Vec<(u64, f64)> = csr.row(2).collect();
+        assert_eq!(row2, vec![(0, 3.0), (3, 5.0)]);
+        let row1: Vec<(u64, f64)> = csr.row(1).collect();
+        assert!(row1.is_empty());
+    }
+
+    #[test]
+    fn validate_catches_unsorted_columns() {
+        let mut csr = Csr::from_coo(&sample_coo());
+        csr.colinds.swap(0, 1);
+        assert!(csr.validate().is_err());
+    }
+
+    #[test]
+    fn dedup_in_from_coo() {
+        let info = LocalInfo::whole(2, 2, 0);
+        let mut coo = Coo::with_info(info);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 2.0);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.nnz(), 1);
+        assert_eq!(csr.vals[0], 3.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Small dense matrix — used as the correctness oracle in tests and as the
+//! decoded form of ABHSF dense blocks.
+
+use crate::formats::coo::Coo;
+use crate::formats::element::LocalInfo;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense {
+    /// Rows.
+    pub nrows: usize,
+    /// Columns.
+    pub ncols: usize,
+    /// Row-major data, `nrows * ncols` entries.
+    pub data: Vec<f64>,
+}
+
+impl Dense {
+    /// Zero matrix.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            data: vec![0.0; nrows * ncols],
+        }
+    }
+
+    /// Entry accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.ncols + j]
+    }
+
+    /// Entry mutator.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.ncols + j] = v;
+    }
+
+    /// Densify a local COO (local window only).
+    pub fn from_coo(coo: &Coo) -> Self {
+        let mut d = Self::zeros(coo.info.m_local as usize, coo.info.n_local as usize);
+        for (r, c, v) in coo.iter() {
+            let cell = &mut d.data[r as usize * d.ncols + c as usize];
+            *cell += v;
+        }
+        d
+    }
+
+    /// Sparsify into COO with the given metadata (z_local recomputed).
+    pub fn to_coo(&self, mut info: LocalInfo) -> Coo {
+        assert_eq!(info.m_local as usize, self.nrows);
+        assert_eq!(info.n_local as usize, self.ncols);
+        info.z_local = 0;
+        let mut coo = Coo::with_info(info);
+        for i in 0..self.nrows {
+            for j in 0..self.ncols {
+                let v = self.get(i, j);
+                if v != 0.0 {
+                    coo.push(i as u64, j as u64, v);
+                }
+            }
+        }
+        coo
+    }
+
+    /// Count of nonzero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Dense mat-vec: `y = A x` over the local window.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for i in 0..self.nrows {
+            let row = &self.data[i * self.ncols..(i + 1) * self.ncols];
+            y[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_accessors() {
+        let mut d = Dense::zeros(2, 3);
+        assert_eq!(d.nnz(), 0);
+        d.set(1, 2, 4.5);
+        assert_eq!(d.get(1, 2), 4.5);
+        assert_eq!(d.nnz(), 1);
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let info = LocalInfo::whole(3, 3, 0);
+        let mut coo = Coo::with_info(info);
+        coo.push(0, 1, 2.0);
+        coo.push(2, 2, -1.0);
+        coo.push(1, 0, 3.5);
+        let d = Dense::from_coo(&coo);
+        assert_eq!(d.get(0, 1), 2.0);
+        assert_eq!(d.get(2, 2), -1.0);
+        let mut back = d.to_coo(info);
+        back.sort();
+        let mut orig = coo.clone();
+        orig.sort();
+        assert_eq!(orig, back);
+    }
+
+    #[test]
+    fn matvec_oracle() {
+        let mut d = Dense::zeros(2, 2);
+        d.set(0, 0, 1.0);
+        d.set(0, 1, 2.0);
+        d.set(1, 1, 3.0);
+        let y = d.matvec(&[10.0, 100.0]);
+        assert_eq!(y, vec![210.0, 300.0]);
+    }
+
+    #[test]
+    fn from_coo_sums_duplicates() {
+        let info = LocalInfo::whole(1, 1, 0);
+        let mut coo = Coo::with_info(info);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 2.0);
+        let d = Dense::from_coo(&coo);
+        assert_eq!(d.get(0, 0), 3.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Single nonzero element and local-submatrix metadata shared by all
+//! in-memory and on-disk formats (`element_t` and the common header fields
+//! of the paper's `csr` / `abhsf` structures).
+
+use std::cmp::Ordering;
+
+/// One nonzero element in *local* coordinates (0-based, relative to the
+/// owning process's submatrix origin `(m_offset, n_offset)`).
+///
+/// Mirrors the paper's `element_t { row; col; val; }`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Element {
+    /// Local row index.
+    pub row: u64,
+    /// Local column index.
+    pub col: u64,
+    /// Value.
+    pub val: f64,
+}
+
+impl Element {
+    /// Construct an element.
+    pub fn new(row: u64, col: u64, val: f64) -> Self {
+        Self { row, col, val }
+    }
+
+    /// Lexicographic (row, col) comparison — the sort order Algorithm 1
+    /// applies to the per-block-row `elements` buffer.
+    pub fn cmp_lex(&self, other: &Self) -> Ordering {
+        (self.row, self.col).cmp(&(other.row, other.col))
+    }
+}
+
+/// Sort a buffer of elements lexicographically by (row, col).
+pub fn sort_lex(elements: &mut [Element]) {
+    elements.sort_unstable_by(|a, b| a.cmp_lex(b));
+}
+
+/// Shared matrix/submatrix metadata: the global shape plus the local
+/// window this process owns. Corresponds to the common attribute prefix of
+/// the paper's `abhsf` and `csr` structures (`m, n, z, m_local, n_local,
+/// z_local, m_offset, n_offset`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LocalInfo {
+    /// Global number of rows `m`.
+    pub m: u64,
+    /// Global number of columns `n`.
+    pub n: u64,
+    /// Global number of nonzero elements `nnz`.
+    pub z: u64,
+    /// Local rows `m^(k)`.
+    pub m_local: u64,
+    /// Local columns `n^(k)`.
+    pub n_local: u64,
+    /// Local nonzeros `nnz^(k)`.
+    pub z_local: u64,
+    /// First row of the local submatrix `r^(k)` (0-based).
+    pub m_offset: u64,
+    /// First column of the local submatrix `c^(k)` (0-based).
+    pub n_offset: u64,
+}
+
+impl LocalInfo {
+    /// Metadata for a single-process (whole-matrix) view.
+    pub fn whole(m: u64, n: u64, z: u64) -> Self {
+        Self {
+            m,
+            n,
+            z,
+            m_local: m,
+            n_local: n,
+            z_local: z,
+            m_offset: 0,
+            n_offset: 0,
+        }
+    }
+
+    /// Check internal consistency (window within global bounds).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.m_offset + self.m_local > self.m {
+            return Err(format!(
+                "row window [{}, {}) exceeds m={}",
+                self.m_offset,
+                self.m_offset + self.m_local,
+                self.m
+            ));
+        }
+        if self.n_offset + self.n_local > self.n {
+            return Err(format!(
+                "col window [{}, {}) exceeds n={}",
+                self.n_offset,
+                self.n_offset + self.n_local,
+                self.n
+            ));
+        }
+        if self.z_local > self.z {
+            return Err(format!("z_local={} exceeds z={}", self.z_local, self.z));
+        }
+        Ok(())
+    }
+
+    /// Whether a *global* coordinate falls inside this local window.
+    pub fn contains_global(&self, i: u64, j: u64) -> bool {
+        i >= self.m_offset
+            && i < self.m_offset + self.m_local
+            && j >= self.n_offset
+            && j < self.n_offset + self.n_local
+    }
+}
+
+/// Compute the tight bounding window of a set of *global* elements, as the
+/// paper defines `r^(k), c^(k), m^(k), n^(k)` (min/max over owned nonzeros).
+/// Returns `None` for an empty set.
+pub fn tight_window(global_elems: &[(u64, u64, f64)]) -> Option<(u64, u64, u64, u64)> {
+    if global_elems.is_empty() {
+        return None;
+    }
+    let mut rmin = u64::MAX;
+    let mut rmax = 0u64;
+    let mut cmin = u64::MAX;
+    let mut cmax = 0u64;
+    for &(i, j, _) in global_elems {
+        rmin = rmin.min(i);
+        rmax = rmax.max(i);
+        cmin = cmin.min(j);
+        cmax = cmax.max(j);
+    }
+    Some((rmin, cmin, rmax - rmin + 1, cmax - cmin + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_lex_order() {
+        let mut v = vec![
+            Element::new(1, 2, 0.5),
+            Element::new(0, 9, 1.0),
+            Element::new(1, 0, 2.0),
+            Element::new(0, 0, 3.0),
+        ];
+        sort_lex(&mut v);
+        let order: Vec<(u64, u64)> = v.iter().map(|e| (e.row, e.col)).collect();
+        assert_eq!(order, vec![(0, 0), (0, 9), (1, 0), (1, 2)]);
+    }
+
+    #[test]
+    fn local_info_validate() {
+        let ok = LocalInfo {
+            m: 10,
+            n: 10,
+            z: 5,
+            m_local: 4,
+            n_local: 10,
+            z_local: 5,
+            m_offset: 6,
+            n_offset: 0,
+        };
+        assert!(ok.validate().is_ok());
+        let bad = LocalInfo {
+            m_offset: 7,
+            ..ok
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn contains_global_window() {
+        let w = LocalInfo {
+            m: 100,
+            n: 100,
+            z: 0,
+            m_local: 10,
+            n_local: 20,
+            z_local: 0,
+            m_offset: 30,
+            n_offset: 40,
+        };
+        assert!(w.contains_global(30, 40));
+        assert!(w.contains_global(39, 59));
+        assert!(!w.contains_global(40, 40));
+        assert!(!w.contains_global(30, 60));
+        assert!(!w.contains_global(29, 40));
+    }
+
+    #[test]
+    fn tight_window_matches_paper_definition() {
+        let elems = vec![(5u64, 7u64, 1.0), (9, 3, 2.0), (5, 3, 3.0)];
+        let (r, c, m, n) = tight_window(&elems).unwrap();
+        assert_eq!((r, c, m, n), (5, 3, 5, 5));
+        assert!(tight_window(&[]).is_none());
+    }
+
+    #[test]
+    fn whole_info() {
+        let w = LocalInfo::whole(8, 9, 17);
+        assert!(w.validate().is_ok());
+        assert_eq!(w.m_local, 8);
+        assert_eq!(w.n_local, 9);
+        assert_eq!(w.z_local, 17);
+        assert!(w.contains_global(7, 8));
+    }
+}

@@ -1,0 +1,40 @@
+//! In-memory sparse matrix formats: COO, CSR, and a small dense oracle,
+//! plus the shared element/metadata types.
+//!
+//! All formats store *local* coordinates relative to the owning process's
+//! submatrix window (`m_offset`, `n_offset`); see [`element::LocalInfo`].
+
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod element;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use element::{Element, LocalInfo};
+
+/// Canonical (sorted, deduplicated) element list of a local matrix in any
+/// format — the equality notion used by roundtrip tests.
+pub fn canonical_elements(coo: &Coo) -> Vec<Element> {
+    let mut c = coo.clone();
+    c.sort_dedup();
+    c.to_elements()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_is_order_independent() {
+        let info = LocalInfo::whole(4, 4, 0);
+        let mut a = Coo::with_info(info);
+        a.push(1, 1, 2.0);
+        a.push(0, 3, 1.0);
+        let mut b = Coo::with_info(info);
+        b.push(0, 3, 1.0);
+        b.push(1, 1, 2.0);
+        assert_eq!(canonical_elements(&a), canonical_elements(&b));
+    }
+}

@@ -1,0 +1,18 @@
+//! Scalable sparse-matrix generation (stand-in for the paper's workload).
+//!
+//! The paper's experiments enlarge the `cage12` seed matrix (130k rows,
+//! 2M nonzeros, ≈15.6 nnz/row) with Kronecker products until each process
+//! holds 256 GB (ref [4], *Scalable parallel generation of very large
+//! sparse matrices*). `cage12` itself is not redistributable data, so
+//! [`seed`] provides a deterministic **cage-like** generator matching its
+//! structural statistics (banded DNA-electrophoresis pattern, similar row
+//! density), plus simpler seeds for tests and ablations; [`kronecker`]
+//! implements the same lazy, per-process Kronecker enlargement as ref [4]
+//! — any rank can materialize exactly its own portion without ever
+//! building the global matrix.
+
+pub mod kronecker;
+pub mod seed;
+
+pub use kronecker::KroneckerGen;
+pub use seed::SeedMatrix;

@@ -1,0 +1,171 @@
+//! Scalar types storable in h5spm attributes and datasets.
+
+/// Type tag for stored scalars.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Dtype {
+    /// Unsigned 8-bit.
+    U8 = 0,
+    /// Unsigned 16-bit.
+    U16 = 1,
+    /// Unsigned 32-bit.
+    U32 = 2,
+    /// Unsigned 64-bit.
+    U64 = 3,
+    /// Signed 32-bit.
+    I32 = 4,
+    /// Signed 64-bit.
+    I64 = 5,
+    /// IEEE-754 single.
+    F32 = 6,
+    /// IEEE-754 double.
+    F64 = 7,
+}
+
+impl Dtype {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::U16 => 2,
+            Dtype::U32 | Dtype::I32 | Dtype::F32 => 4,
+            Dtype::U64 | Dtype::I64 | Dtype::F64 => 8,
+        }
+    }
+
+    /// Decode from its tag byte.
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => Dtype::U8,
+            1 => Dtype::U16,
+            2 => Dtype::U32,
+            3 => Dtype::U64,
+            4 => Dtype::I32,
+            5 => Dtype::I64,
+            6 => Dtype::F32,
+            7 => Dtype::F64,
+            _ => return None,
+        })
+    }
+}
+
+/// A scalar that can live in an h5spm dataset or attribute.
+///
+/// Little-endian on disk throughout.
+pub trait Scalar: Copy + Default + std::fmt::Debug + PartialEq + 'static {
+    /// The dtype tag of this scalar.
+    const DTYPE: Dtype;
+
+    /// Serialize into `buf` (exactly `Self::DTYPE.size()` bytes).
+    fn write_le(self, buf: &mut [u8]);
+
+    /// Deserialize from `buf`.
+    fn read_le(buf: &[u8]) -> Self;
+
+    /// Widen to f64 for attribute storage.
+    fn to_f64(self) -> f64;
+}
+
+macro_rules! impl_scalar {
+    ($t:ty, $dt:expr) => {
+        impl Scalar for $t {
+            const DTYPE: Dtype = $dt;
+
+            #[inline]
+            fn write_le(self, buf: &mut [u8]) {
+                buf.copy_from_slice(&self.to_le_bytes());
+            }
+
+            #[inline]
+            fn read_le(buf: &[u8]) -> Self {
+                <$t>::from_le_bytes(buf.try_into().expect("scalar width"))
+            }
+
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+        }
+    };
+}
+
+impl_scalar!(u8, Dtype::U8);
+impl_scalar!(u16, Dtype::U16);
+impl_scalar!(u32, Dtype::U32);
+impl_scalar!(u64, Dtype::U64);
+impl_scalar!(i32, Dtype::I32);
+impl_scalar!(i64, Dtype::I64);
+impl_scalar!(f32, Dtype::F32);
+impl_scalar!(f64, Dtype::F64);
+
+/// Encode a slice of scalars into little-endian bytes.
+pub fn encode_slice<T: Scalar>(xs: &[T]) -> Vec<u8> {
+    let w = T::DTYPE.size();
+    let mut out = vec![0u8; xs.len() * w];
+    for (i, &x) in xs.iter().enumerate() {
+        x.write_le(&mut out[i * w..(i + 1) * w]);
+    }
+    out
+}
+
+/// Decode little-endian bytes into scalars.
+pub fn decode_slice<T: Scalar>(bytes: &[u8]) -> Vec<T> {
+    let mut out = Vec::new();
+    decode_into(bytes, &mut out);
+    out
+}
+
+/// Decode little-endian bytes into a reused buffer (cleared first) —
+/// avoids one allocation per chunk on the loader's hot path.
+pub fn decode_into<T: Scalar>(bytes: &[u8], out: &mut Vec<T>) {
+    let w = T::DTYPE.size();
+    assert!(bytes.len() % w == 0, "byte length {} not multiple of {w}", bytes.len());
+    out.clear();
+    out.reserve(bytes.len() / w);
+    out.extend(bytes.chunks_exact(w).map(T::read_le));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_tags() {
+        for dt in [
+            Dtype::U8,
+            Dtype::U16,
+            Dtype::U32,
+            Dtype::U64,
+            Dtype::I32,
+            Dtype::I64,
+            Dtype::F32,
+            Dtype::F64,
+        ] {
+            assert_eq!(Dtype::from_tag(dt as u8), Some(dt));
+        }
+        assert_eq!(Dtype::from_tag(99), None);
+        assert_eq!(Dtype::U8.size(), 1);
+        assert_eq!(Dtype::F64.size(), 8);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_u32() {
+        let xs = vec![0u32, 1, 0xDEAD_BEEF, u32::MAX];
+        let bytes = encode_slice(&xs);
+        assert_eq!(bytes.len(), 16);
+        assert_eq!(decode_slice::<u32>(&bytes), xs);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_f64() {
+        let xs = vec![0.0f64, -1.5, std::f64::consts::PI, f64::MIN_POSITIVE];
+        let bytes = encode_slice(&xs);
+        assert_eq!(decode_slice::<f64>(&bytes), xs);
+    }
+
+    #[test]
+    fn encode_decode_u8() {
+        let xs: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode_slice::<u8>(&encode_slice(&xs)), xs);
+    }
+}

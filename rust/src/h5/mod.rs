@@ -1,0 +1,121 @@
+//! `h5spm` — a small hierarchical container file format standing in for the
+//! HDF5 library (which the paper uses; real HDF5 is unavailable offline).
+//!
+//! The model is a strict subset of what the ABHSF storage/loading algorithms
+//! need from HDF5:
+//!
+//! * **attributes** — named typed scalars (the paper's `m`, `n_local`,
+//!   `block_size`, …);
+//! * **datasets** — named typed 1-D arrays (`schemes[]`, `coo_vals[]`, …),
+//!   stored in CRC32-checksummed chunks and readable either wholesale, as an
+//!   arbitrary slice (*hyperslab* in HDF5 terms), or through a streaming
+//!   [`cursor::Cursor`] that mirrors the pseudocode's
+//!   "next value from `abhsf.xxx[]`".
+//!
+//! On-disk layout (all little-endian):
+//!
+//! ```text
+//! [superblock]  magic "H5SPM1\0\0" | dir_offset u64 | dir_len u64
+//! [data]        chunk payloads, in write order
+//! [directory]   attr count u32, per attr: name | dtype u8 | 8-byte value
+//!               dataset count u32, per dataset: name | dtype u8 |
+//!                 total elems u64 | chunk count u32 |
+//!                 per chunk: file offset u64 | elems u64 | crc32 u32
+//!               directory crc32 u32
+//! ```
+//!
+//! The directory lives at the end so datasets stream straight to disk; the
+//! superblock's `dir_offset` is patched on `finish()`. I/O byte/op counters
+//! are exposed for the parallel-I/O cost simulator (`crate::parfs`).
+
+pub mod cursor;
+pub mod dtype;
+pub mod reader;
+pub mod writer;
+
+pub use cursor::Cursor;
+pub use dtype::{Dtype, Scalar};
+pub use reader::H5Reader;
+pub use writer::H5Writer;
+
+/// Magic bytes at file start.
+pub const MAGIC: &[u8; 8] = b"H5SPM1\0\0";
+
+/// Default dataset chunk size in elements. 64 Ki elements keeps chunks in
+/// the 64–512 KiB range for 1–8 byte scalars, similar to HDF5 defaults for
+/// large 1-D datasets.
+pub const DEFAULT_CHUNK_ELEMS: u64 = 64 * 1024;
+
+/// Errors from container I/O.
+#[derive(Debug, thiserror::Error)]
+pub enum H5Error {
+    /// Underlying filesystem error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// Bad magic / version.
+    #[error("not an h5spm file: {0}")]
+    BadMagic(String),
+    /// Structural corruption.
+    #[error("corrupt container: {0}")]
+    Corrupt(String),
+    /// Checksum failure.
+    #[error("checksum mismatch in {0} (chunk {1})")]
+    Checksum(String, usize),
+    /// Missing attribute/dataset.
+    #[error("no such {kind}: {name}")]
+    NotFound {
+        /// "attribute" or "dataset".
+        kind: &'static str,
+        /// Requested name.
+        name: String,
+    },
+    /// Type mismatch on read.
+    #[error("dtype mismatch for {name}: stored {stored:?}, requested {requested:?}")]
+    DtypeMismatch {
+        /// Object name.
+        name: String,
+        /// Stored dtype.
+        stored: Dtype,
+        /// Requested dtype.
+        requested: Dtype,
+    },
+    /// Out-of-bounds slice read.
+    #[error("slice [{start}, {start}+{count}) out of bounds for {name} (len {len})")]
+    OutOfBounds {
+        /// Dataset name.
+        name: String,
+        /// Slice start.
+        start: u64,
+        /// Slice length.
+        count: u64,
+        /// Dataset length.
+        len: u64,
+    },
+    /// API misuse (e.g. writing after finish).
+    #[error("usage error: {0}")]
+    Usage(String),
+}
+
+/// Result alias for container operations.
+pub type Result<T> = std::result::Result<T, H5Error>;
+
+/// Byte/op counters for one reader or writer, consumed by the I/O cost
+/// simulator.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoStats {
+    /// Bytes transferred (payload, excluding directory).
+    pub bytes: u64,
+    /// Number of distinct read/write operations (chunk granularity).
+    pub ops: u64,
+    /// Number of file opens.
+    pub opens: u64,
+}
+
+impl IoStats {
+    /// Accumulate another counter set.
+    pub fn add(&mut self, other: IoStats) {
+        self.bytes += other.bytes;
+        self.ops += other.ops;
+        self.opens += other.opens;
+    }
+}

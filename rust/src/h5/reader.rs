@@ -1,0 +1,294 @@
+//! h5spm container reader: directory parsing, attribute access, whole /
+//! sliced (hyperslab) dataset reads, checksum verification, I/O counters.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use crate::h5::dtype::{decode_slice, Dtype, Scalar};
+use crate::h5::writer::{AttrEntry, ChunkEntry, DatasetEntry};
+use crate::h5::{H5Error, IoStats, Result, MAGIC};
+
+/// Read-only view of one h5spm container.
+pub struct H5Reader {
+    pub(crate) file: RefCell<File>,
+    path: PathBuf,
+    attrs: BTreeMap<String, AttrEntry>,
+    pub(crate) datasets: BTreeMap<String, DatasetEntry>,
+    stats: RefCell<IoStats>,
+    /// When false, chunk CRCs are not verified (perf mode).
+    pub verify_checksums: bool,
+}
+
+impl H5Reader {
+    /// Open and parse the directory.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = File::open(&path)?;
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic)
+            .map_err(|_| H5Error::BadMagic(format!("{}: too short", path.display())))?;
+        if &magic != MAGIC {
+            return Err(H5Error::BadMagic(format!(
+                "{}: bad magic {:?}",
+                path.display(),
+                magic
+            )));
+        }
+        let dir_offset = read_u64(&mut file)?;
+        let dir_len = read_u64(&mut file)?;
+        if dir_offset == 0 {
+            return Err(H5Error::Corrupt(format!(
+                "{}: unfinished file (no directory)",
+                path.display()
+            )));
+        }
+        file.seek(SeekFrom::Start(dir_offset))?;
+        let mut dir = vec![0u8; dir_len as usize];
+        file.read_exact(&mut dir)?;
+        let mut crc_bytes = [0u8; 4];
+        file.read_exact(&mut crc_bytes)?;
+        if crc32fast::hash(&dir) != u32::from_le_bytes(crc_bytes) {
+            return Err(H5Error::Corrupt(format!(
+                "{}: directory checksum mismatch",
+                path.display()
+            )));
+        }
+
+        let mut p = Parser { buf: &dir, pos: 0 };
+        let nattrs = p.u32()? as usize;
+        let mut attrs = BTreeMap::new();
+        for _ in 0..nattrs {
+            let name = p.name()?;
+            let dtype = Dtype::from_tag(p.u8()?)
+                .ok_or_else(|| H5Error::Corrupt("bad attr dtype".into()))?;
+            let mut raw = [0u8; 8];
+            raw.copy_from_slice(p.bytes(8)?);
+            attrs.insert(name, AttrEntry { dtype, raw });
+        }
+        let ndatasets = p.u32()? as usize;
+        let mut datasets = BTreeMap::new();
+        for _ in 0..ndatasets {
+            let name = p.name()?;
+            let dtype = Dtype::from_tag(p.u8()?)
+                .ok_or_else(|| H5Error::Corrupt("bad dataset dtype".into()))?;
+            let total_elems = p.u64()?;
+            let nchunks = p.u32()? as usize;
+            let mut chunks = Vec::with_capacity(nchunks);
+            let mut sum = 0u64;
+            for _ in 0..nchunks {
+                let offset = p.u64()?;
+                let elems = p.u64()?;
+                let crc = p.u32()?;
+                sum += elems;
+                chunks.push(ChunkEntry { offset, elems, crc });
+            }
+            if sum != total_elems {
+                return Err(H5Error::Corrupt(format!(
+                    "dataset {name}: chunk sum {sum} != total {total_elems}"
+                )));
+            }
+            datasets.insert(
+                name,
+                DatasetEntry {
+                    dtype,
+                    total_elems,
+                    chunks,
+                },
+            );
+        }
+
+        Ok(Self {
+            file: RefCell::new(file),
+            path,
+            attrs,
+            datasets,
+            stats: RefCell::new(IoStats {
+                opens: 1,
+                // Superblock + directory reads.
+                bytes: 24 + dir_len + 4,
+                ops: 2,
+            }),
+            verify_checksums: true,
+        })
+    }
+
+    /// Path this reader was opened from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// List attribute names.
+    pub fn attr_names(&self) -> Vec<String> {
+        self.attrs.keys().cloned().collect()
+    }
+
+    /// List dataset names.
+    pub fn dataset_names(&self) -> Vec<String> {
+        self.datasets.keys().cloned().collect()
+    }
+
+    /// Typed attribute read.
+    pub fn attr<T: Scalar>(&self, name: &str) -> Result<T> {
+        let a = self.attrs.get(name).ok_or_else(|| H5Error::NotFound {
+            kind: "attribute",
+            name: name.into(),
+        })?;
+        if a.dtype != T::DTYPE {
+            return Err(H5Error::DtypeMismatch {
+                name: name.into(),
+                stored: a.dtype,
+                requested: T::DTYPE,
+            });
+        }
+        Ok(T::read_le(&a.raw[..T::DTYPE.size()]))
+    }
+
+    /// Does this dataset exist?
+    pub fn has_dataset(&self, name: &str) -> bool {
+        self.datasets.contains_key(name)
+    }
+
+    /// Dataset length in elements.
+    pub fn dataset_len(&self, name: &str) -> Result<u64> {
+        Ok(self.entry(name)?.total_elems)
+    }
+
+    /// Dataset dtype.
+    pub fn dataset_dtype(&self, name: &str) -> Result<Dtype> {
+        Ok(self.entry(name)?.dtype)
+    }
+
+    pub(crate) fn entry(&self, name: &str) -> Result<&DatasetEntry> {
+        self.datasets.get(name).ok_or_else(|| H5Error::NotFound {
+            kind: "dataset",
+            name: name.into(),
+        })
+    }
+
+    fn check_dtype<T: Scalar>(&self, name: &str) -> Result<&DatasetEntry> {
+        let e = self.entry(name)?;
+        if e.dtype != T::DTYPE {
+            return Err(H5Error::DtypeMismatch {
+                name: name.into(),
+                stored: e.dtype,
+                requested: T::DTYPE,
+            });
+        }
+        Ok(e)
+    }
+
+    /// Read one whole chunk's payload (with optional CRC verification).
+    pub(crate) fn read_chunk_bytes(
+        &self,
+        name: &str,
+        chunk_idx: usize,
+        chunk: &ChunkEntry,
+        width: usize,
+    ) -> Result<Vec<u8>> {
+        let nbytes = chunk.elems as usize * width;
+        let mut buf = vec![0u8; nbytes];
+        {
+            let mut f = self.file.borrow_mut();
+            f.seek(SeekFrom::Start(chunk.offset))?;
+            f.read_exact(&mut buf)?;
+        }
+        let mut st = self.stats.borrow_mut();
+        st.bytes += nbytes as u64;
+        st.ops += 1;
+        drop(st);
+        if self.verify_checksums && crc32fast::hash(&buf) != chunk.crc {
+            return Err(H5Error::Checksum(name.to_string(), chunk_idx));
+        }
+        Ok(buf)
+    }
+
+    /// Read an entire dataset.
+    pub fn read_all<T: Scalar>(&self, name: &str) -> Result<Vec<T>> {
+        let e = self.check_dtype::<T>(name)?.clone();
+        let mut out = Vec::with_capacity(e.total_elems as usize);
+        for (i, c) in e.chunks.iter().enumerate() {
+            let bytes = self.read_chunk_bytes(name, i, c, T::DTYPE.size())?;
+            out.extend(decode_slice::<T>(&bytes));
+        }
+        Ok(out)
+    }
+
+    /// Read the hyperslab `[start, start+count)` of a dataset, touching
+    /// only the chunks that overlap it.
+    pub fn read_slice<T: Scalar>(&self, name: &str, start: u64, count: u64) -> Result<Vec<T>> {
+        let e = self.check_dtype::<T>(name)?.clone();
+        if start + count > e.total_elems {
+            return Err(H5Error::OutOfBounds {
+                name: name.into(),
+                start,
+                count,
+                len: e.total_elems,
+            });
+        }
+        let mut out = Vec::with_capacity(count as usize);
+        let mut chunk_start = 0u64;
+        for (i, c) in e.chunks.iter().enumerate() {
+            let chunk_end = chunk_start + c.elems;
+            if chunk_end > start && chunk_start < start + count {
+                let bytes = self.read_chunk_bytes(name, i, c, T::DTYPE.size())?;
+                let all = decode_slice::<T>(&bytes);
+                let lo = start.saturating_sub(chunk_start) as usize;
+                let hi = ((start + count).min(chunk_end) - chunk_start) as usize;
+                out.extend_from_slice(&all[lo..hi]);
+            }
+            if chunk_end >= start + count {
+                break;
+            }
+            chunk_start = chunk_end;
+        }
+        Ok(out)
+    }
+
+    /// I/O counters accumulated by this reader.
+    pub fn stats(&self) -> IoStats {
+        *self.stats.borrow()
+    }
+}
+
+struct Parser<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(H5Error::Corrupt("directory truncated".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn name(&mut self) -> Result<String> {
+        let len = u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()) as usize;
+        let raw = self.bytes(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| H5Error::Corrupt("non-utf8 name".into()))
+    }
+}
+
+fn read_u64(f: &mut File) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}

@@ -1,0 +1,262 @@
+//! h5spm container writer.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::h5::dtype::{encode_slice, Dtype, Scalar};
+use crate::h5::{H5Error, IoStats, Result, DEFAULT_CHUNK_ELEMS, MAGIC};
+
+/// One chunk's directory entry.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ChunkEntry {
+    pub offset: u64,
+    pub elems: u64,
+    pub crc: u32,
+}
+
+/// One dataset's directory entry.
+#[derive(Debug, Clone)]
+pub(crate) struct DatasetEntry {
+    pub dtype: Dtype,
+    pub total_elems: u64,
+    pub chunks: Vec<ChunkEntry>,
+}
+
+/// Attribute value: dtype tag + 8-byte little-endian payload.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct AttrEntry {
+    pub dtype: Dtype,
+    pub raw: [u8; 8],
+}
+
+/// Streaming writer for one h5spm file.
+///
+/// Datasets are written through [`H5Writer::write_dataset`] (whole array)
+/// or a [`DatasetAppender`] (streaming); attributes via `set_attr`.
+/// Call [`H5Writer::finish`] to write the directory — dropping without
+/// finishing leaves an unreadable file, mirroring HDF5's behaviour on
+/// unclosed files.
+pub struct H5Writer {
+    file: BufWriter<File>,
+    pos: u64,
+    attrs: BTreeMap<String, AttrEntry>,
+    datasets: BTreeMap<String, DatasetEntry>,
+    chunk_elems: u64,
+    stats: IoStats,
+    finished: bool,
+}
+
+impl H5Writer {
+    /// Create (truncate) a container at `path`.
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut file = BufWriter::new(File::create(path)?);
+        // Superblock: magic + placeholder directory offset/len.
+        file.write_all(MAGIC)?;
+        file.write_all(&0u64.to_le_bytes())?;
+        file.write_all(&0u64.to_le_bytes())?;
+        Ok(Self {
+            file,
+            pos: (MAGIC.len() + 16) as u64,
+            attrs: BTreeMap::new(),
+            datasets: BTreeMap::new(),
+            chunk_elems: DEFAULT_CHUNK_ELEMS,
+            stats: IoStats {
+                opens: 1,
+                ..Default::default()
+            },
+            finished: false,
+        })
+    }
+
+    /// Override the chunk size (elements per chunk) for subsequently
+    /// written datasets.
+    pub fn set_chunk_elems(&mut self, elems: u64) {
+        assert!(elems > 0, "chunk_elems must be positive");
+        self.chunk_elems = elems;
+    }
+
+    /// Set a typed scalar attribute (overwrites an existing one).
+    pub fn set_attr<T: Scalar>(&mut self, name: &str, value: T) -> Result<()> {
+        self.check_open()?;
+        let mut raw = [0u8; 8];
+        value.write_le(&mut raw[..T::DTYPE.size()]);
+        self.attrs.insert(
+            name.to_string(),
+            AttrEntry {
+                dtype: T::DTYPE,
+                raw,
+            },
+        );
+        Ok(())
+    }
+
+    /// Write a whole dataset at once (chunked internally).
+    pub fn write_dataset<T: Scalar>(&mut self, name: &str, data: &[T]) -> Result<()> {
+        let mut app = self.append_dataset::<T>(name)?;
+        app.append(data)?;
+        app.close()
+    }
+
+    /// Open a streaming appender for a new dataset. Only one appender may
+    /// be active at a time (enforced by the borrow).
+    pub fn append_dataset<T: Scalar>(&mut self, name: &str) -> Result<DatasetAppender<'_, T>> {
+        self.check_open()?;
+        if self.datasets.contains_key(name) {
+            return Err(H5Error::Usage(format!("dataset {name} already written")));
+        }
+        Ok(DatasetAppender {
+            name: name.to_string(),
+            writer: self,
+            buf: Vec::new(),
+            entry: DatasetEntry {
+                dtype: T::DTYPE,
+                total_elems: 0,
+                chunks: Vec::new(),
+            },
+            closed: false,
+            _ty: std::marker::PhantomData,
+        })
+    }
+
+    fn check_open(&self) -> Result<()> {
+        if self.finished {
+            Err(H5Error::Usage("writer already finished".into()))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn write_chunk_bytes(&mut self, bytes: &[u8]) -> Result<(u64, u32)> {
+        let offset = self.pos;
+        let crc = crc32fast::hash(bytes);
+        self.file.write_all(bytes)?;
+        self.pos += bytes.len() as u64;
+        self.stats.bytes += bytes.len() as u64;
+        self.stats.ops += 1;
+        Ok((offset, crc))
+    }
+
+    /// Write the directory, patch the superblock, flush, and return I/O
+    /// statistics.
+    pub fn finish(mut self) -> Result<IoStats> {
+        self.check_open()?;
+        let dir_offset = self.pos;
+        let mut dir = Vec::new();
+        write_u32(&mut dir, self.attrs.len() as u32);
+        for (name, a) in &self.attrs {
+            write_name(&mut dir, name);
+            dir.push(a.dtype as u8);
+            dir.extend_from_slice(&a.raw);
+        }
+        write_u32(&mut dir, self.datasets.len() as u32);
+        for (name, d) in &self.datasets {
+            write_name(&mut dir, name);
+            dir.push(d.dtype as u8);
+            dir.extend_from_slice(&d.total_elems.to_le_bytes());
+            write_u32(&mut dir, d.chunks.len() as u32);
+            for c in &d.chunks {
+                dir.extend_from_slice(&c.offset.to_le_bytes());
+                dir.extend_from_slice(&c.elems.to_le_bytes());
+                dir.extend_from_slice(&c.crc.to_le_bytes());
+            }
+        }
+        let dir_crc = crc32fast::hash(&dir);
+        self.file.write_all(&dir)?;
+        self.file.write_all(&dir_crc.to_le_bytes())?;
+        // Patch the superblock.
+        self.file.flush()?;
+        let f = self.file.get_mut();
+        f.seek(SeekFrom::Start(MAGIC.len() as u64))?;
+        f.write_all(&dir_offset.to_le_bytes())?;
+        f.write_all(&(dir.len() as u64).to_le_bytes())?;
+        f.sync_all()?;
+        self.finished = true;
+        Ok(self.stats)
+    }
+
+    /// I/O counters so far.
+    pub fn stats(&self) -> IoStats {
+        self.stats
+    }
+}
+
+fn write_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn write_name(out: &mut Vec<u8>, name: &str) {
+    let bytes = name.as_bytes();
+    assert!(bytes.len() <= u16::MAX as usize, "name too long");
+    out.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+/// Streaming appender for one dataset; buffers to the chunk size and
+/// flushes full chunks to disk.
+pub struct DatasetAppender<'w, T: Scalar> {
+    name: String,
+    writer: &'w mut H5Writer,
+    buf: Vec<T>,
+    entry: DatasetEntry,
+    closed: bool,
+    _ty: std::marker::PhantomData<T>,
+}
+
+impl<T: Scalar> DatasetAppender<'_, T> {
+    /// Append elements.
+    pub fn append(&mut self, data: &[T]) -> Result<()> {
+        self.buf.extend_from_slice(data);
+        let chunk = self.writer.chunk_elems as usize;
+        while self.buf.len() >= chunk {
+            let rest = self.buf.split_off(chunk);
+            let full = std::mem::replace(&mut self.buf, rest);
+            self.flush_chunk(&full)?;
+        }
+        Ok(())
+    }
+
+    /// Append one element.
+    pub fn push(&mut self, x: T) -> Result<()> {
+        self.append(std::slice::from_ref(&x))
+    }
+
+    fn flush_chunk(&mut self, data: &[T]) -> Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let bytes = encode_slice(data);
+        let (offset, crc) = self.writer.write_chunk_bytes(&bytes)?;
+        self.entry.chunks.push(ChunkEntry {
+            offset,
+            elems: data.len() as u64,
+            crc,
+        });
+        self.entry.total_elems += data.len() as u64;
+        Ok(())
+    }
+
+    /// Flush the tail chunk and register the dataset in the directory.
+    pub fn close(mut self) -> Result<()> {
+        let tail = std::mem::take(&mut self.buf);
+        self.flush_chunk(&tail)?;
+        self.writer
+            .datasets
+            .insert(self.name.clone(), self.entry.clone());
+        self.closed = true;
+        Ok(())
+    }
+}
+
+impl<T: Scalar> Drop for DatasetAppender<'_, T> {
+    fn drop(&mut self) {
+        // Losing data silently is worse than a loud panic in debug;
+        // in release an unclosed appender simply omits the dataset.
+        debug_assert!(
+            self.closed || (self.buf.is_empty() && self.entry.total_elems == 0),
+            "DatasetAppender for {:?} dropped without close()",
+            self.name
+        );
+    }
+}

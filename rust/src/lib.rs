@@ -1,0 +1,30 @@
+//! # abhsf — parallel loading of large sparse matrices in the ABHSF
+//!
+//! A production-style reproduction of *"Loading Large Sparse Matrices Stored
+//! in Files in the Adaptive-Blocking Hierarchical Storage Format"* (Langr,
+//! Šimeček, Tvrdík, 2014), built as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: a
+//!   leader/worker streaming orchestrator ([`coordinator`]) that stores and
+//!   loads distributed sparse matrices through the space-efficient ABHSF
+//!   ([`abhsf`]) in per-process [`h5`] container files, under same or
+//!   different store/load *configurations* (process count × element→process
+//!   [`mapping`] × in-memory [`formats`]), with a calibrated parallel-I/O
+//!   cost model ([`parfs`]) reproducing the paper's Figure 1.
+//! * **Layer 2/1 (python/, build-time)** — a JAX blocked-SpMV consumer with
+//!   Pallas kernels, AOT-lowered to HLO text and executed from Rust via the
+//!   PJRT CPU client ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod abhsf;
+pub mod coordinator;
+pub mod experiments;
+pub mod formats;
+pub mod gen;
+pub mod h5;
+pub mod mapping;
+pub mod parfs;
+pub mod runtime;
+pub mod spmv;
+pub mod util;

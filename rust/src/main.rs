@@ -1,0 +1,409 @@
+//! `abhsf` — command-line launcher for the ABHSF parallel store/load
+//! system (leader entrypoint).
+//!
+//! Subcommands:
+//!
+//! * `generate`  — describe a Kronecker workload (dims, nnz, balance);
+//! * `store`     — generate a matrix and store it in parallel as ABHSF;
+//! * `info`      — inspect a stored matrix directory;
+//! * `load`      — load a stored matrix (same or different configuration,
+//!   independent/collective/exchange), with wall + simulated times;
+//! * `roundtrip` — store, load, verify, report;
+//! * `spmv`      — load and validate PJRT SpMV against native Rust;
+//! * `fig1`      — regenerate the paper's Figure 1 table quickly.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use abhsf::abhsf::load::read_header;
+use abhsf::coordinator::{
+    load_different_config, load_exchange, load_same_config, storer::StoreOptions, Cluster,
+    DiffLoadOptions, InMemFormat,
+};
+use abhsf::experiments::{run_fig1, Fig1Config};
+use abhsf::formats::Csr;
+use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::h5::H5Reader;
+use abhsf::mapping::{Block2d, Colwise, ProcessMapping, Rowwise};
+use abhsf::parfs::{FsModel, IoStrategy};
+use abhsf::util::args::Args;
+use abhsf::util::bench::Table;
+use abhsf::util::human;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(argv),
+        "store" => cmd_store(argv),
+        "info" => cmd_info(argv),
+        "load" => cmd_load(argv),
+        "roundtrip" => cmd_roundtrip(argv),
+        "spmv" => cmd_spmv(argv),
+        "fig1" => cmd_fig1(argv),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand: {other}\n");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "abhsf — parallel loading of sparse matrices in the ABHSF \
+         (Langr, Simecek, Tvrdik, 2014 reproduction)\n\n\
+         Usage: abhsf <subcommand> [options]\n\n\
+         Subcommands:\n\
+         \x20 generate   describe a Kronecker workload\n\
+         \x20 store      generate + store a matrix in parallel (ABHSF files)\n\
+         \x20 info       inspect a stored matrix directory\n\
+         \x20 load       load a stored matrix (same/diff config, \
+         independent|collective|exchange)\n\
+         \x20 roundtrip  store, reload, verify\n\
+         \x20 spmv       load + validate PJRT SpMV vs native\n\
+         \x20 fig1       regenerate the paper's Figure 1 (quick profile)\n\n\
+         Common options: --seed-size N --seed cage|diag|random|rmat --order D\n\
+         \x20               --procs P --block-size S --dir PATH --mapping rowwise|colwise|2d\n\
+         \x20               --strategy independent|collective|exchange --format csr|coo\n"
+    );
+}
+
+/// Shared workload options.
+struct Workload {
+    gen: Arc<KroneckerGen>,
+}
+
+fn parse_workload(a: &Args) -> anyhow::Result<Workload> {
+    let seed_n: u64 = a.parse_or("seed-size", 16u64)?;
+    let seed_kind = a.str_or("seed", "cage");
+    let order: u32 = a.parse_or("order", 2u32)?;
+    let rng_seed: u64 = a.parse_or("rng-seed", 42u64)?;
+    let seed = match seed_kind.as_str() {
+        "cage" => SeedMatrix::cage_like(seed_n, rng_seed),
+        "diag" => SeedMatrix::diagonal(seed_n),
+        "random" => SeedMatrix::random(seed_n, a.parse_or("density", 0.1f64)?, rng_seed),
+        "rmat" => {
+            let scale = (seed_n as f64).log2().ceil() as u32;
+            SeedMatrix::rmat(scale, a.parse_or("avg-row", 8u64)?, rng_seed)
+        }
+        other => anyhow::bail!("unknown seed kind {other} (cage|diag|random|rmat)"),
+    };
+    Ok(Workload {
+        gen: Arc::new(KroneckerGen::new(seed, order)),
+    })
+}
+
+fn parse_mapping(
+    a: &Args,
+    gen: &KroneckerGen,
+    p: usize,
+) -> anyhow::Result<Arc<dyn ProcessMapping>> {
+    let n = gen.dim();
+    Ok(match a.str_or("mapping", "rowwise").as_str() {
+        "rowwise" => Arc::new(gen.balanced_rowwise(p)),
+        "rowwise-regular" => Arc::new(Rowwise::regular(n, n, p)),
+        "colwise" => Arc::new(Colwise::regular(n, n, p)),
+        "2d" => {
+            let pr = (p as f64).sqrt() as usize;
+            anyhow::ensure!(pr * pr == p, "--mapping 2d requires a square process count");
+            Arc::new(Block2d::regular(n, n, pr, pr))
+        }
+        other => anyhow::bail!("unknown mapping {other} (rowwise|rowwise-regular|colwise|2d)"),
+    })
+}
+
+fn parse_format(a: &Args) -> anyhow::Result<InMemFormat> {
+    Ok(match a.str_or("format", "csr").as_str() {
+        "csr" => InMemFormat::Csr,
+        "coo" => InMemFormat::Coo,
+        other => anyhow::bail!("unknown format {other} (csr|coo)"),
+    })
+}
+
+fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf generate", argv, &[])?;
+    let w = parse_workload(&a)?;
+    let gen = &w.gen;
+    println!("seed        : {}", gen.seed.name);
+    println!("order       : {}", gen.order);
+    println!(
+        "dimension   : {} x {}",
+        human::count(gen.dim()),
+        human::count(gen.dim())
+    );
+    println!("nonzeros    : {}", human::count(gen.nnz()));
+    println!("coo payload : {}", human::bytes(gen.nnz() * 16));
+    let p: usize = a.parse_or("procs", 4usize)?;
+    let map = gen.balanced_rowwise(p);
+    let counts: Vec<u64> = (0..p)
+        .map(|k| {
+            let (r0, _, ml, _) = abhsf::mapping::ProcessMapping::window(&map, k);
+            (r0..r0 + ml).map(|r| gen.row_nnz(r)).sum()
+        })
+        .collect();
+    println!("balanced row-wise nnz over P={p}: {counts:?}");
+    Ok(())
+}
+
+fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf store", argv, &[])?;
+    let w = parse_workload(&a)?;
+    let dir = PathBuf::from(a.str_or("dir", "matrix"));
+    let p: usize = a.parse_or("procs", 4usize)?;
+    let s: u64 = a.parse_or("block-size", 64u64)?;
+    let mapping = parse_mapping(&a, &w.gen, p)?;
+    let cluster = Cluster::new(p, 64);
+    let report = abhsf::coordinator::store_distributed(
+        &cluster,
+        &w.gen,
+        &mapping,
+        &dir,
+        StoreOptions {
+            block_size: s,
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "stored {} nnz into {} files in {:.3}s ({} payload)",
+        human::count(report.total_nnz()),
+        p,
+        report.wall_s,
+        human::bytes(report.total_bytes()),
+    );
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf info", argv, &[])?;
+    let dir = PathBuf::from(a.str_or("dir", "matrix"));
+    let mut t = Table::new(&[
+        "file", "m_local", "n_local", "z_local", "s", "blocks", "COO", "CSR", "bitmap", "dense",
+        "bytes",
+    ]);
+    let mut k = 0usize;
+    loop {
+        let path = abhsf::abhsf::matrix_file_path(&dir, k);
+        if !path.exists() {
+            break;
+        }
+        let r = H5Reader::open(&path)?;
+        let hdr = read_header(&r)?;
+        let schemes: Vec<u8> = r.read_all("schemes")?;
+        let mut counts = [0u64; 4];
+        for tag in &schemes {
+            counts[*tag as usize] += 1;
+        }
+        let bytes = std::fs::metadata(&path)?.len();
+        t.row(&[
+            format!("matrix-{k}"),
+            hdr.info.m_local.to_string(),
+            hdr.info.n_local.to_string(),
+            human::count(hdr.info.z_local),
+            hdr.block_size.to_string(),
+            hdr.blocks.to_string(),
+            counts[0].to_string(),
+            counts[1].to_string(),
+            counts[2].to_string(),
+            counts[3].to_string(),
+            human::bytes(bytes),
+        ]);
+        k += 1;
+    }
+    anyhow::ensure!(k > 0, "no matrix-*.h5spm files in {}", dir.display());
+    t.print();
+    Ok(())
+}
+
+fn count_files(dir: &std::path::Path) -> anyhow::Result<usize> {
+    let mut k = 0;
+    while abhsf::abhsf::matrix_file_path(dir, k).exists() {
+        k += 1;
+    }
+    anyhow::ensure!(k > 0, "no matrix-*.h5spm files in {}", dir.display());
+    Ok(k)
+}
+
+fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf load", argv, &["same-config"])?;
+    let dir = PathBuf::from(a.str_or("dir", "matrix"));
+    let stored = count_files(&dir)?;
+    let format = parse_format(&a)?;
+    let model = FsModel::anselm_lustre();
+
+    if a.flag("same-config") {
+        let cluster = Cluster::new(stored, 64);
+        let (_, report) = load_same_config(&cluster, &dir, format)?;
+        print_load_report(&report, &model);
+        return Ok(());
+    }
+    let p: usize = a.parse_or("procs", stored)?;
+    let r = H5Reader::open(abhsf::abhsf::matrix_file_path(&dir, 0))?;
+    let hdr = read_header(&r)?;
+    drop(r);
+    let (m, n) = (hdr.info.m, hdr.info.n);
+    let mapping: Arc<dyn ProcessMapping> = match a.str_or("mapping", "colwise").as_str() {
+        "colwise" => Arc::new(Colwise::regular(m, n, p)),
+        "rowwise" => Arc::new(Rowwise::regular(m, n, p)),
+        other => anyhow::bail!("unknown mapping {other}"),
+    };
+    let cluster = Cluster::new(p, 64);
+    let mode = a.str_or("strategy", "independent");
+    let (_, report) = match mode.as_str() {
+        "exchange" => load_exchange(&cluster, &dir, &mapping, stored, format)?,
+        "independent" => load_different_config(
+            &cluster,
+            &dir,
+            &mapping,
+            &DiffLoadOptions {
+                stored_files: stored,
+                strategy: IoStrategy::Independent,
+                format,
+            },
+        )?,
+        "collective" => load_different_config(
+            &cluster,
+            &dir,
+            &mapping,
+            &DiffLoadOptions {
+                stored_files: stored,
+                strategy: IoStrategy::Collective,
+                format,
+            },
+        )?,
+        other => anyhow::bail!("unknown strategy {other} (independent|collective|exchange)"),
+    };
+    print_load_report(&report, &model);
+    Ok(())
+}
+
+fn print_load_report(report: &abhsf::coordinator::LoadReport, model: &FsModel) {
+    let sim = report.simulate(model);
+    println!("scenario        : {}", report.scenario);
+    println!("loading procs   : {}", report.nprocs);
+    println!("nnz loaded      : {}", human::count(report.total_nnz()));
+    println!("unique bytes    : {}", human::bytes(report.unique_bytes));
+    println!(
+        "bytes read      : {}",
+        human::bytes(report.total_read_bytes())
+    );
+    println!("wall time       : {:.4} s", report.wall_s);
+    println!(
+        "sim (Lustre)    : {:.3} s  [disk {:.3} s, sync {:.3} s]",
+        sim.makespan_s, sim.disk_s, sim.sync_s
+    );
+}
+
+fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf roundtrip", argv, &[])?;
+    let w = parse_workload(&a)?;
+    let dir = std::env::temp_dir().join(format!("abhsf-roundtrip-{}", std::process::id()));
+    let p: usize = a.parse_or("procs", 4usize)?;
+    let s: u64 = a.parse_or("block-size", 32u64)?;
+    let mapping = parse_mapping(&a, &w.gen, p)?;
+    let cluster = Cluster::new(p, 64);
+    let sreport = abhsf::coordinator::store_distributed(
+        &cluster,
+        &w.gen,
+        &mapping,
+        &dir,
+        StoreOptions {
+            block_size: s,
+            ..Default::default()
+        },
+    )?;
+    let (mats, lreport) = load_same_config(&cluster, &dir, InMemFormat::Csr)?;
+    anyhow::ensure!(
+        lreport.total_nnz() == sreport.total_nnz(),
+        "nnz mismatch: stored {}, loaded {}",
+        sreport.total_nnz(),
+        lreport.total_nnz()
+    );
+    let n = w.gen.dim();
+    let x: Vec<f64> = (0..n).map(|i| ((i % 11) as f64) * 0.3 + 0.5).collect();
+    let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
+    let y = abhsf::spmv::spmv_distributed_csr(&parts, &x);
+    let mut want = vec![0.0; n as usize];
+    w.gen
+        .visit_row_range(0, n, |i, j, v| want[i as usize] += v * x[j as usize]);
+    let diff = abhsf::spmv::max_abs_diff(&y, &want);
+    anyhow::ensure!(diff < 1e-9, "spmv mismatch {diff}");
+    println!(
+        "roundtrip OK: {} nnz, store {:.3}s, load {:.3}s, spmv maxdiff {diff:.2e}",
+        human::count(sreport.total_nnz()),
+        sreport.wall_s,
+        lreport.wall_s
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf spmv", argv, &[])?;
+    let dir = PathBuf::from(a.str_or("dir", "matrix"));
+    let stored = count_files(&dir)?;
+    let cluster = Cluster::new(stored, 64);
+    let (mats, _) = load_same_config(&cluster, &dir, InMemFormat::Csr)?;
+    let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
+    let n = parts[0].info.n;
+    let x: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) * 0.5 - 1.0).collect();
+    let y_native = abhsf::spmv::spmv_distributed_csr(&parts, &x);
+    println!("native spmv: |y|_2 = {:.6}", l2(&y_native));
+
+    let rt = abhsf::runtime::Runtime::from_default_dir()?;
+    println!("pjrt platform: {}", rt.platform());
+    let mut checked = 0usize;
+    let mut max_diff = 0f64;
+    for part in &parts {
+        match rt.spmv_csr(part, &x) {
+            Ok(y) => {
+                let ro = part.info.m_offset as usize;
+                let mut local_want = vec![0.0f64; part.info.m as usize];
+                part.spmv_into(&x, &mut local_want);
+                for i in 0..part.info.m_local as usize {
+                    max_diff = max_diff.max((y[i] as f64 - local_want[ro + i]).abs());
+                }
+                checked += 1;
+            }
+            Err(e) => println!("rank part skipped ({e})"),
+        }
+    }
+    anyhow::ensure!(checked > 0, "no part fit any artifact");
+    println!(
+        "pjrt vs native: {checked}/{} parts checked, maxdiff {max_diff:.3e}",
+        parts.len()
+    );
+    anyhow::ensure!(max_diff < 1e-2, "pjrt/native divergence {max_diff}");
+    Ok(())
+}
+
+fn l2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn cmd_fig1(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf fig1", argv, &[])?;
+    let cfg = Fig1Config {
+        seed_n: a.parse_or("seed-size", 12u64)?,
+        order: a.parse_or("order", 2u32)?,
+        p_store: a.parse_or("store-procs", 6usize)?,
+        p_loads: a.list_or("procs", &[2usize, 3, 4, 6, 8])?,
+        block_size: a.parse_or("block-size", 32u64)?,
+        rng_seed: a.parse_or("rng-seed", 42u64)?,
+        reps: a.parse_or("reps", 3usize)?,
+    };
+    run_fig1(&cfg, true)?;
+    Ok(())
+}

@@ -1,0 +1,425 @@
+//! Matrix-element → process mappings (the paper's `M(i, j)` and the
+//! partitioning schemes its experiments use).
+//!
+//! A *configuration* in the paper is (process count, mapping, in-memory
+//! format). The experiments store with a balanced **row-wise** mapping and
+//! reload with a regular **column-wise** mapping; 2D block and cyclic
+//! schemes (surveyed in ref [2]) are provided for the ablation benches and
+//! to exercise the fully general `M(i, j)` path.
+
+use crate::formats::LocalInfo;
+
+/// A total mapping of global matrix coordinates to process ranks.
+pub trait ProcessMapping: Send + Sync {
+    /// Number of processes `P`.
+    fn nprocs(&self) -> usize;
+
+    /// `M(i, j)`: owner rank of element `(i, j)`.
+    fn owner(&self, i: u64, j: u64) -> usize;
+
+    /// The *declared* submatrix window of `rank` as
+    /// `(m_offset, n_offset, m_local, n_local)`.
+    ///
+    /// For contiguous schemes this is the exact owned region; schemes with
+    /// non-contiguous ownership (e.g. cyclic) return the whole matrix, and
+    /// the storing side will shrink it to the tight bounding window of the
+    /// actually owned elements (paper §2 defines `r^(k)`, `c^(k)` et al. as
+    /// min/max over owned nonzeros).
+    fn window(&self, rank: usize) -> (u64, u64, u64, u64);
+
+    /// Scheme label for logs and bench tables.
+    fn label(&self) -> String;
+}
+
+/// Build a [`LocalInfo`] for `rank` from a mapping's declared window.
+pub fn window_info(mapping: &dyn ProcessMapping, rank: usize, m: u64, n: u64, z: u64) -> LocalInfo {
+    let (ro, co, ml, nl) = mapping.window(rank);
+    LocalInfo {
+        m,
+        n,
+        z,
+        m_local: ml,
+        n_local: nl,
+        z_local: 0,
+        m_offset: ro,
+        n_offset: co,
+    }
+}
+
+/// Split `total` into `parts` contiguous chunks as evenly as possible;
+/// returns the start of each chunk plus the end sentinel (`parts + 1`
+/// entries). The first `total % parts` chunks get one extra element.
+pub fn even_starts(total: u64, parts: usize) -> Vec<u64> {
+    assert!(parts > 0);
+    let p = parts as u64;
+    let base = total / p;
+    let extra = total % p;
+    let mut starts = Vec::with_capacity(parts + 1);
+    let mut pos = 0u64;
+    starts.push(0);
+    for k in 0..p {
+        pos += base + u64::from(k < extra);
+        starts.push(pos);
+    }
+    starts
+}
+
+/// Row-wise mapping over contiguous row chunks: rank `k` owns rows
+/// `[starts[k], starts[k+1])` and all columns. The paper's storage
+/// configuration uses the *balanced* variant (equal amortized nonzeros).
+#[derive(Debug, Clone)]
+pub struct Rowwise {
+    /// Global shape.
+    pub m: u64,
+    /// Global columns.
+    pub n: u64,
+    /// Chunk starts, `P + 1` entries, ascending, `starts[0] = 0`,
+    /// `starts[P] = m`.
+    pub starts: Vec<u64>,
+}
+
+impl Rowwise {
+    /// Equal-row-count chunks ("regular" row-wise).
+    pub fn regular(m: u64, n: u64, p: usize) -> Self {
+        Self {
+            m,
+            n,
+            starts: even_starts(m, p),
+        }
+    }
+
+    /// Balanced chunks: choose boundaries so each rank's nonzero count is
+    /// as close as possible to `total/P`, given per-row counts.
+    /// This is the paper's "amortized number of nonzero elements treated
+    /// by each process was the same".
+    pub fn balanced_by_nnz(m: u64, n: u64, p: usize, row_nnz: impl Fn(u64) -> u64) -> Self {
+        let total: u64 = (0..m).map(&row_nnz).sum();
+        let mut starts = Vec::with_capacity(p + 1);
+        starts.push(0u64);
+        let mut acc = 0u64;
+        let mut row = 0u64;
+        for k in 1..p as u64 {
+            let target = total * k / p as u64;
+            while row < m && acc < target {
+                acc += row_nnz(row);
+                row += 1;
+            }
+            // Leave at least one row per remaining rank when possible.
+            let max_start = m.saturating_sub(p as u64 - k);
+            starts.push(row.min(max_start).max(*starts.last().unwrap()));
+        }
+        starts.push(m);
+        Self { m, n, starts }
+    }
+}
+
+impl ProcessMapping for Rowwise {
+    fn nprocs(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    fn owner(&self, i: u64, _j: u64) -> usize {
+        // Binary search the row chunk.
+        match self.starts.binary_search(&i) {
+            Ok(k) => k.min(self.nprocs() - 1),
+            Err(k) => k - 1,
+        }
+    }
+
+    fn window(&self, rank: usize) -> (u64, u64, u64, u64) {
+        let r0 = self.starts[rank];
+        let r1 = self.starts[rank + 1];
+        (r0, 0, r1 - r0, self.n)
+    }
+
+    fn label(&self) -> String {
+        format!("row-wise(P={})", self.nprocs())
+    }
+}
+
+/// Column-wise regular mapping: rank `k` owns an equal contiguous chunk of
+/// columns and all rows — the paper's *loading* configuration ("regular
+/// column-wise mapping, same amortized number of columns per process").
+#[derive(Debug, Clone)]
+pub struct Colwise {
+    /// Global rows.
+    pub m: u64,
+    /// Global columns.
+    pub n: u64,
+    /// Chunk starts, `P + 1` entries.
+    pub starts: Vec<u64>,
+}
+
+impl Colwise {
+    /// Equal-column-count chunks.
+    pub fn regular(m: u64, n: u64, p: usize) -> Self {
+        Self {
+            m,
+            n,
+            starts: even_starts(n, p),
+        }
+    }
+}
+
+impl ProcessMapping for Colwise {
+    fn nprocs(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    fn owner(&self, _i: u64, j: u64) -> usize {
+        match self.starts.binary_search(&j) {
+            Ok(k) => k.min(self.nprocs() - 1),
+            Err(k) => k - 1,
+        }
+    }
+
+    fn window(&self, rank: usize) -> (u64, u64, u64, u64) {
+        let c0 = self.starts[rank];
+        let c1 = self.starts[rank + 1];
+        (0, c0, self.m, c1 - c0)
+    }
+
+    fn label(&self) -> String {
+        format!("col-wise(P={})", self.nprocs())
+    }
+}
+
+/// 2D block (checkerboard) mapping over a `pr × pc` process grid.
+#[derive(Debug, Clone)]
+pub struct Block2d {
+    /// Global rows.
+    pub m: u64,
+    /// Global columns.
+    pub n: u64,
+    /// Process-grid rows.
+    pub pr: usize,
+    /// Process-grid columns.
+    pub pc: usize,
+    row_starts: Vec<u64>,
+    col_starts: Vec<u64>,
+}
+
+impl Block2d {
+    /// Regular 2D grid.
+    pub fn regular(m: u64, n: u64, pr: usize, pc: usize) -> Self {
+        Self {
+            m,
+            n,
+            pr,
+            pc,
+            row_starts: even_starts(m, pr),
+            col_starts: even_starts(n, pc),
+        }
+    }
+}
+
+impl ProcessMapping for Block2d {
+    fn nprocs(&self) -> usize {
+        self.pr * self.pc
+    }
+
+    fn owner(&self, i: u64, j: u64) -> usize {
+        let bi = match self.row_starts.binary_search(&i) {
+            Ok(k) => k.min(self.pr - 1),
+            Err(k) => k - 1,
+        };
+        let bj = match self.col_starts.binary_search(&j) {
+            Ok(k) => k.min(self.pc - 1),
+            Err(k) => k - 1,
+        };
+        bi * self.pc + bj
+    }
+
+    fn window(&self, rank: usize) -> (u64, u64, u64, u64) {
+        let bi = rank / self.pc;
+        let bj = rank % self.pc;
+        (
+            self.row_starts[bi],
+            self.col_starts[bj],
+            self.row_starts[bi + 1] - self.row_starts[bi],
+            self.col_starts[bj + 1] - self.col_starts[bj],
+        )
+    }
+
+    fn label(&self) -> String {
+        format!("2d({}x{})", self.pr, self.pc)
+    }
+}
+
+/// Row-cyclic mapping: row `i` belongs to rank `i mod P`. Ownership is
+/// non-contiguous, so the declared window is the whole matrix (the tight
+/// per-rank window is computed from actual elements at store time).
+#[derive(Debug, Clone)]
+pub struct CyclicRows {
+    /// Global rows.
+    pub m: u64,
+    /// Global columns.
+    pub n: u64,
+    /// Process count.
+    pub p: usize,
+}
+
+impl ProcessMapping for CyclicRows {
+    fn nprocs(&self) -> usize {
+        self.p
+    }
+
+    fn owner(&self, i: u64, _j: u64) -> usize {
+        (i % self.p as u64) as usize
+    }
+
+    fn window(&self, _rank: usize) -> (u64, u64, u64, u64) {
+        (0, 0, self.m, self.n)
+    }
+
+    fn label(&self) -> String {
+        format!("cyclic-rows(P={})", self.p)
+    }
+}
+
+/// Arbitrary user-supplied `M(i, j)` — the fully general case the paper's
+/// different-configuration algorithm supports.
+pub struct FnMapping<F: Fn(u64, u64) -> usize + Send + Sync> {
+    /// Global rows.
+    pub m: u64,
+    /// Global columns.
+    pub n: u64,
+    /// Process count.
+    pub p: usize,
+    /// The mapping function.
+    pub f: F,
+}
+
+impl<F: Fn(u64, u64) -> usize + Send + Sync> ProcessMapping for FnMapping<F> {
+    fn nprocs(&self) -> usize {
+        self.p
+    }
+
+    fn owner(&self, i: u64, j: u64) -> usize {
+        let k = (self.f)(i, j);
+        debug_assert!(k < self.p, "M({i},{j}) = {k} out of range");
+        k
+    }
+
+    fn window(&self, _rank: usize) -> (u64, u64, u64, u64) {
+        (0, 0, self.m, self.n)
+    }
+
+    fn label(&self) -> String {
+        format!("fn(P={})", self.p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every element must belong to exactly one rank, and contiguous
+    /// schemes must agree with their declared windows.
+    fn check_partition(mapping: &dyn ProcessMapping, m: u64, n: u64) {
+        for i in 0..m {
+            for j in 0..n {
+                let k = mapping.owner(i, j);
+                assert!(k < mapping.nprocs(), "owner {k} out of range at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn even_starts_cover() {
+        assert_eq!(even_starts(10, 3), vec![0, 4, 7, 10]);
+        assert_eq!(even_starts(9, 3), vec![0, 3, 6, 9]);
+        assert_eq!(even_starts(2, 4), vec![0, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn rowwise_regular_owner_and_window() {
+        let map = Rowwise::regular(10, 6, 3);
+        check_partition(&map, 10, 6);
+        assert_eq!(map.owner(0, 5), 0);
+        assert_eq!(map.owner(3, 0), 0);
+        assert_eq!(map.owner(4, 0), 1);
+        assert_eq!(map.owner(9, 0), 2);
+        assert_eq!(map.window(0), (0, 0, 4, 6));
+        assert_eq!(map.window(2), (7, 0, 3, 6));
+    }
+
+    #[test]
+    fn rowwise_balanced_by_nnz() {
+        // Rows with wildly uneven counts: balanced boundaries should even
+        // the per-rank totals to within one heavy row.
+        let m = 100u64;
+        let row_nnz = |r: u64| if r < 10 { 50 } else { 1 };
+        let map = Rowwise::balanced_by_nnz(m, m, 4, row_nnz);
+        assert_eq!(map.nprocs(), 4);
+        let mut per_rank = vec![0u64; 4];
+        for r in 0..m {
+            per_rank[map.owner(r, 0)] += row_nnz(r);
+        }
+        let total: u64 = per_rank.iter().sum();
+        assert_eq!(total, 590);
+        let target = total / 4;
+        for (k, &cnt) in per_rank.iter().enumerate() {
+            assert!(
+                cnt as i64 >= target as i64 - 50 && cnt as i64 <= target as i64 + 50,
+                "rank {k} holds {cnt}, target {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn colwise_owner_and_window() {
+        let map = Colwise::regular(5, 12, 4);
+        check_partition(&map, 5, 12);
+        assert_eq!(map.owner(0, 0), 0);
+        assert_eq!(map.owner(4, 11), 3);
+        assert_eq!(map.window(1), (0, 3, 5, 3));
+    }
+
+    #[test]
+    fn block2d_owner_matches_window() {
+        let map = Block2d::regular(8, 8, 2, 2);
+        check_partition(&map, 8, 8);
+        for rank in 0..4 {
+            let (r0, c0, ml, nl) = map.window(rank);
+            for i in r0..r0 + ml {
+                for j in c0..c0 + nl {
+                    assert_eq!(map.owner(i, j), rank);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cyclic_rows_owner() {
+        let map = CyclicRows { m: 10, n: 4, p: 3 };
+        check_partition(&map, 10, 4);
+        assert_eq!(map.owner(0, 0), 0);
+        assert_eq!(map.owner(4, 2), 1);
+        assert_eq!(map.owner(5, 0), 2);
+    }
+
+    #[test]
+    fn fn_mapping_arbitrary() {
+        let map = FnMapping {
+            m: 6,
+            n: 6,
+            p: 2,
+            f: |i, j| ((i + j) % 2) as usize,
+        };
+        check_partition(&map, 6, 6);
+        assert_eq!(map.owner(1, 1), 0);
+        assert_eq!(map.owner(1, 2), 1);
+    }
+
+    #[test]
+    fn window_info_builds_local_info() {
+        let map = Rowwise::regular(10, 6, 2);
+        let info = window_info(&map, 1, 10, 6, 99);
+        assert_eq!(info.m_offset, 5);
+        assert_eq!(info.m_local, 5);
+        assert_eq!(info.n_local, 6);
+        assert_eq!(info.z, 99);
+        assert!(info.validate().is_ok());
+    }
+}

@@ -1,0 +1,307 @@
+//! Analytic parallel-I/O cost model (see module docs in [`crate::parfs`]).
+
+/// HDF5 parallel I/O strategy (paper §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IoStrategy {
+    /// Each process issues reads on its own (`H5FD_MPIO_INDEPENDENT`).
+    Independent,
+    /// Every read is a synchronizing collective with two-phase
+    /// aggregation (`H5FD_MPIO_COLLECTIVE`).
+    Collective,
+}
+
+impl IoStrategy {
+    /// Label for tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            IoStrategy::Independent => "independent",
+            IoStrategy::Collective => "collective",
+        }
+    }
+}
+
+/// Cost model constants of the simulated parallel file system.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FsModel {
+    /// Aggregate back-end (disk/OST) bandwidth, bytes/s. Each distinct
+    /// byte leaves the disks once; re-reads hit server caches.
+    pub disk_agg_bps: f64,
+    /// Aggregate interconnect bandwidth between storage servers and
+    /// compute nodes, bytes/s.
+    pub net_agg_bps: f64,
+    /// Per-client (per-process) achievable read bandwidth, bytes/s.
+    pub client_bps: f64,
+    /// Latency of one file open (metadata server round trip), s.
+    pub open_lat_s: f64,
+    /// Latency of one read operation (RPC + seek), s.
+    pub op_lat_s: f64,
+    /// One barrier hop latency; a P-process barrier costs
+    /// `barrier_lat_s * log2(P)`, s.
+    pub barrier_lat_s: f64,
+    /// Extra traffic factor of two-phase collective I/O (aggregate +
+    /// redistribute), ≥ 1.
+    pub collective_traffic_factor: f64,
+}
+
+impl FsModel {
+    /// Constants representative of the paper's testbed class: Anselm
+    /// (Bullx, 2013) — Lustre over Infiniband QDR. ~6 GB/s aggregate
+    /// back-end, ~40 GB/s fabric, ~1 GB/s per client, millisecond-scale
+    /// metadata ops.
+    pub fn anselm_lustre() -> Self {
+        Self {
+            disk_agg_bps: 6.0e9,
+            net_agg_bps: 100.0e9,
+            client_bps: 1.0e9,
+            open_lat_s: 2.0e-3,
+            op_lat_s: 3.0e-4,
+            barrier_lat_s: 5.0e-6,
+            collective_traffic_factor: 2.0,
+        }
+    }
+
+    /// A single local NVMe-class disk (for sanity checks against the
+    /// wall-clock measurements this repo actually performs).
+    pub fn local_nvme() -> Self {
+        Self {
+            disk_agg_bps: 3.0e9,
+            net_agg_bps: 1.0e12, // no network
+            client_bps: 3.0e9,
+            open_lat_s: 2.0e-5,
+            op_lat_s: 5.0e-6,
+            barrier_lat_s: 1.0e-6,
+            collective_traffic_factor: 2.0,
+        }
+    }
+}
+
+/// The I/O footprint of one loading rank, extracted from real
+/// [`crate::h5::IoStats`] traces.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RankLoadProfile {
+    /// Files opened by this rank.
+    pub opens: u64,
+    /// Read operations issued by this rank.
+    pub ops: u64,
+    /// Bytes transferred to this rank.
+    pub bytes: u64,
+}
+
+/// Simulated timing outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    /// Per-rank completion times, s.
+    pub per_rank_s: Vec<f64>,
+    /// Simulated makespan (load completes when the slowest rank does), s.
+    pub makespan_s: f64,
+    /// Back-end disk drain time component, s.
+    pub disk_s: f64,
+    /// Synchronization overhead component (collective only), s.
+    pub sync_s: f64,
+}
+
+impl FsModel {
+    /// Simulate a parallel load.
+    ///
+    /// * `profiles` — per loading-rank I/O footprints (length = P readers);
+    /// * `unique_bytes` — total distinct file bytes touched by the whole
+    ///   job (each leaves the disks once regardless of reader count);
+    /// * `strategy` — independent or collective.
+    pub fn simulate(
+        &self,
+        profiles: &[RankLoadProfile],
+        unique_bytes: u64,
+        strategy: IoStrategy,
+    ) -> SimReport {
+        assert!(!profiles.is_empty(), "no rank profiles");
+        let p = profiles.len() as f64;
+        let disk_s = unique_bytes as f64 / self.disk_agg_bps;
+        let traffic_factor = match strategy {
+            IoStrategy::Independent => 1.0,
+            IoStrategy::Collective => self.collective_traffic_factor,
+        };
+        // Network: every rank's bytes cross the fabric; the fabric is
+        // shared by all ranks.
+        let total_traffic: f64 =
+            profiles.iter().map(|r| r.bytes as f64).sum::<f64>() * traffic_factor;
+        let net_shared_s = total_traffic / self.net_agg_bps;
+
+        let mut per_rank_s = Vec::with_capacity(profiles.len());
+        let mut sync_total = 0.0;
+        for r in profiles {
+            let lat_s = r.opens as f64 * self.open_lat_s + r.ops as f64 * self.op_lat_s;
+            let client_s = r.bytes as f64 * traffic_factor / self.client_bps;
+            let sync_s = match strategy {
+                IoStrategy::Independent => 0.0,
+                // Every op is a collective: all ranks synchronize.
+                IoStrategy::Collective => {
+                    r.ops as f64 * self.barrier_lat_s * p.log2().max(1.0)
+                }
+            };
+            sync_total += sync_s;
+            // A rank finishes no sooner than its own serial latency+stream
+            // time; shared resources (disk drain, fabric) bound everyone.
+            per_rank_s.push(lat_s + sync_s + client_s.max(net_shared_s));
+        }
+        let slowest = per_rank_s.iter().cloned().fold(0.0, f64::max);
+        let makespan_s = slowest.max(disk_s);
+        SimReport {
+            per_rank_s,
+            makespan_s,
+            disk_s,
+            sync_s: sync_total / p,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build the paper's three scenarios over a synthetic footprint and
+    /// check Figure 1's qualitative shape.
+    fn scenario(model: &FsModel) -> (f64, Vec<f64>, Vec<f64>) {
+        let total_bytes: u64 = 60 * 4 * 1024 * 1024 * 1024; // 240 GiB
+        let p_store = 60usize;
+        let per_file = total_bytes / p_store as u64;
+        let ops_per_file = per_file / (1 << 20); // 1 MiB chunks
+
+        // Same configuration: rank k reads only file k.
+        let same: Vec<RankLoadProfile> = (0..p_store)
+            .map(|_| RankLoadProfile {
+                opens: 1,
+                ops: ops_per_file,
+                bytes: per_file,
+            })
+            .collect();
+        let t_same = model
+            .simulate(&same, total_bytes, IoStrategy::Independent)
+            .makespan_s;
+
+        let loaders = [15usize, 20, 30, 40, 60];
+        let mut indep = Vec::new();
+        let mut coll = Vec::new();
+        for &pl in &loaders {
+            let all: Vec<RankLoadProfile> = (0..pl)
+                .map(|_| RankLoadProfile {
+                    opens: p_store as u64,
+                    ops: ops_per_file * p_store as u64,
+                    bytes: total_bytes,
+                })
+                .collect();
+            indep.push(
+                model
+                    .simulate(&all, total_bytes, IoStrategy::Independent)
+                    .makespan_s,
+            );
+            coll.push(
+                model
+                    .simulate(&all, total_bytes, IoStrategy::Collective)
+                    .makespan_s,
+            );
+        }
+        (t_same, indep, coll)
+    }
+
+    #[test]
+    fn figure1_shape_same_config_fastest() {
+        let m = FsModel::anselm_lustre();
+        let (t_same, indep, coll) = scenario(&m);
+        for (&ti, &tc) in indep.iter().zip(&coll) {
+            assert!(t_same < ti, "same {t_same} !< indep {ti}");
+            assert!(ti < tc, "indep {ti} !< collective {tc}");
+        }
+    }
+
+    #[test]
+    fn figure1_shape_indep_flat_and_below_p_times_same() {
+        let m = FsModel::anselm_lustre();
+        let (t_same, indep, _) = scenario(&m);
+        let min = indep.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = indep.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            max / min < 1.5,
+            "independent times not ~flat: {indep:?}"
+        );
+        // Well below the proportional-data bound T_same * P for P >= 15.
+        assert!(
+            max < t_same * 15.0 * 0.8,
+            "indep {max} not well below T_same*P = {}",
+            t_same * 15.0
+        );
+    }
+
+    #[test]
+    fn collective_grows_with_readers() {
+        let m = FsModel::anselm_lustre();
+        let (_, _, coll) = scenario(&m);
+        assert!(
+            coll.last().unwrap() > coll.first().unwrap(),
+            "collective should worsen with P: {coll:?}"
+        );
+    }
+
+    #[test]
+    fn disk_bound_when_aggregate_is_bottleneck() {
+        let mut m = FsModel::anselm_lustre();
+        m.disk_agg_bps = 1e8; // cripple the disks
+        let profiles = vec![
+            RankLoadProfile {
+                opens: 1,
+                ops: 10,
+                bytes: 1 << 30
+            };
+            4
+        ];
+        let rep = m.simulate(&profiles, 4 << 30, IoStrategy::Independent);
+        assert!((rep.makespan_s - rep.disk_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_terms_counted() {
+        let m = FsModel::anselm_lustre();
+        let a = m.simulate(
+            &[RankLoadProfile {
+                opens: 1,
+                ops: 0,
+                bytes: 0,
+            }],
+            0,
+            IoStrategy::Independent,
+        );
+        let b = m.simulate(
+            &[RankLoadProfile {
+                opens: 100,
+                ops: 1000,
+                bytes: 0,
+            }],
+            0,
+            IoStrategy::Independent,
+        );
+        assert!(b.makespan_s > a.makespan_s);
+        assert!((b.makespan_s - (100.0 * m.open_lat_s + 1000.0 * m.op_lat_s)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ordering_robust_across_parameters() {
+        // The figure-1 ordering must not be an artifact of one parameter
+        // choice: sweep disk/net/client bandwidths over wide ranges.
+        for disk in [2.0e9, 6.0e9, 20.0e9] {
+            for net in [20.0e9, 40.0e9, 100.0e9] {
+                for client in [0.5e9, 1.0e9, 2.0e9] {
+                    let m = FsModel {
+                        disk_agg_bps: disk,
+                        net_agg_bps: net,
+                        client_bps: client,
+                        ..FsModel::anselm_lustre()
+                    };
+                    let (t_same, indep, coll) = scenario(&m);
+                    for (&ti, &tc) in indep.iter().zip(&coll) {
+                        assert!(t_same < ti && ti < tc,
+                            "ordering broken at disk={disk} net={net} client={client}: {t_same} {ti} {tc}");
+                    }
+                }
+            }
+        }
+    }
+}

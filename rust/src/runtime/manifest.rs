@@ -1,0 +1,231 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing.
+
+use std::path::{Path, PathBuf};
+
+use crate::runtime::{Result, RuntimeError};
+use crate::util::json::Json;
+
+/// One tensor's declared dtype+shape in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Logical name (`blocks`, `cols`, `x`, …).
+    pub name: String,
+    /// `"f32"` or `"i32"`.
+    pub dtype: String,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    /// Unique name (e.g. `spmv_r32_k8_s16_n512`).
+    pub name: String,
+    /// Kind: `spmv`, `power_step` or `assemble`.
+    pub kind: String,
+    /// HLO text file name within the artifact directory.
+    pub file: String,
+    /// Input tensor specs, in execution order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs.
+    pub outputs: Vec<TensorSpec>,
+    /// Named integer parameters (r, k, s, n / z, t, s).
+    pub params: std::collections::BTreeMap<String, u64>,
+}
+
+impl Artifact {
+    /// Integer parameter accessor.
+    pub fn param(&self, name: &str) -> Result<u64> {
+        self.params
+            .get(name)
+            .copied()
+            .ok_or_else(|| RuntimeError::Artifact(format!("{}: missing param {name}", self.name)))
+    }
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory containing the artifacts.
+    pub dir: PathBuf,
+    /// All artifacts.
+    pub artifacts: Vec<Artifact>,
+}
+
+fn tensor_specs(j: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| RuntimeError::Artifact(format!("{what} is not an array")))?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| RuntimeError::Artifact(format!("{what}: missing name")))?
+                    .to_string(),
+                dtype: t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| RuntimeError::Artifact(format!("{what}: missing dtype")))?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| RuntimeError::Artifact(format!("{what}: missing shape")))?
+                    .iter()
+                    .map(|d| {
+                        d.as_u64()
+                            .map(|x| x as usize)
+                            .ok_or_else(|| RuntimeError::Artifact(format!("{what}: bad dim")))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            RuntimeError::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let root = Json::parse(&text)
+            .map_err(|e| RuntimeError::Artifact(format!("manifest parse error: {e}")))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RuntimeError::Artifact("manifest: no artifacts[]".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let mut params = std::collections::BTreeMap::new();
+            if let Some(Json::Obj(p)) = a.get("params") {
+                for (k, v) in p {
+                    if let Some(x) = v.as_u64() {
+                        params.insert(k.clone(), x);
+                    }
+                }
+            }
+            artifacts.push(Artifact {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| RuntimeError::Artifact("artifact: missing name".into()))?
+                    .to_string(),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| RuntimeError::Artifact("artifact: missing file".into()))?
+                    .to_string(),
+                inputs: tensor_specs(
+                    a.get("inputs").unwrap_or(&Json::Arr(vec![])),
+                    "inputs",
+                )?,
+                outputs: tensor_specs(
+                    a.get("outputs").unwrap_or(&Json::Arr(vec![])),
+                    "outputs",
+                )?,
+                params,
+            });
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Look up an artifact by name.
+    pub fn find(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| RuntimeError::Artifact(format!("no artifact named {name}")))
+    }
+
+    /// All artifacts of a kind.
+    pub fn of_kind(&self, kind: &str) -> Vec<&Artifact> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, art: &Artifact) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+
+    /// The default artifact directory: `$ABHSF_ARTIFACTS` or `artifacts/`
+    /// next to the current directory.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ABHSF_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("abhsf-manifest-test");
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","artifacts":[
+              {"name":"spmv_a","kind":"spmv","file":"a.hlo.txt",
+               "inputs":[{"name":"x","dtype":"f32","shape":[8]}],
+               "outputs":[{"name":"y","dtype":"f32","shape":[8]}],
+               "params":{"r":2,"k":2,"s":4,"n":8}}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.find("spmv_a").unwrap();
+        assert_eq!(a.kind, "spmv");
+        assert_eq!(a.param("r").unwrap(), 2);
+        assert!(a.param("zzz").is_err());
+        assert_eq!(a.inputs[0].elems(), 8);
+        assert_eq!(m.of_kind("spmv").len(), 1);
+        assert!(m.find("nope").is_err());
+        assert_eq!(m.path_of(a), dir.join("a.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_manifest_is_informative() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // Exercise against the repo's actual artifacts when present.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            assert!(!m.of_kind("spmv").is_empty());
+            for a in &m.artifacts {
+                assert!(m.path_of(a).exists(), "{} missing", a.file);
+            }
+        }
+    }
+}

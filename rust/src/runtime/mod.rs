@@ -1,0 +1,39 @@
+//! PJRT runtime bridge: load AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once at build time by `python/compile/aot.py`) and execute
+//! them from the Rust request path — Python is never invoked here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (the pinned xla_extension 0.5.1
+//! rejects jax≥0.5's 64-bit-id protos; the text parser reassigns ids).
+
+pub mod manifest;
+pub mod pack;
+pub mod runtime;
+
+pub use manifest::{Artifact, Manifest};
+pub use pack::BlockedTensors;
+pub use runtime::Runtime;
+
+/// Errors from artifact loading/execution.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    /// XLA/PJRT failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+    /// Manifest/artifact problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    /// A matrix does not fit the artifact's static shapes.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// Result alias.
+pub type Result<T> = std::result::Result<T, RuntimeError>;

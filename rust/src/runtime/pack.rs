@@ -1,0 +1,273 @@
+//! Packing loaded CSR submatrices into the blocked tensors the AOT
+//! artifacts consume (`blocks f32[R,K,s,s]`, `cols i32[R,K]`, `x f32[n]`).
+
+use std::collections::BTreeMap;
+
+use crate::formats::Csr;
+use crate::runtime::manifest::Artifact;
+use crate::runtime::{Result, RuntimeError};
+
+/// Host-side blocked tensors matching one `spmv`/`power_step` artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockedTensors {
+    /// Block rows R.
+    pub r: usize,
+    /// Blocks per row K.
+    pub k: usize,
+    /// Block size s.
+    pub s: usize,
+    /// Vector length n.
+    pub n: usize,
+    /// `R*K*s*s` f32, row-major `[R, K, s, s]`.
+    pub blocks: Vec<f32>,
+    /// `R*K` i32, `[R, K]` (padding slots point at block-column 0 with
+    /// zero blocks).
+    pub cols: Vec<i32>,
+    /// Blocks actually used per row (diagnostics).
+    pub used_per_row: Vec<usize>,
+}
+
+impl BlockedTensors {
+    /// Pack a local CSR submatrix into the static shapes of `art`.
+    ///
+    /// Requirements (checked):
+    /// * `m_local ≤ R*s` — the rows fit;
+    /// * `n_offset + n_local ≤ n` and `n % s == 0` — columns fit the
+    ///   vector; block-column indexes are *global* so SpMV against the
+    ///   full-length `x` is correct for any window;
+    /// * every block row holds at most K distinct nonzero blocks.
+    pub fn pack_csr(csr: &Csr, art: &Artifact) -> Result<Self> {
+        let r = art.param("r")? as usize;
+        let k = art.param("k")? as usize;
+        let s = art.param("s")? as usize;
+        let n = art.param("n")? as usize;
+        if n % s != 0 {
+            return Err(RuntimeError::Shape(format!("artifact n={n} not a multiple of s={s}")));
+        }
+        if csr.info.m_local as usize > r * s {
+            return Err(RuntimeError::Shape(format!(
+                "m_local={} exceeds artifact capacity R*s={}",
+                csr.info.m_local,
+                r * s
+            )));
+        }
+        if (csr.info.n_offset + csr.info.n_local) as usize > n {
+            return Err(RuntimeError::Shape(format!(
+                "column window end {} exceeds artifact n={n}",
+                csr.info.n_offset + csr.info.n_local
+            )));
+        }
+        let mut blocks = vec![0f32; r * k * s * s];
+        let mut cols = vec![0i32; r * k];
+        let mut used_per_row = vec![0usize; r];
+        // Map: block row -> (global block col -> slot index).
+        let mut slot_of: Vec<BTreeMap<usize, usize>> = vec![BTreeMap::new(); r];
+        let co = csr.info.n_offset as usize;
+        for lr in 0..csr.info.m_local as usize {
+            let br = lr / s;
+            let (lo, hi) = csr.row_range(lr);
+            for e in lo..hi {
+                let gc = co + csr.colinds[e] as usize; // global column
+                let bc = gc / s;
+                let next = used_per_row[br];
+                let slot = match slot_of[br].get(&bc) {
+                    Some(&slot) => slot,
+                    None => {
+                        if next >= k {
+                            return Err(RuntimeError::Shape(format!(
+                                "block row {br} needs more than K={k} blocks"
+                            )));
+                        }
+                        slot_of[br].insert(bc, next);
+                        cols[br * k + next] = bc as i32;
+                        used_per_row[br] = next + 1;
+                        next
+                    }
+                };
+                let base = ((br * k) + slot) * s * s;
+                blocks[base + (lr % s) * s + (gc % s)] = csr.vals[e] as f32;
+            }
+        }
+        Ok(Self {
+            r,
+            k,
+            s,
+            n,
+            blocks,
+            cols,
+            used_per_row,
+        })
+    }
+
+    /// Pad/convert a global x vector (f64, length ≥ logical n) to the
+    /// artifact's f32 `[n]` input.
+    pub fn pack_x(&self, x: &[f64]) -> Result<Vec<f32>> {
+        if x.len() > self.n {
+            return Err(RuntimeError::Shape(format!(
+                "x length {} exceeds artifact n={}",
+                x.len(),
+                self.n
+            )));
+        }
+        let mut out = vec![0f32; self.n];
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o = v as f32;
+        }
+        Ok(out)
+    }
+
+    /// Total VMEM footprint of one grid step of the corresponding kernel,
+    /// in bytes (see DESIGN.md §Perf): K·s² blocks + x + y segment.
+    pub fn vmem_per_grid_step(&self) -> usize {
+        (self.k * self.s * self.s + self.n + self.s) * 4 + self.k * 4
+    }
+
+    /// MXU utilization proxy: fraction of loaded block slots that are
+    /// real (non-padding) blocks.
+    pub fn slot_utilization(&self) -> f64 {
+        let used: usize = self.used_per_row.iter().sum();
+        used as f64 / (self.r * self.k) as f64
+    }
+}
+
+/// Native oracle of the artifact computation: y = blocks · x over the
+/// packed representation (f32 math, mirroring the kernel).
+pub fn blocked_spmv_native(t: &BlockedTensors, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), t.n);
+    let (r, k, s) = (t.r, t.k, t.s);
+    let mut y = vec![0f32; r * s];
+    for br in 0..r {
+        for slot in 0..k {
+            let bc = t.cols[br * k + slot] as usize;
+            let base = ((br * k) + slot) * s * s;
+            for i in 0..s {
+                let mut acc = 0f32;
+                for j in 0..s {
+                    acc += t.blocks[base + i * s + j] * x[bc * s + j];
+                }
+                y[br * s + i] += acc;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Coo, LocalInfo};
+    use crate::runtime::manifest::Artifact;
+    use crate::util::rng::Xoshiro256;
+
+    fn art(r: u64, k: u64, s: u64, n: u64) -> Artifact {
+        let mut params = std::collections::BTreeMap::new();
+        params.insert("r".into(), r);
+        params.insert("k".into(), k);
+        params.insert("s".into(), s);
+        params.insert("n".into(), n);
+        Artifact {
+            name: "test".into(),
+            kind: "spmv".into(),
+            file: "test.hlo.txt".into(),
+            inputs: vec![],
+            outputs: vec![],
+            params,
+        }
+    }
+
+    fn random_csr(seed: u64, m: u64, n: u64, nnz: usize, offs: (u64, u64), dims: (u64, u64)) -> Csr {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let info = LocalInfo {
+            m: dims.0,
+            n: dims.1,
+            z: nnz as u64,
+            m_local: m,
+            n_local: n,
+            z_local: 0,
+            m_offset: offs.0,
+            n_offset: offs.1,
+        };
+        let mut coo = Coo::with_info(info);
+        let mut seen = std::collections::HashSet::new();
+        while coo.nnz() < nnz {
+            let r = rng.next_below(m);
+            let c = rng.next_below(n);
+            if seen.insert((r, c)) {
+                coo.push(r, c, rng.range_f64(-2.0, 2.0));
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn pack_and_native_spmv_matches_csr() {
+        let csr = random_csr(5, 32, 64, 300, (0, 0), (32, 64));
+        let a = art(8, 16, 4, 64);
+        let t = BlockedTensors::pack_csr(&csr, &a).unwrap();
+        let x64: Vec<f64> = (0..64).map(|i| (i as f64) * 0.1 - 3.0).collect();
+        let xf = t.pack_x(&x64).unwrap();
+        let y = blocked_spmv_native(&t, &xf);
+        // Oracle through the f64 CSR path.
+        let mut want = vec![0.0f64; 32];
+        csr.spmv_into(&x64, &mut want);
+        for (i, (&g, &w)) in y.iter().zip(want.iter()).enumerate() {
+            assert!((g as f64 - w).abs() < 1e-3, "row {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn pack_respects_column_offsets() {
+        // Window with n_offset != 0: global block-col indexes must be used.
+        let csr = random_csr(7, 16, 16, 60, (0, 16), (16, 32));
+        let a = art(4, 8, 4, 32);
+        let t = BlockedTensors::pack_csr(&csr, &a).unwrap();
+        let x64: Vec<f64> = (0..32).map(|i| 1.0 + i as f64).collect();
+        let xf = t.pack_x(&x64).unwrap();
+        let y = blocked_spmv_native(&t, &xf);
+        let mut want = vec![0.0f64; 16];
+        csr.spmv_into(&x64, &mut want);
+        for (g, w) in y.iter().zip(&want) {
+            assert!((*g as f64 - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_matrix() {
+        let csr = random_csr(1, 40, 16, 100, (0, 0), (40, 16));
+        let a = art(4, 8, 4, 16); // capacity 16 rows < 40
+        assert!(BlockedTensors::pack_csr(&csr, &a).is_err());
+    }
+
+    #[test]
+    fn rejects_too_many_blocks_per_row() {
+        // Dense row across 16 block columns but K = 2.
+        let info = LocalInfo::whole(4, 64, 64);
+        let mut coo = Coo::with_info(info);
+        for c in 0..64 {
+            coo.push(0, c, 1.0);
+        }
+        let csr = Csr::from_coo(&coo);
+        let a = art(1, 2, 4, 64);
+        let err = BlockedTensors::pack_csr(&csr, &a).unwrap_err();
+        assert!(format!("{err}").contains("more than K"));
+    }
+
+    #[test]
+    fn diagnostics_sane() {
+        let csr = random_csr(9, 16, 16, 64, (0, 0), (16, 16));
+        let a = art(4, 4, 4, 16);
+        let t = BlockedTensors::pack_csr(&csr, &a).unwrap();
+        assert!(t.slot_utilization() > 0.0 && t.slot_utilization() <= 1.0);
+        assert!(t.vmem_per_grid_step() > 0);
+    }
+
+    #[test]
+    fn pack_x_pads_and_rejects() {
+        let csr = random_csr(3, 8, 8, 20, (0, 0), (8, 8));
+        let t = BlockedTensors::pack_csr(&csr, &art(2, 8, 4, 16)).unwrap();
+        let xf = t.pack_x(&[1.0; 8]).unwrap();
+        assert_eq!(xf.len(), 16);
+        assert_eq!(&xf[8..], &[0f32; 8]);
+        assert!(t.pack_x(&[0.0; 17]).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! The PJRT execution engine: compile-once, execute-many.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::formats::Csr;
+use crate::runtime::manifest::{Artifact, Manifest};
+use crate::runtime::pack::BlockedTensors;
+use crate::runtime::{Result, RuntimeError};
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by
+/// artifact name. One `Runtime` is shared by all coordinator workers
+/// (compilation happens once per artifact; execution is reentrant).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over the artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Create from the default artifact directory (`$ABHSF_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Borrow the manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let art = self.manifest.find(name)?.clone();
+        let path = self.manifest.path_of(&art);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| RuntimeError::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs, returning the un-tupled
+    /// output literals.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the output is a tuple.
+        Ok(result.to_tuple()?)
+    }
+
+    /// Run an `spmv` artifact: `y = A @ x` with pre-packed tensors.
+    pub fn spmv(&self, art: &Artifact, t: &BlockedTensors, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != t.n {
+            return Err(RuntimeError::Shape(format!(
+                "x length {} != artifact n {}",
+                x.len(),
+                t.n
+            )));
+        }
+        let blocks = xla::Literal::vec1(&t.blocks).reshape(&[
+            t.r as i64,
+            t.k as i64,
+            t.s as i64,
+            t.s as i64,
+        ])?;
+        let cols = xla::Literal::vec1(&t.cols).reshape(&[t.r as i64, t.k as i64])?;
+        let xs = xla::Literal::vec1(x);
+        let out = self.execute(&art.name, &[blocks, cols, xs])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Run a `power_step` artifact: returns `(x_next, norm)`.
+    pub fn power_step(
+        &self,
+        art: &Artifact,
+        t: &BlockedTensors,
+        x: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        let blocks = xla::Literal::vec1(&t.blocks).reshape(&[
+            t.r as i64,
+            t.k as i64,
+            t.s as i64,
+            t.s as i64,
+        ])?;
+        let cols = xla::Literal::vec1(&t.cols).reshape(&[t.r as i64, t.k as i64])?;
+        let xs = xla::Literal::vec1(x);
+        let out = self.execute(&art.name, &[blocks, cols, xs])?;
+        let x_next = out[0].to_vec::<f32>()?;
+        let norm = out[1].to_vec::<f32>()?[0];
+        Ok((x_next, norm))
+    }
+
+    /// Run an `assemble` artifact on padded triplets.
+    pub fn assemble(
+        &self,
+        art: &Artifact,
+        lrows: &[i32],
+        lcols: &[i32],
+        vals: &[f32],
+    ) -> Result<Vec<f32>> {
+        let z = art.param("z")? as i64;
+        let t = art.param("t")? as i64;
+        let lr = xla::Literal::vec1(lrows).reshape(&[z, t])?;
+        let lc = xla::Literal::vec1(lcols).reshape(&[z, t])?;
+        let vs = xla::Literal::vec1(vals).reshape(&[z, t])?;
+        let out = self.execute(&art.name, &[lr, lc, vs])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Pick the smallest `spmv` artifact a CSR packs into, execute it,
+    /// and return `y` (length `R*s`, covering rows
+    /// `[m_offset, m_offset + R*s)` of the global y).
+    ///
+    /// This is the end-to-end validation hook the coordinator calls after
+    /// a load: the result is compared against the native Rust SpMV.
+    pub fn spmv_csr(&self, csr: &Csr, x: &[f64]) -> Result<Vec<f32>> {
+        let (art, t) = self.pack_best_spmv(csr)?;
+        let xf = t.pack_x(x)?;
+        self.spmv(&art, &t, &xf)
+    }
+
+    /// Try spmv artifacts in ascending capacity order and return the first
+    /// one the matrix actually packs into (dimension *and* blocks-per-row
+    /// K constraints).
+    pub fn pack_best_spmv(&self, csr: &Csr) -> Result<(Artifact, BlockedTensors)> {
+        let mut candidates: Vec<&Artifact> = self
+            .manifest
+            .of_kind("spmv")
+            .into_iter()
+            .filter(|a| a.params.contains_key("r"))
+            .collect();
+        candidates.sort_by_key(|a| {
+            a.param("r").unwrap_or(0) * a.param("k").unwrap_or(0) * a.param("s").unwrap_or(0)
+                * a.param("s").unwrap_or(0)
+        });
+        let mut last_err = None;
+        for art in candidates {
+            match BlockedTensors::pack_csr(csr, art) {
+                Ok(t) => return Ok((art.clone(), t)),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            RuntimeError::Shape(format!(
+                "no spmv artifact fits m_local={} n={}",
+                csr.info.m_local, csr.info.n
+            ))
+        }))
+    }
+
+    /// Choose the smallest-capacity spmv artifact that fits `csr`
+    /// (dimensions and K); convenience wrapper over [`Self::pack_best_spmv`].
+    pub fn pick_spmv_artifact(&self, csr: &Csr) -> Result<Artifact> {
+        Ok(self.pack_best_spmv(csr)?.0)
+    }
+}

@@ -1,0 +1,242 @@
+//! Minimal command-line argument parser (no `clap` in the vendored registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and automatic usage/error reporting. Sufficient for
+//! the `abhsf` CLI's subcommand style: `abhsf <subcommand> [options]`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A declared option for usage text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Option name without leading dashes.
+    pub name: &'static str,
+    /// Value placeholder (`None` for boolean flags).
+    pub value: Option<&'static str>,
+    /// Help text.
+    pub help: &'static str,
+    /// Default rendered in help, if any.
+    pub default: Option<String>,
+}
+
+/// Parsed arguments: options map + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+    prog: String,
+}
+
+/// Parse error with message suitable for direct printing.
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct ArgError(pub String);
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    ///
+    /// `flag_names` lists options that take no value; everything else that
+    /// starts with `--` is treated as `--key value` / `--key=value`.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        prog: &str,
+        raw: I,
+        flag_names: &[&str],
+    ) -> Result<Self, ArgError> {
+        let mut args = Args {
+            prog: prog.to_string(),
+            ..Default::default()
+        };
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest are positional.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        ArgError(format!("option --{body} expects a value"))
+                    })?;
+                    args.opts.insert(body.to_string(), v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Register an option spec (for usage text only).
+    pub fn spec(
+        &mut self,
+        name: &'static str,
+        value: Option<&'static str>,
+        help: &'static str,
+        default: Option<String>,
+    ) -> &mut Self {
+        self.specs.push(OptSpec {
+            name,
+            value,
+            help,
+            default,
+        });
+        self
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Whether a boolean flag was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).is_some_and(|v| v == "true")
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option parse with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, ArgError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| ArgError(format!("invalid value for --{name}: {s:?} ({e})"))),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T, ArgError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self
+            .get(name)
+            .ok_or_else(|| ArgError(format!("missing required option --{name}")))?;
+        s.parse::<T>()
+            .map_err(|e| ArgError(format!("invalid value for --{name}: {s:?} ({e})")))
+    }
+
+    /// Comma-separated list of typed values, with default on absence.
+    pub fn list_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, ArgError>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|e| ArgError(format!("invalid list item in --{name}: {p:?} ({e})")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Render usage text from registered specs.
+    pub fn usage(&self, summary: &str) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{summary}\n\nUsage: {} [options]\n\nOptions:", self.prog);
+        for s in &self.specs {
+            let lhs = match s.value {
+                Some(v) => format!("--{} <{v}>", s.name),
+                None => format!("--{}", s.name),
+            };
+            let default = s
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(out, "  {:<28} {}{}", lhs, s.help, default);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_equals() {
+        let a = Args::parse("t", v(&["--n", "10", "--path=/tmp/x", "pos1"]), &[]).unwrap();
+        assert_eq!(a.get("n"), Some("10"));
+        assert_eq!(a.get("path"), Some("/tmp/x"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn parses_flags() {
+        let a = Args::parse("t", v(&["--verbose", "--n", "3"]), &["verbose"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.parse_or("n", 0u32).unwrap(), 3);
+    }
+
+    #[test]
+    fn typed_parsing_and_errors() {
+        let a = Args::parse("t", v(&["--n", "notanum"]), &[]).unwrap();
+        assert!(a.parse_or("n", 1u32).is_err());
+        assert!(a.require::<u32>("missing").is_err());
+        assert_eq!(a.parse_or("absent", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse("t", v(&["--ps", "1,2, 4,8"]), &[]).unwrap();
+        assert_eq!(a.list_or::<u32>("ps", &[]).unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(a.list_or::<u32>("qs", &[5]).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse("t", v(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = Args::parse("t", v(&["--", "--not-an-opt"]), &[]).unwrap();
+        assert_eq!(a.positional(), &["--not-an-opt".to_string()]);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let mut a = Args::parse("prog", v(&[]), &[]).unwrap();
+        a.spec("n", Some("N"), "number of things", Some("4".into()));
+        a.spec("verbose", None, "chatty output", None);
+        let u = a.usage("Test tool.");
+        assert!(u.contains("--n <N>"));
+        assert!(u.contains("[default: 4]"));
+    }
+}

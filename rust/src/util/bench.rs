@@ -1,0 +1,243 @@
+//! Hand-rolled micro-benchmark harness.
+//!
+//! The vendored registry has no `criterion`, so `rust/benches/*` use this
+//! module (`harness = false` in Cargo.toml). It provides warmup, adaptive
+//! iteration counts, outlier-robust statistics, and aligned table output so
+//! each bench binary can print the rows of the paper table/figure it
+//! regenerates.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement: timing summary in seconds.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Label of the benchmark case.
+    pub label: String,
+    /// Per-iteration timing summary (seconds).
+    pub summary: Summary,
+    /// Optional throughput denominator (e.g. bytes or nnz processed per iter).
+    pub throughput_items: Option<f64>,
+}
+
+impl Measurement {
+    /// Mean time per iteration in seconds.
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean
+    }
+
+    /// items/s if a throughput denominator was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.throughput_items.map(|items| items / self.summary.mean)
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum wall time to spend measuring a case.
+    pub min_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: u64,
+    /// Minimum measured iterations.
+    pub min_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            min_time: Duration::from_millis(600),
+            warmup: Duration::from_millis(150),
+            max_iters: 1000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Self {
+            min_time: Duration::from_millis(200),
+            warmup: Duration::from_millis(50),
+            max_iters: 50,
+            min_iters: 3,
+        }
+    }
+
+    /// Run `f` repeatedly, timing each call, until `min_time` has elapsed
+    /// (at least `min_iters`, at most `max_iters` iterations).
+    pub fn run<F: FnMut()>(&self, label: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (samples.len() < self.min_iters as usize)
+            || (start.elapsed() < self.min_time && samples.len() < self.max_iters as usize)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Measurement {
+            label: label.to_string(),
+            summary: Summary::of(&samples),
+            throughput_items: None,
+        }
+    }
+
+    /// Like [`run`], attaching a throughput denominator (items per iter).
+    pub fn run_with_items<F: FnMut()>(&self, label: &str, items: f64, f: F) -> Measurement {
+        let mut m = self.run(label, f);
+        m.throughput_items = Some(items);
+        m
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Format an items/s rate with SI prefixes.
+pub fn fmt_rate(r: f64, unit: &str) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G{unit}/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M{unit}/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} k{unit}/s", r / 1e3)
+    } else {
+        format!("{:.1} {unit}/s", r)
+    }
+}
+
+/// Simple fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<width$}", cell, width = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_runs_minimum_iterations() {
+        let b = Bencher {
+            min_time: Duration::from_millis(1),
+            warmup: Duration::from_millis(0),
+            max_iters: 10,
+            min_iters: 5,
+        };
+        let mut count = 0u64;
+        let m = b.run("noop", || {
+            count += 1;
+        });
+        assert!(m.summary.n >= 5);
+        assert!(count >= 5);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bencher {
+            min_time: Duration::from_millis(1),
+            warmup: Duration::from_millis(0),
+            max_iters: 8,
+            min_iters: 3,
+        };
+        let m = b.run_with_items("items", 1000.0, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-6).ends_with("µs"));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with('s'));
+        assert!(fmt_rate(5e9, "B").starts_with("5.00 G"));
+        assert!(fmt_rate(5e3, "nnz").contains('k'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["case", "time"]);
+        t.row(&["a".into(), "1 ms".into()]);
+        t.row(&["longer-name".into(), "2 ms".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("case"));
+        assert!(lines[1].chars().all(|c| c == '-'));
+    }
+}

@@ -1,0 +1,146 @@
+//! Compact bitset used by the ABHSF bitmap block scheme.
+//!
+//! Bit order matches the paper's Algorithm 5: bits are consumed from the
+//! least significant bit of each byte upward, row-major over the block.
+
+/// Growable bitset backed by bytes, LSB-first within each byte.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BitSet {
+    bytes: Vec<u8>,
+    len_bits: usize,
+}
+
+impl BitSet {
+    /// Empty bitset.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bitset with `n` bits, all zero.
+    pub fn zeros(n: usize) -> Self {
+        Self {
+            bytes: vec![0u8; n.div_ceil(8)],
+            len_bits: n,
+        }
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len_bits
+    }
+
+    /// True if no bits.
+    pub fn is_empty(&self) -> bool {
+        self.len_bits == 0
+    }
+
+    /// Append one bit.
+    pub fn push(&mut self, bit: bool) {
+        let idx = self.len_bits;
+        if idx / 8 == self.bytes.len() {
+            self.bytes.push(0);
+        }
+        if bit {
+            self.bytes[idx / 8] |= 1 << (idx % 8);
+        }
+        self.len_bits += 1;
+    }
+
+    /// Get bit `i` (panics out of range).
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len_bits, "bit index {i} out of range {}", self.len_bits);
+        (self.bytes[i / 8] >> (i % 8)) & 1 == 1
+    }
+
+    /// Set bit `i` to `v`.
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len_bits, "bit index {i} out of range {}", self.len_bits);
+        if v {
+            self.bytes[i / 8] |= 1 << (i % 8);
+        } else {
+            self.bytes[i / 8] &= !(1 << (i % 8));
+        }
+    }
+
+    /// Count of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.bytes.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    /// Backing bytes (padded with zero bits to a byte boundary).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Construct from raw bytes and a bit length.
+    pub fn from_bytes(bytes: Vec<u8>, len_bits: usize) -> Self {
+        assert!(bytes.len() * 8 >= len_bits, "too few bytes for {len_bits} bits");
+        Self { bytes, len_bits }
+    }
+
+    /// Iterator over bits.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len_bits).map(move |i| self.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_roundtrip() {
+        let pattern = [true, false, false, true, true, true, false, true, true, false];
+        let mut b = BitSet::new();
+        for &bit in &pattern {
+            b.push(bit);
+        }
+        assert_eq!(b.len(), pattern.len());
+        for (i, &bit) in pattern.iter().enumerate() {
+            assert_eq!(b.get(i), bit, "bit {i}");
+        }
+        assert_eq!(b.count_ones(), pattern.iter().filter(|&&x| x).count());
+    }
+
+    #[test]
+    fn lsb_first_byte_layout() {
+        let mut b = BitSet::new();
+        // bits 0..8 = 1,0,0,0,0,0,0,1 -> byte 0b1000_0001
+        for bit in [true, false, false, false, false, false, false, true] {
+            b.push(bit);
+        }
+        assert_eq!(b.as_bytes(), &[0b1000_0001]);
+    }
+
+    #[test]
+    fn zeros_set_get() {
+        let mut b = BitSet::zeros(20);
+        assert_eq!(b.count_ones(), 0);
+        b.set(13, true);
+        assert!(b.get(13));
+        b.set(13, false);
+        assert!(!b.get(13));
+    }
+
+    #[test]
+    fn from_bytes_roundtrip() {
+        let mut b = BitSet::new();
+        for i in 0..23 {
+            b.push(i % 3 == 0);
+        }
+        let b2 = BitSet::from_bytes(b.as_bytes().to_vec(), b.len());
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn iter_matches_get() {
+        let mut b = BitSet::new();
+        for i in 0..17 {
+            b.push(i % 2 == 1);
+        }
+        let collected: Vec<bool> = b.iter().collect();
+        for (i, &bit) in collected.iter().enumerate() {
+            assert_eq!(bit, b.get(i));
+        }
+    }
+}

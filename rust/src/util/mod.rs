@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic RNG, statistics, bench harness, CLI args,
+//! bitsets, and human-readable formatting.
+
+pub mod args;
+pub mod bench;
+pub mod bitset;
+pub mod human;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,109 @@
+//! CLI integration: drive the compiled `abhsf` binary end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_abhsf"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = bin().args(args).output().expect("binary runs");
+    assert!(
+        out.status.success(),
+        "abhsf {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = run_ok(&["help"]);
+    for sub in ["generate", "store", "info", "load", "roundtrip", "spmv", "fig1"] {
+        assert!(out.contains(sub), "help missing {sub}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn generate_describes_workload() {
+    let out = run_ok(&["generate", "--seed-size", "8", "--order", "2", "--procs", "3"]);
+    assert!(out.contains("dimension"), "{out}");
+    assert!(out.contains("64 x 64"), "{out}");
+    assert!(out.contains("balanced row-wise"), "{out}");
+}
+
+#[test]
+fn store_info_load_cycle() {
+    let dir = std::env::temp_dir().join(format!("abhsf-cli-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_str().unwrap();
+
+    let out = run_ok(&[
+        "store", "--dir", dirs, "--seed-size", "8", "--procs", "3", "--block-size", "16",
+    ]);
+    assert!(out.contains("stored"), "{out}");
+
+    let out = run_ok(&["info", "--dir", dirs]);
+    assert!(out.contains("matrix-0"), "{out}");
+    assert!(out.contains("matrix-2"), "{out}");
+
+    let out = run_ok(&["load", "--dir", dirs, "--same-config"]);
+    assert!(out.contains("same-config"), "{out}");
+    assert!(out.contains("sim (Lustre)"), "{out}");
+
+    let out = run_ok(&[
+        "load", "--dir", dirs, "--procs", "4", "--mapping", "colwise", "--strategy",
+        "collective",
+    ]);
+    assert!(out.contains("diff-config/collective"), "{out}");
+
+    let out = run_ok(&[
+        "load", "--dir", dirs, "--procs", "2", "--strategy", "exchange",
+    ]);
+    assert!(out.contains("diff-config/exchange"), "{out}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn roundtrip_subcommand() {
+    let out = run_ok(&["roundtrip", "--seed-size", "8", "--procs", "2"]);
+    assert!(out.contains("roundtrip OK"), "{out}");
+}
+
+#[test]
+fn fig1_quick_run() {
+    let out = run_ok(&[
+        "fig1",
+        "--seed-size",
+        "8",
+        "--store-procs",
+        "3",
+        "--procs",
+        "2,4",
+        "--reps",
+        "1",
+    ]);
+    assert!(out.contains("same-config"), "{out}");
+    assert!(out.contains("diff/independent"), "{out}");
+    assert!(out.contains("diff/collective"), "{out}");
+    assert!(out.contains("paper shape checks"), "{out}");
+}
+
+#[test]
+fn load_on_missing_dir_is_clean_error() {
+    let out = bin()
+        .args(["load", "--dir", "/nonexistent-abhsf-dir"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("error"), "{err}");
+}

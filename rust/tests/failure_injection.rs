@@ -1,0 +1,245 @@
+//! Failure injection: corrupted, truncated and mismatched files must be
+//! *detected* (clean errors), never silently mis-loaded or crash.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::sync::Arc;
+
+use abhsf::abhsf::{load_csr, matrix_file_path};
+use abhsf::coordinator::{storer::StoreOptions, Cluster};
+use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::h5::H5Reader;
+use abhsf::mapping::ProcessMapping;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("abhsf-failure-tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Store a small matrix and return the directory.
+fn store_one(name: &str) -> std::path::PathBuf {
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 5), 2));
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(1));
+    let cluster = Cluster::new(1, 8);
+    let dir = tmpdir(name);
+    abhsf::coordinator::store_distributed(
+        &cluster,
+        &gen,
+        &mapping,
+        &dir,
+        StoreOptions {
+            block_size: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    dir
+}
+
+#[test]
+fn bit_flip_in_payload_detected_by_checksum() {
+    let dir = store_one("bitflip");
+    let path = matrix_file_path(&dir, 0);
+    // Flip one byte in the middle of the data section.
+    let mut f = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(&path)
+        .unwrap();
+    let len = f.metadata().unwrap().len();
+    f.seek(SeekFrom::Start(len / 3)).unwrap();
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b).unwrap();
+    f.seek(SeekFrom::Start(len / 3)).unwrap();
+    f.write_all(&[b[0] ^ 0xFF]).unwrap();
+    drop(f);
+
+    match H5Reader::open(&path) {
+        // Flip landed in the directory region: open itself must fail.
+        Err(_) => {}
+        Ok(r) => {
+            let err = load_csr(&r).expect_err("corruption must be detected");
+            let msg = format!("{err}");
+            assert!(
+                msg.contains("checksum") || msg.contains("Invalid") || msg.contains("invalid"),
+                "unexpected error: {msg}"
+            );
+        }
+    }
+}
+
+#[test]
+fn truncated_file_detected() {
+    let dir = store_one("truncate");
+    let path = matrix_file_path(&dir, 0);
+    let len = std::fs::metadata(&path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+    assert!(
+        H5Reader::open(&path).is_err(),
+        "truncated file must not open cleanly"
+    );
+}
+
+#[test]
+fn not_a_container_detected() {
+    let dir = tmpdir("garbage");
+    let path = dir.join("matrix-0.h5spm");
+    std::fs::write(&path, b"this is not an h5spm container at all").unwrap();
+    let Err(err) = H5Reader::open(&path) else {
+        panic!("garbage file opened cleanly")
+    };
+    assert!(format!("{err}").contains("not an h5spm"), "{err}");
+}
+
+#[test]
+fn unfinished_file_detected() {
+    // A writer that never called finish() leaves dir_offset == 0.
+    let dir = tmpdir("unfinished");
+    let path = dir.join("matrix-0.h5spm");
+    {
+        let mut w = abhsf::h5::H5Writer::create(&path).unwrap();
+        w.set_attr("m", 4u64).unwrap();
+        w.write_dataset::<u8>("schemes", &[0]).unwrap();
+        // Dropped without finish().
+    }
+    let Err(err) = H5Reader::open(&path) else {
+        panic!("unfinished file opened cleanly")
+    };
+    assert!(format!("{err}").contains("unfinished"), "{err}");
+}
+
+#[test]
+fn missing_dataset_is_clean_error() {
+    let dir = tmpdir("missing-ds");
+    let path = dir.join("matrix-0.h5spm");
+    {
+        let mut w = abhsf::h5::H5Writer::create(&path).unwrap();
+        for name in ["m", "n", "z", "m_local", "n_local", "z_local", "m_offset", "n_offset"] {
+            w.set_attr(name, 4u64).unwrap();
+        }
+        w.set_attr("block_size", 2u64).unwrap();
+        w.set_attr("blocks", 1u64).unwrap();
+        // Descriptor datasets present, payload datasets absent.
+        w.write_dataset::<u8>("schemes", &[0]).unwrap();
+        w.write_dataset::<u32>("zetas", &[1]).unwrap();
+        w.write_dataset::<u32>("brows", &[0]).unwrap();
+        w.write_dataset::<u32>("bcols", &[0]).unwrap();
+        w.finish().unwrap();
+    }
+    let r = H5Reader::open(&path).unwrap();
+    let err = load_csr(&r).expect_err("missing payload datasets");
+    assert!(format!("{err}").contains("no such dataset"), "{err}");
+}
+
+#[test]
+fn zeta_inconsistency_detected() {
+    // Build a file whose zeta disagrees with the stored payload length.
+    let dir = tmpdir("zeta");
+    let path = dir.join("matrix-0.h5spm");
+    {
+        let mut w = abhsf::h5::H5Writer::create(&path).unwrap();
+        for (name, v) in [
+            ("m", 4u64),
+            ("n", 4),
+            ("z", 2),
+            ("m_local", 4),
+            ("n_local", 4),
+            ("z_local", 2),
+            ("m_offset", 0),
+            ("n_offset", 0),
+            ("block_size", 4),
+            ("blocks", 1),
+        ] {
+            w.set_attr(name, v).unwrap();
+        }
+        w.write_dataset::<u8>("schemes", &[0]).unwrap(); // COO block
+        w.write_dataset::<u32>("zetas", &[2]).unwrap(); // claims 2 elements
+        w.write_dataset::<u32>("brows", &[0]).unwrap();
+        w.write_dataset::<u32>("bcols", &[0]).unwrap();
+        w.write_dataset::<u16>("coo_lrows", &[0]).unwrap(); // holds 1
+        w.write_dataset::<u16>("coo_lcols", &[0]).unwrap();
+        w.write_dataset::<f64>("coo_vals", &[1.0]).unwrap();
+        for name in ["csr_lcolinds", "csr_rowptrs", "csr_vals"] {
+            if name == "csr_rowptrs" {
+                w.write_dataset::<u32>(name, &[]).unwrap();
+            } else if name == "csr_vals" {
+                w.write_dataset::<f64>(name, &[]).unwrap();
+            } else {
+                w.write_dataset::<u16>(name, &[]).unwrap();
+            }
+        }
+        w.write_dataset::<u8>("bitmap_bitmap", &[]).unwrap();
+        w.write_dataset::<f64>("bitmap_vals", &[]).unwrap();
+        w.write_dataset::<f64>("dense_vals", &[]).unwrap();
+        w.finish().unwrap();
+    }
+    let r = H5Reader::open(&path).unwrap();
+    let err = load_csr(&r).expect_err("zeta inconsistency");
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("exhausted") || msg.contains("Invalid") || msg.contains("invalid"),
+        "{msg}"
+    );
+}
+
+#[test]
+fn wrong_scheme_tag_detected() {
+    // Valid container, invalid scheme tag (paper Algorithm 2's error arm).
+    let dir = tmpdir("scheme-tag");
+    let path = dir.join("matrix-0.h5spm");
+    {
+        let mut w = abhsf::h5::H5Writer::create(&path).unwrap();
+        for (name, v) in [
+            ("m", 4u64),
+            ("n", 4),
+            ("z", 1),
+            ("m_local", 4),
+            ("n_local", 4),
+            ("z_local", 1),
+            ("m_offset", 0),
+            ("n_offset", 0),
+            ("block_size", 4),
+            ("blocks", 1),
+        ] {
+            w.set_attr(name, v).unwrap();
+        }
+        w.write_dataset::<u8>("schemes", &[9]).unwrap(); // bogus tag
+        w.write_dataset::<u32>("zetas", &[1]).unwrap();
+        w.write_dataset::<u32>("brows", &[0]).unwrap();
+        w.write_dataset::<u32>("bcols", &[0]).unwrap();
+        w.write_dataset::<u16>("coo_lrows", &[0]).unwrap();
+        w.write_dataset::<u16>("coo_lcols", &[0]).unwrap();
+        w.write_dataset::<f64>("coo_vals", &[1.0]).unwrap();
+        w.write_dataset::<u16>("csr_lcolinds", &[]).unwrap();
+        w.write_dataset::<u32>("csr_rowptrs", &[]).unwrap();
+        w.write_dataset::<f64>("csr_vals", &[]).unwrap();
+        w.write_dataset::<u8>("bitmap_bitmap", &[]).unwrap();
+        w.write_dataset::<f64>("bitmap_vals", &[]).unwrap();
+        w.write_dataset::<f64>("dense_vals", &[]).unwrap();
+        w.finish().unwrap();
+    }
+    let r = H5Reader::open(&path).unwrap();
+    let err = load_csr(&r).expect_err("bad scheme tag");
+    assert!(format!("{err}").contains("scheme tag"), "{err}");
+}
+
+#[test]
+fn worker_error_propagates_not_hangs() {
+    // A missing file in a multi-rank load must surface as Err from the
+    // leader, not deadlock the cluster.
+    let dir = store_one("partial");
+    // Ask for 3 ranks but only 1 file exists.
+    let cluster = Cluster::new(3, 8);
+    let res = abhsf::coordinator::load_same_config(
+        &cluster,
+        &dir,
+        abhsf::coordinator::InMemFormat::Csr,
+    );
+    assert!(res.is_err(), "missing files must error");
+    // The cluster must remain usable for the next job.
+    let ok = cluster.run(|ctx| ctx.rank);
+    assert_eq!(ok, vec![0, 1, 2]);
+}

@@ -1,0 +1,256 @@
+//! Property-style integration tests: store → load equivalence across the
+//! full configuration matrix (seed kinds × mappings × block sizes ×
+//! process counts × strategies × in-memory formats).
+//!
+//! No `proptest` in the offline registry, so cases are driven by the
+//! crate's deterministic RNG over a seeded parameter grid — every failure
+//! reproduces from the printed case description.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use abhsf::coordinator::{
+    load_different_config, load_exchange, load_same_config, storer::StoreOptions, Cluster,
+    DiffLoadOptions, InMemFormat,
+};
+use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::mapping::{Block2d, Colwise, CyclicRows, ProcessMapping, Rowwise};
+use abhsf::parfs::IoStrategy;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("abhsf-roundtrip-configs")
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Global element map of a generator (the oracle).
+fn oracle(gen: &KroneckerGen) -> HashMap<(u64, u64), f64> {
+    let mut m = HashMap::new();
+    gen.visit_row_range(0, gen.dim(), |i, j, v| {
+        m.insert((i, j), v);
+    });
+    m
+}
+
+/// Collect the global elements of loaded parts.
+fn collect(mats: &[abhsf::coordinator::LoadedMatrix]) -> HashMap<(u64, u64), f64> {
+    let mut m = HashMap::new();
+    for lm in mats {
+        let coo = lm.clone().into_coo();
+        let (ro, co) = (coo.info.m_offset, coo.info.n_offset);
+        for (r, c, v) in coo.iter() {
+            assert!(
+                m.insert((r + ro, c + co), v).is_none(),
+                "duplicate global element ({}, {})",
+                r + ro,
+                c + co
+            );
+        }
+    }
+    m
+}
+
+#[test]
+fn same_config_roundtrip_grid() {
+    // Sweep seeds × block sizes × P; both in-memory formats.
+    let cases = [
+        ("cage", 8u64, 2u32, 4u64, 3usize),
+        ("cage", 10, 2, 16, 5),
+        ("rmat", 16, 2, 8, 4),
+        ("random", 12, 2, 32, 2),
+        ("diag", 9, 2, 8, 3),
+    ];
+    for (kind, seed_n, order, block, p) in cases {
+        let seed = match kind {
+            "cage" => SeedMatrix::cage_like(seed_n, 1),
+            "rmat" => SeedMatrix::rmat((seed_n as f64).log2().ceil() as u32, 4, 2),
+            "random" => SeedMatrix::random(seed_n, 0.15, 3),
+            _ => SeedMatrix::diagonal(seed_n),
+        };
+        let gen = Arc::new(KroneckerGen::new(seed, order));
+        let n = gen.dim();
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(p));
+        let cluster = Cluster::new(p, 64);
+        let dir = tmpdir(&format!("same-{kind}-{seed_n}-{block}-{p}"));
+        abhsf::coordinator::store_distributed(
+            &cluster,
+            &gen,
+            &mapping,
+            &dir,
+            StoreOptions {
+                block_size: block,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for format in [InMemFormat::Csr, InMemFormat::Coo] {
+            let (mats, report) = load_same_config(&cluster, &dir, format).unwrap();
+            assert_eq!(
+                report.total_nnz(),
+                gen.nnz(),
+                "case {kind}/{seed_n}/{block}/{p}"
+            );
+            for m in &mats {
+                m.validate().unwrap();
+            }
+            assert_eq!(collect(&mats), oracle(&gen), "case {kind} n={n}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn diff_config_roundtrip_grid() {
+    // Store row-wise with p_store, reload under every mapping family and
+    // strategy with several p_load values.
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(9, 4), 2));
+    let n = gen.dim();
+    let p_store = 4;
+    let store_map: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(p_store));
+    let store_cluster = Cluster::new(p_store, 64);
+    let dir = tmpdir("diff-grid");
+    abhsf::coordinator::store_distributed(
+        &store_cluster,
+        &gen,
+        &store_map,
+        &dir,
+        StoreOptions {
+            block_size: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let want = oracle(&gen);
+
+    let mappings: Vec<(String, Arc<dyn ProcessMapping>)> = vec![
+        ("colwise-3".into(), Arc::new(Colwise::regular(n, n, 3))),
+        ("rowwise-5".into(), Arc::new(Rowwise::regular(n, n, 5))),
+        ("2d-2x3".into(), Arc::new(Block2d::regular(n, n, 2, 3))),
+        ("cyclic-4".into(), Arc::new(CyclicRows { m: n, n, p: 4 })),
+    ];
+    for (label, mapping) in mappings {
+        let p_load = mapping.nprocs();
+        let cluster = Cluster::new(p_load, 64);
+        for strategy in [IoStrategy::Independent, IoStrategy::Collective] {
+            let (mats, report) = load_different_config(
+                &cluster,
+                &dir,
+                &mapping,
+                &DiffLoadOptions {
+                    stored_files: p_store,
+                    strategy,
+                    format: InMemFormat::Csr,
+                },
+            )
+            .unwrap();
+            assert_eq!(report.total_nnz(), gen.nnz(), "{label}/{strategy:?}");
+            assert_eq!(collect(&mats), want, "{label}/{strategy:?}");
+        }
+        // Exchange loader must agree too.
+        let (mats, report) =
+            load_exchange(&cluster, &dir, &mapping, p_store, InMemFormat::Coo).unwrap();
+        assert_eq!(report.total_nnz(), gen.nnz(), "{label}/exchange");
+        assert_eq!(collect(&mats), want, "{label}/exchange");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ownership_respects_mapping() {
+    // Every loaded element must belong to its rank under M(i, j).
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 6), 2));
+    let n = gen.dim();
+    let p_store = 3;
+    let store_map: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(p_store));
+    let store_cluster = Cluster::new(p_store, 64);
+    let dir = tmpdir("ownership");
+    abhsf::coordinator::store_distributed(
+        &store_cluster,
+        &gen,
+        &store_map,
+        &dir,
+        StoreOptions::default(),
+    )
+    .unwrap();
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Block2d::regular(n, n, 2, 2));
+    let cluster = Cluster::new(4, 64);
+    let (mats, _) = load_different_config(
+        &cluster,
+        &dir,
+        &mapping,
+        &DiffLoadOptions {
+            stored_files: p_store,
+            strategy: IoStrategy::Independent,
+            format: InMemFormat::Coo,
+        },
+    )
+    .unwrap();
+    for (rank, lm) in mats.iter().enumerate() {
+        let coo = lm.clone().into_coo();
+        for (r, c, _) in coo.iter() {
+            let (i, j) = (r + coo.info.m_offset, c + coo.info.n_offset);
+            assert_eq!(mapping.owner(i, j), rank, "element ({i},{j}) on rank {rank}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn block_size_sweep_preserves_content() {
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(10, 8), 2));
+    let want = oracle(&gen);
+    let p = 2;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(p));
+    let cluster = Cluster::new(p, 64);
+    for block in [2u64, 3, 7, 16, 64, 128] {
+        let dir = tmpdir(&format!("bs-{block}"));
+        abhsf::coordinator::store_distributed(
+            &cluster,
+            &gen,
+            &mapping,
+            &dir,
+            StoreOptions {
+                block_size: block,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (mats, _) = load_same_config(&cluster, &dir, InMemFormat::Csr).unwrap();
+        assert_eq!(collect(&mats), want, "block size {block}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn chunk_size_sweep_preserves_content() {
+    // Container chunking must be invisible to the loader.
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 2), 2));
+    let want = oracle(&gen);
+    let cluster = Cluster::new(2, 64);
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(2));
+    for chunk in [1u64, 7, 64, 100_000] {
+        let dir = tmpdir(&format!("chunk-{chunk}"));
+        abhsf::coordinator::store_distributed(
+            &cluster,
+            &gen,
+            &mapping,
+            &dir,
+            StoreOptions {
+                block_size: 8,
+                chunk_elems: chunk,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (mats, report) = load_same_config(&cluster, &dir, InMemFormat::Csr).unwrap();
+        assert_eq!(collect(&mats), want, "chunk {chunk}");
+        // Smaller chunks => more read ops.
+        if chunk == 1 {
+            assert!(report.per_rank_io[0].ops > 100, "tiny chunks should mean many ops");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,183 @@
+//! End-to-end PJRT integration: the AOT artifacts produced by
+//! `python/compile/aot.py` must compile on the PJRT CPU client and agree
+//! numerically with the native Rust implementations.
+//!
+//! Skips (with a message) if `make artifacts` has not run.
+
+use abhsf::formats::{Coo, Csr, LocalInfo};
+use abhsf::runtime::{BlockedTensors, Manifest, Runtime};
+use abhsf::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(Manifest::load(dir).expect("manifest parses")).expect("pjrt cpu client"))
+}
+
+fn random_csr(seed: u64, m: u64, n: u64, per_row: usize) -> Csr {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let info = LocalInfo::whole(m, n, (m as usize * per_row) as u64);
+    let mut coo = Coo::with_info(info);
+    let mut seen = std::collections::HashSet::new();
+    // One 16-wide column cluster per 8-row group keeps the distinct blocks
+    // per block row within every artifact's K (cluster spans <= 3 blocks
+    // at s=8, <= 2 at s=16).
+    let groups = m.div_ceil(8);
+    let bases: Vec<u64> = (0..groups)
+        .map(|_| rng.next_below(n.saturating_sub(16).max(1)))
+        .collect();
+    for r in 0..m {
+        let base = bases[(r / 8) as usize];
+        for _ in 0..per_row {
+            let c = (base + rng.next_below(16)).min(n - 1);
+            if seen.insert((r, c)) {
+                coo.push(r, c, rng.range_f64(-1.0, 1.0));
+            }
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+#[test]
+fn spmv_artifact_matches_native_rust() {
+    let Some(rt) = runtime_or_skip() else { return };
+    println!("platform = {}", rt.platform());
+    let csr = random_csr(11, 128, 128, 6);
+    let x: Vec<f64> = (0..128).map(|i| ((i % 13) as f64) * 0.3 - 1.5).collect();
+
+    let y_pjrt = rt.spmv_csr(&csr, &x).expect("pjrt spmv");
+    let mut y_native = vec![0.0f64; 128];
+    csr.spmv_into(&x, &mut y_native);
+
+    assert!(y_pjrt.len() >= 128);
+    for i in 0..128 {
+        let diff = (y_pjrt[i] as f64 - y_native[i]).abs();
+        assert!(diff < 1e-3, "row {i}: pjrt {} vs native {}", y_pjrt[i], y_native[i]);
+    }
+    // Rows beyond m_local are padding and must be exactly zero.
+    for (i, &v) in y_pjrt.iter().enumerate().skip(128) {
+        assert_eq!(v, 0.0, "padding row {i}");
+    }
+}
+
+#[test]
+fn spmv_artifact_respects_offsets() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // A column-window submatrix (like a diff-config colwise part).
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let info = LocalInfo {
+        m: 256,
+        n: 512,
+        z: 600,
+        m_local: 256,
+        n_local: 128,
+        z_local: 0,
+        m_offset: 0,
+        n_offset: 256,
+    };
+    let mut coo = Coo::with_info(info);
+    let mut seen = std::collections::HashSet::new();
+    while coo.nnz() < 600 {
+        let r = rng.next_below(256);
+        let c = rng.next_below(128);
+        if seen.insert((r, c)) {
+            coo.push(r, c, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    let csr = Csr::from_coo(&coo);
+    let x: Vec<f64> = (0..512).map(|i| (i as f64 * 0.01).sin()).collect();
+    let y_pjrt = rt.spmv_csr(&csr, &x).expect("pjrt spmv");
+    let mut y_native = vec![0.0f64; 256];
+    csr.spmv_into(&x, &mut y_native);
+    for i in 0..256 {
+        assert!(
+            (y_pjrt[i] as f64 - y_native[i]).abs() < 1e-3,
+            "row {i}: {} vs {}",
+            y_pjrt[i],
+            y_native[i]
+        );
+    }
+}
+
+#[test]
+fn power_step_artifact_normalizes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt
+        .manifest()
+        .of_kind("power_step")
+        .first()
+        .cloned()
+        .cloned()
+        .expect("a power_step artifact");
+    let n = art.param("n").unwrap() as usize;
+    let csr = random_csr(5, n as u64, n as u64, 5);
+    let t = BlockedTensors::pack_csr(&csr, &art).expect("pack");
+    let x = vec![1.0f32; n];
+    let (x2, norm) = rt.power_step(&art, &t, &x).expect("power step");
+    assert!(norm > 0.0);
+    let l2: f32 = x2.iter().map(|v| v * v).sum::<f32>().sqrt();
+    assert!((l2 - 1.0).abs() < 1e-4, "norm of x' = {l2}");
+    // Iterating a few steps must keep producing unit vectors.
+    let (x3, _) = rt.power_step(&art, &t, &x2).expect("second step");
+    let l3: f32 = x3.iter().map(|v| v * v).sum::<f32>().sqrt();
+    assert!((l3 - 1.0).abs() < 1e-4);
+}
+
+#[test]
+fn assemble_artifact_matches_native_decode() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt
+        .manifest()
+        .of_kind("assemble")
+        .first()
+        .cloned()
+        .cloned()
+        .expect("an assemble artifact");
+    let z = art.param("z").unwrap() as usize;
+    let t = art.param("t").unwrap() as usize;
+    let s = art.param("s").unwrap() as usize;
+    let mut rng = Xoshiro256::seed_from_u64(21);
+    let mut lrows = vec![0i32; z * t];
+    let mut lcols = vec![0i32; z * t];
+    let mut vals = vec![0f32; z * t];
+    for b in 0..z {
+        let fill = rng.range_usize(0, t);
+        for slot in 0..fill {
+            lrows[b * t + slot] = rng.next_below(s as u64) as i32;
+            lcols[b * t + slot] = rng.next_below(s as u64) as i32;
+            vals[b * t + slot] = rng.range_f64(-1.0, 1.0) as f32;
+        }
+    }
+    let out = rt.assemble(&art, &lrows, &lcols, &vals).expect("assemble");
+    assert_eq!(out.len(), z * s * s);
+    // Native scatter oracle.
+    let mut want = vec![0f32; z * s * s];
+    for b in 0..z {
+        for slot in 0..t {
+            let v = vals[b * t + slot];
+            if v != 0.0 {
+                let (r, c) = (lrows[b * t + slot] as usize, lcols[b * t + slot] as usize);
+                want[b * s * s + r * s + c] += v;
+            }
+        }
+    }
+    for (i, (&g, &w)) in out.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-5, "elem {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn executables_are_cached() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let name = &rt.manifest().artifacts[0].name.clone();
+    let a = rt.executable(name).expect("first compile");
+    let b = rt.executable(name).expect("cached");
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "second call must hit the cache");
+}
