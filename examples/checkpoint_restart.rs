@@ -19,13 +19,10 @@
 
 use std::sync::Arc;
 
-use abhsf::coordinator::{
-    load_different_config, storer::StoreOptions, Cluster, DiffLoadOptions, InMemFormat,
-};
+use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions, Strategy};
 use abhsf::formats::Csr;
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::mapping::{Colwise, ProcessMapping};
-use abhsf::parfs::IoStrategy;
 use abhsf::runtime::Runtime;
 use abhsf::spmv::power_iteration_step;
 use abhsf::util::human;
@@ -88,13 +85,16 @@ fn main() -> anyhow::Result<()> {
         Err(e) => println!("  (PJRT check skipped: {e} — run `make artifacts`)"),
     }
 
-    // Checkpoint: matrix to ABHSF files + iterate vector.
+    // Checkpoint: matrix to an ABHSF dataset + iterate vector. The
+    // manifest records the phase-1 configuration, so the restart below
+    // does not need to be told how the checkpoint was written.
     let dir = std::env::temp_dir().join("abhsf-ckpt-demo");
     let _ = std::fs::remove_dir_all(&dir);
     let t0 = std::time::Instant::now();
-    let report = abhsf::coordinator::store_parts(
+    let (_, report) = Dataset::store_parts(
         &cluster1,
         parts1.iter().map(|c| c.to_coo()).collect(),
+        &map1,
         &dir,
         StoreOptions::default(),
     )?;
@@ -110,19 +110,20 @@ fn main() -> anyhow::Result<()> {
     println!("== simulated crash; restarting with 5 workers (column-wise)");
 
     // Phase 2: different configuration — 5 workers, column-wise regular.
+    // The stored file count and mapping come from the manifest; the
+    // explicit strategy pins the paper's all-read-all algorithm.
+    let dataset = Dataset::open(&dir)?;
+    assert_eq!(dataset.nprocs(), p1, "manifest remembers the store config");
     let p2 = 5;
     let map2: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p2));
     let cluster2 = Cluster::new(p2, 64);
-    let (mats, load) = load_different_config(
-        &cluster2,
-        &dir,
-        &map2,
-        &DiffLoadOptions {
-            stored_files: p1,
-            strategy: IoStrategy::Independent,
-            format: InMemFormat::Csr,
-        },
-    )?;
+    let (mats, load) = dataset
+        .load()
+        .nprocs(p2)
+        .mapping(&map2)
+        .strategy(Strategy::Independent)
+        .format(InMemFormat::Csr)
+        .run(&cluster2)?;
     println!(
         "  reloaded {} nnz with all-read-all in {:.3} s (read {})",
         human::count(load.total_nnz()),

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use abhsf::coordinator::{load_same_config, storer::StoreOptions, Cluster, InMemFormat};
+use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions};
 use abhsf::formats::Csr;
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::mapping::ProcessMapping;
@@ -31,16 +31,11 @@ fn main() -> anyhow::Result<()> {
     let cluster = Cluster::new(p, 64);
 
     // 3. Store: every worker generates its own portion and writes
-    //    matrix-<k>.h5spm (ABHSF, adaptively chosen block schemes).
+    //    matrix-<k>.h5spm (ABHSF, adaptively chosen block schemes) plus
+    //    a dataset.json manifest describing the configuration.
     let dir = std::env::temp_dir().join("abhsf-quickstart");
     let _ = std::fs::remove_dir_all(&dir);
-    let store = abhsf::coordinator::store_distributed(
-        &cluster,
-        &gen,
-        &mapping,
-        &dir,
-        StoreOptions::default(),
-    )?;
+    let (_, store) = Dataset::store(&cluster, &gen, &mapping, &dir, StoreOptions::default())?;
     println!(
         "stored  {} nnz -> {} ABHSF payload in {:.3} s",
         human::count(store.total_nnz()),
@@ -48,12 +43,18 @@ fn main() -> anyhow::Result<()> {
         store.wall_s
     );
 
-    // 4. Load with the same configuration (Algorithm 1 per rank).
-    let (parts, load) = load_same_config(&cluster, &dir, InMemFormat::Csr)?;
+    // 4. Reopen the dataset — the storing configuration is discovered
+    //    from the manifest — and load. Strategy::Auto (the default) sees
+    //    the configurations match and takes the same-config fast path
+    //    (Algorithm 1 per rank).
+    let dataset = Dataset::open(&dir)?;
+    let (parts, load) = dataset.load().format(InMemFormat::Csr).run(&cluster)?;
+    let auto = load.auto.as_ref().expect("auto decision");
     println!(
-        "loaded  {} nnz back in {:.3} s",
+        "loaded  {} nnz back in {:.3} s (auto chose {})",
         human::count(load.total_nnz()),
-        load.wall_s
+        load.wall_s,
+        auto.chosen
     );
 
     // 5. Verify through SpMV against direct generation.

@@ -4,17 +4,18 @@
 //! research" — each file read once, elements routed over backpressured
 //! channels), including bytes moved and channel-blocking time.
 //!
+//! All loads go through the `Dataset`/`LoadPlan` API: the storing
+//! configuration is discovered from the dataset manifest, and a final
+//! `Strategy::Auto` row shows what the cost model would have picked.
+//!
 //! Run: `cargo bench --bench strategies`
 
 use std::sync::Arc;
 
-use abhsf::coordinator::{
-    load_different_config, load_exchange, load_same_config, storer::StoreOptions, Cluster,
-    DiffLoadOptions, InMemFormat,
-};
+use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions, Strategy};
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::mapping::{Colwise, ProcessMapping};
-use abhsf::parfs::{FsModel, IoStrategy};
+use abhsf::parfs::FsModel;
 use abhsf::util::bench::Table;
 use abhsf::util::human;
 
@@ -28,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let _ = std::fs::remove_dir_all(&dir);
     let store_map: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(p_store));
     let store_cluster = Cluster::new(p_store, 64);
-    let sreport = abhsf::coordinator::store_distributed(
+    let (dataset, sreport) = Dataset::store(
         &store_cluster,
         &gen,
         &store_map,
@@ -50,10 +51,11 @@ fn main() -> anyhow::Result<()> {
         "strategy", "P_load", "wall [ms]", "sim [s]", "bytes read", "opens", "blocked [ms]",
     ]);
 
-    // Reference: same-config.
+    // Reference: same-config (Auto fast path on the matching cluster).
     {
         let cluster = Cluster::new(p_store, 64);
-        let (_, r) = load_same_config(&cluster, &dir, InMemFormat::Csr)?;
+        let (_, r) = dataset.load().format(InMemFormat::Csr).run(&cluster)?;
+        assert!(r.auto.as_ref().is_some_and(|a| a.same_config));
         t.row(&[
             "same-config".into(),
             p_store.to_string(),
@@ -68,37 +70,47 @@ fn main() -> anyhow::Result<()> {
     for p_load in [4usize, 8, 12] {
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
         let cluster = Cluster::new(p_load, 64);
-        for strategy in [IoStrategy::Independent, IoStrategy::Collective] {
-            let (_, r) = load_different_config(
-                &cluster,
-                &dir,
-                &mapping,
-                &DiffLoadOptions {
-                    stored_files: p_store,
-                    strategy,
-                    format: InMemFormat::Csr,
-                },
-            )?;
+        for strategy in [Strategy::Independent, Strategy::Collective, Strategy::Exchange] {
+            let (_, r) = dataset
+                .load()
+                .mapping(&mapping)
+                .strategy(strategy)
+                .format(InMemFormat::Csr)
+                .run(&cluster)?;
+            let blocked: u64 = r.send_blocked_ns.iter().sum();
             t.row(&[
-                format!("all-read-all/{}", strategy.label()),
+                match strategy {
+                    Strategy::Exchange => "exchange".into(),
+                    other => format!("all-read-all/{}", other.label()),
+                },
                 p_load.to_string(),
                 format!("{:.2}", r.wall_s * 1e3),
                 format!("{:.3}", r.simulate(&model).makespan_s),
                 human::bytes(r.total_read_bytes()),
                 r.per_rank_io.iter().map(|s| s.opens).sum::<u64>().to_string(),
-                "-".into(),
+                if strategy == Strategy::Exchange {
+                    format!("{:.2}", blocked as f64 / 1e6)
+                } else {
+                    "-".into()
+                },
             ]);
         }
-        let (_, r) = load_exchange(&cluster, &dir, &mapping, p_store, InMemFormat::Csr)?;
-        let blocked_ms: f64 = r.send_blocked_ns.iter().sum::<u64>() as f64 / 1e6;
+        // What would Auto have picked for this diff-config point?
+        let (_, r) = dataset
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Auto)
+            .format(InMemFormat::Csr)
+            .run(&cluster)?;
+        let auto = r.auto.as_ref().expect("auto decision recorded");
         t.row(&[
-            "exchange".into(),
+            format!("auto -> {}", auto.chosen),
             p_load.to_string(),
             format!("{:.2}", r.wall_s * 1e3),
             format!("{:.3}", r.simulate(&model).makespan_s),
             human::bytes(r.total_read_bytes()),
             r.per_rank_io.iter().map(|s| s.opens).sum::<u64>().to_string(),
-            format!("{blocked_ms:.2}"),
+            "-".into(),
         ]);
     }
     t.print();
@@ -109,7 +121,12 @@ fn main() -> anyhow::Result<()> {
     let mut t2 = Table::new(&["capacity", "wall [ms]", "blocked [ms]"]);
     for cap in [1usize, 4, 16, 64, 256] {
         let cluster = Cluster::new(8, cap);
-        let (_, r) = load_exchange(&cluster, &dir, &mapping, p_store, InMemFormat::Csr)?;
+        let (_, r) = dataset
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Exchange)
+            .format(InMemFormat::Csr)
+            .run(&cluster)?;
         t2.row(&[
             cap.to_string(),
             format!("{:.2}", r.wall_s * 1e3),

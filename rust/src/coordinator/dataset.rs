@@ -1,0 +1,889 @@
+//! Self-describing datasets and load planning — the crate's public
+//! store/load API.
+//!
+//! A stored ABHSF matrix directory is now a **dataset**: the per-process
+//! `matrix-<k>.h5spm` containers plus a `dataset.json` manifest recording
+//! the storing configuration (process count, mapping descriptor, global
+//! dims/nnz, block size) and per-file byte/nonzero counts. Loading starts
+//! from [`Dataset::open`], which *discovers* everything the old free
+//! functions had to be told (`stored_files`, the old mapping, file
+//! sizes), and goes through a [`LoadPlan`] builder:
+//!
+//! ```no_run
+//! # use abhsf::coordinator::{Cluster, Dataset, InMemFormat, Strategy};
+//! # fn demo() -> Result<(), abhsf::coordinator::DatasetError> {
+//! let cluster = Cluster::new(4, 64);
+//! let dataset = Dataset::open("matrix")?;
+//! let (parts, report) = dataset
+//!     .load()
+//!     .nprocs(4)
+//!     .format(InMemFormat::Csr)
+//!     .strategy(Strategy::Auto)
+//!     .run(&cluster)?;
+//! # Ok(()) }
+//! ```
+//!
+//! [`Strategy::Auto`] detects the same-configuration fast path (stored and
+//! requested configurations provably equal — Algorithm 1 per rank on its
+//! own file, the paper's headline result) and otherwise consults the
+//! [`crate::parfs`] cost model over the manifest's file sizes to choose
+//! between the all-read-all strategies (independent/collective, §4) and
+//! the exchange loader (the paper's future-work direction). The decision
+//! and the per-candidate predictions are recorded in
+//! [`LoadReport::auto`](crate::coordinator::LoadReport).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::abhsf::matrix_file_path;
+use crate::coordinator::cluster::Cluster;
+use crate::coordinator::error::DatasetError;
+use crate::coordinator::loader::{
+    different_config_impl, exchange_impl, same_config_impl, DiffLoadOptions, LoadedMatrix,
+};
+use crate::coordinator::metrics::{AutoDecision, LoadReport, StoreReport};
+use crate::coordinator::storer::{store_distributed_impl, store_parts_impl, StoreOptions};
+use crate::coordinator::InMemFormat;
+use crate::formats::Coo;
+use crate::gen::KroneckerGen;
+use crate::mapping::{MappingDesc, ProcessMapping};
+use crate::parfs::{FsModel, IoStrategy, RankLoadProfile};
+use crate::util::json::Json;
+
+/// Manifest file name inside a dataset directory.
+pub const MANIFEST_FILE: &str = "dataset.json";
+
+/// Current manifest format version.
+const MANIFEST_VERSION: u64 = 1;
+
+/// Loading strategy requested from a [`LoadPlan`]. `Auto` is the default:
+/// same-config fast path when the configurations match, cost-model
+/// selection among the rest otherwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Strategy {
+    /// Pick automatically (fast path detection + cost model).
+    #[default]
+    Auto,
+    /// All-read-all with independent I/O (paper §3, `H5FD_MPIO_INDEPENDENT`).
+    Independent,
+    /// All-read-all with collective I/O (paper §3, `H5FD_MPIO_COLLECTIVE`).
+    Collective,
+    /// Read each file once and route elements to their new owners
+    /// (the paper's future-work extension).
+    Exchange,
+}
+
+impl Strategy {
+    /// Label for tables, reports and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            Strategy::Auto => "auto",
+            Strategy::Independent => "independent",
+            Strategy::Collective => "collective",
+            Strategy::Exchange => "exchange",
+        }
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = DatasetError;
+
+    fn from_str(s: &str) -> Result<Self, DatasetError> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Strategy::Auto,
+            "independent" => Strategy::Independent,
+            "collective" => Strategy::Collective,
+            "exchange" => Strategy::Exchange,
+            _ => return Err(DatasetError::UnknownStrategy(s.to_string())),
+        })
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Per-file record in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoredFile {
+    /// On-disk container size, bytes.
+    pub bytes: u64,
+    /// Nonzeros stored in this file.
+    pub nnz: u64,
+}
+
+/// The dataset-level manifest: everything a loader needs to plan without
+/// being told how the data was stored.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetManifest {
+    /// Storing process count (= number of `matrix-<k>.h5spm` files).
+    pub nprocs: usize,
+    /// Descriptor of the storing mapping.
+    pub mapping: MappingDesc,
+    /// Global rows.
+    pub m: u64,
+    /// Global columns.
+    pub n: u64,
+    /// Global nonzeros.
+    pub z: u64,
+    /// ABHSF block size `s`.
+    pub block_size: u64,
+    /// Per-file sizes and nonzero counts, indexed by rank.
+    pub files: Vec<StoredFile>,
+}
+
+impl DatasetManifest {
+    /// Total on-disk bytes across all stored files (the `unique_bytes` of
+    /// the cost model: each distinct byte leaves the disks once).
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.bytes).sum()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("format".to_string(), Json::str("abhsf-dataset"));
+        obj.insert("version".to_string(), Json::num(MANIFEST_VERSION));
+        obj.insert("nprocs".to_string(), Json::num(self.nprocs as u64));
+        obj.insert("mapping".to_string(), self.mapping.to_json());
+        obj.insert("m".to_string(), Json::num(self.m));
+        obj.insert("n".to_string(), Json::num(self.n));
+        obj.insert("z".to_string(), Json::num(self.z));
+        obj.insert("block_size".to_string(), Json::num(self.block_size));
+        obj.insert(
+            "files".to_string(),
+            Json::Arr(
+                self.files
+                    .iter()
+                    .map(|f| {
+                        let mut e = std::collections::BTreeMap::new();
+                        e.insert("bytes".to_string(), Json::num(f.bytes));
+                        e.insert("nnz".to_string(), Json::num(f.nnz));
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+
+    fn from_json(v: &Json) -> Result<Self, String> {
+        if v.get("format").and_then(Json::as_str) != Some("abhsf-dataset") {
+            return Err("missing \"format\": \"abhsf-dataset\"".into());
+        }
+        let version = v
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or("missing version")?;
+        if version > MANIFEST_VERSION {
+            return Err(format!(
+                "manifest version {version} is newer than supported {MANIFEST_VERSION}"
+            ));
+        }
+        let num = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("missing numeric {key:?}"))
+        };
+        let mapping = MappingDesc::from_json(v.get("mapping").ok_or("missing mapping")?)?;
+        let files: Vec<StoredFile> = v
+            .get("files")
+            .and_then(Json::as_arr)
+            .ok_or("missing files")?
+            .iter()
+            .map(|e| -> Result<StoredFile, String> {
+                Ok(StoredFile {
+                    bytes: e
+                        .get("bytes")
+                        .and_then(Json::as_u64)
+                        .ok_or("file entry missing bytes")?,
+                    nnz: e
+                        .get("nnz")
+                        .and_then(Json::as_u64)
+                        .ok_or("file entry missing nnz")?,
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        let nprocs = num("nprocs")? as usize;
+        if files.len() != nprocs {
+            return Err(format!(
+                "{} file entries but nprocs = {nprocs}",
+                files.len()
+            ));
+        }
+        if nprocs == 0 {
+            return Err("nprocs = 0".into());
+        }
+        if mapping.nprocs() != nprocs {
+            return Err(format!(
+                "mapping descriptor declares {} processes but nprocs = {nprocs}",
+                mapping.nprocs()
+            ));
+        }
+        Ok(DatasetManifest {
+            nprocs,
+            mapping,
+            m: num("m")?,
+            n: num("n")?,
+            z: num("z")?,
+            block_size: num("block_size")?,
+            files,
+        })
+    }
+}
+
+/// A handle to a stored ABHSF dataset: directory + manifest. Obtained
+/// from [`Dataset::store`] / [`Dataset::store_parts`] (which write the
+/// manifest) or [`Dataset::open`] (which reads or reconstructs it).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    dir: PathBuf,
+    manifest: DatasetManifest,
+}
+
+impl Dataset {
+    /// Store a generated matrix under `mapping` and write the manifest;
+    /// returns the dataset handle and the per-rank store report.
+    pub fn store(
+        cluster: &Cluster,
+        gen: &Arc<KroneckerGen>,
+        mapping: &Arc<dyn ProcessMapping>,
+        dir: impl AsRef<Path>,
+        opts: StoreOptions,
+    ) -> Result<(Dataset, StoreReport), DatasetError> {
+        let dir = dir.as_ref();
+        let report = store_distributed_impl(cluster, gen, mapping, dir, opts)?;
+        let dataset = Self::write_manifest(
+            dir,
+            mapping.descriptor(),
+            gen.dim(),
+            gen.dim(),
+            &report,
+            opts.block_size,
+        )?;
+        Ok((dataset, report))
+    }
+
+    /// Store pre-built local parts (one COO per rank, partitioned by
+    /// `mapping` — the caller guarantees the parts actually follow it)
+    /// and write the manifest.
+    pub fn store_parts(
+        cluster: &Cluster,
+        parts: Vec<Coo>,
+        mapping: &Arc<dyn ProcessMapping>,
+        dir: impl AsRef<Path>,
+        opts: StoreOptions,
+    ) -> Result<(Dataset, StoreReport), DatasetError> {
+        if cluster.nprocs() != mapping.nprocs() {
+            return Err(DatasetError::ClusterMismatch {
+                cluster: cluster.nprocs(),
+                required: mapping.nprocs(),
+                what: "the storage mapping",
+            });
+        }
+        let dir = dir.as_ref();
+        let (m, n) = parts
+            .first()
+            .map(|c| (c.info.m, c.info.n))
+            .unwrap_or((0, 0));
+        let report = store_parts_impl(cluster, parts, dir, opts)?;
+        let dataset =
+            Self::write_manifest(dir, mapping.descriptor(), m, n, &report, opts.block_size)?;
+        Ok((dataset, report))
+    }
+
+    fn write_manifest(
+        dir: &Path,
+        mapping: MappingDesc,
+        m: u64,
+        n: u64,
+        report: &StoreReport,
+        block_size: u64,
+    ) -> Result<Dataset, DatasetError> {
+        let nprocs = report.per_rank_nnz.len();
+        let sizes = stored_file_sizes(dir, nprocs)?;
+        let files: Vec<StoredFile> = report
+            .per_rank_nnz
+            .iter()
+            .zip(sizes)
+            .map(|(&nnz, bytes)| StoredFile { bytes, nnz })
+            .collect();
+        let manifest = DatasetManifest {
+            nprocs,
+            mapping,
+            m,
+            n,
+            z: report.total_nnz(),
+            block_size,
+            files,
+        };
+        let text = format!("{}\n", manifest.to_json());
+        std::fs::write(dir.join(MANIFEST_FILE), text)?;
+        Ok(Dataset {
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    /// Open a dataset directory: parse `dataset.json`, or — for legacy
+    /// directories written before the manifest existed — reconstruct what
+    /// can be reconstructed by scanning `matrix-<k>.h5spm` headers (the
+    /// mapping then stays opaque, disabling only the same-config
+    /// fast-path *detection*, not any load path).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Dataset, DatasetError> {
+        let dir = dir.as_ref();
+        let path = dir.join(MANIFEST_FILE);
+        match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                let json = Json::parse(&text).map_err(|reason| DatasetError::BadManifest {
+                    path: path.clone(),
+                    reason,
+                })?;
+                let manifest = DatasetManifest::from_json(&json).map_err(|reason| {
+                    DatasetError::BadManifest {
+                        path: path.clone(),
+                        reason,
+                    }
+                })?;
+                Ok(Dataset {
+                    dir: dir.to_path_buf(),
+                    manifest,
+                })
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Self::open_legacy(dir),
+            Err(e) => Err(DatasetError::BadManifest {
+                path,
+                reason: format!("unreadable: {e}"),
+            }),
+        }
+    }
+
+    fn open_legacy(dir: &Path) -> Result<Dataset, DatasetError> {
+        let mut files = Vec::new();
+        let mut header = None;
+        loop {
+            let path = matrix_file_path(dir, files.len());
+            let md = match std::fs::metadata(&path) {
+                Ok(md) => md,
+                // A gap in the matrix-<k> sequence ends the scan; any
+                // other failure (e.g. EACCES) is an I/O problem on a file
+                // that *exists* and must not masquerade as end-of-data.
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => break,
+                Err(source) => return Err(DatasetError::MissingFile { path, source }),
+            };
+            let reader = crate::h5::H5Reader::open(&path)
+                .map_err(|e| DatasetError::Internal(Box::new(e)))?;
+            let hdr = crate::abhsf::load::read_header(&reader)
+                .map_err(|e| DatasetError::Internal(Box::new(e)))?;
+            files.push(StoredFile {
+                bytes: md.len(),
+                nnz: hdr.info.z_local,
+            });
+            header.get_or_insert(hdr);
+        }
+        let Some(hdr) = header else {
+            return Err(DatasetError::NotADataset {
+                dir: dir.to_path_buf(),
+                reason: format!("no {MANIFEST_FILE} and no matrix-*.h5spm files"),
+            });
+        };
+        // The scan stops at the first gap in the matrix-<k> sequence, so a
+        // partially deleted directory would otherwise open as a smaller
+        // "valid" dataset and silently load a subset of the matrix. The
+        // headers expose the inconsistency for free: per-file local
+        // nonzero counts must add up to the recorded global count.
+        let local_sum: u64 = files.iter().map(|f| f.nnz).sum();
+        if local_sum != hdr.info.z {
+            return Err(DatasetError::NotADataset {
+                dir: dir.to_path_buf(),
+                reason: format!(
+                    "incomplete legacy dataset: {} files hold {local_sum} nonzeros \
+                     but headers record a global count of {}",
+                    files.len(),
+                    hdr.info.z
+                ),
+            });
+        }
+        let nprocs = files.len();
+        Ok(Dataset {
+            dir: dir.to_path_buf(),
+            manifest: DatasetManifest {
+                nprocs,
+                mapping: MappingDesc::Opaque {
+                    label: "legacy (stored without a manifest)".to_string(),
+                    p: nprocs,
+                },
+                m: hdr.info.m,
+                n: hdr.info.n,
+                z: hdr.info.z,
+                block_size: hdr.block_size,
+                files,
+            },
+        })
+    }
+
+    /// Begin planning a load of this dataset.
+    pub fn load(&self) -> LoadPlan<'_> {
+        LoadPlan {
+            dataset: self,
+            nprocs: None,
+            mapping: None,
+            format: InMemFormat::Csr,
+            strategy: Strategy::Auto,
+            model: FsModel::anselm_lustre(),
+        }
+    }
+
+    /// Dataset directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The manifest (discovered storing configuration).
+    pub fn manifest(&self) -> &DatasetManifest {
+        &self.manifest
+    }
+
+    /// Storing process count (= stored file count).
+    pub fn nprocs(&self) -> usize {
+        self.manifest.nprocs
+    }
+
+    /// Descriptor of the storing mapping.
+    pub fn mapping(&self) -> &MappingDesc {
+        &self.manifest.mapping
+    }
+
+    /// Global shape `(m, n)`.
+    pub fn dims(&self) -> (u64, u64) {
+        (self.manifest.m, self.manifest.n)
+    }
+
+    /// Global nonzero count.
+    pub fn nnz(&self) -> u64 {
+        self.manifest.z
+    }
+
+    /// ABHSF block size `s`.
+    pub fn block_size(&self) -> u64 {
+        self.manifest.block_size
+    }
+
+    /// Verify every stored file named by the manifest is present and
+    /// readable (typed [`DatasetError::MissingFile`] otherwise).
+    pub fn verify_files(&self) -> Result<(), DatasetError> {
+        stored_file_sizes(&self.dir, self.manifest.nprocs).map(|_| ())
+    }
+
+    /// Predicted makespan of the same-configuration fast path (rank `k`
+    /// reads only `matrix-<k>.h5spm`), from the manifest's file sizes.
+    pub fn predict_same_config(&self, model: &FsModel) -> f64 {
+        let profiles: Vec<RankLoadProfile> = self
+            .manifest
+            .files
+            .iter()
+            .map(|f| RankLoadProfile {
+                opens: 1,
+                ops: ops_estimate(f.bytes),
+                bytes: f.bytes,
+            })
+            .collect();
+        model
+            .simulate(&profiles, self.manifest.total_bytes(), IoStrategy::Independent)
+            .makespan_s
+    }
+
+    /// Cost-model candidates for a different-configuration load with `p`
+    /// processes: strategy → predicted makespan. I/O footprints come from
+    /// the manifest's per-file byte sizes; operation counts are estimated
+    /// at container chunk granularity (~512 KiB per read op plus a fixed
+    /// per-dataset floor), which is coarse but strategy selection only
+    /// needs the §4 *orderings*, which are byte-volume driven.
+    pub fn predict(&self, p: usize, model: &FsModel) -> Vec<(Strategy, f64)> {
+        let ops_of = ops_estimate;
+        let files = &self.manifest.files;
+        let total_bytes = self.manifest.total_bytes();
+        let total_ops: u64 = files.iter().map(|f| ops_of(f.bytes)).sum();
+        let unique = total_bytes;
+        let mut out = Vec::new();
+
+        let all_read_all: Vec<RankLoadProfile> = (0..p)
+            .map(|_| RankLoadProfile {
+                opens: files.len() as u64,
+                ops: total_ops,
+                bytes: total_bytes,
+            })
+            .collect();
+        let indep = model
+            .simulate(&all_read_all, unique, IoStrategy::Independent)
+            .makespan_s;
+        let coll = model
+            .simulate(&all_read_all, unique, IoStrategy::Collective)
+            .makespan_s;
+
+        // Exchange: each file is read once (round-robin over loaders); the
+        // decoded elements that change owners cross the fabric once more
+        // as (i, j, v) triplets (24 bytes each).
+        let exchange_profiles: Vec<RankLoadProfile> = (0..p)
+            .map(|r| {
+                let mut prof = RankLoadProfile::default();
+                let mut k = r;
+                while k < files.len() {
+                    prof.opens += 1;
+                    prof.ops += ops_of(files[k].bytes);
+                    prof.bytes += files[k].bytes;
+                    k += p;
+                }
+                prof
+            })
+            .collect();
+        let moved_bytes = self.manifest.z as f64 * 24.0 * (p.saturating_sub(1) as f64 / p as f64);
+        let exchange_extra = moved_bytes / model.net_agg_bps.min(model.client_bps * p as f64);
+        let exch = model
+            .simulate(&exchange_profiles, unique, IoStrategy::Independent)
+            .makespan_s
+            + exchange_extra;
+
+        out.push((Strategy::Independent, indep));
+        out.push((Strategy::Collective, coll));
+        out.push((Strategy::Exchange, exch));
+        out
+    }
+}
+
+/// Read-operation estimate for one container: chunk-granular payload
+/// reads plus a fixed floor for the directory and small datasets.
+fn ops_estimate(bytes: u64) -> u64 {
+    20 + bytes / (512 * 1024)
+}
+
+/// On-disk sizes of `matrix-<k>.h5spm` for `k` in `0..count`, with a
+/// typed [`DatasetError::MissingFile`] for any absent or unreadable
+/// container. Shared by manifest writing, plan validation and the
+/// deprecated shims' unique-byte accounting.
+pub(crate) fn stored_file_sizes(dir: &Path, count: usize) -> Result<Vec<u64>, DatasetError> {
+    (0..count)
+        .map(|k| {
+            let path = matrix_file_path(dir, k);
+            std::fs::metadata(&path)
+                .map(|md| md.len())
+                .map_err(|source| DatasetError::MissingFile { path, source })
+        })
+        .collect()
+}
+
+/// Builder for one load of a [`Dataset`]: requested process count,
+/// target mapping, in-memory format and strategy, validated as a whole
+/// by [`LoadPlan::run`].
+#[derive(Clone)]
+pub struct LoadPlan<'d> {
+    dataset: &'d Dataset,
+    nprocs: Option<usize>,
+    mapping: Option<Arc<dyn ProcessMapping>>,
+    format: InMemFormat,
+    strategy: Strategy,
+    model: FsModel,
+}
+
+impl<'d> LoadPlan<'d> {
+    /// Request a loading process count (defaults to the cluster's size
+    /// at [`LoadPlan::run`]; stating it here adds an early consistency
+    /// check against the cluster).
+    pub fn nprocs(mut self, p: usize) -> Self {
+        self.nprocs = Some(p);
+        self
+    }
+
+    /// Target mapping `M(i, j)` for the loaded distribution. Optional
+    /// when loading with the stored process count: the stored mapping is
+    /// reused (the same-configuration case).
+    pub fn mapping(mut self, mapping: &Arc<dyn ProcessMapping>) -> Self {
+        self.mapping = Some(Arc::clone(mapping));
+        self
+    }
+
+    /// Requested in-memory format (default CSR).
+    pub fn format(mut self, format: InMemFormat) -> Self {
+        self.format = format;
+        self
+    }
+
+    /// Loading strategy (default [`Strategy::Auto`]).
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// File-system model used for `Auto` predictions (default: the
+    /// paper-calibrated Anselm/Lustre constants).
+    pub fn fs_model(mut self, model: FsModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Validate the plan against the cluster and the manifest, pick the
+    /// strategy (for [`Strategy::Auto`]), and execute the load.
+    pub fn run(&self, cluster: &Cluster) -> Result<(Vec<LoadedMatrix>, LoadReport), DatasetError> {
+        let p = self.nprocs.unwrap_or_else(|| cluster.nprocs());
+        if cluster.nprocs() != p {
+            return Err(DatasetError::ClusterMismatch {
+                cluster: cluster.nprocs(),
+                required: p,
+                what: "the plan's loading process count",
+            });
+        }
+        if let Some(mapping) = &self.mapping {
+            if mapping.nprocs() != p {
+                return Err(DatasetError::MappingMismatch {
+                    mapping: mapping.nprocs(),
+                    nprocs: p,
+                });
+            }
+        }
+        let stored = self.dataset.nprocs();
+        // One metadata pass doubles as the missing-file check and the
+        // load-time `unique_bytes` measurement (files may have changed
+        // since the manifest was written; the disk is the truth here).
+        let unique: u64 = stored_file_sizes(&self.dataset.dir, stored)?
+            .iter()
+            .sum();
+        // Same configuration ⇔ same process count and provably the same
+        // mapping (no mapping requested means "as stored").
+        let same_config = p == stored
+            && match &self.mapping {
+                None => true,
+                Some(mapping) => mapping
+                    .descriptor()
+                    .same_mapping(self.dataset.mapping()),
+            };
+
+        match self.strategy {
+            Strategy::Auto => {
+                let predicted = self.dataset.predict(p, &self.model);
+                let mut labeled: Vec<(String, f64)> = Vec::with_capacity(predicted.len() + 1);
+                if same_config {
+                    labeled.push((
+                        "same-config".to_string(),
+                        self.dataset.predict_same_config(&self.model),
+                    ));
+                }
+                labeled.extend(
+                    predicted
+                        .iter()
+                        .map(|(s, t)| (s.label().to_string(), *t)),
+                );
+                let (mats, mut report, chosen_label) = if same_config {
+                    // The fast path is both predicted-fastest and exact:
+                    // prefer it unconditionally when eligible (paper §4).
+                    let out =
+                        same_config_impl(cluster, &self.dataset.dir, self.format, unique)?;
+                    (out.0, out.1, "same-config".to_string())
+                } else {
+                    let (chosen, _) = predicted
+                        .iter()
+                        .copied()
+                        .min_by(|a, b| a.1.total_cmp(&b.1))
+                        .expect("at least one candidate");
+                    let out = self.run_explicit(cluster, p, chosen, unique)?;
+                    (out.0, out.1, chosen.label().to_string())
+                };
+                report.auto = Some(AutoDecision {
+                    same_config,
+                    predicted: labeled,
+                    chosen: chosen_label,
+                });
+                Ok((mats, report))
+            }
+            explicit => self.run_explicit(cluster, p, explicit, unique),
+        }
+    }
+
+    /// Execute a concrete (non-auto) strategy. `unique` is the freshly
+    /// measured on-disk byte total from [`LoadPlan::run`].
+    fn run_explicit(
+        &self,
+        cluster: &Cluster,
+        p: usize,
+        strategy: Strategy,
+        unique: u64,
+    ) -> Result<(Vec<LoadedMatrix>, LoadReport), DatasetError> {
+        let mapping = self.resolve_mapping(p)?;
+        let stored_files = self.dataset.nprocs();
+        let out = match strategy {
+            Strategy::Auto => unreachable!("Auto is resolved in run()"),
+            Strategy::Independent | Strategy::Collective => different_config_impl(
+                cluster,
+                &self.dataset.dir,
+                &mapping,
+                &DiffLoadOptions {
+                    stored_files,
+                    strategy: if strategy == Strategy::Collective {
+                        IoStrategy::Collective
+                    } else {
+                        IoStrategy::Independent
+                    },
+                    format: self.format,
+                },
+                unique,
+            )?,
+            Strategy::Exchange => exchange_impl(
+                cluster,
+                &self.dataset.dir,
+                &mapping,
+                stored_files,
+                self.format,
+                unique,
+            )?,
+        };
+        Ok(out)
+    }
+
+    /// The target mapping: the explicit one, or the stored mapping
+    /// rebuilt from its descriptor when loading with the stored process
+    /// count.
+    fn resolve_mapping(&self, p: usize) -> Result<Arc<dyn ProcessMapping>, DatasetError> {
+        if let Some(mapping) = &self.mapping {
+            return Ok(Arc::clone(mapping));
+        }
+        let stored = self.dataset.nprocs();
+        if p != stored {
+            return Err(DatasetError::MappingRequired { nprocs: p, stored });
+        }
+        self.dataset.mapping().build().ok_or_else(|| {
+            DatasetError::MappingNotReconstructible {
+                label: match self.dataset.mapping() {
+                    MappingDesc::Opaque { label, .. } => label.clone(),
+                    other => other.kind().to_string(),
+                },
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parses_and_prints() {
+        for (text, want) in [
+            ("auto", Strategy::Auto),
+            ("independent", Strategy::Independent),
+            ("Collective", Strategy::Collective),
+            (" exchange ", Strategy::Exchange),
+        ] {
+            assert_eq!(text.parse::<Strategy>().unwrap(), want, "{text}");
+        }
+        assert_eq!(Strategy::Exchange.to_string(), "exchange");
+        assert!(matches!(
+            "mpiio".parse::<Strategy>(),
+            Err(DatasetError::UnknownStrategy(_))
+        ));
+        assert_eq!(Strategy::default(), Strategy::Auto);
+    }
+
+    fn sample_manifest() -> DatasetManifest {
+        DatasetManifest {
+            nprocs: 3,
+            mapping: MappingDesc::Rowwise {
+                m: 30,
+                n: 30,
+                starts: vec![0, 10, 20, 30],
+            },
+            m: 30,
+            n: 30,
+            z: 120,
+            block_size: 8,
+            files: vec![
+                StoredFile { bytes: 1000, nnz: 40 },
+                StoredFile { bytes: 1200, nnz: 50 },
+                StoredFile { bytes: 800, nnz: 30 },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let m = sample_manifest();
+        let text = m.to_json().to_string();
+        let back = DatasetManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.total_bytes(), 3000);
+    }
+
+    #[test]
+    fn manifest_rejects_inconsistencies() {
+        let m = sample_manifest();
+        // files/nprocs disagreement.
+        let mut bad = m.clone();
+        bad.files.pop();
+        let text = bad.to_json().to_string();
+        assert!(DatasetManifest::from_json(&Json::parse(&text).unwrap()).is_err());
+        // future version.
+        let text = m
+            .to_json()
+            .to_string()
+            .replace("\"version\":1", "\"version\":99");
+        assert!(DatasetManifest::from_json(&Json::parse(&text).unwrap()).is_err());
+        // wrong format tag.
+        let text = m
+            .to_json()
+            .to_string()
+            .replace("abhsf-dataset", "parquet");
+        assert!(DatasetManifest::from_json(&Json::parse(&text).unwrap()).is_err());
+        // mapping descriptor P disagrees with nprocs.
+        let mut bad = m.clone();
+        bad.mapping = MappingDesc::Rowwise {
+            m: 30,
+            n: 30,
+            starts: vec![0, 15, 30],
+        };
+        let text = bad.to_json().to_string();
+        assert!(DatasetManifest::from_json(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn predictions_follow_paper_orderings() {
+        // Figure-1 scale: 60 stored files of 4 GiB each.
+        let files: Vec<StoredFile> = (0..60)
+            .map(|_| StoredFile {
+                bytes: 4 << 30,
+                nnz: 200_000_000,
+            })
+            .collect();
+        let ds = Dataset {
+            dir: PathBuf::from("/nonexistent"),
+            manifest: DatasetManifest {
+                nprocs: 60,
+                mapping: MappingDesc::Rowwise {
+                    m: 1 << 22,
+                    n: 1 << 22,
+                    starts: (0..=60).map(|k| k * ((1u64 << 22) / 60)).collect(),
+                },
+                m: 1 << 22,
+                n: 1 << 22,
+                z: 60 * 200_000_000,
+                block_size: 64,
+                files,
+            },
+        };
+        let model = FsModel::anselm_lustre();
+        let t_same = ds.predict_same_config(&model);
+        for p in [15usize, 30, 60] {
+            let diff = ds.predict(p, &model);
+            let find = |s: Strategy| {
+                diff.iter()
+                    .find(|(c, _)| *c == s)
+                    .map(|(_, t)| *t)
+                    .unwrap()
+            };
+            let (ti, tc) = (find(Strategy::Independent), find(Strategy::Collective));
+            assert!(t_same < ti, "P={p}: same {t_same} !< indep {ti}");
+            assert!(ti < tc, "P={p}: indep {ti} !< coll {tc}");
+            // Exchange reads each byte once: cheaper I/O than all-read-all.
+            let te = find(Strategy::Exchange);
+            assert!(te < ti, "P={p}: exchange {te} !< indep {ti}");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Typed errors for the [`crate::coordinator::Dataset`] /
+//! [`crate::coordinator::LoadPlan`] API.
+//!
+//! These replace the `assert_eq!` panics and stringly `anyhow!` errors of
+//! the original free-function API: misconfigurations (wrong cluster size,
+//! mismatched mapping, missing files) are recoverable caller mistakes and
+//! surface as matchable variants instead of aborting worker threads.
+
+use std::path::PathBuf;
+
+/// Errors raised by dataset storing, opening, planning and loading.
+#[derive(Debug, thiserror::Error)]
+pub enum DatasetError {
+    /// The directory holds neither a `dataset.json` manifest nor any
+    /// `matrix-<k>.h5spm` files.
+    #[error("no ABHSF dataset in {dir}: {reason}")]
+    NotADataset {
+        /// Directory probed.
+        dir: PathBuf,
+        /// What was missing.
+        reason: String,
+    },
+
+    /// `dataset.json` exists but cannot be read, parsed, or is
+    /// self-inconsistent.
+    #[error("corrupt dataset manifest {path}: {reason}")]
+    BadManifest {
+        /// Manifest path.
+        path: PathBuf,
+        /// Parse/validation failure.
+        reason: String,
+    },
+
+    /// A stored file named by the manifest is missing or unreadable.
+    /// (Previously this was silently treated as a zero-byte file when
+    /// accounting `unique_bytes`.)
+    #[error("stored file {path} is missing or unreadable: {source}")]
+    MissingFile {
+        /// The absent file.
+        path: PathBuf,
+        /// Underlying filesystem error.
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// The cluster passed to `LoadPlan::run` / `Dataset::store` has a
+    /// different worker count than the plan requires.
+    #[error("cluster has {cluster} workers but {what} requires {required}")]
+    ClusterMismatch {
+        /// Workers in the supplied cluster.
+        cluster: usize,
+        /// Workers the plan/mapping requires.
+        required: usize,
+        /// Which constraint mismatched (for the message).
+        what: &'static str,
+    },
+
+    /// The supplied mapping's process count disagrees with the plan's.
+    #[error("mapping declares {mapping} processes but the plan loads with {nprocs}")]
+    MappingMismatch {
+        /// `mapping.nprocs()`.
+        mapping: usize,
+        /// The plan's loading process count.
+        nprocs: usize,
+    },
+
+    /// Loading with a different process count than stored requires an
+    /// explicit target mapping.
+    #[error(
+        "loading with {nprocs} processes differs from the stored {stored} \
+         and no target mapping was given; supply LoadPlan::mapping(...)"
+    )]
+    MappingRequired {
+        /// Requested loading process count.
+        nprocs: usize,
+        /// Stored process count.
+        stored: usize,
+    },
+
+    /// The stored mapping descriptor is opaque, so the requested implicit
+    /// reconstruction is impossible.
+    #[error(
+        "stored mapping {label:?} cannot be reconstructed from the manifest; \
+         supply LoadPlan::mapping(...)"
+    )]
+    MappingNotReconstructible {
+        /// The stored mapping's label.
+        label: String,
+    },
+
+    /// `store_parts` was given a different number of parts than workers.
+    #[error("{parts} parts supplied for {cluster} workers (need exactly one each)")]
+    PartsMismatch {
+        /// Parts supplied.
+        parts: usize,
+        /// Cluster workers.
+        cluster: usize,
+    },
+
+    /// Unparsable strategy name (CLI / `FromStr`).
+    #[error("unknown strategy {0:?} (expected auto|independent|collective|exchange)")]
+    UnknownStrategy(String),
+
+    /// Unparsable in-memory format name (CLI / `FromStr`).
+    #[error("unknown in-memory format {0:?} (expected csr|coo)")]
+    UnknownFormat(String),
+
+    /// Failure inside the parallel store/load machinery (container I/O,
+    /// decode errors, worker failures).
+    #[error("load/store failed: {0}")]
+    Internal(#[source] Box<dyn std::error::Error + Send + Sync>),
+}
+
+impl From<anyhow::Error> for DatasetError {
+    fn from(e: anyhow::Error) -> Self {
+        // Keep already-typed dataset errors intact when they bubble back
+        // out of anyhow-typed internals.
+        match e.downcast::<DatasetError>() {
+            Ok(d) => d,
+            Err(e) => DatasetError::Internal(e.into()),
+        }
+    }
+}
+
+impl From<std::io::Error> for DatasetError {
+    fn from(e: std::io::Error) -> Self {
+        DatasetError::Internal(Box::new(e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anyhow_roundtrip_preserves_typed_variants() {
+        let typed = DatasetError::MissingFile {
+            path: PathBuf::from("/x/matrix-3.h5spm"),
+            source: std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        };
+        let through: anyhow::Error = typed.into();
+        let back: DatasetError = through.into();
+        assert!(matches!(back, DatasetError::MissingFile { .. }), "{back}");
+    }
+
+    #[test]
+    fn messages_name_the_ingredients() {
+        let e = DatasetError::ClusterMismatch {
+            cluster: 3,
+            required: 5,
+            what: "the stored configuration",
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains('3') && msg.contains('5'), "{msg}");
+
+        let e = DatasetError::MappingRequired {
+            nprocs: 7,
+            stored: 4,
+        };
+        assert!(format!("{e}").contains("LoadPlan::mapping"));
+    }
+}

@@ -1,18 +1,21 @@
 //! Parallel loading orchestration — the paper's §3 in executable form.
 //!
-//! Three scenarios:
+//! Three scenarios, all reached through
+//! [`crate::coordinator::LoadPlan::run`] (the deprecated free functions
+//! [`load_same_config`] / [`load_different_config`] / [`load_exchange`]
+//! remain as thin shims for one release):
 //!
-//! * [`load_same_config`] — the storing and loading configurations match:
+//! * same-configuration — the storing and loading configurations match:
 //!   rank `k` streams its own `matrix-<k>.h5spm` through Algorithm 1.
-//! * [`load_different_config`] — the general case: *all* ranks read *all*
+//! * different-configuration — the general case: *all* ranks read *all*
 //!   files and keep only elements with `M(i, j) = k` under the new
 //!   mapping; with [`IoStrategy::Collective`], ranks advance file by file
 //!   in lockstep (each read is a synchronizing collective), with
 //!   [`IoStrategy::Independent`] each rank streams at its own pace.
-//! * [`load_exchange`] — the paper's future-work direction, implemented
-//!   as an ablation: stored files are assigned round-robin to loading
-//!   ranks, each file is read *once*, and decoded elements are routed to
-//!   their new owners over the bounded (backpressured) element channels.
+//! * exchange — the paper's future-work direction, implemented as an
+//!   ablation: stored files are assigned round-robin to loading ranks,
+//!   each file is read *once*, and decoded elements are routed to their
+//!   new owners over the bounded (backpressured) element channels.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -20,6 +23,7 @@ use std::time::Instant;
 
 use crate::abhsf::{load_coo, load_csr, matrix_file_path, visit_elements};
 use crate::coordinator::cluster::{Cluster, Msg};
+use crate::coordinator::error::DatasetError;
 use crate::coordinator::metrics::LoadReport;
 use crate::coordinator::InMemFormat;
 use crate::formats::element::tight_window;
@@ -91,25 +95,41 @@ pub struct DiffLoadOptions {
 }
 
 /// Sum of on-disk sizes of the stored files (distinct bytes; every re-read
-/// hits server caches in the cost model).
-fn unique_bytes(dir: &Path, stored_files: usize) -> u64 {
-    (0..stored_files)
-        .map(|k| {
-            std::fs::metadata(matrix_file_path(dir, k))
-                .map(|m| m.len())
-                .unwrap_or(0)
-        })
-        .sum()
+/// hits server caches in the cost model). A missing or unreadable file is
+/// a hard, typed error — it used to be silently counted as 0 bytes, which
+/// made every downstream `unique_bytes` figure (and the cost-model
+/// simulations built on it) quietly wrong.
+fn unique_bytes(dir: &Path, stored_files: usize) -> Result<u64, DatasetError> {
+    Ok(crate::coordinator::dataset::stored_file_sizes(dir, stored_files)?
+        .iter()
+        .sum())
 }
 
 type RankLoad = anyhow::Result<(LoadedMatrix, IoStats, f64)>;
 
 /// Same-configuration load: rank `k` runs Algorithm 1 on its own file.
 /// The cluster size must equal the storing process count.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Dataset::open(dir)?.load().format(..).run(&cluster)"
+)]
 pub fn load_same_config(
     cluster: &Cluster,
     dir: &Path,
     format: InMemFormat,
+) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
+    let unique = unique_bytes(dir, cluster.nprocs())?;
+    same_config_impl(cluster, dir, format, unique)
+}
+
+/// `unique` is the sum of the stored files' on-disk sizes — from the
+/// dataset manifest (planned loads) or [`unique_bytes`] (shims); passing
+/// it in keeps metadata round-trips out of the timed region.
+pub(crate) fn same_config_impl(
+    cluster: &Cluster,
+    dir: &Path,
+    format: InMemFormat,
+    unique: u64,
 ) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
     let dirb = dir.to_path_buf();
     let t0 = Instant::now();
@@ -123,7 +143,6 @@ pub fn load_same_config(
         };
         Ok((loaded, reader.stats(), t.elapsed().as_secs_f64()))
     });
-    let unique = unique_bytes(dir, cluster.nprocs());
     assemble(
         "same-config",
         cluster.nprocs(),
@@ -136,17 +155,35 @@ pub fn load_same_config(
 
 /// Different-configuration load (paper §3): every rank reads every stored
 /// file and keeps the elements the new `mapping` assigns to it.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Dataset::open(dir)?.load().mapping(..).strategy(..).run(&cluster)"
+)]
 pub fn load_different_config(
     cluster: &Cluster,
     dir: &Path,
     mapping: &Arc<dyn ProcessMapping>,
     opts: &DiffLoadOptions,
 ) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
-    assert_eq!(
-        cluster.nprocs(),
-        mapping.nprocs(),
-        "cluster size != new mapping process count"
-    );
+    let unique = unique_bytes(dir, opts.stored_files)?;
+    different_config_impl(cluster, dir, mapping, opts, unique)
+}
+
+/// See [`same_config_impl`] for the `unique` contract.
+pub(crate) fn different_config_impl(
+    cluster: &Cluster,
+    dir: &Path,
+    mapping: &Arc<dyn ProcessMapping>,
+    opts: &DiffLoadOptions,
+    unique: u64,
+) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
+    if cluster.nprocs() != mapping.nprocs() {
+        return Err(DatasetError::MappingMismatch {
+            mapping: mapping.nprocs(),
+            nprocs: cluster.nprocs(),
+        }
+        .into());
+    }
     let dirb = dir.to_path_buf();
     let mapping = Arc::clone(mapping);
     let opts_c = opts.clone();
@@ -189,7 +226,6 @@ pub fn load_different_config(
         );
         Ok((loaded, io, t.elapsed().as_secs_f64()))
     });
-    let unique = unique_bytes(dir, opts.stored_files);
     assemble(
         &format!("diff-config/{}", opts.strategy.label()),
         cluster.nprocs(),
@@ -203,6 +239,10 @@ pub fn load_different_config(
 /// Exchange-based different-configuration load (ablation / future-work):
 /// stored files are read once each (round-robin over loading ranks) and
 /// elements are routed to their new owners through the bounded channels.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Dataset::open(dir)?.load().mapping(..).strategy(Strategy::Exchange).run(&cluster)"
+)]
 pub fn load_exchange(
     cluster: &Cluster,
     dir: &Path,
@@ -210,7 +250,26 @@ pub fn load_exchange(
     stored_files: usize,
     format: InMemFormat,
 ) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
-    assert_eq!(cluster.nprocs(), mapping.nprocs());
+    let unique = unique_bytes(dir, stored_files)?;
+    exchange_impl(cluster, dir, mapping, stored_files, format, unique)
+}
+
+/// See [`same_config_impl`] for the `unique` contract.
+pub(crate) fn exchange_impl(
+    cluster: &Cluster,
+    dir: &Path,
+    mapping: &Arc<dyn ProcessMapping>,
+    stored_files: usize,
+    format: InMemFormat,
+    unique: u64,
+) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
+    if cluster.nprocs() != mapping.nprocs() {
+        return Err(DatasetError::MappingMismatch {
+            mapping: mapping.nprocs(),
+            nprocs: cluster.nprocs(),
+        }
+        .into());
+    }
     const BATCH: usize = 4096;
     let dirb = dir.to_path_buf();
     let mapping = Arc::clone(mapping);
@@ -292,7 +351,6 @@ pub fn load_exchange(
             .load(std::sync::atomic::Ordering::Relaxed);
         Ok((loaded, io, t.elapsed().as_secs_f64(), blocked))
     });
-    let unique = unique_bytes(dir, stored_files);
     let mut plain: Vec<RankLoad> = Vec::with_capacity(results.len());
     let mut blocked = Vec::with_capacity(results.len());
     for r in results {
@@ -391,6 +449,7 @@ fn assemble(
         unique_bytes,
         send_blocked_ns: vec![0; nprocs],
         strategy,
+        auto: None,
     };
     Ok((matrices, report))
 }
@@ -400,7 +459,8 @@ mod tests {
     use super::*;
     use std::path::PathBuf;
 
-    use crate::coordinator::storer::{store_distributed, StoreOptions};
+    use crate::coordinator::dataset::{Dataset, Strategy};
+    use crate::coordinator::storer::StoreOptions;
     use crate::gen::{KroneckerGen, SeedMatrix};
     use crate::mapping::{Block2d, Colwise, Rowwise};
     use crate::spmv::{max_abs_diff, spmv_distributed_csr};
@@ -420,7 +480,7 @@ mod tests {
             Arc::new(Rowwise::regular(n, n, p_store));
         let cluster = Cluster::new(p_store, 64);
         let dir = tmpdir(name);
-        store_distributed(
+        Dataset::store(
             &cluster,
             &gen,
             &mapping,
@@ -453,7 +513,12 @@ mod tests {
         let p = 4;
         let (dir, gen, n) = setup("same", p);
         let cluster = Cluster::new(p, 64);
-        let (mats, report) = load_same_config(&cluster, &dir, InMemFormat::Csr).unwrap();
+        let dataset = Dataset::open(&dir).unwrap();
+        let (mats, report) = dataset
+            .load()
+            .format(InMemFormat::Csr)
+            .run(&cluster)
+            .unwrap();
         assert_eq!(report.total_nnz(), gen.nnz());
         let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
         let x = test_vector(n);
@@ -470,21 +535,18 @@ mod tests {
     fn diff_config_colwise_independent() {
         let p_store = 4;
         let (dir, gen, n) = setup("diff-ind", p_store);
+        let dataset = Dataset::open(&dir).unwrap();
         for p_load in [2usize, 3, 6] {
             let cluster = Cluster::new(p_load, 64);
             let mapping: Arc<dyn ProcessMapping> =
                 Arc::new(Colwise::regular(n, n, p_load));
-            let (mats, report) = load_different_config(
-                &cluster,
-                &dir,
-                &mapping,
-                &DiffLoadOptions {
-                    stored_files: p_store,
-                    strategy: IoStrategy::Independent,
-                    format: InMemFormat::Csr,
-                },
-            )
-            .unwrap();
+            let (mats, report) = dataset
+                .load()
+                .mapping(&mapping)
+                .strategy(Strategy::Independent)
+                .format(InMemFormat::Csr)
+                .run(&cluster)
+                .unwrap();
             assert_eq!(report.total_nnz(), gen.nnz(), "P={p_load}");
             // Every rank reads all files.
             for io in &report.per_rank_io {
@@ -504,17 +566,14 @@ mod tests {
         let p_load = 4;
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
         let cluster = Cluster::new(p_load, 64);
-        let (mats, report) = load_different_config(
-            &cluster,
-            &dir,
-            &mapping,
-            &DiffLoadOptions {
-                stored_files: p_store,
-                strategy: IoStrategy::Collective,
-                format: InMemFormat::Coo,
-            },
-        )
-        .unwrap();
+        let (mats, report) = Dataset::open(&dir)
+            .unwrap()
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Collective)
+            .format(InMemFormat::Coo)
+            .run(&cluster)
+            .unwrap();
         assert_eq!(report.total_nnz(), gen.nnz());
         assert_eq!(report.strategy, IoStrategy::Collective);
         for m in &mats {
@@ -528,17 +587,14 @@ mod tests {
         let (dir, gen, n) = setup("diff-2d", p_store);
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Block2d::regular(n, n, 2, 3));
         let cluster = Cluster::new(6, 64);
-        let (mats, report) = load_different_config(
-            &cluster,
-            &dir,
-            &mapping,
-            &DiffLoadOptions {
-                stored_files: p_store,
-                strategy: IoStrategy::Independent,
-                format: InMemFormat::Csr,
-            },
-        )
-        .unwrap();
+        let (mats, report) = Dataset::open(&dir)
+            .unwrap()
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Independent)
+            .format(InMemFormat::Csr)
+            .run(&cluster)
+            .unwrap();
         assert_eq!(report.total_nnz(), gen.nnz());
         let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
         let x = test_vector(n);
@@ -553,8 +609,14 @@ mod tests {
         let p_load = 4;
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
         let cluster = Cluster::new(p_load, 8);
-        let (mats, report) =
-            load_exchange(&cluster, &dir, &mapping, p_store, InMemFormat::Csr).unwrap();
+        let (mats, report) = Dataset::open(&dir)
+            .unwrap()
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Exchange)
+            .format(InMemFormat::Csr)
+            .run(&cluster)
+            .unwrap();
         assert_eq!(report.total_nnz(), gen.nnz());
         // Each file was opened exactly once across all ranks.
         let opens: u64 = report.per_rank_io.iter().map(|s| s.opens).sum();
@@ -572,8 +634,14 @@ mod tests {
         let p_load = 2;
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p_load));
         let cluster = Cluster::new(p_load, 8);
-        let (mats, report) =
-            load_exchange(&cluster, &dir, &mapping, p_store, InMemFormat::Coo).unwrap();
+        let (mats, report) = Dataset::open(&dir)
+            .unwrap()
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Exchange)
+            .format(InMemFormat::Coo)
+            .run(&cluster)
+            .unwrap();
         assert_eq!(report.total_nnz(), gen.nnz());
         for m in &mats {
             m.validate().unwrap();
@@ -586,22 +654,23 @@ mod tests {
         // moves P_load x unique bytes, same-config moves them once.
         let p_store = 3;
         let (dir, _gen, n) = setup("bytes", p_store);
+        let dataset = Dataset::open(&dir).unwrap();
         let same_cluster = Cluster::new(p_store, 64);
-        let (_, same) = load_same_config(&same_cluster, &dir, InMemFormat::Csr).unwrap();
+        let (_, same) = dataset
+            .load()
+            .format(InMemFormat::Csr)
+            .run(&same_cluster)
+            .unwrap();
         let p_load = 5;
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
         let cluster = Cluster::new(p_load, 64);
-        let (_, diff) = load_different_config(
-            &cluster,
-            &dir,
-            &mapping,
-            &DiffLoadOptions {
-                stored_files: p_store,
-                strategy: IoStrategy::Independent,
-                format: InMemFormat::Csr,
-            },
-        )
-        .unwrap();
+        let (_, diff) = dataset
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Independent)
+            .format(InMemFormat::Csr)
+            .run(&cluster)
+            .unwrap();
         assert_eq!(same.unique_bytes, diff.unique_bytes);
         // Same-config readers touch roughly the unique bytes (payload +
         // directory); diff-config touches ~P_load times as much.

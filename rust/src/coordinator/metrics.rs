@@ -29,6 +29,22 @@ impl StoreReport {
     }
 }
 
+/// How `Strategy::Auto` arrived at its choice: the per-candidate
+/// cost-model predictions and the winner. Attached to [`LoadReport`] by
+/// [`crate::coordinator::LoadPlan`] so experiments can audit the
+/// selection against the measured outcome.
+#[derive(Debug, Clone)]
+pub struct AutoDecision {
+    /// Whether the same-configuration fast path was eligible (stored and
+    /// requested configurations provably match).
+    pub same_config: bool,
+    /// Candidate strategies with their predicted makespans, s
+    /// (label → predicted seconds under the plan's [`FsModel`]).
+    pub predicted: Vec<(String, f64)>,
+    /// Label of the strategy actually executed.
+    pub chosen: String,
+}
+
 /// Outcome of a parallel load.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
@@ -50,6 +66,10 @@ pub struct LoadReport {
     pub send_blocked_ns: Vec<u64>,
     /// I/O strategy used.
     pub strategy: IoStrategy,
+    /// The `Strategy::Auto` decision record, when the load was planned
+    /// with auto-selection (`None` for explicitly chosen strategies and
+    /// for the deprecated free-function entry points).
+    pub auto: Option<AutoDecision>,
 }
 
 impl LoadReport {
@@ -107,6 +127,7 @@ mod tests {
             unique_bytes: 3000,
             send_blocked_ns: vec![0, 0],
             strategy: IoStrategy::Independent,
+            auto: None,
         }
     }
 

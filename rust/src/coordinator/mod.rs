@@ -7,6 +7,12 @@
 //! channels with bounded capacity (backpressure).
 //!
 //! On top of it:
+//! * [`dataset`] — **the public store/load API**: a [`Dataset`] handle
+//!   whose `dataset.json` manifest makes stored matrices self-describing
+//!   (stored process count, mapping descriptor, dims/nnz, block size,
+//!   per-file sizes are *discovered, never passed*), and a [`LoadPlan`]
+//!   builder with typed validation ([`DatasetError`]) and cost-model
+//!   strategy auto-selection ([`Strategy::Auto`]);
 //! * [`storer`] — parallel matrix storage: every rank builds its local
 //!   submatrix (from a generator or provided parts), converts it to ABHSF
 //!   on the fly and writes `matrix-<k>.h5spm` (single-file-per-process);
@@ -16,27 +22,77 @@
 //!   I/O), and the exchange-based extension (each rank reads its own file
 //!   and routes elements to their new owners — the paper's "future
 //!   research" direction);
-//! * [`metrics`] — per-rank I/O traces, wall times, and the bridge into
-//!   the [`crate::parfs`] cost model.
+//! * [`metrics`] — per-rank I/O traces, wall times, the
+//!   [`Strategy::Auto`] decision record, and the bridge into the
+//!   [`crate::parfs`] cost model.
+//!
+//! The pre-0.2 free functions (`load_same_config`,
+//! `load_different_config`, `load_exchange`, `store_distributed`,
+//! `store_parts`) remain as `#[deprecated]` shims for one release.
 
 pub mod cluster;
+pub mod dataset;
+pub mod error;
 pub mod loader;
 pub mod metrics;
 pub mod storer;
 
 pub use cluster::{Cluster, WorkerCtx};
-pub use loader::{
-    load_different_config, load_exchange, load_same_config, DiffLoadOptions, LoadedMatrix,
-};
-pub use metrics::{LoadReport, StoreReport};
+pub use dataset::{Dataset, DatasetManifest, LoadPlan, StoredFile, Strategy, MANIFEST_FILE};
+pub use error::DatasetError;
+pub use loader::{DiffLoadOptions, LoadedMatrix};
+#[allow(deprecated)]
+pub use loader::{load_different_config, load_exchange, load_same_config};
+pub use metrics::{AutoDecision, LoadReport, StoreReport};
+pub use storer::StoreOptions;
+#[allow(deprecated)]
 pub use storer::{store_distributed, store_parts};
 
 /// In-memory format requested for loaded submatrices (third leg of the
 /// paper's "configuration" triple).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum InMemFormat {
     /// Compressed sparse rows (Algorithm 1's native output).
+    #[default]
     Csr,
     /// Coordinate list.
     Coo,
+}
+
+impl InMemFormat {
+    /// Label for tables, reports and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            InMemFormat::Csr => "csr",
+            InMemFormat::Coo => "coo",
+        }
+    }
+}
+
+impl std::str::FromStr for InMemFormat {
+    type Err = DatasetError;
+
+    fn from_str(s: &str) -> Result<Self, DatasetError> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "csr" => InMemFormat::Csr,
+            "coo" => InMemFormat::Coo,
+            _ => return Err(DatasetError::UnknownFormat(s.to_string())),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_parses() {
+        assert_eq!("csr".parse::<InMemFormat>().unwrap(), InMemFormat::Csr);
+        assert_eq!(" COO ".parse::<InMemFormat>().unwrap(), InMemFormat::Coo);
+        assert!(matches!(
+            "dense".parse::<InMemFormat>(),
+            Err(DatasetError::UnknownFormat(_))
+        ));
+        assert_eq!(InMemFormat::default().label(), "csr");
+    }
 }

@@ -9,6 +9,7 @@ use std::time::Instant;
 use crate::abhsf::cost::CostModel;
 use crate::abhsf::{matrix_file_path, store::store_data_chunked, AbhsfData};
 use crate::coordinator::cluster::Cluster;
+use crate::coordinator::error::DatasetError;
 use crate::coordinator::metrics::StoreReport;
 use crate::formats::Coo;
 use crate::gen::KroneckerGen;
@@ -38,6 +39,10 @@ impl Default for StoreOptions {
 /// Store a generated matrix: every rank of `cluster` lazily generates its
 /// own portion under `mapping` (no rank ever holds the global matrix),
 /// converts it to ABHSF and writes its file into `dir`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Dataset::store(..), which also writes the dataset manifest"
+)]
 pub fn store_distributed(
     cluster: &Cluster,
     gen: &Arc<KroneckerGen>,
@@ -45,11 +50,23 @@ pub fn store_distributed(
     dir: &Path,
     opts: StoreOptions,
 ) -> anyhow::Result<StoreReport> {
-    assert_eq!(
-        cluster.nprocs(),
-        mapping.nprocs(),
-        "cluster size != mapping process count"
-    );
+    Ok(store_distributed_impl(cluster, gen, mapping, dir, opts)?)
+}
+
+pub(crate) fn store_distributed_impl(
+    cluster: &Cluster,
+    gen: &Arc<KroneckerGen>,
+    mapping: &Arc<dyn ProcessMapping>,
+    dir: &Path,
+    opts: StoreOptions,
+) -> Result<StoreReport, DatasetError> {
+    if cluster.nprocs() != mapping.nprocs() {
+        return Err(DatasetError::ClusterMismatch {
+            cluster: cluster.nprocs(),
+            required: mapping.nprocs(),
+            what: "the storage mapping",
+        });
+    }
     std::fs::create_dir_all(dir)?;
     let dir = dir.to_path_buf();
     let gen = Arc::clone(gen);
@@ -63,13 +80,31 @@ pub fn store_distributed(
 }
 
 /// Store pre-built local parts (one COO per rank).
+#[deprecated(
+    since = "0.2.0",
+    note = "use Dataset::store_parts(..), which also writes the dataset manifest"
+)]
 pub fn store_parts(
     cluster: &Cluster,
     parts: Vec<Coo>,
     dir: &Path,
     opts: StoreOptions,
 ) -> anyhow::Result<StoreReport> {
-    assert_eq!(cluster.nprocs(), parts.len(), "one part per rank required");
+    Ok(store_parts_impl(cluster, parts, dir, opts)?)
+}
+
+pub(crate) fn store_parts_impl(
+    cluster: &Cluster,
+    parts: Vec<Coo>,
+    dir: &Path,
+    opts: StoreOptions,
+) -> Result<StoreReport, DatasetError> {
+    if cluster.nprocs() != parts.len() {
+        return Err(DatasetError::PartsMismatch {
+            parts: parts.len(),
+            cluster: cluster.nprocs(),
+        });
+    }
     std::fs::create_dir_all(dir)?;
     let dir = dir.to_path_buf();
     let parts = Arc::new(parts);
@@ -90,12 +125,12 @@ fn store_local(coo: &Coo, dir: &Path, rank: usize, opts: &StoreOptions) -> RankS
     Ok((io, coo.nnz() as u64, data.payload_bytes()))
 }
 
-fn finish_report(results: Vec<RankStoreResult>, t0: Instant) -> anyhow::Result<StoreReport> {
+fn finish_report(results: Vec<RankStoreResult>, t0: Instant) -> Result<StoreReport, DatasetError> {
     let mut per_rank_io = Vec::new();
     let mut per_rank_nnz = Vec::new();
     let mut per_rank_bytes = Vec::new();
     for r in results {
-        let (io, nnz, bytes) = r?;
+        let (io, nnz, bytes) = r.map_err(DatasetError::from)?;
         per_rank_io.push(io);
         per_rank_nnz.push(nnz);
         per_rank_bytes.push(bytes);
@@ -111,6 +146,7 @@ fn finish_report(results: Vec<RankStoreResult>, t0: Instant) -> anyhow::Result<S
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::dataset::Dataset;
     use crate::gen::SeedMatrix;
     use crate::mapping::Rowwise;
 
@@ -129,7 +165,7 @@ mod tests {
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p));
         let cluster = Cluster::new(p, 64);
         let dir = tmpdir("dist");
-        let report = store_distributed(
+        let (dataset, report) = Dataset::store(
             &cluster,
             &gen,
             &mapping,
@@ -141,11 +177,48 @@ mod tests {
         )
         .unwrap();
         assert_eq!(report.total_nnz(), gen.nnz());
+        assert_eq!(dataset.nprocs(), p);
         for k in 0..p {
             assert!(matrix_file_path(&dir, k).exists(), "missing file {k}");
         }
         assert!(report.wall_s > 0.0);
         assert!(report.total_bytes() > 0);
+    }
+
+    #[test]
+    fn cluster_mapping_size_mismatch_is_typed_error() {
+        let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 1), 2));
+        let n = gen.dim();
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, 3));
+        let cluster = Cluster::new(2, 64);
+        let dir = tmpdir("mismatch");
+        let err = Dataset::store(&cluster, &gen, &mapping, &dir, StoreOptions::default())
+            .expect_err("size mismatch must not panic");
+        assert!(
+            matches!(err, DatasetError::ClusterMismatch { cluster: 2, required: 3, .. }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn store_parts_rejects_mapping_arity_mismatch() {
+        // A mapping that disagrees with the cluster must be rejected
+        // before anything hits disk — otherwise the manifest would
+        // record a descriptor with the wrong process count.
+        let gen = KroneckerGen::new(SeedMatrix::cage_like(6, 3), 2);
+        let n = gen.dim();
+        let rw = Rowwise::regular(n, n, 2);
+        let parts: Vec<Coo> = (0..2).map(|k| gen.local_coo(&rw, k)).collect();
+        let cluster = Cluster::new(2, 64);
+        let wrong: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, 7));
+        let dir = tmpdir("parts-mismatch");
+        let err = Dataset::store_parts(&cluster, parts, &wrong, &dir, StoreOptions::default())
+            .expect_err("mapping arity mismatch must be rejected");
+        assert!(
+            matches!(err, DatasetError::ClusterMismatch { cluster: 2, required: 7, .. }),
+            "{err}"
+        );
+        assert!(!dir.join(crate::coordinator::MANIFEST_FILE).exists());
     }
 
     #[test]
@@ -158,9 +231,11 @@ mod tests {
         let want_nnz: u64 = parts.iter().map(|c| c.nnz() as u64).sum();
         let cluster = Cluster::new(p, 64);
         let dir = tmpdir("parts");
-        let report = store_parts(
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(mapping);
+        let (dataset, report) = Dataset::store_parts(
             &cluster,
             parts,
+            &mapping,
             &dir,
             StoreOptions {
                 block_size: 4,
@@ -169,6 +244,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(report.total_nnz(), want_nnz);
+        assert_eq!(dataset.nnz(), want_nnz);
         // Spot-check one file loads back.
         let r = crate::h5::H5Reader::open(matrix_file_path(&dir, 1)).unwrap();
         let csr = crate::abhsf::load_csr(&r).unwrap();

@@ -20,13 +20,10 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::storer::StoreOptions;
-use crate::coordinator::{
-    load_different_config, load_exchange, load_same_config, Cluster, DiffLoadOptions, InMemFormat,
-};
+use crate::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions, Strategy};
 use crate::gen::{KroneckerGen, SeedMatrix};
 use crate::mapping::{Colwise, ProcessMapping};
-use crate::parfs::{FsModel, IoStrategy};
+use crate::parfs::FsModel;
 use crate::util::bench::Table;
 use crate::util::human;
 
@@ -99,7 +96,7 @@ pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>>
     // Store once with the paper's configuration: balanced row-wise.
     let store_map: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(cfg.p_store));
     let store_cluster = Cluster::new(cfg.p_store, 64);
-    let sreport = crate::coordinator::store_distributed(
+    let (dataset, sreport) = Dataset::store(
         &store_cluster,
         &gen,
         &store_map,
@@ -122,13 +119,15 @@ pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>>
 
     let mut rows = Vec::new();
 
-    // Case 1: same configuration.
+    // Case 1: same configuration — `Strategy::Auto` on a matching
+    // configuration must take the fast path.
     {
         let cluster = Cluster::new(cfg.p_store, 64);
         let mut walls = Vec::new();
         let mut last = None;
         for _ in 0..cfg.reps {
-            let (_, report) = load_same_config(&cluster, &dir, InMemFormat::Csr)?;
+            let (_, report) = dataset.load().format(InMemFormat::Csr).run(&cluster)?;
+            debug_assert!(report.auto.as_ref().is_some_and(|a| a.same_config));
             walls.push(report.wall_s);
             last = Some(report);
         }
@@ -148,20 +147,17 @@ pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>>
     for &p_load in &cfg.p_loads {
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
         let cluster = Cluster::new(p_load, 64);
-        for strategy in [IoStrategy::Independent, IoStrategy::Collective] {
+        for strategy in [Strategy::Independent, Strategy::Collective, Strategy::Exchange] {
             let mut walls = Vec::new();
             let mut last = None;
             for _ in 0..cfg.reps {
-                let (_, report) = load_different_config(
-                    &cluster,
-                    &dir,
-                    &mapping,
-                    &DiffLoadOptions {
-                        stored_files: cfg.p_store,
-                        strategy,
-                        format: InMemFormat::Csr,
-                    },
-                )?;
+                let (_, report) = dataset
+                    .load()
+                    .nprocs(p_load)
+                    .mapping(&mapping)
+                    .strategy(strategy)
+                    .format(InMemFormat::Csr)
+                    .run(&cluster)?;
                 walls.push(report.wall_s);
                 last = Some(report);
             }
@@ -175,30 +171,17 @@ pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>>
                 nnz: report.total_nnz(),
             });
         }
-        // Exchange extension.
-        {
-            let mut walls = Vec::new();
-            let mut last = None;
-            for _ in 0..cfg.reps {
-                let (_, report) =
-                    load_exchange(&cluster, &dir, &mapping, cfg.p_store, InMemFormat::Csr)?;
-                walls.push(report.wall_s);
-                last = Some(report);
-            }
-            let report = last.unwrap();
-            rows.push(Fig1Row {
-                scenario: "diff/exchange".into(),
-                p_load,
-                wall_s: median(&mut walls),
-                sim_s: report.simulate(&model).makespan_s,
-                read_bytes: report.total_read_bytes(),
-                nnz: report.total_nnz(),
-            });
-        }
     }
 
     if verbose {
-        let mut t = Table::new(&["scenario", "P_load", "wall [s]", "sim Lustre [s]", "read", "nnz"]);
+        let mut t = Table::new(&[
+            "scenario",
+            "P_load",
+            "wall [s]",
+            "sim Lustre [s]",
+            "read",
+            "nnz",
+        ]);
         for r in &rows {
             t.row(&[
                 r.scenario.clone(),

@@ -11,6 +11,16 @@
 //!   different store/load *configurations* (process count × element→process
 //!   [`mapping`] × in-memory [`formats`]), with a calibrated parallel-I/O
 //!   cost model ([`parfs`]) reproducing the paper's Figure 1.
+//!
+//!   The public entry points are [`coordinator::Dataset`] (self-describing
+//!   stored matrices: `Dataset::store` writes a `dataset.json` manifest,
+//!   `Dataset::open` discovers the storing configuration from it) and
+//!   [`coordinator::LoadPlan`] (`dataset.load().nprocs(p).mapping(m)
+//!   .format(f).strategy(Strategy::Auto).run(&cluster)`), whose `Auto`
+//!   strategy takes the same-configuration fast path when possible and
+//!   otherwise picks the cheapest §4 strategy from the [`parfs`] cost
+//!   model, recording the decision in the returned
+//!   [`coordinator::LoadReport`].
 //! * **Layer 2/1 (python/, build-time)** — a JAX blocked-SpMV consumer with
 //!   Pallas kernels, AOT-lowered to HLO text and executed from Rust via the
 //!   PJRT CPU client ([`runtime`]).

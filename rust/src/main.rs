@@ -4,10 +4,13 @@
 //! Subcommands:
 //!
 //! * `generate`  — describe a Kronecker workload (dims, nnz, balance);
-//! * `store`     — generate a matrix and store it in parallel as ABHSF;
-//! * `info`      — inspect a stored matrix directory;
-//! * `load`      — load a stored matrix (same or different configuration,
-//!   independent/collective/exchange), with wall + simulated times;
+//! * `store`     — generate a matrix and store it in parallel as a
+//!   self-describing dataset (ABHSF files + `dataset.json` manifest);
+//! * `info`      — inspect a stored dataset directory;
+//! * `load`      — load a stored dataset (the storing configuration is
+//!   discovered from the manifest; `--strategy auto` picks the
+//!   same-config fast path or the cheapest §4 strategy), with wall +
+//!   simulated times;
 //! * `roundtrip` — store, load, verify, report;
 //! * `spmv`      — load and validate PJRT SpMV against native Rust;
 //! * `fig1`      — regenerate the paper's Figure 1 table quickly.
@@ -16,16 +19,13 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use abhsf::abhsf::load::read_header;
-use abhsf::coordinator::{
-    load_different_config, load_exchange, load_same_config, storer::StoreOptions, Cluster,
-    DiffLoadOptions, InMemFormat,
-};
+use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions, Strategy};
 use abhsf::experiments::{run_fig1, Fig1Config};
 use abhsf::formats::Csr;
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::h5::H5Reader;
 use abhsf::mapping::{Block2d, Colwise, ProcessMapping, Rowwise};
-use abhsf::parfs::{FsModel, IoStrategy};
+use abhsf::parfs::FsModel;
 use abhsf::util::args::Args;
 use abhsf::util::bench::Table;
 use abhsf::util::human;
@@ -68,16 +68,16 @@ fn print_usage() {
          Usage: abhsf <subcommand> [options]\n\n\
          Subcommands:\n\
          \x20 generate   describe a Kronecker workload\n\
-         \x20 store      generate + store a matrix in parallel (ABHSF files)\n\
-         \x20 info       inspect a stored matrix directory\n\
-         \x20 load       load a stored matrix (same/diff config, \
-         independent|collective|exchange)\n\
+         \x20 store      generate + store a matrix in parallel (ABHSF dataset)\n\
+         \x20 info       inspect a stored dataset directory\n\
+         \x20 load       load a stored dataset (configuration discovered from \
+         the manifest)\n\
          \x20 roundtrip  store, reload, verify\n\
          \x20 spmv       load + validate PJRT SpMV vs native\n\
          \x20 fig1       regenerate the paper's Figure 1 (quick profile)\n\n\
          Common options: --seed-size N --seed cage|diag|random|rmat --order D\n\
          \x20               --procs P --block-size S --dir PATH --mapping rowwise|colwise|2d\n\
-         \x20               --strategy independent|collective|exchange --format csr|coo\n"
+         \x20               --strategy auto|independent|collective|exchange --format csr|coo\n"
     );
 }
 
@@ -125,14 +125,6 @@ fn parse_mapping(
     })
 }
 
-fn parse_format(a: &Args) -> anyhow::Result<InMemFormat> {
-    Ok(match a.str_or("format", "csr").as_str() {
-        "csr" => InMemFormat::Csr,
-        "coo" => InMemFormat::Coo,
-        other => anyhow::bail!("unknown format {other} (csr|coo)"),
-    })
-}
-
 fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf generate", argv, &[])?;
     let w = parse_workload(&a)?;
@@ -166,7 +158,7 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
     let s: u64 = a.parse_or("block-size", 64u64)?;
     let mapping = parse_mapping(&a, &w.gen, p)?;
     let cluster = Cluster::new(p, 64);
-    let report = abhsf::coordinator::store_distributed(
+    let (dataset, report) = Dataset::store(
         &cluster,
         &w.gen,
         &mapping,
@@ -177,11 +169,12 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
         },
     )?;
     println!(
-        "stored {} nnz into {} files in {:.3}s ({} payload)",
+        "stored {} nnz into {} files in {:.3}s ({} payload, mapping {})",
         human::count(report.total_nnz()),
         p,
         report.wall_s,
         human::bytes(report.total_bytes()),
+        dataset.mapping().kind(),
     );
     Ok(())
 }
@@ -189,16 +182,24 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
 fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf info", argv, &[])?;
     let dir = PathBuf::from(a.str_or("dir", "matrix"));
+    let dataset = Dataset::open(&dir)?;
+    let (m, n) = dataset.dims();
+    println!(
+        "dataset: {} x {}, {} nnz, stored by P={} ({} mapping), s={}, {}",
+        human::count(m),
+        human::count(n),
+        human::count(dataset.nnz()),
+        dataset.nprocs(),
+        dataset.mapping().kind(),
+        dataset.block_size(),
+        human::bytes(dataset.manifest().total_bytes()),
+    );
     let mut t = Table::new(&[
         "file", "m_local", "n_local", "z_local", "s", "blocks", "COO", "CSR", "bitmap", "dense",
         "bytes",
     ]);
-    let mut k = 0usize;
-    loop {
+    for k in 0..dataset.nprocs() {
         let path = abhsf::abhsf::matrix_file_path(&dir, k);
-        if !path.exists() {
-            break;
-        }
         let r = H5Reader::open(&path)?;
         let hdr = read_header(&r)?;
         let schemes: Vec<u8> = r.read_all("schemes")?;
@@ -220,71 +221,41 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
             counts[3].to_string(),
             human::bytes(bytes),
         ]);
-        k += 1;
     }
-    anyhow::ensure!(k > 0, "no matrix-*.h5spm files in {}", dir.display());
     t.print();
     Ok(())
-}
-
-fn count_files(dir: &std::path::Path) -> anyhow::Result<usize> {
-    let mut k = 0;
-    while abhsf::abhsf::matrix_file_path(dir, k).exists() {
-        k += 1;
-    }
-    anyhow::ensure!(k > 0, "no matrix-*.h5spm files in {}", dir.display());
-    Ok(k)
 }
 
 fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf load", argv, &["same-config"])?;
     let dir = PathBuf::from(a.str_or("dir", "matrix"));
-    let stored = count_files(&dir)?;
-    let format = parse_format(&a)?;
+    let dataset = Dataset::open(&dir)?;
+    let format: InMemFormat = a.str_or("format", "csr").parse()?;
     let model = FsModel::anselm_lustre();
 
     if a.flag("same-config") {
-        let cluster = Cluster::new(stored, 64);
-        let (_, report) = load_same_config(&cluster, &dir, format)?;
+        // Auto on a matching configuration takes the fast path.
+        let cluster = Cluster::new(dataset.nprocs(), 64);
+        let (_, report) = dataset.load().format(format).run(&cluster)?;
         print_load_report(&report, &model);
         return Ok(());
     }
-    let p: usize = a.parse_or("procs", stored)?;
-    let r = H5Reader::open(abhsf::abhsf::matrix_file_path(&dir, 0))?;
-    let hdr = read_header(&r)?;
-    drop(r);
-    let (m, n) = (hdr.info.m, hdr.info.n);
+    let p: usize = a.parse_or("procs", dataset.nprocs())?;
+    let (m, n) = dataset.dims();
     let mapping: Arc<dyn ProcessMapping> = match a.str_or("mapping", "colwise").as_str() {
         "colwise" => Arc::new(Colwise::regular(m, n, p)),
         "rowwise" => Arc::new(Rowwise::regular(m, n, p)),
         other => anyhow::bail!("unknown mapping {other}"),
     };
+    let strategy: Strategy = a.str_or("strategy", "auto").parse()?;
     let cluster = Cluster::new(p, 64);
-    let mode = a.str_or("strategy", "independent");
-    let (_, report) = match mode.as_str() {
-        "exchange" => load_exchange(&cluster, &dir, &mapping, stored, format)?,
-        "independent" => load_different_config(
-            &cluster,
-            &dir,
-            &mapping,
-            &DiffLoadOptions {
-                stored_files: stored,
-                strategy: IoStrategy::Independent,
-                format,
-            },
-        )?,
-        "collective" => load_different_config(
-            &cluster,
-            &dir,
-            &mapping,
-            &DiffLoadOptions {
-                stored_files: stored,
-                strategy: IoStrategy::Collective,
-                format,
-            },
-        )?,
-        other => anyhow::bail!("unknown strategy {other} (independent|collective|exchange)"),
-    };
+    let (_, report) = dataset
+        .load()
+        .nprocs(p)
+        .mapping(&mapping)
+        .format(format)
+        .strategy(strategy)
+        .run(&cluster)?;
     print_load_report(&report, &model);
     Ok(())
 }
@@ -304,6 +275,23 @@ fn print_load_report(report: &abhsf::coordinator::LoadReport, model: &FsModel) {
         "sim (Lustre)    : {:.3} s  [disk {:.3} s, sync {:.3} s]",
         sim.makespan_s, sim.disk_s, sim.sync_s
     );
+    if let Some(auto) = &report.auto {
+        let cands: Vec<String> = auto
+            .predicted
+            .iter()
+            .map(|(label, t)| format!("{label} {t:.3}s"))
+            .collect();
+        println!(
+            "auto strategy   : {}{} (predicted: {})",
+            auto.chosen,
+            if auto.same_config {
+                " [same-config fast path]"
+            } else {
+                ""
+            },
+            cands.join(", ")
+        );
+    }
 }
 
 fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
@@ -314,7 +302,7 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
     let s: u64 = a.parse_or("block-size", 32u64)?;
     let mapping = parse_mapping(&a, &w.gen, p)?;
     let cluster = Cluster::new(p, 64);
-    let sreport = abhsf::coordinator::store_distributed(
+    let (dataset, sreport) = Dataset::store(
         &cluster,
         &w.gen,
         &mapping,
@@ -324,7 +312,7 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
             ..Default::default()
         },
     )?;
-    let (mats, lreport) = load_same_config(&cluster, &dir, InMemFormat::Csr)?;
+    let (mats, lreport) = dataset.load().format(InMemFormat::Csr).run(&cluster)?;
     anyhow::ensure!(
         lreport.total_nnz() == sreport.total_nnz(),
         "nnz mismatch: stored {}, loaded {}",
@@ -353,9 +341,9 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
 fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf spmv", argv, &[])?;
     let dir = PathBuf::from(a.str_or("dir", "matrix"));
-    let stored = count_files(&dir)?;
-    let cluster = Cluster::new(stored, 64);
-    let (mats, _) = load_same_config(&cluster, &dir, InMemFormat::Csr)?;
+    let dataset = Dataset::open(&dir)?;
+    let cluster = Cluster::new(dataset.nprocs(), 64);
+    let (mats, _) = dataset.load().format(InMemFormat::Csr).run(&cluster)?;
     let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
     let n = parts[0].info.n;
     let x: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) * 0.5 - 1.0).collect();

@@ -7,7 +7,10 @@
 //! schemes (surveyed in ref [2]) are provided for the ablation benches and
 //! to exercise the fully general `M(i, j)` path.
 
+use std::sync::Arc;
+
 use crate::formats::LocalInfo;
+use crate::util::json::Json;
 
 /// A total mapping of global matrix coordinates to process ranks.
 pub trait ProcessMapping: Send + Sync {
@@ -29,6 +32,207 @@ pub trait ProcessMapping: Send + Sync {
 
     /// Scheme label for logs and bench tables.
     fn label(&self) -> String;
+
+    /// Self-describing descriptor of this mapping, persisted in the
+    /// dataset manifest so a later load can *discover* the storing
+    /// configuration instead of being told. Mappings that cannot be
+    /// reconstructed from data (e.g. arbitrary closures) fall back to
+    /// [`MappingDesc::Opaque`], which disables the same-configuration
+    /// fast path but keeps everything else working.
+    fn descriptor(&self) -> MappingDesc {
+        MappingDesc::Opaque {
+            label: self.label(),
+            p: self.nprocs(),
+        }
+    }
+}
+
+/// Serializable description of a [`ProcessMapping`] — the "mapping" leg of
+/// the paper's configuration triple as stored in `dataset.json`.
+///
+/// Two configurations use *the same* mapping exactly when their
+/// descriptors compare equal; [`MappingDesc::Opaque`] never equals itself
+/// across store/load boundaries by construction of the comparison in
+/// [`MappingDesc::same_mapping`], because an opaque label carries no
+/// evidence about `M(i, j)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MappingDesc {
+    /// Contiguous row chunks with explicit boundaries.
+    Rowwise {
+        /// Global rows.
+        m: u64,
+        /// Global columns.
+        n: u64,
+        /// Chunk starts (`P + 1` entries).
+        starts: Vec<u64>,
+    },
+    /// Contiguous column chunks with explicit boundaries.
+    Colwise {
+        /// Global rows.
+        m: u64,
+        /// Global columns.
+        n: u64,
+        /// Chunk starts (`P + 1` entries).
+        starts: Vec<u64>,
+    },
+    /// Checkerboard over a `pr × pc` regular grid.
+    Block2d {
+        /// Global rows.
+        m: u64,
+        /// Global columns.
+        n: u64,
+        /// Process-grid rows.
+        pr: usize,
+        /// Process-grid columns.
+        pc: usize,
+    },
+    /// Row-cyclic: row `i` belongs to rank `i mod P`.
+    CyclicRows {
+        /// Global rows.
+        m: u64,
+        /// Global columns.
+        n: u64,
+        /// Process count.
+        p: usize,
+    },
+    /// A mapping that cannot be reconstructed from data (`FnMapping`,
+    /// user-defined implementations without a descriptor override).
+    Opaque {
+        /// The mapping's label, for diagnostics only.
+        label: String,
+        /// Process count.
+        p: usize,
+    },
+}
+
+impl MappingDesc {
+    /// Process count `P`.
+    pub fn nprocs(&self) -> usize {
+        match self {
+            MappingDesc::Rowwise { starts, .. } | MappingDesc::Colwise { starts, .. } => {
+                starts.len().saturating_sub(1)
+            }
+            MappingDesc::Block2d { pr, pc, .. } => pr * pc,
+            MappingDesc::CyclicRows { p, .. } => *p,
+            MappingDesc::Opaque { p, .. } => *p,
+        }
+    }
+
+    /// Short kind tag used in the manifest and in log lines.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MappingDesc::Rowwise { .. } => "rowwise",
+            MappingDesc::Colwise { .. } => "colwise",
+            MappingDesc::Block2d { .. } => "block2d",
+            MappingDesc::CyclicRows { .. } => "cyclic-rows",
+            MappingDesc::Opaque { .. } => "opaque",
+        }
+    }
+
+    /// Whether two descriptors provably describe the same `M(i, j)`.
+    /// Opaque descriptors carry no evidence, so they never match.
+    pub fn same_mapping(&self, other: &MappingDesc) -> bool {
+        if matches!(self, MappingDesc::Opaque { .. })
+            || matches!(other, MappingDesc::Opaque { .. })
+        {
+            return false;
+        }
+        self == other
+    }
+
+    /// Reconstruct the mapping this descriptor describes; `None` for
+    /// [`MappingDesc::Opaque`].
+    pub fn build(&self) -> Option<Arc<dyn ProcessMapping>> {
+        Some(match self.clone() {
+            MappingDesc::Rowwise { m, n, starts } => Arc::new(Rowwise { m, n, starts }),
+            MappingDesc::Colwise { m, n, starts } => Arc::new(Colwise { m, n, starts }),
+            MappingDesc::Block2d { m, n, pr, pc } => Arc::new(Block2d::regular(m, n, pr, pc)),
+            MappingDesc::CyclicRows { m, n, p } => Arc::new(CyclicRows { m, n, p }),
+            MappingDesc::Opaque { .. } => return None,
+        })
+    }
+
+    /// Serialize for the dataset manifest.
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("kind".to_string(), Json::str(self.kind()));
+        match self {
+            MappingDesc::Rowwise { m, n, starts } | MappingDesc::Colwise { m, n, starts } => {
+                obj.insert("m".to_string(), Json::num(*m));
+                obj.insert("n".to_string(), Json::num(*n));
+                obj.insert("starts".to_string(), Json::arr_u64(starts));
+            }
+            MappingDesc::Block2d { m, n, pr, pc } => {
+                obj.insert("m".to_string(), Json::num(*m));
+                obj.insert("n".to_string(), Json::num(*n));
+                obj.insert("pr".to_string(), Json::num(*pr as u64));
+                obj.insert("pc".to_string(), Json::num(*pc as u64));
+            }
+            MappingDesc::CyclicRows { m, n, p } => {
+                obj.insert("m".to_string(), Json::num(*m));
+                obj.insert("n".to_string(), Json::num(*n));
+                obj.insert("p".to_string(), Json::num(*p as u64));
+            }
+            MappingDesc::Opaque { label, p } => {
+                obj.insert("label".to_string(), Json::str(label.clone()));
+                obj.insert("p".to_string(), Json::num(*p as u64));
+            }
+        }
+        Json::Obj(obj)
+    }
+
+    /// Parse back from manifest JSON.
+    pub fn from_json(v: &Json) -> Result<MappingDesc, String> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("mapping descriptor missing \"kind\"")?;
+        let num = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("mapping descriptor missing numeric {key:?}"))
+        };
+        let starts = || -> Result<Vec<u64>, String> {
+            v.get("starts")
+                .and_then(Json::as_arr)
+                .ok_or("mapping descriptor missing \"starts\"")?
+                .iter()
+                .map(|s| s.as_u64().ok_or_else(|| "non-integer start".to_string()))
+                .collect()
+        };
+        Ok(match kind {
+            "rowwise" => MappingDesc::Rowwise {
+                m: num("m")?,
+                n: num("n")?,
+                starts: starts()?,
+            },
+            "colwise" => MappingDesc::Colwise {
+                m: num("m")?,
+                n: num("n")?,
+                starts: starts()?,
+            },
+            "block2d" => MappingDesc::Block2d {
+                m: num("m")?,
+                n: num("n")?,
+                pr: num("pr")? as usize,
+                pc: num("pc")? as usize,
+            },
+            "cyclic-rows" => MappingDesc::CyclicRows {
+                m: num("m")?,
+                n: num("n")?,
+                p: num("p")? as usize,
+            },
+            "opaque" => MappingDesc::Opaque {
+                label: v
+                    .get("label")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                p: num("p")? as usize,
+            },
+            other => return Err(format!("unknown mapping kind {other:?}")),
+        })
+    }
 }
 
 /// Build a [`LocalInfo`] for `rank` from a mapping's declared window.
@@ -135,6 +339,14 @@ impl ProcessMapping for Rowwise {
     fn label(&self) -> String {
         format!("row-wise(P={})", self.nprocs())
     }
+
+    fn descriptor(&self) -> MappingDesc {
+        MappingDesc::Rowwise {
+            m: self.m,
+            n: self.n,
+            starts: self.starts.clone(),
+        }
+    }
 }
 
 /// Column-wise regular mapping: rank `k` owns an equal contiguous chunk of
@@ -181,6 +393,14 @@ impl ProcessMapping for Colwise {
 
     fn label(&self) -> String {
         format!("col-wise(P={})", self.nprocs())
+    }
+
+    fn descriptor(&self) -> MappingDesc {
+        MappingDesc::Colwise {
+            m: self.m,
+            n: self.n,
+            starts: self.starts.clone(),
+        }
     }
 }
 
@@ -244,6 +464,15 @@ impl ProcessMapping for Block2d {
     fn label(&self) -> String {
         format!("2d({}x{})", self.pr, self.pc)
     }
+
+    fn descriptor(&self) -> MappingDesc {
+        MappingDesc::Block2d {
+            m: self.m,
+            n: self.n,
+            pr: self.pr,
+            pc: self.pc,
+        }
+    }
 }
 
 /// Row-cyclic mapping: row `i` belongs to rank `i mod P`. Ownership is
@@ -274,6 +503,14 @@ impl ProcessMapping for CyclicRows {
 
     fn label(&self) -> String {
         format!("cyclic-rows(P={})", self.p)
+    }
+
+    fn descriptor(&self) -> MappingDesc {
+        MappingDesc::CyclicRows {
+            m: self.m,
+            n: self.n,
+            p: self.p,
+        }
     }
 }
 
@@ -421,5 +658,71 @@ mod tests {
         assert_eq!(info.n_local, 6);
         assert_eq!(info.z, 99);
         assert!(info.validate().is_ok());
+    }
+
+    /// Every concrete mapping must survive descriptor → JSON → descriptor
+    /// → build, and the rebuilt mapping must agree on ownership.
+    #[test]
+    fn descriptors_roundtrip_through_json() {
+        let mappings: Vec<Box<dyn ProcessMapping>> = vec![
+            Box::new(Rowwise::regular(10, 6, 3)),
+            Box::new(Rowwise::balanced_by_nnz(20, 20, 4, |r| r + 1)),
+            Box::new(Colwise::regular(5, 12, 4)),
+            Box::new(Block2d::regular(8, 8, 2, 2)),
+            Box::new(CyclicRows { m: 10, n: 4, p: 3 }),
+        ];
+        for mapping in mappings {
+            let desc = mapping.descriptor();
+            let json = desc.to_json().to_string();
+            let back = MappingDesc::from_json(&Json::parse(&json).unwrap()).unwrap();
+            assert_eq!(back, desc, "{json}");
+            assert!(desc.same_mapping(&back));
+            assert_eq!(back.nprocs(), mapping.nprocs());
+            let rebuilt = back.build().expect("concrete mappings rebuild");
+            let (m, n) = match &desc {
+                MappingDesc::Rowwise { m, n, .. }
+                | MappingDesc::Colwise { m, n, .. }
+                | MappingDesc::Block2d { m, n, .. }
+                | MappingDesc::CyclicRows { m, n, .. } => (*m, *n),
+                MappingDesc::Opaque { .. } => unreachable!(),
+            };
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(rebuilt.owner(i, j), mapping.owner(i, j), "({i},{j})");
+                }
+            }
+        }
+    }
+
+    /// Closure mappings degrade to an opaque descriptor that never claims
+    /// to match anything — including itself.
+    #[test]
+    fn fn_mapping_descriptor_is_opaque() {
+        let map = FnMapping {
+            m: 6,
+            n: 6,
+            p: 2,
+            f: |i, j| ((i + j) % 2) as usize,
+        };
+        let desc = map.descriptor();
+        assert_eq!(desc.kind(), "opaque");
+        assert_eq!(desc.nprocs(), 2);
+        assert!(desc.build().is_none());
+        assert!(!desc.same_mapping(&desc.clone()));
+        let json = desc.to_json().to_string();
+        let back = MappingDesc::from_json(&Json::parse(&json).unwrap()).unwrap();
+        assert_eq!(back, desc);
+    }
+
+    #[test]
+    fn bad_descriptors_rejected() {
+        for doc in [
+            r#"{"m": 4}"#,
+            r#"{"kind": "mystery", "p": 2}"#,
+            r#"{"kind": "rowwise", "m": 4, "n": 4}"#,
+        ] {
+            let v = Json::parse(doc).unwrap();
+            assert!(MappingDesc::from_json(&v).is_err(), "{doc}");
+        }
     }
 }

@@ -6,14 +6,27 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! HLO *text* is the interchange format (the pinned xla_extension 0.5.1
 //! rejects jax≥0.5's 64-bit-id protos; the text parser reassigns ids).
+//!
+//! The engine needs the external `xla` crate plus a native xla_extension
+//! install, so it is gated behind the `pjrt` cargo feature. Default
+//! builds get [`stub::Runtime`]: the same public surface whose
+//! constructors return [`RuntimeError::Unavailable`], which every
+//! consumer already treats as "skip the PJRT cross-check" (see
+//! DESIGN.md §5).
 
 pub mod manifest;
 pub mod pack;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
 pub use manifest::{Artifact, Manifest};
 pub use pack::BlockedTensors;
+#[cfg(feature = "pjrt")]
 pub use runtime::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
 
 /// Errors from artifact loading/execution.
 #[derive(Debug, thiserror::Error)]
@@ -27,8 +40,12 @@ pub enum RuntimeError {
     /// A matrix does not fit the artifact's static shapes.
     #[error("shape mismatch: {0}")]
     Shape(String),
+    /// The engine was not compiled in (built without the `pjrt` feature).
+    #[error("pjrt runtime unavailable: {0}")]
+    Unavailable(String),
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {
         RuntimeError::Xla(e.to_string())

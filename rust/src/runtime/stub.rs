@@ -1,0 +1,114 @@
+//! Stub execution engine used when the crate is built without the
+//! `pjrt` feature (the default — the `xla` crate and its native
+//! xla_extension are not in the offline registry).
+//!
+//! The public surface mirrors [`crate::runtime::runtime::Runtime`]
+//! one-for-one so consumers compile unchanged; both constructors return
+//! [`RuntimeError::Unavailable`], which callers already handle as "skip
+//! the PJRT cross-check" (examples print a note, `tests/runtime_pjrt.rs`
+//! skips). No method on an instance is reachable, because no instance
+//! can be constructed.
+
+use std::sync::Arc;
+
+use crate::formats::Csr;
+use crate::runtime::manifest::{Artifact, Manifest};
+use crate::runtime::pack::BlockedTensors;
+use crate::runtime::{Result, RuntimeError};
+
+/// Placeholder for the compiled-executable handle of the real engine.
+#[derive(Debug)]
+pub struct Executable;
+
+/// The unavailable engine. Constructors always fail; the struct exists
+/// only so downstream signatures typecheck without the `pjrt` feature.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+fn unavailable<T>() -> Result<T> {
+    Err(RuntimeError::Unavailable(
+        "built without the `pjrt` cargo feature (see DESIGN.md §5)".into(),
+    ))
+}
+
+impl Runtime {
+    /// Always fails with [`RuntimeError::Unavailable`].
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let _ = &manifest;
+        unavailable()
+    }
+
+    /// Always fails with [`RuntimeError::Unavailable`].
+    pub fn from_default_dir() -> Result<Self> {
+        unavailable()
+    }
+
+    /// Platform name (never reachable — no instance exists).
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Borrow the manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Always fails with [`RuntimeError::Unavailable`].
+    pub fn executable(&self, _name: &str) -> Result<Arc<Executable>> {
+        unavailable()
+    }
+
+    /// Always fails with [`RuntimeError::Unavailable`].
+    pub fn spmv(&self, _art: &Artifact, _t: &BlockedTensors, _x: &[f32]) -> Result<Vec<f32>> {
+        unavailable()
+    }
+
+    /// Always fails with [`RuntimeError::Unavailable`].
+    pub fn power_step(
+        &self,
+        _art: &Artifact,
+        _t: &BlockedTensors,
+        _x: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        unavailable()
+    }
+
+    /// Always fails with [`RuntimeError::Unavailable`].
+    pub fn assemble(
+        &self,
+        _art: &Artifact,
+        _lrows: &[i32],
+        _lcols: &[i32],
+        _vals: &[f32],
+    ) -> Result<Vec<f32>> {
+        unavailable()
+    }
+
+    /// Always fails with [`RuntimeError::Unavailable`].
+    pub fn spmv_csr(&self, _csr: &Csr, _x: &[f64]) -> Result<Vec<f32>> {
+        unavailable()
+    }
+
+    /// Always fails with [`RuntimeError::Unavailable`].
+    pub fn pack_best_spmv(&self, _csr: &Csr) -> Result<(Artifact, BlockedTensors)> {
+        unavailable()
+    }
+
+    /// Always fails with [`RuntimeError::Unavailable`].
+    pub fn pick_spmv_artifact(&self, _csr: &Csr) -> Result<Artifact> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_report_unavailable() {
+        let err = Runtime::from_default_dir().expect_err("stub must not construct");
+        assert!(matches!(err, RuntimeError::Unavailable(_)), "{err}");
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

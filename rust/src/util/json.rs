@@ -1,8 +1,12 @@
-//! Minimal JSON parser (no `serde` in the vendored registry).
+//! Minimal JSON parser and serializer (no `serde` in the vendored
+//! registry).
 //!
-//! Parses the artifact `manifest.json` written by `python/compile/aot.py`.
-//! Supports the full JSON grammar except `\u` surrogate pairs beyond the
-//! BMP; numbers parse as f64.
+//! Parses the artifact `manifest.json` written by `python/compile/aot.py`
+//! and round-trips the dataset manifest (`dataset.json`) written by
+//! [`crate::coordinator::Dataset`]. Supports the full JSON grammar except
+//! `\u` surrogate pairs beyond the BMP; numbers parse as f64, so exact
+//! integers are limited to ±2^53 (far beyond any matrix dimension or file
+//! size this crate handles).
 
 use std::collections::BTreeMap;
 
@@ -78,6 +82,81 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Build a number from an unsigned integer (exact up to 2^53).
+    pub fn num(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// Build a string value.
+    pub fn str(v: impl Into<String>) -> Json {
+        Json::Str(v.into())
+    }
+
+    /// Build an array from u64s (the common manifest case).
+    pub fn arr_u64(vs: &[u64]) -> Json {
+        Json::Arr(vs.iter().map(|&v| Json::num(v)).collect())
+    }
+}
+
+impl std::fmt::Display for Json {
+    /// Serialize to compact JSON. Integers within ±2^53 print without a
+    /// fractional part so `parse(to_string(v)) == v` for manifest data.
+    /// Non-finite numbers (JSON cannot represent them) serialize as
+    /// `null`, matching the common lossy convention.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    f.write_str("null")
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{item}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(map) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut std::fmt::Formatter<'_>, s: &str) -> std::fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 struct P<'a> {
@@ -326,5 +405,42 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn serializer_roundtrips() {
+        let docs = [
+            r#"{"a": [1, 2, {"b": "x"}], "c": {"d": null}, "e": false}"#,
+            r#"{"name": "q\"uo\\te", "nl": "a\nb", "big": 9007199254740992}"#,
+            "[-1.5, 0.25, 1e300]",
+            "[]",
+            "{}",
+        ];
+        for doc in docs {
+            let v = Json::parse(doc).unwrap();
+            let text = v.to_string();
+            assert_eq!(Json::parse(&text).unwrap(), v, "roundtrip of {doc}");
+        }
+    }
+
+    #[test]
+    fn serializer_emits_null_for_non_finite() {
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        // Overflowing literals parse to inf; the serialization must
+        // still be valid JSON.
+        let v = Json::parse("[1e999]").unwrap();
+        assert!(Json::parse(&v.to_string()).is_ok(), "{v}");
+    }
+
+    #[test]
+    fn serializer_integers_stay_integers() {
+        let mut obj = BTreeMap::new();
+        obj.insert("bytes".to_string(), Json::num(123_456_789_012));
+        obj.insert("starts".to_string(), Json::arr_u64(&[0, 5, 10]));
+        let text = Json::Obj(obj).to_string();
+        assert_eq!(text, r#"{"bytes":123456789012,"starts":[0,5,10]}"#);
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("bytes").unwrap().as_u64(), Some(123_456_789_012));
     }
 }

@@ -1,0 +1,315 @@
+//! Dataset/LoadPlan API: manifest round-trip, `Strategy::Auto`
+//! selection, legacy-directory discovery, and the deprecated shims.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use abhsf::coordinator::{
+    Cluster, Dataset, DatasetError, InMemFormat, StoreOptions, Strategy, MANIFEST_FILE,
+};
+use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::mapping::{Colwise, ProcessMapping, Rowwise};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("abhsf-dataset-api").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn workload() -> Arc<KroneckerGen> {
+    Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 17), 2))
+}
+
+/// Global element map of loaded parts, for content equality checks.
+fn collect(mats: &[abhsf::coordinator::LoadedMatrix]) -> HashMap<(u64, u64), f64> {
+    let mut m = HashMap::new();
+    for lm in mats {
+        let coo = lm.clone().into_coo();
+        let (ro, co) = (coo.info.m_offset, coo.info.n_offset);
+        for (r, c, v) in coo.iter() {
+            assert!(m.insert((r + ro, c + co), v).is_none());
+        }
+    }
+    m
+}
+
+#[test]
+fn manifest_roundtrip_discovers_store_configuration() {
+    let gen = workload();
+    let n = gen.dim();
+    let p_store = 4;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p_store));
+    let cluster = Cluster::new(p_store, 64);
+    let dir = tmpdir("roundtrip");
+    let (stored, report) = Dataset::store(
+        &cluster,
+        &gen,
+        &mapping,
+        &dir,
+        StoreOptions {
+            block_size: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Reopen from disk: everything the loader needs is discovered.
+    let reopened = Dataset::open(&dir).unwrap();
+    assert_eq!(reopened.nprocs(), p_store);
+    assert_eq!(reopened.dims(), (n, n));
+    assert_eq!(reopened.nnz(), gen.nnz());
+    assert_eq!(reopened.block_size(), 8);
+    assert_eq!(reopened.mapping(), &mapping.descriptor());
+    assert!(reopened.mapping().same_mapping(stored.mapping()));
+    assert_eq!(reopened.manifest(), stored.manifest());
+    // Per-file accounting matches the store report and the disk.
+    let files = &reopened.manifest().files;
+    assert_eq!(files.len(), p_store);
+    for (k, f) in files.iter().enumerate() {
+        assert_eq!(f.nnz, report.per_rank_nnz[k], "file {k} nnz");
+        let on_disk = std::fs::metadata(abhsf::abhsf::matrix_file_path(&dir, k))
+            .unwrap()
+            .len();
+        assert_eq!(f.bytes, on_disk, "file {k} bytes");
+    }
+}
+
+#[test]
+fn auto_takes_fast_path_on_matching_configuration() {
+    let gen = workload();
+    let n = gen.dim();
+    let p = 3;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p));
+    let cluster = Cluster::new(p, 64);
+    let dir = tmpdir("auto-same");
+    Dataset::store(&cluster, &gen, &mapping, &dir, StoreOptions::default()).unwrap();
+
+    let dataset = Dataset::open(&dir).unwrap();
+    // Same P, same mapping, explicitly supplied: fast path.
+    let (mats, report) = dataset
+        .load()
+        .nprocs(p)
+        .mapping(&mapping)
+        .strategy(Strategy::Auto)
+        .format(InMemFormat::Csr)
+        .run(&cluster)
+        .unwrap();
+    assert_eq!(report.scenario, "same-config");
+    let auto = report.auto.as_ref().expect("auto decision recorded");
+    assert!(auto.same_config);
+    assert_eq!(auto.chosen, "same-config");
+    assert!(auto.predicted.iter().any(|(l, _)| l == "same-config"));
+    // The fast path reads each file exactly once, by its own rank.
+    for io in &report.per_rank_io {
+        assert_eq!(io.opens, 1);
+    }
+    assert_eq!(report.total_nnz(), gen.nnz());
+    assert_eq!(mats.len(), p);
+}
+
+#[test]
+fn auto_falls_back_to_diff_config_on_mismatch() {
+    let gen = workload();
+    let n = gen.dim();
+    let p_store = 3;
+    let store_map: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p_store));
+    let store_cluster = Cluster::new(p_store, 64);
+    let dir = tmpdir("auto-diff");
+    Dataset::store(&store_cluster, &gen, &store_map, &dir, StoreOptions::default()).unwrap();
+    let dataset = Dataset::open(&dir).unwrap();
+
+    // Different process count: must not fast-path.
+    let p_load = 5;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+    let cluster = Cluster::new(p_load, 64);
+    let (mats, report) = dataset
+        .load()
+        .mapping(&mapping)
+        .strategy(Strategy::Auto)
+        .run(&cluster)
+        .unwrap();
+    let auto = report.auto.as_ref().expect("auto decision recorded");
+    assert!(!auto.same_config);
+    assert_ne!(auto.chosen, "same-config");
+    assert!(
+        report.scenario.starts_with("diff-config/"),
+        "{}",
+        report.scenario
+    );
+    assert!(report.scenario.ends_with(&auto.chosen), "{}", report.scenario);
+    // The winner is the cheapest predicted candidate.
+    let min = auto
+        .predicted
+        .iter()
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .unwrap();
+    assert_eq!(min.0, auto.chosen);
+    assert_eq!(report.total_nnz(), gen.nnz());
+    assert_eq!(mats.len(), p_load);
+
+    // Same process count but a *different* mapping: also no fast path.
+    let colwise_same_p: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_store));
+    let (_, report) = dataset
+        .load()
+        .mapping(&colwise_same_p)
+        .strategy(Strategy::Auto)
+        .run(&store_cluster)
+        .unwrap();
+    assert!(!report.auto.as_ref().unwrap().same_config);
+}
+
+#[test]
+fn auto_and_explicit_loads_agree_on_content() {
+    let gen = workload();
+    let n = gen.dim();
+    let p_store = 4;
+    let store_map: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p_store));
+    let store_cluster = Cluster::new(p_store, 64);
+    let dir = tmpdir("content");
+    Dataset::store(&store_cluster, &gen, &store_map, &dir, StoreOptions::default()).unwrap();
+    let dataset = Dataset::open(&dir).unwrap();
+
+    let (same_mats, _) = dataset.load().run(&store_cluster).unwrap();
+    let want = collect(&same_mats);
+
+    let p_load = 2;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+    let cluster = Cluster::new(p_load, 64);
+    for strategy in [
+        Strategy::Auto,
+        Strategy::Independent,
+        Strategy::Collective,
+        Strategy::Exchange,
+    ] {
+        let (mats, _) = dataset
+            .load()
+            .mapping(&mapping)
+            .strategy(strategy)
+            .format(InMemFormat::Coo)
+            .run(&cluster)
+            .unwrap();
+        assert_eq!(collect(&mats), want, "{strategy}");
+    }
+}
+
+#[test]
+fn legacy_directory_without_manifest_still_opens() {
+    let gen = workload();
+    let n = gen.dim();
+    let p = 3;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p));
+    let cluster = Cluster::new(p, 64);
+    let dir = tmpdir("legacy");
+    Dataset::store(&cluster, &gen, &mapping, &dir, StoreOptions::default()).unwrap();
+    // Simulate a pre-manifest directory.
+    std::fs::remove_file(dir.join(MANIFEST_FILE)).unwrap();
+
+    let dataset = Dataset::open(&dir).unwrap();
+    assert_eq!(dataset.nprocs(), p);
+    assert_eq!(dataset.dims(), (n, n));
+    assert_eq!(dataset.nnz(), gen.nnz());
+    // The mapping cannot be reconstructed from headers alone...
+    assert_eq!(dataset.mapping().kind(), "opaque");
+    // ...but loading with the stored process count still fast-paths
+    // (no mapping requested means "as stored").
+    let (_, report) = dataset.load().run(&cluster).unwrap();
+    assert_eq!(report.scenario, "same-config");
+    assert_eq!(report.total_nnz(), gen.nnz());
+    // An explicit mapping with matching P is NOT provably the stored
+    // one (opaque), so auto must go through a diff-config strategy.
+    let (_, report) = dataset.load().mapping(&mapping).run(&cluster).unwrap();
+    assert!(!report.auto.as_ref().unwrap().same_config);
+}
+
+#[test]
+fn empty_directory_is_not_a_dataset() {
+    let dir = tmpdir("empty");
+    let err = Dataset::open(&dir).expect_err("nothing to open");
+    assert!(matches!(err, DatasetError::NotADataset { .. }), "{err}");
+}
+
+#[test]
+fn partially_deleted_legacy_directory_is_rejected() {
+    // Without a manifest the file scan stops at the first gap; the
+    // header cross-check must refuse to open the remnant as a smaller
+    // "valid" dataset (which would silently load a subset).
+    let gen = workload();
+    let n = gen.dim();
+    let p = 3;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p));
+    let cluster = Cluster::new(p, 64);
+    let dir = tmpdir("legacy-partial");
+    Dataset::store(&cluster, &gen, &mapping, &dir, StoreOptions::default()).unwrap();
+    std::fs::remove_file(dir.join(MANIFEST_FILE)).unwrap();
+    std::fs::remove_file(abhsf::abhsf::matrix_file_path(&dir, 1)).unwrap();
+    let err = Dataset::open(&dir).expect_err("partial legacy dir must not open");
+    assert!(matches!(err, DatasetError::NotADataset { .. }), "{err}");
+    assert!(format!("{err}").contains("incomplete"), "{err}");
+}
+
+#[test]
+fn plan_validation_is_typed() {
+    let gen = workload();
+    let n = gen.dim();
+    let p = 2;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p));
+    let cluster = Cluster::new(p, 64);
+    let dir = tmpdir("validation");
+    let (dataset, _) =
+        Dataset::store(&cluster, &gen, &mapping, &dir, StoreOptions::default()).unwrap();
+
+    // nprocs disagrees with the cluster.
+    let err = dataset.load().nprocs(4).run(&cluster).unwrap_err();
+    assert!(matches!(
+        err,
+        DatasetError::ClusterMismatch {
+            cluster: 2,
+            required: 4,
+            ..
+        }
+    ));
+
+    // Mapping P disagrees with the plan's nprocs.
+    let wrong: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, 5));
+    let err = dataset.load().mapping(&wrong).run(&cluster).unwrap_err();
+    assert!(matches!(
+        err,
+        DatasetError::MappingMismatch {
+            mapping: 5,
+            nprocs: 2
+        }
+    ));
+
+    // Different P without a target mapping.
+    let big = Cluster::new(3, 64);
+    let err = dataset.load().run(&big).unwrap_err();
+    assert!(matches!(
+        err,
+        DatasetError::MappingRequired {
+            nprocs: 3,
+            stored: 2
+        }
+    ));
+}
+
+/// The deprecated free functions still work during the transition
+/// release and agree with the planner.
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_still_work() {
+    let gen = workload();
+    let n = gen.dim();
+    let p = 2;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p));
+    let cluster = Cluster::new(p, 64);
+    let dir = tmpdir("shims");
+    let (dataset, _) =
+        Dataset::store(&cluster, &gen, &mapping, &dir, StoreOptions::default()).unwrap();
+
+    let (mats_old, report_old) =
+        abhsf::coordinator::load_same_config(&cluster, &dir, InMemFormat::Csr).unwrap();
+    let (mats_new, report_new) = dataset.load().run(&cluster).unwrap();
+    assert_eq!(report_old.total_nnz(), report_new.total_nnz());
+    assert_eq!(collect(&mats_old), collect(&mats_new));
+}

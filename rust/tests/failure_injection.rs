@@ -5,7 +5,7 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::sync::Arc;
 
 use abhsf::abhsf::{load_csr, matrix_file_path};
-use abhsf::coordinator::{storer::StoreOptions, Cluster};
+use abhsf::coordinator::{Cluster, Dataset, DatasetError, StoreOptions};
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::h5::H5Reader;
 use abhsf::mapping::ProcessMapping;
@@ -23,7 +23,7 @@ fn store_one(name: &str) -> std::path::PathBuf {
     let mapping: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(1));
     let cluster = Cluster::new(1, 8);
     let dir = tmpdir(name);
-    abhsf::coordinator::store_distributed(
+    Dataset::store(
         &cluster,
         &gen,
         &mapping,
@@ -228,18 +228,78 @@ fn wrong_scheme_tag_detected() {
 
 #[test]
 fn worker_error_propagates_not_hangs() {
-    // A missing file in a multi-rank load must surface as Err from the
-    // leader, not deadlock the cluster.
+    // A cluster/dataset size mismatch must surface as a typed error from
+    // the planner (it used to run and fail rank-by-rank, or worse,
+    // panic), and must not wedge the cluster.
     let dir = store_one("partial");
     // Ask for 3 ranks but only 1 file exists.
     let cluster = Cluster::new(3, 8);
-    let res = abhsf::coordinator::load_same_config(
-        &cluster,
-        &dir,
-        abhsf::coordinator::InMemFormat::Csr,
+    let err = Dataset::open(&dir)
+        .unwrap()
+        .load()
+        .run(&cluster)
+        .expect_err("p_load != p_store without a mapping must error");
+    assert!(
+        matches!(err, DatasetError::MappingRequired { nprocs: 3, stored: 1 }),
+        "{err}"
     );
-    assert!(res.is_err(), "missing files must error");
     // The cluster must remain usable for the next job.
     let ok = cluster.run(|ctx| ctx.rank);
     assert_eq!(ok, vec![0, 1, 2]);
+}
+
+#[test]
+fn mid_load_worker_failure_propagates_not_hangs() {
+    // A container that passes the up-front existence check but fails to
+    // *open* inside a worker (truncated mid-write, say) must surface as
+    // Err from the leader — while the other ranks' jobs complete — and
+    // must not wedge the cluster for the next job.
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 5), 2));
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(3));
+    let cluster = Cluster::new(3, 8);
+    let dir = tmpdir("mid-load");
+    let (dataset, _) =
+        Dataset::store(&cluster, &gen, &mapping, &dir, Default::default()).unwrap();
+    let path = matrix_file_path(&dir, 1);
+    let len = std::fs::metadata(&path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+
+    let res = dataset.load().run(&cluster);
+    assert!(res.is_err(), "truncated container must fail the load");
+    // The cluster must remain usable for the next job.
+    let ok = cluster.run(|ctx| ctx.rank);
+    assert_eq!(ok, vec![0, 1, 2]);
+}
+
+#[test]
+fn missing_stored_file_is_typed_error() {
+    // Delete one container of a 2-file dataset: the plan must report a
+    // MissingFile naming the path instead of treating it as 0 bytes.
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 5), 2));
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(2));
+    let cluster = Cluster::new(2, 8);
+    let dir = tmpdir("missing-file");
+    let (dataset, _) =
+        Dataset::store(&cluster, &gen, &mapping, &dir, Default::default()).unwrap();
+    std::fs::remove_file(matrix_file_path(&dir, 1)).unwrap();
+    let err = dataset
+        .load()
+        .run(&cluster)
+        .expect_err("missing container must fail the plan");
+    match err {
+        DatasetError::MissingFile { path, .. } => {
+            assert!(path.ends_with("matrix-1.h5spm"), "{}", path.display());
+        }
+        other => panic!("expected MissingFile, got {other}"),
+    }
+}
+
+#[test]
+fn corrupt_manifest_is_typed_error() {
+    let dir = store_one("bad-manifest");
+    std::fs::write(dir.join(abhsf::coordinator::MANIFEST_FILE), "{not json").unwrap();
+    let err = Dataset::open(&dir).expect_err("garbage manifest must not open");
+    assert!(matches!(err, DatasetError::BadManifest { .. }), "{err}");
 }

@@ -9,13 +9,9 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use abhsf::coordinator::{
-    load_different_config, load_exchange, load_same_config, storer::StoreOptions, Cluster,
-    DiffLoadOptions, InMemFormat,
-};
+use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions, Strategy};
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::mapping::{Block2d, Colwise, CyclicRows, ProcessMapping, Rowwise};
-use abhsf::parfs::IoStrategy;
 
 fn tmpdir(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir()
@@ -75,7 +71,7 @@ fn same_config_roundtrip_grid() {
         let mapping: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(p));
         let cluster = Cluster::new(p, 64);
         let dir = tmpdir(&format!("same-{kind}-{seed_n}-{block}-{p}"));
-        abhsf::coordinator::store_distributed(
+        let (dataset, _) = Dataset::store(
             &cluster,
             &gen,
             &mapping,
@@ -87,7 +83,8 @@ fn same_config_roundtrip_grid() {
         )
         .unwrap();
         for format in [InMemFormat::Csr, InMemFormat::Coo] {
-            let (mats, report) = load_same_config(&cluster, &dir, format).unwrap();
+            let (mats, report) = dataset.load().format(format).run(&cluster).unwrap();
+            assert_eq!(report.scenario, "same-config", "auto must take the fast path");
             assert_eq!(
                 report.total_nnz(),
                 gen.nnz(),
@@ -112,7 +109,7 @@ fn diff_config_roundtrip_grid() {
     let store_map: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(p_store));
     let store_cluster = Cluster::new(p_store, 64);
     let dir = tmpdir("diff-grid");
-    abhsf::coordinator::store_distributed(
+    let (dataset, _) = Dataset::store(
         &store_cluster,
         &gen,
         &store_map,
@@ -134,24 +131,25 @@ fn diff_config_roundtrip_grid() {
     for (label, mapping) in mappings {
         let p_load = mapping.nprocs();
         let cluster = Cluster::new(p_load, 64);
-        for strategy in [IoStrategy::Independent, IoStrategy::Collective] {
-            let (mats, report) = load_different_config(
-                &cluster,
-                &dir,
-                &mapping,
-                &DiffLoadOptions {
-                    stored_files: p_store,
-                    strategy,
-                    format: InMemFormat::Csr,
-                },
-            )
-            .unwrap();
+        for strategy in [Strategy::Independent, Strategy::Collective] {
+            let (mats, report) = dataset
+                .load()
+                .mapping(&mapping)
+                .strategy(strategy)
+                .format(InMemFormat::Csr)
+                .run(&cluster)
+                .unwrap();
             assert_eq!(report.total_nnz(), gen.nnz(), "{label}/{strategy:?}");
             assert_eq!(collect(&mats), want, "{label}/{strategy:?}");
         }
         // Exchange loader must agree too.
-        let (mats, report) =
-            load_exchange(&cluster, &dir, &mapping, p_store, InMemFormat::Coo).unwrap();
+        let (mats, report) = dataset
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Exchange)
+            .format(InMemFormat::Coo)
+            .run(&cluster)
+            .unwrap();
         assert_eq!(report.total_nnz(), gen.nnz(), "{label}/exchange");
         assert_eq!(collect(&mats), want, "{label}/exchange");
     }
@@ -167,7 +165,7 @@ fn ownership_respects_mapping() {
     let store_map: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(p_store));
     let store_cluster = Cluster::new(p_store, 64);
     let dir = tmpdir("ownership");
-    abhsf::coordinator::store_distributed(
+    let (dataset, _) = Dataset::store(
         &store_cluster,
         &gen,
         &store_map,
@@ -177,17 +175,13 @@ fn ownership_respects_mapping() {
     .unwrap();
     let mapping: Arc<dyn ProcessMapping> = Arc::new(Block2d::regular(n, n, 2, 2));
     let cluster = Cluster::new(4, 64);
-    let (mats, _) = load_different_config(
-        &cluster,
-        &dir,
-        &mapping,
-        &DiffLoadOptions {
-            stored_files: p_store,
-            strategy: IoStrategy::Independent,
-            format: InMemFormat::Coo,
-        },
-    )
-    .unwrap();
+    let (mats, _) = dataset
+        .load()
+        .mapping(&mapping)
+        .strategy(Strategy::Independent)
+        .format(InMemFormat::Coo)
+        .run(&cluster)
+        .unwrap();
     for (rank, lm) in mats.iter().enumerate() {
         let coo = lm.clone().into_coo();
         for (r, c, _) in coo.iter() {
@@ -207,7 +201,7 @@ fn block_size_sweep_preserves_content() {
     let cluster = Cluster::new(p, 64);
     for block in [2u64, 3, 7, 16, 64, 128] {
         let dir = tmpdir(&format!("bs-{block}"));
-        abhsf::coordinator::store_distributed(
+        let (dataset, _) = Dataset::store(
             &cluster,
             &gen,
             &mapping,
@@ -218,7 +212,12 @@ fn block_size_sweep_preserves_content() {
             },
         )
         .unwrap();
-        let (mats, _) = load_same_config(&cluster, &dir, InMemFormat::Csr).unwrap();
+        assert_eq!(dataset.block_size(), block);
+        let (mats, _) = dataset
+            .load()
+            .format(InMemFormat::Csr)
+            .run(&cluster)
+            .unwrap();
         assert_eq!(collect(&mats), want, "block size {block}");
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -233,7 +232,7 @@ fn chunk_size_sweep_preserves_content() {
     let mapping: Arc<dyn ProcessMapping> = Arc::new(gen.balanced_rowwise(2));
     for chunk in [1u64, 7, 64, 100_000] {
         let dir = tmpdir(&format!("chunk-{chunk}"));
-        abhsf::coordinator::store_distributed(
+        let (dataset, _) = Dataset::store(
             &cluster,
             &gen,
             &mapping,
@@ -245,7 +244,11 @@ fn chunk_size_sweep_preserves_content() {
             },
         )
         .unwrap();
-        let (mats, report) = load_same_config(&cluster, &dir, InMemFormat::Csr).unwrap();
+        let (mats, report) = dataset
+            .load()
+            .format(InMemFormat::Csr)
+            .run(&cluster)
+            .unwrap();
         assert_eq!(collect(&mats), want, "chunk {chunk}");
         // Smaller chunks => more read ops.
         if chunk == 1 {
