@@ -71,10 +71,13 @@ fn main() -> anyhow::Result<()> {
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
         let cluster = Cluster::new(p_load, 64);
         for strategy in [Strategy::Independent, Strategy::Collective, Strategy::Exchange] {
+            // Paper-literal ablation: pruning off so "bytes read" shows the
+            // all-read-all volume (benches/pruning.rs covers the pruned A/B).
             let (_, r) = dataset
                 .load()
                 .mapping(&mapping)
                 .strategy(strategy)
+                .prune(false)
                 .format(InMemFormat::Csr)
                 .run(&cluster)?;
             let blocked: u64 = r.send_blocked_ns.iter().sum();

@@ -23,6 +23,12 @@
 //! different-configuration loading (paper §3): it yields every stored
 //! element in *global* coordinates without building a CSR, so the caller
 //! can filter by an arbitrary new mapping `M(i, j)`.
+//!
+//! [`visit_elements_pruned`] is its block-pruned refinement: the per-file
+//! block directory localizes nonzeros to `s × s` blocks, so a reader
+//! whose mapping region cannot intersect a block's rectangle skips that
+//! block's payload entirely — fewer bytes fetched and, asymptotically,
+//! only `O(own share)` elements decoded instead of all of them.
 
 use crate::abhsf::{names, AbhsfError, Result, Scheme};
 use crate::formats::element::sort_lex;
@@ -116,21 +122,36 @@ fn load_block_coo(
     c.coo_lrows.take_exact_into(&mut sc.idx_a, zeta as usize)?;
     c.coo_lcols.take_exact_into(&mut sc.idx_b, zeta as usize)?;
     c.coo_vals.take_exact_into(&mut sc.vals, zeta as usize)?;
+    Ok(decode_coo_block(&sc.idx_a, &sc.idx_b, &sc.vals, brow, bcol, s, elements))
+}
+
+/// Slice half of Algorithm 3, shared by the streaming and the pruned
+/// (range-read) decoders; returns whether the triplets were
+/// (lrow, lcol)-sorted.
+fn decode_coo_block(
+    lrows: &[u16],
+    lcols: &[u16],
+    vals: &[f64],
+    brow: u64,
+    bcol: u64,
+    s: u64,
+    elements: &mut Vec<Element>,
+) -> bool {
     let (ro, co) = (brow * s, bcol * s);
     // Track whether the stored triplets are (lrow, lcol)-sorted — the
     // builder always writes them sorted, but a foreign writer might not,
     // which disqualifies the counting-scatter fast path in load_csr.
     let mut ordered = true;
     let mut prev = (0u16, 0u16);
-    elements.reserve(zeta as usize);
-    for (i, ((&lr, &lc), &v)) in sc.idx_a.iter().zip(&sc.idx_b).zip(&sc.vals).enumerate() {
+    elements.reserve(vals.len());
+    for (i, ((&lr, &lc), &v)) in lrows.iter().zip(lcols).zip(vals).enumerate() {
         if i > 0 && (lr, lc) <= prev {
             ordered = false;
         }
         prev = (lr, lc);
         elements.push(Element::new(lr as u64 + ro, lc as u64 + co, v));
     }
-    Ok(ordered)
+    ordered
 }
 
 /// Procedure LoadBlockCSR (Algorithm 4): consume `s + 1` block-relative
@@ -156,9 +177,31 @@ fn load_block_csr(
     sc.vals.clear();
     c.csr_lcolinds.take_exact_into(&mut sc.idx_b, zeta as usize)?;
     c.csr_vals.take_exact_into(&mut sc.vals, zeta as usize)?;
+    decode_csr_block(&sc.ptrs, &sc.idx_b, &sc.vals, zeta, brow, bcol, s, elements)
+}
+
+/// Slice half of Algorithm 4, shared by the streaming and the pruned
+/// decoders. `ptrs` holds the `s + 1` block-relative row pointers.
+#[allow(clippy::too_many_arguments)]
+fn decode_csr_block(
+    ptrs: &[u32],
+    lcolinds: &[u16],
+    vals: &[f64],
+    zeta: u64,
+    brow: u64,
+    bcol: u64,
+    s: u64,
+    elements: &mut Vec<Element>,
+) -> Result<bool> {
+    let total = ptrs.last().copied().unwrap_or(0) as u64;
+    if ptrs.len() != s as usize + 1 || total != zeta {
+        return Err(AbhsfError::Invalid(format!(
+            "CSR block ({brow},{bcol}): row pointers imply {total} elements, zeta {zeta}"
+        )));
+    }
     let (ro, co) = (brow * s, bcol * s);
     for lrow in 0..s as usize {
-        let (lo, hi) = (sc.ptrs[lrow] as usize, sc.ptrs[lrow + 1] as usize);
+        let (lo, hi) = (ptrs[lrow] as usize, ptrs[lrow + 1] as usize);
         if hi < lo || hi > zeta as usize {
             return Err(AbhsfError::Invalid(format!(
                 "CSR block ({brow},{bcol}): non-monotone row pointers"
@@ -167,8 +210,8 @@ fn load_block_csr(
         for e in lo..hi {
             elements.push(Element::new(
                 lrow as u64 + ro,
-                sc.idx_b[e] as u64 + co,
-                sc.vals[e],
+                lcolinds[e] as u64 + co,
+                vals[e],
             ));
         }
     }
@@ -191,12 +234,26 @@ fn load_block_bitmap(
     sc.vals.clear();
     c.bitmap_bitmap.take_exact_into(&mut sc.bytes, nbytes)?;
     c.bitmap_vals.take_exact_into(&mut sc.vals, zeta as usize)?;
+    decode_bitmap_block(&sc.bytes, &sc.vals, zeta, brow, bcol, s, elements)
+}
+
+/// Slice half of Algorithm 5, shared by the streaming and the pruned
+/// decoders.
+fn decode_bitmap_block(
+    bytes: &[u8],
+    vals: &[f64],
+    zeta: u64,
+    brow: u64,
+    bcol: u64,
+    s: u64,
+    elements: &mut Vec<Element>,
+) -> Result<bool> {
     let (ro, co) = (brow * s, bcol * s);
     let mut decoded = 0usize;
     // Scan bytes LSB-first (Algorithm 5's bit order), skipping zero bytes
     // — the common case for sparse-ish bitmap blocks.
     let cells = (s * s) as usize;
-    for (bi, &byte) in sc.bytes.iter().enumerate() {
+    for (bi, &byte) in bytes.iter().enumerate() {
         if byte == 0 {
             continue;
         }
@@ -217,7 +274,7 @@ fn load_block_bitmap(
             elements.push(Element::new(
                 cell as u64 / s + ro,
                 cell as u64 % s + co,
-                sc.vals[decoded],
+                vals[decoded],
             ));
             decoded += 1;
             rest &= rest - 1;
@@ -244,9 +301,22 @@ fn load_block_dense(
 ) -> Result<bool> {
     sc.vals.clear();
     c.dense_vals.take_exact_into(&mut sc.vals, (s * s) as usize)?;
+    decode_dense_block(&sc.vals, zeta, brow, bcol, s, elements)
+}
+
+/// Slice half of Algorithm 6, shared by the streaming and the pruned
+/// decoders.
+fn decode_dense_block(
+    vals: &[f64],
+    zeta: u64,
+    brow: u64,
+    bcol: u64,
+    s: u64,
+    elements: &mut Vec<Element>,
+) -> Result<bool> {
     let (ro, co) = (brow * s, bcol * s);
     let mut decoded = 0u64;
-    for (cell, &val) in sc.vals.iter().enumerate() {
+    for (cell, &val) in vals.iter().enumerate() {
         if val != 0.0 {
             elements.push(Element::new(
                 cell as u64 / s + ro,
@@ -506,6 +576,203 @@ pub fn visit_elements<F: FnMut(u64, u64, f64)>(r: &H5Reader, mut sink: F) -> Res
     visit_elements_local(r, |e| sink(e.row + ro, e.col + co, e.val))
 }
 
+/// Outcome counters of one [`visit_elements_pruned`] pass over one file.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Blocks listed in the file's block directory.
+    pub blocks_total: u64,
+    /// Blocks whose payload was neither fetched nor decoded.
+    pub blocks_skipped: u64,
+    /// Payload bytes of the skipped blocks (element-level accounting,
+    /// independent of container chunk granularity).
+    pub bytes_skipped: u64,
+    /// Elements actually decoded (from the surviving blocks).
+    pub elements_decoded: u64,
+}
+
+impl PruneStats {
+    /// Accumulate another file's counters.
+    pub fn add(&mut self, other: PruneStats) {
+        self.blocks_total += other.blocks_total;
+        self.blocks_skipped += other.blocks_skipped;
+        self.bytes_skipped += other.bytes_skipped;
+        self.elements_decoded += other.elements_decoded;
+    }
+}
+
+/// Block-pruned streaming decoder (global coordinates): walk the block
+/// directory first, skip every block whose global rectangle fails `keep`,
+/// and fetch only the payload byte ranges of the surviving blocks
+/// (coalesced through [`H5Reader::read_ranges`], so container chunks
+/// shared by surviving blocks are read once and untouched chunks never).
+///
+/// `keep` receives the block's global rectangle `(r0, c0, rows, cols)`
+/// (edge blocks are clipped to the submatrix window) and must follow the
+/// conservative contract of
+/// [`ProcessMapping::intersects`](crate::mapping::ProcessMapping::intersects):
+/// answering `true` for a useless block costs decode time, answering
+/// `false` for a needed block loses elements.
+///
+/// With `keep = |_| true` this decodes exactly the same elements as
+/// [`visit_elements`] (asserted against the stored element count);
+/// otherwise the count check is per-block only, since skipped blocks
+/// contribute nothing.
+pub fn visit_elements_pruned<P, F>(r: &H5Reader, mut keep: P, mut sink: F) -> Result<PruneStats>
+where
+    P: FnMut(u64, u64, u64, u64) -> bool,
+    F: FnMut(u64, u64, f64),
+{
+    let header = read_header(r)?;
+    let s = header.block_size;
+    let (ro, co) = (header.info.m_offset, header.info.n_offset);
+    let schemes: Vec<u8> = r.read_all(names::SCHEMES)?;
+    let zetas: Vec<u32> = r.read_all(names::ZETAS)?;
+    let brows: Vec<u32> = r.read_all(names::BROWS)?;
+    let bcols: Vec<u32> = r.read_all(names::BCOLS)?;
+    if schemes.len() as u64 != header.blocks
+        || zetas.len() != schemes.len()
+        || brows.len() != schemes.len()
+        || bcols.len() != schemes.len()
+    {
+        return Err(AbhsfError::Invalid(format!(
+            "block directory length mismatch: header says {} blocks",
+            header.blocks
+        )));
+    }
+
+    // Pass 1: walk the directory, advancing per-scheme payload offsets,
+    // and record the byte ranges of the blocks that survive `keep`.
+    let mut stats = PruneStats {
+        blocks_total: header.blocks,
+        ..PruneStats::default()
+    };
+    // One surviving block: (scheme, zeta, brow, bcol).
+    let mut kept: Vec<(Scheme, u64, u64, u64)> = Vec::new();
+    let mut coo_ranges: Vec<(u64, u64)> = Vec::new();
+    let mut csr_ptr_ranges: Vec<(u64, u64)> = Vec::new();
+    let mut csr_ranges: Vec<(u64, u64)> = Vec::new();
+    let mut bm_ranges: Vec<(u64, u64)> = Vec::new();
+    let mut bmv_ranges: Vec<(u64, u64)> = Vec::new();
+    let mut dn_ranges: Vec<(u64, u64)> = Vec::new();
+    let (mut coo_off, mut csr_ptr_off, mut csr_off) = (0u64, 0u64, 0u64);
+    let (mut bm_off, mut bmv_off, mut dn_off) = (0u64, 0u64, 0u64);
+    let bm_bytes = (s * s).div_ceil(8);
+    for k in 0..schemes.len() {
+        let scheme = Scheme::from_tag(schemes[k])
+            .ok_or_else(|| AbhsfError::Invalid(format!("wrong scheme tag {}", schemes[k])))?;
+        let zeta = zetas[k] as u64;
+        let (brow, bcol) = (brows[k] as u64, bcols[k] as u64);
+        let rect = (
+            ro + brow * s,
+            co + bcol * s,
+            s.min(header.info.m_local.saturating_sub(brow * s)),
+            s.min(header.info.n_local.saturating_sub(bcol * s)),
+        );
+        if keep(rect.0, rect.1, rect.2, rect.3) {
+            kept.push((scheme, zeta, brow, bcol));
+            match scheme {
+                Scheme::Coo => coo_ranges.push((coo_off, zeta)),
+                Scheme::Csr => {
+                    csr_ptr_ranges.push((csr_ptr_off, s + 1));
+                    csr_ranges.push((csr_off, zeta));
+                }
+                Scheme::Bitmap => {
+                    bm_ranges.push((bm_off, bm_bytes));
+                    bmv_ranges.push((bmv_off, zeta));
+                }
+                Scheme::Dense => dn_ranges.push((dn_off, s * s)),
+            }
+        } else {
+            stats.blocks_skipped += 1;
+            // The store-side cost model mirrors the exact on-disk layout,
+            // so it doubles as the skipped-payload accounting.
+            stats.bytes_skipped += crate::abhsf::cost::scheme_cost(scheme, s, zeta);
+        }
+        match scheme {
+            Scheme::Coo => coo_off += zeta,
+            Scheme::Csr => {
+                csr_ptr_off += s + 1;
+                csr_off += zeta;
+            }
+            Scheme::Bitmap => {
+                bm_off += bm_bytes;
+                bmv_off += zeta;
+            }
+            Scheme::Dense => dn_off += s * s,
+        }
+    }
+
+    // Pass 2: fetch the surviving ranges (one coalesced pass per dataset)
+    // and decode block by block.
+    let coo_lrows = r.read_ranges::<u16>(names::COO_LROWS, &coo_ranges)?;
+    let coo_lcols = r.read_ranges::<u16>(names::COO_LCOLS, &coo_ranges)?;
+    let coo_vals = r.read_ranges::<f64>(names::COO_VALS, &coo_ranges)?;
+    let csr_ptrs = r.read_ranges::<u32>(names::CSR_ROWPTRS, &csr_ptr_ranges)?;
+    let csr_lcolinds = r.read_ranges::<u16>(names::CSR_LCOLINDS, &csr_ranges)?;
+    let csr_vals = r.read_ranges::<f64>(names::CSR_VALS, &csr_ranges)?;
+    let bm_bits = r.read_ranges::<u8>(names::BITMAP_BITMAP, &bm_ranges)?;
+    let bm_vals = r.read_ranges::<f64>(names::BITMAP_VALS, &bmv_ranges)?;
+    let dn_vals = r.read_ranges::<f64>(names::DENSE_VALS, &dn_ranges)?;
+
+    let mut buf: Vec<Element> = Vec::new();
+    let (mut ci, mut ri, mut bi, mut di) = (0usize, 0usize, 0usize, 0usize);
+    for &(scheme, zeta, brow, bcol) in &kept {
+        buf.clear();
+        match scheme {
+            Scheme::Coo => {
+                decode_coo_block(
+                    &coo_lrows[ci],
+                    &coo_lcols[ci],
+                    &coo_vals[ci],
+                    brow,
+                    bcol,
+                    s,
+                    &mut buf,
+                );
+                ci += 1;
+            }
+            Scheme::Csr => {
+                decode_csr_block(
+                    &csr_ptrs[ri],
+                    &csr_lcolinds[ri],
+                    &csr_vals[ri],
+                    zeta,
+                    brow,
+                    bcol,
+                    s,
+                    &mut buf,
+                )?;
+                ri += 1;
+            }
+            Scheme::Bitmap => {
+                decode_bitmap_block(&bm_bits[bi], &bm_vals[bi], zeta, brow, bcol, s, &mut buf)?;
+                bi += 1;
+            }
+            Scheme::Dense => {
+                decode_dense_block(&dn_vals[di], zeta, brow, bcol, s, &mut buf)?;
+                di += 1;
+            }
+        }
+        if buf.len() as u64 != zeta {
+            return Err(AbhsfError::Invalid(format!(
+                "block ({brow},{bcol}): decoded {} elements, zeta {zeta}",
+                buf.len()
+            )));
+        }
+        stats.elements_decoded += zeta;
+        for e in &buf {
+            sink(e.row + ro, e.col + co, e.val);
+        }
+    }
+    if stats.blocks_skipped == 0 && stats.elements_decoded != header.info.z_local {
+        return Err(AbhsfError::Invalid(format!(
+            "decoded {} elements with nothing pruned, header says {}",
+            stats.elements_decoded, header.info.z_local
+        )));
+    }
+    Ok(stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -677,6 +944,103 @@ mod tests {
                 "scheme {scheme:?}"
             );
         }
+    }
+
+    /// With a keep-everything predicate the pruned decoder is element-
+    /// identical to [`visit_elements`].
+    #[test]
+    fn pruned_with_keep_all_matches_unpruned() {
+        let coo = random_coo(41, 48, 48, 500, (16, 8));
+        let data = AbhsfData::from_coo(&coo, 8, &CostModel::default()).unwrap();
+        let path = tmpdir().join("rt-prune-all.h5spm");
+        store_data(&path, &data).unwrap();
+        let collect = |pruned: bool| -> (Vec<(u64, u64, f64)>, u64, u64) {
+            let r = H5Reader::open(&path).unwrap();
+            let mut got = Vec::new();
+            let (skipped, decoded) = if pruned {
+                let st = visit_elements_pruned(
+                    &r,
+                    |_, _, _, _| true,
+                    |i, j, v| got.push((i, j, v)),
+                )
+                .unwrap();
+                assert_eq!(st.blocks_total, data.blocks());
+                (st.blocks_skipped, st.elements_decoded)
+            } else {
+                let n = visit_elements(&r, |i, j, v| got.push((i, j, v))).unwrap();
+                (0, n)
+            };
+            got.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+            (got, skipped, decoded)
+        };
+        let (want, _, n_unpruned) = collect(false);
+        let (got, skipped, n_pruned) = collect(true);
+        assert_eq!(got, want);
+        assert_eq!(skipped, 0);
+        assert_eq!(n_pruned, n_unpruned);
+    }
+
+    /// A half-plane predicate decodes exactly the elements inside it and
+    /// skips payload bytes for the rest.
+    #[test]
+    fn pruned_decodes_only_surviving_blocks() {
+        let coo = random_coo(43, 64, 64, 800, (0, 0));
+        let data = AbhsfData::from_coo(&coo, 8, &CostModel::default()).unwrap();
+        let path = tmpdir().join("rt-prune-half.h5spm");
+        store_data(&path, &data).unwrap();
+        // Keep blocks intersecting the left half of the columns.
+        let r = H5Reader::open(&path).unwrap();
+        let mut got = Vec::new();
+        let st = visit_elements_pruned(
+            &r,
+            |_, c0, _, _| c0 < 32,
+            |i, j, v| got.push((i, j, v)),
+        )
+        .unwrap();
+        assert!(st.blocks_skipped > 0, "nothing pruned: {st:?}");
+        assert!(st.bytes_skipped > 0);
+        assert!(st.elements_decoded < coo.nnz() as u64);
+        assert_eq!(st.elements_decoded as usize, got.len());
+        // Everything left of the cut must be present (blocks are 8 wide,
+        // the cut at 32 is block-aligned, so nothing leaks either way).
+        let mut want: Vec<(u64, u64, f64)> =
+            coo.iter().filter(|&(_, j, _)| j < 32).collect();
+        want.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        got.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        assert_eq!(got, want);
+        // The same file with nothing pruned decodes everything.
+        let r2 = H5Reader::open(&path).unwrap();
+        let st_all = visit_elements_pruned(&r2, |_, _, _, _| true, |_, _, _| {}).unwrap();
+        assert_eq!(st_all.blocks_skipped, 0);
+        assert_eq!(st_all.blocks_total, st.blocks_total);
+        assert_eq!(st_all.elements_decoded, coo.nnz() as u64);
+    }
+
+    /// Pruning must also *read* fewer payload bytes once container chunks
+    /// are fine-grained enough to be skippable.
+    #[test]
+    fn pruned_reads_fewer_bytes_with_small_chunks() {
+        use crate::abhsf::store::store_data_chunked;
+        let coo = random_coo(47, 96, 96, 2000, (0, 0));
+        let data = AbhsfData::from_coo(&coo, 8, &CostModel::default()).unwrap();
+        let path = tmpdir().join("rt-prune-bytes.h5spm");
+        store_data_chunked(&path, &data, 64).unwrap();
+        let read_bytes = |keep_all: bool| -> u64 {
+            let r = H5Reader::open(&path).unwrap();
+            visit_elements_pruned(
+                &r,
+                |_, c0, _, _| keep_all || c0 < 24,
+                |_, _, _| {},
+            )
+            .unwrap();
+            r.stats().bytes
+        };
+        let full = read_bytes(true);
+        let pruned = read_bytes(false);
+        assert!(
+            pruned < full,
+            "pruned read {pruned} bytes, unpruned {full}"
+        );
     }
 
     #[test]

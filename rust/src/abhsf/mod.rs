@@ -27,7 +27,7 @@ pub mod store;
 pub use block::{partition_into_blocks, Block};
 pub use cost::{choose_scheme, scheme_cost, CostModel};
 pub use data::AbhsfData;
-pub use load::{load_coo, load_csr, visit_elements};
+pub use load::{load_coo, load_csr, visit_elements, visit_elements_pruned, PruneStats};
 pub use store::{matrix_file_path, store_data};
 
 /// Block storage scheme tags, as stored in the `schemes[]` dataset.

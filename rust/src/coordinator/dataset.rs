@@ -432,6 +432,7 @@ impl Dataset {
             format: InMemFormat::Csr,
             strategy: Strategy::Auto,
             model: FsModel::anselm_lustre(),
+            prune: true,
         }
     }
 
@@ -495,24 +496,74 @@ impl Dataset {
     }
 
     /// Cost-model candidates for a different-configuration load with `p`
+    /// processes, assuming unpruned all-read-all; see
+    /// [`Dataset::predict_load`] for the pruning-aware form this
+    /// delegates to.
+    pub fn predict(&self, p: usize, model: &FsModel) -> Vec<(Strategy, f64)> {
+        self.predict_load(p, model, None, false)
+    }
+
+    /// Cost-model candidates for a different-configuration load with `p`
     /// processes: strategy → predicted makespan. I/O footprints come from
     /// the manifest's per-file byte sizes; operation counts are estimated
     /// at container chunk granularity (~512 KiB per read op plus a fixed
     /// per-dataset floor), which is coarse but strategy selection only
     /// needs the §4 *orderings*, which are byte-volume driven.
-    pub fn predict(&self, p: usize, model: &FsModel) -> Vec<(Strategy, f64)> {
+    ///
+    /// With `prune` and a target `mapping`, the all-read-all candidates
+    /// shrink: rank `r` only fetches the fraction of each stored file
+    /// whose window overlaps `mapping.rank_rect(r)` (area ratio — blocks
+    /// follow the stored window's geometry closely enough for strategy
+    /// *ordering* purposes). Irregular target mappings (no `rank_rect`)
+    /// and opaque stored windows fall back conservatively: the missing
+    /// rectangle is taken as the whole matrix. This is what moves the
+    /// [`Strategy::Auto`] decision between all-read-all and exchange once
+    /// pruning exists: pruned independent reads ~unique bytes in total
+    /// instead of `P x unique`, without exchange's element routing.
+    pub fn predict_load(
+        &self,
+        p: usize,
+        model: &FsModel,
+        mapping: Option<&dyn ProcessMapping>,
+        prune: bool,
+    ) -> Vec<(Strategy, f64)> {
         let ops_of = ops_estimate;
         let files = &self.manifest.files;
         let total_bytes = self.manifest.total_bytes();
-        let total_ops: u64 = files.iter().map(|f| ops_of(f.bytes)).sum();
         let unique = total_bytes;
         let mut out = Vec::new();
 
+        let (m, n) = (self.manifest.m.max(1), self.manifest.n.max(1));
+        let whole = (0u64, 0u64, m, n);
+        // Fraction of stored file `k` that loading rank `r` must fetch.
+        let overlap_frac = |k: usize, r: usize| -> f64 {
+            if !prune {
+                return 1.0;
+            }
+            let rect = mapping.and_then(|mp| mp.rank_rect(r)).unwrap_or(whole);
+            let window = self.manifest.mapping.rank_rect(k).unwrap_or(whole);
+            let (wr, wc, wm, wn) = window;
+            if wm == 0 || wn == 0 {
+                return 0.0;
+            }
+            let (rr, rc, rm, rn) = rect;
+            let rows = (wr + wm).min(rr + rm).saturating_sub(wr.max(rr));
+            let cols = (wc + wn).min(rc + rn).saturating_sub(wc.max(rc));
+            (rows * cols) as f64 / (wm * wn) as f64
+        };
+
         let all_read_all: Vec<RankLoadProfile> = (0..p)
-            .map(|_| RankLoadProfile {
-                opens: files.len() as u64,
-                ops: total_ops,
-                bytes: total_bytes,
+            .map(|r| {
+                let mut prof = RankLoadProfile {
+                    opens: files.len() as u64,
+                    ..RankLoadProfile::default()
+                };
+                for (k, f) in files.iter().enumerate() {
+                    let bytes = (f.bytes as f64 * overlap_frac(k, r)) as u64;
+                    prof.bytes += bytes;
+                    prof.ops += ops_of(bytes);
+                }
+                prof
             })
             .collect();
         let indep = model
@@ -584,6 +635,7 @@ pub struct LoadPlan<'d> {
     format: InMemFormat,
     strategy: Strategy,
     model: FsModel,
+    prune: bool,
 }
 
 impl<'d> LoadPlan<'d> {
@@ -619,6 +671,17 @@ impl<'d> LoadPlan<'d> {
     /// paper-calibrated Anselm/Lustre constants).
     pub fn fs_model(mut self, model: FsModel) -> Self {
         self.model = model;
+        self
+    }
+
+    /// Block-pruned different-configuration reading (default `true`):
+    /// each rank consults the per-file block directories and fetches only
+    /// blocks whose rectangle may intersect its mapping region. Exact for
+    /// rectangular target mappings, a conservative no-op for irregular
+    /// ones; `prune(false)` restores the paper's literal decode-everything
+    /// §3 loop (useful for A/B measurements, see `benches/pruning.rs`).
+    pub fn prune(mut self, prune: bool) -> Self {
+        self.prune = prune;
         self
     }
 
@@ -660,7 +723,9 @@ impl<'d> LoadPlan<'d> {
 
         match self.strategy {
             Strategy::Auto => {
-                let predicted = self.dataset.predict(p, &self.model);
+                let predicted =
+                    self.dataset
+                        .predict_load(p, &self.model, self.mapping.as_deref(), self.prune);
                 let mut labeled: Vec<(String, f64)> = Vec::with_capacity(predicted.len() + 1);
                 if same_config {
                     labeled.push((
@@ -724,6 +789,7 @@ impl<'d> LoadPlan<'d> {
                         IoStrategy::Independent
                     },
                     format: self.format,
+                    prune: self.prune,
                 },
                 unique,
             )?,
@@ -734,6 +800,7 @@ impl<'d> LoadPlan<'d> {
                 stored_files,
                 self.format,
                 unique,
+                (self.dataset.manifest.m, self.dataset.manifest.n, self.dataset.manifest.z),
             )?,
         };
         Ok(out)
@@ -841,6 +908,65 @@ mod tests {
         };
         let text = bad.to_json().to_string();
         assert!(DatasetManifest::from_json(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    /// Pruned all-read-all predictions shrink with a rectangular target
+    /// mapping — the input that can flip Auto between all-read-all and
+    /// exchange — and degrade gracefully to the unpruned figures when
+    /// the mapping offers no rectangles.
+    #[test]
+    fn predict_load_accounts_for_pruning() {
+        let files: Vec<StoredFile> = (0..8)
+            .map(|_| StoredFile {
+                bytes: 1 << 30,
+                nnz: 50_000_000,
+            })
+            .collect();
+        let m = 1u64 << 20;
+        let ds = Dataset {
+            dir: PathBuf::from("/nonexistent"),
+            manifest: DatasetManifest {
+                nprocs: 8,
+                mapping: MappingDesc::Rowwise {
+                    m,
+                    n: m,
+                    starts: (0..=8).map(|k| k * (m / 8)).collect(),
+                },
+                m,
+                n: m,
+                z: 8 * 50_000_000,
+                block_size: 64,
+                files,
+            },
+        };
+        let model = FsModel::anselm_lustre();
+        let p = 16;
+        let unpruned = ds.predict(p, &model);
+        let colwise: crate::mapping::Colwise = crate::mapping::Colwise::regular(m, m, p);
+        let pruned = ds.predict_load(p, &model, Some(&colwise), true);
+        let find = |v: &[(Strategy, f64)], s: Strategy| {
+            v.iter().find(|(c, _)| *c == s).map(|(_, t)| *t).unwrap()
+        };
+        // Pruning strictly cheapens the all-read-all candidates...
+        assert!(find(&pruned, Strategy::Independent) < find(&unpruned, Strategy::Independent));
+        assert!(find(&pruned, Strategy::Collective) < find(&unpruned, Strategy::Collective));
+        // ...and leaves exchange alone (it already reads each byte once).
+        let e0 = find(&unpruned, Strategy::Exchange);
+        let e1 = find(&pruned, Strategy::Exchange);
+        assert!((e0 - e1).abs() < 1e-12);
+        // Unpruned, Auto preferred exchange; pruned all-read-all reads
+        // ~the same unique bytes without routing, so the decision flips.
+        assert!(e0 < find(&unpruned, Strategy::Independent));
+        assert!(find(&pruned, Strategy::Independent) < e1);
+        // Irregular target mapping: conservative fallback = unpruned.
+        let cyclic = crate::mapping::CyclicRows { m, n: m, p };
+        let fallback = ds.predict_load(p, &model, Some(&cyclic), true);
+        for &(s, t) in &fallback {
+            assert!(
+                (t - find(&unpruned, s)).abs() < 1e-9,
+                "{s:?} fallback diverged"
+            );
+        }
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::abhsf::{load_coo, load_csr, matrix_file_path, visit_elements};
+use crate::abhsf::{load_coo, load_csr, matrix_file_path, visit_elements, visit_elements_pruned};
 use crate::coordinator::cluster::{Cluster, Msg};
 use crate::coordinator::error::DatasetError;
 use crate::coordinator::metrics::LoadReport;
@@ -92,6 +92,13 @@ pub struct DiffLoadOptions {
     pub strategy: IoStrategy,
     /// Requested in-memory format.
     pub format: InMemFormat,
+    /// Block-pruned reading: consult the block directory first and fetch
+    /// only blocks whose rectangle may intersect this rank's region
+    /// (exact for rectangular mappings, conservative no-op for irregular
+    /// ones). Decodes strictly fewer elements whenever the target mapping
+    /// localizes ranks; `false` restores the paper's literal
+    /// decode-everything §3 loop.
+    pub prune: bool,
 }
 
 /// Sum of on-disk sizes of the stored files (distinct bytes; every re-read
@@ -206,12 +213,31 @@ pub(crate) fn different_config_impl(
             global.get_or_insert((hdr.info.m, hdr.info.n, hdr.info.z));
             let rank = ctx.rank;
             let map = mapping.as_ref();
-            // Keep only elements mapped to this rank (paper §3 step 2).
-            visit_elements(&reader, |i, j, v| {
-                if map.owner(i, j) == rank {
-                    mine.push((i, j, v));
-                }
-            })?;
+            if opts_c.prune {
+                // Block-pruned §3: skip whole blocks whose rectangle
+                // cannot map anything to this rank, then filter the
+                // surviving elements exactly as below (intersection is
+                // necessary, not sufficient, for ownership).
+                let ps = visit_elements_pruned(
+                    &reader,
+                    |r0, c0, rows, cols| map.intersects(rank, (r0, c0, rows, cols)),
+                    |i, j, v| {
+                        if map.owner(i, j) == rank {
+                            mine.push((i, j, v));
+                        }
+                    },
+                )?;
+                io.blocks_total += ps.blocks_total;
+                io.blocks_skipped += ps.blocks_skipped;
+                io.bytes_skipped += ps.bytes_skipped;
+            } else {
+                // Keep only elements mapped to this rank (paper §3 step 2).
+                visit_elements(&reader, |i, j, v| {
+                    if map.owner(i, j) == rank {
+                        mine.push((i, j, v));
+                    }
+                })?;
+            }
             io.add(reader.stats());
         }
         let (m, n, z) = global.ok_or_else(|| anyhow::anyhow!("no stored files"))?;
@@ -251,10 +277,20 @@ pub fn load_exchange(
     format: InMemFormat,
 ) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
     let unique = unique_bytes(dir, stored_files)?;
-    exchange_impl(cluster, dir, mapping, stored_files, format, unique)
+    // The shim has no manifest to take the global dims from; read them
+    // from file 0's header up front (outside the timed region and the
+    // per-rank I/O accounting, like the other shims' metadata passes).
+    let reader = H5Reader::open(matrix_file_path(dir, 0))?;
+    let hdr = crate::abhsf::load::read_header(&reader)?;
+    let dims = (hdr.info.m, hdr.info.n, hdr.info.z);
+    exchange_impl(cluster, dir, mapping, stored_files, format, unique, dims)
 }
 
-/// See [`same_config_impl`] for the `unique` contract.
+/// See [`same_config_impl`] for the `unique` contract. `dims` is the
+/// global `(m, n, z)` from the dataset manifest: a rank that reads no file
+/// (P_load > P_store) must not open a container just for the dims — that
+/// open would either go uncounted or skew the per-rank I/O trace.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn exchange_impl(
     cluster: &Cluster,
     dir: &Path,
@@ -262,6 +298,7 @@ pub(crate) fn exchange_impl(
     stored_files: usize,
     format: InMemFormat,
     unique: u64,
+    dims: (u64, u64, u64),
 ) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
     if cluster.nprocs() != mapping.nprocs() {
         return Err(DatasetError::MappingMismatch {
@@ -283,7 +320,6 @@ pub(crate) fn exchange_impl(
         let rank = ctx.rank;
         let map = mapping.as_ref();
         let mut io = IoStats::default();
-        let mut global: Option<(u64, u64, u64)> = None;
         // Reader half: stream my assigned files, batch per destination.
         // `mine`/`done` live in cells so the inbox can be drained while a
         // send is blocked (see `send_draining`: a cycle of ranks blocked
@@ -300,8 +336,6 @@ pub(crate) fn exchange_impl(
         while file < stored_files {
             let path = matrix_file_path(&dirb, file);
             let reader = H5Reader::open(&path)?;
-            let hdr = crate::abhsf::load::read_header(&reader)?;
-            global.get_or_insert((hdr.info.m, hdr.info.n, hdr.info.z));
             visit_elements(&reader, |i, j, v| {
                 let owner = map.owner(i, j);
                 if owner == rank {
@@ -335,16 +369,10 @@ pub(crate) fn exchange_impl(
             handle(ctx.recv());
         }
         let mine = mine.into_inner();
-        // Global dims: ranks that read no file learn them from peers'
-        // silence — take them from any file if unread.
-        let (m, n, z) = match global {
-            Some(g) => g,
-            None => {
-                let reader = H5Reader::open(matrix_file_path(&dirb, 0))?;
-                let hdr = crate::abhsf::load::read_header(&reader)?;
-                (hdr.info.m, hdr.info.n, hdr.info.z)
-            }
-        };
+        // Global dims come from the dataset manifest — a rank that read
+        // no file must not open one just for the header (it used to, and
+        // the open went uncounted in its IoStats).
+        let (m, n, z) = dims;
         let loaded = build_local(mine, map, rank, m, n, z, format);
         let blocked = ctx
             .send_blocked_ns
@@ -650,8 +678,9 @@ mod tests {
 
     #[test]
     fn diff_config_reads_p_times_the_bytes() {
-        // The central quantitative fact behind Figure 1: all-read-all
-        // moves P_load x unique bytes, same-config moves them once.
+        // The central quantitative fact behind Figure 1: *unpruned*
+        // all-read-all moves P_load x unique bytes, same-config moves
+        // them once. Pruning can only lower the all-read-all side.
         let p_store = 3;
         let (dir, _gen, n) = setup("bytes", p_store);
         let dataset = Dataset::open(&dir).unwrap();
@@ -668,16 +697,118 @@ mod tests {
             .load()
             .mapping(&mapping)
             .strategy(Strategy::Independent)
+            .prune(false)
             .format(InMemFormat::Csr)
             .run(&cluster)
             .unwrap();
         assert_eq!(same.unique_bytes, diff.unique_bytes);
         // Same-config readers touch roughly the unique bytes (payload +
-        // directory); diff-config touches ~P_load times as much.
+        // directory); unpruned diff-config touches ~P_load times as much.
         let ratio = diff.total_read_bytes() as f64 / same.total_read_bytes() as f64;
         assert!(
             (ratio - p_load as f64).abs() < 0.2 * p_load as f64,
             "ratio {ratio} expected ~{p_load}"
         );
+        let (_, pruned) = dataset
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Independent)
+            .format(InMemFormat::Csr)
+            .run(&cluster)
+            .unwrap();
+        assert!(
+            pruned.total_read_bytes() <= diff.total_read_bytes(),
+            "pruned {} > unpruned {}",
+            pruned.total_read_bytes(),
+            diff.total_read_bytes()
+        );
+    }
+
+    /// Acceptance: a Rowwise-stored → Colwise-loaded remap prunes — the
+    /// skip counters are nonzero (every stored block is nonzero, so a
+    /// skipped block is strictly fewer decoded elements) while the loaded
+    /// matrix is identical to the unpruned load's.
+    #[test]
+    fn pruned_remap_skips_blocks_and_matches_unpruned() {
+        let p_store = 4;
+        let (dir, gen, n) = setup("prune-remap", p_store);
+        let dataset = Dataset::open(&dir).unwrap();
+        let p_load = 4;
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+        let cluster = Cluster::new(p_load, 64);
+        let mut loads = Vec::new();
+        for (prune, strategy) in [
+            (true, Strategy::Independent),
+            (false, Strategy::Independent),
+            (true, Strategy::Collective),
+        ] {
+            let (mats, report) = dataset
+                .load()
+                .mapping(&mapping)
+                .strategy(strategy)
+                .prune(prune)
+                .format(InMemFormat::Coo)
+                .run(&cluster)
+                .unwrap();
+            assert_eq!(report.total_nnz(), gen.nnz());
+            if prune {
+                assert!(
+                    report.blocks_skipped() > 0,
+                    "remap must skip blocks: {:?}",
+                    report.prune_ratio()
+                );
+                assert!(report.bytes_skipped() > 0);
+                assert!(report.blocks_total() > report.blocks_skipped());
+                for io in &report.per_rank_io {
+                    assert_eq!(io.opens as usize, p_store, "pruning keeps all opens");
+                }
+            } else {
+                assert_eq!(report.blocks_total(), 0, "unpruned loads don't count blocks");
+                assert_eq!(report.blocks_skipped(), 0);
+            }
+            let mut elems: Vec<(u64, u64, f64)> = Vec::new();
+            for m in mats {
+                let coo = m.into_coo();
+                let (ro, co) = (coo.info.m_offset, coo.info.n_offset);
+                for (i, j, v) in coo.iter() {
+                    elems.push((i + ro, j + co, v));
+                }
+            }
+            elems.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            loads.push(elems);
+        }
+        assert_eq!(loads[0], loads[1], "pruned != unpruned (independent)");
+        assert_eq!(loads[0], loads[2], "independent != collective (pruned)");
+    }
+
+    /// Regression (exchange): total opens stay exactly `p_store` even
+    /// when `p_load > p_store` — idle ranks used to open `matrix-0` for
+    /// the global dims without counting it.
+    #[test]
+    fn exchange_opens_exactly_p_store_files_with_idle_ranks() {
+        let p_store = 2;
+        let (dir, gen, n) = setup("exch-idle", p_store);
+        let p_load = 5; // ranks 2..5 read no file
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+        let cluster = Cluster::new(p_load, 8);
+        let (mats, report) = Dataset::open(&dir)
+            .unwrap()
+            .load()
+            .mapping(&mapping)
+            .strategy(Strategy::Exchange)
+            .format(InMemFormat::Csr)
+            .run(&cluster)
+            .unwrap();
+        assert_eq!(report.total_nnz(), gen.nnz());
+        let opens: u64 = report.per_rank_io.iter().map(|s| s.opens).sum();
+        assert_eq!(opens as usize, p_store, "every file opened exactly once");
+        for (rank, io) in report.per_rank_io.iter().enumerate().skip(p_store) {
+            assert_eq!(io.opens, 0, "idle rank {rank} must not open files");
+            assert_eq!(io.bytes, 0, "idle rank {rank} must not read");
+        }
+        // Idle ranks still produce valid (column-strip) submatrices.
+        for m in &mats {
+            m.validate().unwrap();
+        }
     }
 }

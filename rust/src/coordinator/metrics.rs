@@ -83,6 +83,29 @@ impl LoadReport {
         self.per_rank_io.iter().map(|s| s.bytes).sum()
     }
 
+    /// Blocks examined across all ranks (block-pruned loads only; zero
+    /// for the same-config fast path and unpruned loads).
+    pub fn blocks_total(&self) -> u64 {
+        self.per_rank_io.iter().map(|s| s.blocks_total).sum()
+    }
+
+    /// Blocks skipped across all ranks without fetching their payload.
+    pub fn blocks_skipped(&self) -> u64 {
+        self.per_rank_io.iter().map(|s| s.blocks_skipped).sum()
+    }
+
+    /// Payload bytes of the skipped blocks across all ranks.
+    pub fn bytes_skipped(&self) -> u64 {
+        self.per_rank_io.iter().map(|s| s.bytes_skipped).sum()
+    }
+
+    /// Fraction of examined blocks that were skipped, `None` when the
+    /// load did not go through the pruned decoder.
+    pub fn prune_ratio(&self) -> Option<f64> {
+        let total = self.blocks_total();
+        (total > 0).then(|| self.blocks_skipped() as f64 / total as f64)
+    }
+
     /// Extract the per-rank footprints for the cost model.
     pub fn profiles(&self) -> Vec<RankLoadProfile> {
         self.per_rank_io
@@ -116,11 +139,15 @@ mod tests {
                     bytes: 1000,
                     ops: 10,
                     opens: 1,
+                    ..IoStats::default()
                 },
                 IoStats {
                     bytes: 2000,
                     ops: 20,
                     opens: 1,
+                    blocks_total: 8,
+                    blocks_skipped: 6,
+                    bytes_skipped: 500,
                 },
             ],
             per_rank_nnz: vec![50, 70],
@@ -136,6 +163,16 @@ mod tests {
         let r = dummy_report();
         assert_eq!(r.total_nnz(), 120);
         assert_eq!(r.total_read_bytes(), 3000);
+        assert_eq!(r.blocks_total(), 8);
+        assert_eq!(r.blocks_skipped(), 6);
+        assert_eq!(r.bytes_skipped(), 500);
+        assert_eq!(r.prune_ratio(), Some(0.75));
+        let mut unpruned = dummy_report();
+        for io in &mut unpruned.per_rank_io {
+            io.blocks_total = 0;
+            io.blocks_skipped = 0;
+        }
+        assert_eq!(unpruned.prune_ratio(), None);
     }
 
     #[test]

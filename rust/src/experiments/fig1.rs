@@ -75,6 +75,24 @@ pub struct Fig1Row {
     pub read_bytes: u64,
     /// Loaded nonzeros.
     pub nnz: u64,
+    /// Blocks examined across ranks (block-pruned scenarios; 0 otherwise).
+    pub blocks_total: u64,
+    /// Blocks skipped across ranks without fetching payload.
+    pub blocks_skipped: u64,
+}
+
+impl Fig1Row {
+    /// `skipped/total` as a percentage string, `-` for unpruned paths.
+    pub fn prune_label(&self) -> String {
+        if self.blocks_total == 0 {
+            "-".into()
+        } else {
+            format!(
+                "{:.1}%",
+                self.blocks_skipped as f64 / self.blocks_total as f64 * 100.0
+            )
+        }
+    }
 }
 
 /// Run the experiment; returns all rows (and prints them when `verbose`).
@@ -139,15 +157,26 @@ pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>>
             sim_s: report.simulate(&model).makespan_s,
             read_bytes: report.total_read_bytes(),
             nnz: report.total_nnz(),
+            blocks_total: report.blocks_total(),
+            blocks_skipped: report.blocks_skipped(),
         });
     }
 
     // Case 2: different configuration (column-wise regular), both
-    // strategies, plus the exchange extension.
+    // strategies, plus the exchange extension. The three paper-literal
+    // series run with pruning OFF — Figure 1's shape claims (independent
+    // ~flat, P x unique bytes) describe the decode-everything §3 loop;
+    // a fourth series shows what block pruning does to the same remap.
     for &p_load in &cfg.p_loads {
         let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
         let cluster = Cluster::new(p_load, 64);
-        for strategy in [Strategy::Independent, Strategy::Collective, Strategy::Exchange] {
+        let series = [
+            (Strategy::Independent, false, "diff/independent".to_string()),
+            (Strategy::Collective, false, "diff/collective".to_string()),
+            (Strategy::Exchange, false, "diff/exchange".to_string()),
+            (Strategy::Independent, true, "diff/independent+prune".to_string()),
+        ];
+        for (strategy, prune, scenario) in series {
             let mut walls = Vec::new();
             let mut last = None;
             for _ in 0..cfg.reps {
@@ -156,6 +185,7 @@ pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>>
                     .nprocs(p_load)
                     .mapping(&mapping)
                     .strategy(strategy)
+                    .prune(prune)
                     .format(InMemFormat::Csr)
                     .run(&cluster)?;
                 walls.push(report.wall_s);
@@ -163,12 +193,14 @@ pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>>
             }
             let report = last.unwrap();
             rows.push(Fig1Row {
-                scenario: format!("diff/{}", strategy.label()),
+                scenario,
                 p_load,
                 wall_s: median(&mut walls),
                 sim_s: report.simulate(&model).makespan_s,
                 read_bytes: report.total_read_bytes(),
                 nnz: report.total_nnz(),
+                blocks_total: report.blocks_total(),
+                blocks_skipped: report.blocks_skipped(),
             });
         }
     }
@@ -180,6 +212,7 @@ pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>>
             "wall [s]",
             "sim Lustre [s]",
             "read",
+            "blk skip",
             "nnz",
         ]);
         for r in &rows {
@@ -189,6 +222,7 @@ pub fn run_fig1(cfg: &Fig1Config, verbose: bool) -> anyhow::Result<Vec<Fig1Row>>
                 format!("{:.4}", r.wall_s),
                 format!("{:.3}", r.sim_s),
                 human::bytes(r.read_bytes),
+                r.prune_label(),
                 human::count(r.nnz),
             ]);
         }
@@ -225,14 +259,15 @@ mod tests {
             reps: 1,
         };
         let rows = run_fig1(&cfg, false).unwrap();
-        // 1 same-config + 3 scenarios x 2 loader counts.
-        assert_eq!(rows.len(), 1 + 3 * 2);
+        // 1 same-config + 4 scenarios x 2 loader counts.
+        assert_eq!(rows.len(), 1 + 4 * 2);
         let same = rows.iter().find(|r| r.scenario == "same-config").unwrap();
         let nnz = same.nnz;
         for r in &rows {
             assert_eq!(r.nnz, nnz, "{}: loaded nnz differs", r.scenario);
         }
-        // Simulated ordering (the paper's headline): same < indep < coll.
+        // Simulated ordering (the paper's headline): same < indep < coll,
+        // and the pruned series must skip blocks without reading more.
         for &p in &[2usize, 4] {
             let indep = rows
                 .iter()
@@ -244,6 +279,14 @@ mod tests {
                 .unwrap();
             assert!(same.sim_s < indep.sim_s, "P={p}");
             assert!(indep.sim_s < coll.sim_s, "P={p}");
+            let pruned = rows
+                .iter()
+                .find(|r| r.scenario == "diff/independent+prune" && r.p_load == p)
+                .unwrap();
+            assert!(pruned.blocks_skipped > 0, "P={p}: remap must prune");
+            assert!(pruned.blocks_total > pruned.blocks_skipped, "P={p}");
+            assert!(pruned.read_bytes <= indep.read_bytes, "P={p}");
+            assert_eq!(indep.blocks_total, 0, "P={p}: unpruned counts no blocks");
         }
     }
 }

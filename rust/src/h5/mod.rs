@@ -109,6 +109,17 @@ pub struct IoStats {
     pub ops: u64,
     /// Number of file opens.
     pub opens: u64,
+    /// ABHSF blocks listed in the directories of the files this counter
+    /// set covers (block-pruned loading only; zero elsewhere).
+    pub blocks_total: u64,
+    /// ABHSF blocks whose payload was neither fetched nor decoded because
+    /// the block rectangle cannot intersect the reading rank's region
+    /// (block-pruned loading only; zero elsewhere).
+    pub blocks_skipped: u64,
+    /// Payload bytes of the skipped blocks (logical element-level bytes,
+    /// independent of container chunk granularity; block-pruned loading
+    /// only, zero elsewhere).
+    pub bytes_skipped: u64,
 }
 
 impl IoStats {
@@ -117,5 +128,8 @@ impl IoStats {
         self.bytes += other.bytes;
         self.ops += other.ops;
         self.opens += other.opens;
+        self.blocks_total += other.blocks_total;
+        self.blocks_skipped += other.blocks_skipped;
+        self.bytes_skipped += other.bytes_skipped;
     }
 }

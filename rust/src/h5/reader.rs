@@ -110,6 +110,7 @@ impl H5Reader {
                 // Superblock + directory reads.
                 bytes: 24 + dir_len + 4,
                 ops: 2,
+                ..IoStats::default()
             }),
             verify_checksums: true,
         })
@@ -247,6 +248,84 @@ impl H5Reader {
         Ok(out)
     }
 
+    /// Read many hyperslabs of one dataset in a single forward pass.
+    ///
+    /// `ranges` must be ascending and non-overlapping `(start, count)`
+    /// pairs (element units). Each chunk of the dataset is read **at most
+    /// once** no matter how many ranges touch it, and chunks touched by no
+    /// range are not read at all — this is the I/O primitive behind
+    /// block-pruned loading, where per-block [`H5Reader::read_slice`]
+    /// calls would re-fetch shared chunks once per block.
+    ///
+    /// Returns one vector per requested range, in order.
+    pub fn read_ranges<T: Scalar>(
+        &self,
+        name: &str,
+        ranges: &[(u64, u64)],
+    ) -> Result<Vec<Vec<T>>> {
+        let e = self.check_dtype::<T>(name)?.clone();
+        let mut prev_end = 0u64;
+        for &(start, count) in ranges {
+            if start < prev_end {
+                return Err(H5Error::Usage(format!(
+                    "read_ranges({name}): ranges not ascending/disjoint at {start}"
+                )));
+            }
+            if start + count > e.total_elems {
+                return Err(H5Error::OutOfBounds {
+                    name: name.into(),
+                    start,
+                    count,
+                    len: e.total_elems,
+                });
+            }
+            prev_end = start + count;
+        }
+        let mut out: Vec<Vec<T>> = ranges
+            .iter()
+            .map(|&(_, count)| Vec::with_capacity(count as usize))
+            .collect();
+        // Walk chunks and ranges in lockstep; `next` is the first range
+        // not yet fully served.
+        let mut next = 0usize;
+        let mut chunk_start = 0u64;
+        for (ci, c) in e.chunks.iter().enumerate() {
+            let chunk_end = chunk_start + c.elems;
+            // Skip ranges that end before this chunk (already served).
+            while next < ranges.len() && ranges[next].0 + ranges[next].1 <= chunk_start {
+                next += 1;
+            }
+            if next >= ranges.len() {
+                break;
+            }
+            // Does any range overlap this chunk?
+            let overlaps = ranges[next..]
+                .iter()
+                .take_while(|&&(start, _)| start < chunk_end)
+                .any(|&(_, count)| count > 0);
+            if !overlaps {
+                chunk_start = chunk_end;
+                continue;
+            }
+            let bytes = self.read_chunk_bytes(name, ci, c, T::DTYPE.size())?;
+            let all = decode_slice::<T>(&bytes);
+            for (k, &(start, count)) in ranges.iter().enumerate().skip(next) {
+                if start >= chunk_end {
+                    break;
+                }
+                let end = start + count;
+                if end <= chunk_start || count == 0 {
+                    continue;
+                }
+                let lo = start.max(chunk_start) - chunk_start;
+                let hi = end.min(chunk_end) - chunk_start;
+                out[k].extend_from_slice(&all[lo as usize..hi as usize]);
+            }
+            chunk_start = chunk_end;
+        }
+        Ok(out)
+    }
+
     /// I/O counters accumulated by this reader.
     pub fn stats(&self) -> IoStats {
         *self.stats.borrow()
@@ -291,4 +370,94 @@ fn read_u64(f: &mut File) -> Result<u64> {
     let mut b = [0u8; 8];
     f.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::h5::writer::H5Writer;
+
+    fn ranged_file(name: &str, len: u32, chunk: u64) -> PathBuf {
+        let dir = std::env::temp_dir().join("abhsf-h5-reader-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let data: Vec<u32> = (0..len).collect();
+        let mut w = H5Writer::create(&path).unwrap();
+        w.set_chunk_elems(chunk);
+        w.write_dataset("d", &data).unwrap();
+        w.finish().unwrap();
+        path
+    }
+
+    #[test]
+    fn read_ranges_matches_read_slice() {
+        let path = ranged_file("ranges.h5spm", 1000, 64);
+        let r = H5Reader::open(&path).unwrap();
+        let ranges = [(0u64, 10u64), (10, 5), (70, 200), (999, 1)];
+        let got = r.read_ranges::<u32>("d", &ranges).unwrap();
+        assert_eq!(got.len(), ranges.len());
+        for (out, &(start, count)) in got.iter().zip(&ranges) {
+            let want = r.read_slice::<u32>("d", start, count).unwrap();
+            assert_eq!(*out, want, "range ({start},{count})");
+        }
+        // Empty ranges yield empty vectors.
+        let got = r.read_ranges::<u32>("d", &[(5, 0), (42, 3)]).unwrap();
+        assert!(got[0].is_empty());
+        assert_eq!(got[1], vec![42, 43, 44]);
+        assert!(r.read_ranges::<u32>("d", &[]).unwrap().is_empty());
+    }
+
+    /// Chunks shared by several ranges are fetched once, and untouched
+    /// chunks are never fetched — the byte-saving contract of pruning.
+    #[test]
+    fn read_ranges_reads_each_needed_chunk_once() {
+        let path = ranged_file("ranges-bytes.h5spm", 1000, 100);
+        // Two ranges in chunk 0, nothing until a range in chunk 9.
+        let r = H5Reader::open(&path).unwrap();
+        let base = r.stats().bytes;
+        let got = r
+            .read_ranges::<u32>("d", &[(3, 4), (50, 10), (950, 20)])
+            .unwrap();
+        assert_eq!(got[0], vec![3, 4, 5, 6]);
+        assert_eq!(got[2][0], 950);
+        let payload = r.stats().bytes - base;
+        // Exactly two 100-element u32 chunks.
+        assert_eq!(payload, 2 * 100 * 4);
+        assert_eq!(r.stats().ops, 2 + 2);
+        // Reference: read_all touches all ten chunks.
+        let r2 = H5Reader::open(&path).unwrap();
+        let base2 = r2.stats().bytes;
+        r2.read_all::<u32>("d").unwrap();
+        assert_eq!(r2.stats().bytes - base2, 1000 * 4);
+    }
+
+    #[test]
+    fn read_ranges_rejects_bad_input() {
+        let path = ranged_file("ranges-bad.h5spm", 100, 10);
+        let r = H5Reader::open(&path).unwrap();
+        assert!(matches!(
+            r.read_ranges::<u32>("d", &[(90, 20)]),
+            Err(H5Error::OutOfBounds { .. })
+        ));
+        assert!(matches!(
+            r.read_ranges::<u32>("d", &[(10, 10), (5, 2)]),
+            Err(H5Error::Usage(_))
+        ));
+        // Overlap is also rejected.
+        assert!(matches!(
+            r.read_ranges::<u32>("d", &[(0, 10), (9, 2)]),
+            Err(H5Error::Usage(_))
+        ));
+    }
+
+    #[test]
+    fn read_ranges_spanning_chunk_boundaries() {
+        let path = ranged_file("ranges-span.h5spm", 300, 64);
+        let r = H5Reader::open(&path).unwrap();
+        let got = r.read_ranges::<u32>("d", &[(60, 80), (200, 100)]).unwrap();
+        let want: Vec<u32> = (60..140).collect();
+        assert_eq!(got[0], want);
+        let want: Vec<u32> = (200..300).collect();
+        assert_eq!(got[1], want);
+    }
 }

@@ -77,7 +77,8 @@ fn print_usage() {
          \x20 fig1       regenerate the paper's Figure 1 (quick profile)\n\n\
          Common options: --seed-size N --seed cage|diag|random|rmat --order D\n\
          \x20               --procs P --block-size S --dir PATH --mapping rowwise|colwise|2d\n\
-         \x20               --strategy auto|independent|collective|exchange --format csr|coo\n"
+         \x20               --strategy auto|independent|collective|exchange --format csr|coo\n\
+         \x20               --no-prune (disable block-pruned diff-config reading)\n"
     );
 }
 
@@ -227,7 +228,7 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
 }
 
 fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
-    let a = Args::parse("abhsf load", argv, &["same-config"])?;
+    let a = Args::parse("abhsf load", argv, &["same-config", "no-prune"])?;
     let dir = PathBuf::from(a.str_or("dir", "matrix"));
     let dataset = Dataset::open(&dir)?;
     let format: InMemFormat = a.str_or("format", "csr").parse()?;
@@ -255,6 +256,7 @@ fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
         .mapping(&mapping)
         .format(format)
         .strategy(strategy)
+        .prune(!a.flag("no-prune"))
         .run(&cluster)?;
     print_load_report(&report, &model);
     Ok(())
@@ -271,6 +273,15 @@ fn print_load_report(report: &abhsf::coordinator::LoadReport, model: &FsModel) {
         human::bytes(report.total_read_bytes())
     );
     println!("wall time       : {:.4} s", report.wall_s);
+    if let Some(ratio) = report.prune_ratio() {
+        println!(
+            "block pruning   : {} of {} blocks skipped ({:.1}%), {} payload skipped",
+            human::count(report.blocks_skipped()),
+            human::count(report.blocks_total()),
+            ratio * 100.0,
+            human::bytes(report.bytes_skipped()),
+        );
+    }
     println!(
         "sim (Lustre)    : {:.3} s  [disk {:.3} s, sync {:.3} s]",
         sim.makespan_s, sim.disk_s, sim.sync_s

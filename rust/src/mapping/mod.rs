@@ -33,6 +33,31 @@ pub trait ProcessMapping: Send + Sync {
     /// Scheme label for logs and bench tables.
     fn label(&self) -> String;
 
+    /// The *exact* owned region of `rank` as `(r0, c0, rows, cols)`, when
+    /// ownership is a contiguous rectangle: every element owned by `rank`
+    /// lies inside the rectangle AND every element inside is owned by
+    /// `rank`. Mappings with non-rectangular ownership (cyclic, arbitrary
+    /// closures) return `None`, which disables block pruning for them but
+    /// keeps loading correct (see [`ProcessMapping::intersects`]).
+    fn rank_rect(&self, rank: usize) -> Option<(u64, u64, u64, u64)> {
+        let _ = rank;
+        None
+    }
+
+    /// Whether any element of the rectangle `rect = (r0, c0, rows, cols)`
+    /// *may* be owned by `rank`. The contract is conservative: `false` is
+    /// only allowed when provably no element of `rect` maps to `rank`;
+    /// mappings without an exact [`ProcessMapping::rank_rect`] must answer
+    /// `true`. Block-pruned loading relies on exactly this one-sided
+    /// guarantee — a spurious `true` costs decode time, a wrong `false`
+    /// would silently drop elements.
+    fn intersects(&self, rank: usize, rect: (u64, u64, u64, u64)) -> bool {
+        match self.rank_rect(rank) {
+            Some(own) => rects_intersect(own, rect),
+            None => true,
+        }
+    }
+
     /// Self-describing descriptor of this mapping, persisted in the
     /// dataset manifest so a later load can *discover* the storing
     /// configuration instead of being told. Mappings that cannot be
@@ -140,6 +165,42 @@ impl MappingDesc {
         self == other
     }
 
+    /// The exact owned rectangle of `rank` under the described mapping,
+    /// with the same contract as [`ProcessMapping::rank_rect`]: `Some`
+    /// only for rectangular-ownership kinds (row-wise, column-wise, 2D
+    /// block), `None` for cyclic and opaque descriptors. This is the
+    /// serialization leg of the pruning contract — a descriptor parsed
+    /// back from `dataset.json` answers the same region queries as the
+    /// live mapping it was written from, so block pruning survives the
+    /// manifest round-trip.
+    pub fn rank_rect(&self, rank: usize) -> Option<(u64, u64, u64, u64)> {
+        match self {
+            MappingDesc::Rowwise { n, starts, .. } => {
+                let (r0, r1) = (*starts.get(rank)?, *starts.get(rank + 1)?);
+                Some((r0, 0, r1 - r0, *n))
+            }
+            MappingDesc::Colwise { m, starts, .. } => {
+                let (c0, c1) = (*starts.get(rank)?, *starts.get(rank + 1)?);
+                Some((0, c0, *m, c1 - c0))
+            }
+            MappingDesc::Block2d { m, n, pr, pc } => {
+                if rank >= pr * pc {
+                    return None;
+                }
+                let row_starts = even_starts(*m, *pr);
+                let col_starts = even_starts(*n, *pc);
+                let (bi, bj) = (rank / pc, rank % pc);
+                Some((
+                    row_starts[bi],
+                    col_starts[bj],
+                    row_starts[bi + 1] - row_starts[bi],
+                    col_starts[bj + 1] - col_starts[bj],
+                ))
+            }
+            MappingDesc::CyclicRows { .. } | MappingDesc::Opaque { .. } => None,
+        }
+    }
+
     /// Reconstruct the mapping this descriptor describes; `None` for
     /// [`MappingDesc::Opaque`].
     pub fn build(&self) -> Option<Arc<dyn ProcessMapping>> {
@@ -233,6 +294,17 @@ impl MappingDesc {
             other => return Err(format!("unknown mapping kind {other:?}")),
         })
     }
+}
+
+/// Whether two `(r0, c0, rows, cols)` rectangles share at least one cell.
+/// Empty rectangles (zero rows or columns) intersect nothing.
+pub fn rects_intersect(a: (u64, u64, u64, u64), b: (u64, u64, u64, u64)) -> bool {
+    let (ar, ac, am, an) = a;
+    let (br, bc, bm, bn) = b;
+    if am == 0 || an == 0 || bm == 0 || bn == 0 {
+        return false;
+    }
+    ar < br + bm && br < ar + am && ac < bc + bn && bc < ac + an
 }
 
 /// Build a [`LocalInfo`] for `rank` from a mapping's declared window.
@@ -340,6 +412,11 @@ impl ProcessMapping for Rowwise {
         format!("row-wise(P={})", self.nprocs())
     }
 
+    fn rank_rect(&self, rank: usize) -> Option<(u64, u64, u64, u64)> {
+        // Contiguous row chunk: the declared window is the exact region.
+        Some(self.window(rank))
+    }
+
     fn descriptor(&self) -> MappingDesc {
         MappingDesc::Rowwise {
             m: self.m,
@@ -393,6 +470,10 @@ impl ProcessMapping for Colwise {
 
     fn label(&self) -> String {
         format!("col-wise(P={})", self.nprocs())
+    }
+
+    fn rank_rect(&self, rank: usize) -> Option<(u64, u64, u64, u64)> {
+        Some(self.window(rank))
     }
 
     fn descriptor(&self) -> MappingDesc {
@@ -463,6 +544,10 @@ impl ProcessMapping for Block2d {
 
     fn label(&self) -> String {
         format!("2d({}x{})", self.pr, self.pc)
+    }
+
+    fn rank_rect(&self, rank: usize) -> Option<(u64, u64, u64, u64)> {
+        Some(self.window(rank))
     }
 
     fn descriptor(&self) -> MappingDesc {
@@ -712,6 +797,109 @@ mod tests {
         let json = desc.to_json().to_string();
         let back = MappingDesc::from_json(&Json::parse(&json).unwrap()).unwrap();
         assert_eq!(back, desc);
+    }
+
+    /// `rank_rect` must be exact where offered: every owned element falls
+    /// inside the rectangle and every rectangle cell is owned.
+    #[test]
+    fn rank_rect_exact_for_rectangular_mappings() {
+        let mappings: Vec<Box<dyn ProcessMapping>> = vec![
+            Box::new(Rowwise::regular(10, 6, 3)),
+            Box::new(Rowwise::balanced_by_nnz(12, 9, 4, |r| r + 1)),
+            Box::new(Colwise::regular(5, 12, 4)),
+            Box::new(Block2d::regular(8, 10, 2, 3)),
+        ];
+        for mapping in &mappings {
+            // All test mappings above cover the whole matrix; derive
+            // global bounds from the declared windows.
+            let mut m = 0;
+            let mut n = 0;
+            for k in 0..mapping.nprocs() {
+                let (r0, c0, ml, nl) = mapping.window(k);
+                m = m.max(r0 + ml);
+                n = n.max(c0 + nl);
+            }
+            for k in 0..mapping.nprocs() {
+                let (r0, c0, ml, nl) = mapping.rank_rect(k).expect("rectangular mapping");
+                for i in 0..m {
+                    for j in 0..n {
+                        let inside = i >= r0 && i < r0 + ml && j >= c0 && j < c0 + nl;
+                        assert_eq!(
+                            mapping.owner(i, j) == k,
+                            inside,
+                            "{} rank {k} at ({i},{j})",
+                            mapping.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Irregular mappings answer conservatively: no rect, and
+    /// `intersects` is always true.
+    #[test]
+    fn irregular_mappings_prune_conservatively() {
+        let cyclic = CyclicRows { m: 10, n: 4, p: 3 };
+        let f = FnMapping {
+            m: 6,
+            n: 6,
+            p: 2,
+            f: |i, j| ((i + j) % 2) as usize,
+        };
+        for rank in 0..3 {
+            assert!(cyclic.rank_rect(rank).is_none());
+            assert!(cyclic.intersects(rank, (9, 3, 1, 1)));
+        }
+        assert!(f.rank_rect(0).is_none());
+        assert!(f.intersects(1, (0, 0, 1, 1)));
+    }
+
+    #[test]
+    fn intersects_matches_ownership() {
+        // A colwise mapping: rank 0 owns columns [0, 3).
+        let map = Colwise::regular(8, 12, 4);
+        assert!(map.intersects(0, (0, 0, 2, 2)));
+        assert!(map.intersects(0, (5, 2, 1, 1))); // touches column 2
+        assert!(!map.intersects(0, (0, 3, 8, 9))); // columns [3, 12)
+        assert!(!map.intersects(0, (0, 0, 0, 5))); // empty rect
+        // Block2d rank 3 of a 2x2 grid owns the lower-right quadrant.
+        let map = Block2d::regular(8, 8, 2, 2);
+        assert!(map.intersects(3, (4, 4, 1, 1)));
+        assert!(!map.intersects(3, (0, 0, 4, 4)));
+        assert!(map.intersects(3, (3, 3, 2, 2))); // straddles the seam
+    }
+
+    #[test]
+    fn rects_intersect_cases() {
+        assert!(rects_intersect((0, 0, 2, 2), (1, 1, 2, 2)));
+        assert!(!rects_intersect((0, 0, 2, 2), (2, 0, 2, 2)));
+        assert!(!rects_intersect((0, 0, 2, 2), (0, 2, 2, 2)));
+        assert!(!rects_intersect((0, 0, 0, 2), (0, 0, 2, 2)));
+        assert!(rects_intersect((5, 5, 1, 1), (0, 0, 10, 10)));
+    }
+
+    /// Descriptor rectangles agree with the live mapping's, including
+    /// after a JSON round-trip — the property pruning relies on when the
+    /// mapping is rebuilt from `dataset.json`.
+    #[test]
+    fn descriptor_rank_rect_survives_roundtrip() {
+        let mappings: Vec<Box<dyn ProcessMapping>> = vec![
+            Box::new(Rowwise::regular(10, 6, 3)),
+            Box::new(Colwise::regular(5, 12, 4)),
+            Box::new(Block2d::regular(8, 10, 2, 3)),
+            Box::new(CyclicRows { m: 10, n: 4, p: 3 }),
+        ];
+        for mapping in &mappings {
+            let desc = mapping.descriptor();
+            let json = desc.to_json().to_string();
+            let back = MappingDesc::from_json(&Json::parse(&json).unwrap()).unwrap();
+            for k in 0..mapping.nprocs() {
+                assert_eq!(back.rank_rect(k), mapping.rank_rect(k), "rank {k}");
+                assert_eq!(desc.rank_rect(k), mapping.rank_rect(k), "rank {k}");
+            }
+            assert_eq!(back.rank_rect(mapping.nprocs() + 1), None);
+        }
     }
 
     #[test]

@@ -73,6 +73,43 @@ fn store_info_load_cycle() {
 }
 
 #[test]
+fn load_reports_block_pruning_and_auto_decision() {
+    let dir = std::env::temp_dir().join(format!("abhsf-cli-prune-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_str().unwrap();
+    run_ok(&[
+        "store", "--dir", dirs, "--seed-size", "8", "--procs", "3", "--block-size", "8",
+    ]);
+
+    // A rowwise->colwise remap prunes blocks; the report must say so.
+    let out = run_ok(&[
+        "load", "--dir", dirs, "--procs", "4", "--mapping", "colwise", "--strategy",
+        "independent",
+    ]);
+    assert!(out.contains("block pruning"), "{out}");
+    assert!(out.contains("blocks skipped"), "{out}");
+    assert!(out.contains("payload skipped"), "{out}");
+
+    // --no-prune restores the literal decode-everything loop: no pruning
+    // line in the report.
+    let out = run_ok(&[
+        "load", "--dir", dirs, "--procs", "4", "--mapping", "colwise", "--strategy",
+        "independent", "--no-prune",
+    ]);
+    assert!(!out.contains("block pruning"), "{out}");
+
+    // --strategy auto prints the recorded decision with its candidates.
+    let out = run_ok(&[
+        "load", "--dir", dirs, "--procs", "4", "--mapping", "colwise", "--strategy", "auto",
+    ]);
+    assert!(out.contains("auto strategy"), "{out}");
+    assert!(out.contains("predicted:"), "{out}");
+    assert!(out.contains("independent"), "{out}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn roundtrip_subcommand() {
     let out = run_ok(&["roundtrip", "--seed-size", "8", "--procs", "2"]);
     assert!(out.contains("roundtrip OK"), "{out}");
