@@ -15,12 +15,16 @@
 //! * [`load`] — **the paper's contribution**: streaming Algorithms 1–6
 //!   that reconstruct an in-memory CSR (or visit raw elements, for
 //!   different-configuration loading) from a stored file;
+//! * [`rebucket`] — the repacking primitive: bounded-staging re-bucketing
+//!   of an arbitrary-order element stream into a *new* `s × s` grid with
+//!   fresh per-block scheme selection (see [`crate::repack`]);
 //! * [`stats`] — size accounting and scheme histograms for the benches.
 
 pub mod block;
 pub mod cost;
 pub mod data;
 pub mod load;
+pub mod rebucket;
 pub mod stats;
 pub mod store;
 
@@ -28,6 +32,7 @@ pub use block::{partition_into_blocks, Block};
 pub use cost::{choose_scheme, scheme_cost, CostModel};
 pub use data::AbhsfData;
 pub use load::{load_coo, load_csr, visit_elements, visit_elements_pruned, PruneStats};
+pub use rebucket::{rebucket_into_abhsf, Rebucketer};
 pub use store::{matrix_file_path, store_data};
 
 /// Block storage scheme tags, as stored in the `schemes[]` dataset.

@@ -1,0 +1,271 @@
+//! Streaming block re-bucketer — the storage-side primitive of dataset
+//! repacking (the `repack` subsystem).
+//!
+//! Re-blocking a stored matrix to a new block size / partitioning means
+//! every target rank receives its elements in *source-block* order — an
+//! arbitrary order with respect to the **target** `s × s` grid. The
+//! [`Rebucketer`] absorbs that stream with a bounded sorting working set:
+//! elements accumulate in a staging buffer of at most `staging_limit`
+//! entries; a full buffer is sealed into a sorted *run*, and
+//! [`Rebucketer::into_sorted_global`] k-way-merges the runs into one
+//! globally (row, col)-sorted stream. Sorting cost is thus
+//! `O(n log staging_limit + n log runs)` with an unsorted working set
+//! never exceeding `staging_limit` — the "chunked accumulation" mode for
+//! irregular target mappings. Rectangular mappings (exact
+//! [`crate::mapping::ProcessMapping::rank_rect`]) can use the spill-free
+//! mode (`staging_limit = 0`, one buffer, one sort): their resident set is
+//! already bounded by the rank's own region, never by the total nonzero
+//! count.
+//!
+//! [`rebucket_into_abhsf`] finishes the pipeline: the sorted global
+//! stream is shifted into the target rank's local window and re-encoded
+//! block by block with fresh per-block scheme selection (COO / CSR /
+//! bitmap / dense byte-cost minimization — the same
+//! [`CostModel::choose`] the original store ran, now over the *new*
+//! block geometry).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::abhsf::cost::CostModel;
+use crate::abhsf::{AbhsfData, Result};
+use crate::formats::{Element, LocalInfo};
+
+/// Bounded-staging accumulator for elements arriving in arbitrary order,
+/// produced back as one (row, col)-sorted stream. See the module docs for
+/// the memory contract.
+#[derive(Debug, Default)]
+pub struct Rebucketer {
+    /// Seal threshold for the staging buffer; `0` = unbounded
+    /// (single-buffer spill-free mode).
+    staging_limit: usize,
+    staging: Vec<(u64, u64, f64)>,
+    runs: Vec<Vec<(u64, u64, f64)>>,
+    peak_unsorted: u64,
+    total: u64,
+}
+
+impl Rebucketer {
+    /// Create a re-bucketer. `staging_limit` bounds the *unsorted*
+    /// working set (elements); `0` disables chunking — everything stages
+    /// in one buffer sorted once at the end.
+    pub fn new(staging_limit: usize) -> Self {
+        Self {
+            staging_limit,
+            ..Self::default()
+        }
+    }
+
+    /// Absorb one global element.
+    pub fn push(&mut self, i: u64, j: u64, v: f64) {
+        self.staging.push((i, j, v));
+        self.total += 1;
+        self.peak_unsorted = self.peak_unsorted.max(self.staging.len() as u64);
+        if self.staging_limit > 0 && self.staging.len() >= self.staging_limit {
+            self.seal_run();
+        }
+    }
+
+    /// Elements absorbed so far — the rank's *resident* staging set (runs
+    /// are kept until the merge; the bound the repack report certifies is
+    /// that this never exceeds the rank's own region, i.e. no rank ever
+    /// stages the whole matrix).
+    pub fn len(&self) -> u64 {
+        self.total
+    }
+
+    /// Whether nothing was absorbed.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Sealed sorted runs plus the active staging buffer (diagnostics).
+    pub fn runs(&self) -> usize {
+        self.runs.len() + usize::from(!self.staging.is_empty())
+    }
+
+    /// Largest unsorted working set observed (≤ `staging_limit` when
+    /// bounded).
+    pub fn peak_unsorted(&self) -> u64 {
+        self.peak_unsorted
+    }
+
+    fn seal_run(&mut self) {
+        if self.staging.is_empty() {
+            return;
+        }
+        let mut run = std::mem::take(&mut self.staging);
+        run.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        self.runs.push(run);
+    }
+
+    /// Merge all runs into one (row, col)-sorted global element stream.
+    pub fn into_sorted_global(mut self) -> Vec<(u64, u64, f64)> {
+        self.seal_run();
+        match self.runs.len() {
+            0 => Vec::new(),
+            1 => self.runs.pop().unwrap(),
+            _ => {
+                let mut out = Vec::with_capacity(self.total as usize);
+                // K-way merge keyed by (row, col); coordinates are unique
+                // across runs (each stored element exists exactly once),
+                // so the key never ties.
+                let mut heads: Vec<usize> = vec![0; self.runs.len()];
+                let mut heap: BinaryHeap<Reverse<(u64, u64, usize)>> = self
+                    .runs
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, run)| !run.is_empty())
+                    .map(|(r, run)| Reverse((run[0].0, run[0].1, r)))
+                    .collect();
+                while let Some(Reverse((_, _, r))) = heap.pop() {
+                    let pos = heads[r];
+                    out.push(self.runs[r][pos]);
+                    heads[r] += 1;
+                    if let Some(&(i, j, _)) = self.runs[r].get(heads[r]) {
+                        heap.push(Reverse((i, j, r)));
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Re-encode a (row, col)-sorted *global* element stream as one target
+/// rank's ABHSF image: shift into the local `window = (m_offset,
+/// n_offset, m_local, n_local)`, partition into the new `s × s` grid and
+/// run per-block scheme selection under `model`. `dims` is the global
+/// `(m, n, z)` triple for the file header.
+///
+/// Takes the stream by value and frees it as soon as the local element
+/// list exists, so the transient working set stays at a small constant
+/// multiple of the *rank's* region (the keyed partition inside
+/// [`AbhsfData::from_elements`] needs its own copy) — never of the whole
+/// matrix.
+pub fn rebucket_into_abhsf(
+    sorted_global: Vec<(u64, u64, f64)>,
+    window: (u64, u64, u64, u64),
+    dims: (u64, u64, u64),
+    s: u64,
+    model: &CostModel,
+) -> Result<AbhsfData> {
+    let (ro, co, ml, nl) = window;
+    let (m, n, z) = dims;
+    let info = LocalInfo {
+        m,
+        n,
+        z,
+        m_local: ml,
+        n_local: nl,
+        z_local: 0,
+        m_offset: ro,
+        n_offset: co,
+    };
+    // A uniform offset shift preserves lexicographic order, so the input
+    // is already the canonical element list `AbhsfData` expects.
+    let elements: Vec<Element> = sorted_global
+        .iter()
+        .map(|&(i, j, v)| Element::new(i - ro, j - co, v))
+        .collect();
+    drop(sorted_global);
+    AbhsfData::from_elements(info, &elements, s, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_stream(seed: u64, count: usize) -> Vec<(u64, u64, f64)> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::with_capacity(count);
+        while out.len() < count {
+            let i = rng.next_below(200);
+            let j = rng.next_below(200);
+            if seen.insert((i, j)) {
+                out.push((i, j, rng.range_f64(-5.0, 5.0)));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn chunked_merge_equals_plain_sort() {
+        let stream = random_stream(7, 1000);
+        let mut want = stream.clone();
+        want.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        for limit in [0usize, 1, 7, 64, 1000, 5000] {
+            let mut rb = Rebucketer::new(limit);
+            for &(i, j, v) in &stream {
+                rb.push(i, j, v);
+            }
+            assert_eq!(rb.len(), 1000);
+            if limit > 0 {
+                assert!(
+                    rb.peak_unsorted() <= limit as u64,
+                    "limit {limit}: peak {}",
+                    rb.peak_unsorted()
+                );
+                assert!(rb.runs() >= 1000 / limit.min(1000), "limit {limit}");
+            }
+            assert_eq!(rb.into_sorted_global(), want, "limit {limit}");
+        }
+    }
+
+    #[test]
+    fn empty_rebucketer() {
+        let rb = Rebucketer::new(16);
+        assert!(rb.is_empty());
+        assert_eq!(rb.runs(), 0);
+        assert!(rb.into_sorted_global().is_empty());
+    }
+
+    #[test]
+    fn rebucket_builds_valid_abhsf_in_new_grid() {
+        let stream = random_stream(11, 500);
+        let mut rb = Rebucketer::new(128);
+        for &(i, j, v) in &stream {
+            rb.push(i, j, v);
+        }
+        let sorted = rb.into_sorted_global();
+        let data = rebucket_into_abhsf(
+            sorted.clone(),
+            (0, 0, 200, 200),
+            (200, 200, 500),
+            16,
+            &CostModel::default(),
+        )
+        .unwrap();
+        data.validate().unwrap();
+        assert_eq!(data.info.z_local, 500);
+        assert_eq!(data.block_size, 16);
+        // Round-trip: the blocks reproduce exactly the input elements.
+        let blocks = crate::abhsf::partition_into_blocks(
+            &sorted
+                .iter()
+                .map(|&(i, j, v)| Element::new(i, j, v))
+                .collect::<Vec<_>>(),
+            16,
+        );
+        assert_eq!(data.blocks(), blocks.len() as u64);
+    }
+
+    #[test]
+    fn rebucket_respects_offset_window() {
+        let sorted = vec![(10u64, 20u64, 1.0), (10, 21, 2.0), (15, 20, 3.0)];
+        let data = rebucket_into_abhsf(
+            sorted,
+            (10, 20, 6, 2),
+            (32, 32, 3),
+            4,
+            &CostModel::default(),
+        )
+        .unwrap();
+        data.validate().unwrap();
+        assert_eq!(data.info.m_offset, 10);
+        assert_eq!(data.info.n_offset, 20);
+        assert_eq!(data.info.z_local, 3);
+    }
+}

@@ -293,7 +293,10 @@ impl Dataset {
         Ok((dataset, report))
     }
 
-    fn write_manifest(
+    /// Scan the freshly written containers and persist the manifest.
+    /// Shared by the store entry points above and the repack subsystem
+    /// (which writes its containers rank-by-rank before describing them).
+    pub(crate) fn write_manifest(
         dir: &Path,
         mapping: MappingDesc,
         m: u64,
@@ -477,6 +480,43 @@ impl Dataset {
         stored_file_sizes(&self.dir, self.manifest.nprocs).map(|_| ())
     }
 
+    /// Test-only constructor: a dataset handle over a synthetic manifest
+    /// of `nprocs` identical files (no disk behind it) — lets cost-model
+    /// tests in other modules price manifests without storing anything.
+    #[cfg(test)]
+    pub(crate) fn synthetic_for_tests(
+        nprocs: usize,
+        m: u64,
+        n: u64,
+        z: u64,
+        block_size: u64,
+        file_bytes: u64,
+        file_nnz: u64,
+    ) -> Dataset {
+        Dataset {
+            dir: PathBuf::from("/nonexistent"),
+            manifest: DatasetManifest {
+                nprocs,
+                mapping: MappingDesc::Rowwise {
+                    m,
+                    n,
+                    starts: crate::mapping::even_starts(m, nprocs),
+                },
+                m,
+                n,
+                z,
+                block_size,
+                files: vec![
+                    StoredFile {
+                        bytes: file_bytes,
+                        nnz: file_nnz,
+                    };
+                    nprocs
+                ],
+            },
+        }
+    }
+
     /// Predicted makespan of the same-configuration fast path (rank `k`
     /// reads only `matrix-<k>.h5spm`), from the manifest's file sizes.
     pub fn predict_same_config(&self, model: &FsModel) -> f64 {
@@ -604,8 +644,9 @@ impl Dataset {
 }
 
 /// Read-operation estimate for one container: chunk-granular payload
-/// reads plus a fixed floor for the directory and small datasets.
-fn ops_estimate(bytes: u64) -> u64 {
+/// reads plus a fixed floor for the directory and small datasets. Shared
+/// with the repack forecast (`crate::repack`).
+pub(crate) fn ops_estimate(bytes: u64) -> u64 {
     20 + bytes / (512 * 1024)
 }
 

@@ -97,6 +97,26 @@ pub enum DatasetError {
         cluster: usize,
     },
 
+    /// A repack was asked to write into the directory it reads from —
+    /// source containers would be clobbered mid-stream.
+    #[error(
+        "repack destination {dir} is the source dataset directory; \
+         choose a different output directory"
+    )]
+    RepackIntoSource {
+        /// The offending directory.
+        dir: PathBuf,
+    },
+
+    /// A repack requested an ABHSF block size outside the format's range
+    /// (in-block indexes are u16, so `1 ≤ s ≤ 65536`).
+    #[error("block size {0} out of range (expected 1..=65536)")]
+    InvalidBlockSize(u64),
+
+    /// A repack requested a container chunk size of zero elements.
+    #[error("container chunk size must be positive (got 0 elements)")]
+    InvalidChunkSize,
+
     /// Unparsable strategy name (CLI / `FromStr`).
     #[error("unknown strategy {0:?} (expected auto|independent|collective|exchange)")]
     UnknownStrategy(String),

@@ -26,7 +26,7 @@ use crate::coordinator::cluster::{Cluster, Msg};
 use crate::coordinator::error::DatasetError;
 use crate::coordinator::metrics::LoadReport;
 use crate::coordinator::InMemFormat;
-use crate::formats::element::tight_window;
+use crate::formats::element::window_or_tight;
 use crate::formats::{Coo, Csr, LocalInfo};
 use crate::h5::{H5Reader, IoStats};
 use crate::mapping::ProcessMapping;
@@ -418,14 +418,7 @@ fn build_local(
     // Window: the mapping's declared region, tightened to the actual
     // bounding box when the mapping declares the whole matrix (paper §2
     // defines the window as min/max over owned nonzeros).
-    let (ro, co, ml, nl) = {
-        let (ro, co, ml, nl) = mapping.window(rank);
-        if ml == m && nl == n && !elems.is_empty() {
-            tight_window(&elems).unwrap()
-        } else {
-            (ro, co, ml, nl)
-        }
-    };
+    let (ro, co, ml, nl) = window_or_tight(mapping.window(rank), m, n, &elems);
     let info = LocalInfo {
         m,
         n,

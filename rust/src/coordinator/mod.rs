@@ -47,6 +47,10 @@ pub use metrics::{AutoDecision, LoadReport, StoreReport};
 pub use storer::StoreOptions;
 #[allow(deprecated)]
 pub use storer::{store_distributed, store_parts};
+// The repack subsystem lives in `crate::repack` (it is the first
+// store-path-at-load-scale subsystem and owns its own module tree), but
+// its planning types are part of the coordinator-facing API surface.
+pub use crate::repack::{PhaseStats, RepackForecast, RepackPlan, RepackReport};
 
 /// In-memory format requested for loaded submatrices (third leg of the
 /// paper's "configuration" triple).

@@ -128,6 +128,28 @@ pub fn tight_window(global_elems: &[(u64, u64, f64)]) -> Option<(u64, u64, u64, 
     Some((rmin, cmin, rmax - rmin + 1, cmax - cmin + 1))
 }
 
+/// The effective submatrix window for a set of owned *global* elements:
+/// the mapping's `declared` window, tightened to the elements' bounding
+/// box when the declaration spans the whole `m × n` matrix (mappings
+/// with non-contiguous ownership declare the whole matrix; the paper §2
+/// defines the window as min/max over owned nonzeros). An empty element
+/// set keeps the declared window. Shared by the generator, the loaders
+/// and the repack pipeline so the windowing rule cannot drift between
+/// them.
+pub fn window_or_tight(
+    declared: (u64, u64, u64, u64),
+    m: u64,
+    n: u64,
+    elems: &[(u64, u64, f64)],
+) -> (u64, u64, u64, u64) {
+    let (ro, co, ml, nl) = declared;
+    if ro == 0 && co == 0 && ml == m && nl == n {
+        tight_window(elems).unwrap_or(declared)
+    } else {
+        declared
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +212,17 @@ mod tests {
         let (r, c, m, n) = tight_window(&elems).unwrap();
         assert_eq!((r, c, m, n), (5, 3, 5, 5));
         assert!(tight_window(&[]).is_none());
+    }
+
+    #[test]
+    fn window_or_tight_rules() {
+        let elems = vec![(5u64, 7u64, 1.0), (9, 3, 2.0)];
+        // Whole-matrix declaration: tighten to the bounding box.
+        assert_eq!(window_or_tight((0, 0, 16, 16), 16, 16, &elems), (5, 3, 5, 5));
+        // Partial declaration: kept verbatim.
+        assert_eq!(window_or_tight((4, 0, 8, 16), 16, 16, &elems), (4, 0, 8, 16));
+        // Whole-matrix declaration, no elements: kept verbatim.
+        assert_eq!(window_or_tight((0, 0, 16, 16), 16, 16, &[]), (0, 0, 16, 16));
     }
 
     #[test]

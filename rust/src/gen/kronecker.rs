@@ -125,7 +125,6 @@ impl KroneckerGen {
     pub fn local_coo(&self, mapping: &dyn ProcessMapping, rank: usize) -> Coo {
         let n = self.dim();
         let (ro, co, ml, nl) = mapping.window(rank);
-        let full_window = ml == n && nl == n && ro == 0 && co == 0;
         // Collect the rank's global elements.
         let mut elems: Vec<(u64, u64, f64)> = Vec::new();
         self.visit_row_range(ro, ro + ml, |i, j, v| {
@@ -135,11 +134,8 @@ impl KroneckerGen {
         });
         // Non-contiguous mapping: tighten the declared window to the
         // actually-owned bounding box, as the paper's storage side does.
-        let (ro, co, ml, nl) = if full_window && !elems.is_empty() {
-            crate::formats::element::tight_window(&elems).unwrap()
-        } else {
-            (ro, co, ml, nl)
-        };
+        let (ro, co, ml, nl) =
+            crate::formats::element::window_or_tight((ro, co, ml, nl), n, n, &elems);
         let info = LocalInfo {
             m: n,
             n,

@@ -20,7 +20,11 @@
 //!   strategy takes the same-configuration fast path when possible and
 //!   otherwise picks the cheapest §4 strategy from the [`parfs`] cost
 //!   model, recording the decision in the returned
-//!   [`coordinator::LoadReport`].
+//!   [`coordinator::LoadReport`]. Stored datasets are also *migratable*:
+//!   [`repack`] stream-transcodes a dataset to a new process count,
+//!   mapping and block size without materializing the full matrix
+//!   anywhere (`dataset.repack().nprocs(p).mapping(m).block_size(s)
+//!   .run(&cluster, out_dir)`).
 //! * **Layer 2/1 (python/, build-time)** — a JAX blocked-SpMV consumer with
 //!   Pallas kernels, AOT-lowered to HLO text and executed from Rust via the
 //!   PJRT CPU client ([`runtime`]).
@@ -35,6 +39,7 @@ pub mod gen;
 pub mod h5;
 pub mod mapping;
 pub mod parfs;
+pub mod repack;
 pub mod runtime;
 pub mod spmv;
 pub mod util;

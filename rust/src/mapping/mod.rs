@@ -44,6 +44,15 @@ pub trait ProcessMapping: Send + Sync {
         None
     }
 
+    /// Whether *every* rank's ownership is an exact contiguous rectangle
+    /// (all [`ProcessMapping::rank_rect`] queries answer `Some`). The
+    /// repacking pipeline keys its staging mode on this: rectangular
+    /// mappings stage spill-free (a rank's resident set is bounded by its
+    /// own rectangle), irregular ones fall back to chunked accumulation.
+    fn is_rectangular(&self) -> bool {
+        (0..self.nprocs()).all(|k| self.rank_rect(k).is_some())
+    }
+
     /// Whether any element of the rectangle `rect = (r0, c0, rows, cols)`
     /// *may* be owned by `rank`. The contract is conservative: `false` is
     /// only allowed when provably no element of `rect` maps to `rank`;
@@ -512,6 +521,22 @@ impl Block2d {
             col_starts: even_starts(n, pc),
         }
     }
+
+    /// Regular grid over `p` processes with an automatically chosen
+    /// shape: grid rows = the largest divisor of `p` not exceeding
+    /// `√p` (the most-square grid, with columns ≥ rows). The single
+    /// source of truth for "2d over p ranks" across the CLI and the
+    /// differential harness.
+    pub fn regular_auto(m: u64, n: u64, p: usize) -> Self {
+        assert!(p > 0, "p must be positive");
+        let mut pr = 1;
+        for d in 1..=p {
+            if p % d == 0 && d * d <= p {
+                pr = d;
+            }
+        }
+        Self::regular(m, n, pr, p / pr)
+    }
 }
 
 impl ProcessMapping for Block2d {
@@ -713,6 +738,16 @@ mod tests {
     }
 
     #[test]
+    fn block2d_regular_auto_picks_most_square_grid() {
+        let cases = [(1, (1, 1)), (4, (2, 2)), (6, (2, 3)), (7, (1, 7)), (9, (3, 3)), (12, (3, 4))];
+        for (p, want) in cases {
+            let map = Block2d::regular_auto(24, 24, p);
+            assert_eq!((map.pr, map.pc), want, "p={p}");
+            assert_eq!(map.nprocs(), p);
+        }
+    }
+
+    #[test]
     fn cyclic_rows_owner() {
         let map = CyclicRows { m: 10, n: 4, p: 3 };
         check_partition(&map, 10, 4);
@@ -853,6 +888,11 @@ mod tests {
         }
         assert!(f.rank_rect(0).is_none());
         assert!(f.intersects(1, (0, 0, 1, 1)));
+        assert!(!cyclic.is_rectangular());
+        assert!(!f.is_rectangular());
+        assert!(Rowwise::regular(10, 6, 3).is_rectangular());
+        assert!(Colwise::regular(5, 12, 4).is_rectangular());
+        assert!(Block2d::regular(8, 8, 2, 2).is_rectangular());
     }
 
     #[test]

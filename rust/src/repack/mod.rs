@@ -1,0 +1,678 @@
+//! Out-of-core dataset repacking: stream-transcode a stored ABHSF
+//! dataset to a new process count, mapping and block size — the write
+//! side of the paper's "configurations differ" story.
+//!
+//! PR 1/2 made stored datasets *readable* under any configuration; this
+//! subsystem makes them *migratable*: `dataset.repack()` returns a
+//! [`RepackPlan`] builder (mirroring [`crate::coordinator::LoadPlan`])
+//! that re-materializes the dataset under a new configuration **without
+//! ever holding the full matrix in one memory**:
+//!
+//! 1. **Pruned read.** Each *target* rank streams only the source blocks
+//!    intersecting its region through
+//!    [`visit_elements_pruned`](crate::abhsf::visit_elements_pruned)
+//!    (the Algorithm 3–6 slice decoders behind it), exactly the
+//!    block-pruned §3 loop of the load path — `RepackReport` carries the
+//!    same skip counters.
+//! 2. **Re-bucket.** Surviving elements land in a bounded-memory
+//!    [`Rebucketer`](crate::abhsf::Rebucketer): spill-free single-buffer
+//!    staging when the target mapping is rectangular (the rank's
+//!    resident set is bounded by its own
+//!    [`rank_rect`](crate::mapping::ProcessMapping::rank_rect), never by
+//!    the total nonzero count), chunked sorted-run accumulation for
+//!    irregular mappings.
+//! 3. **Re-encode + write.** The merged stream is partitioned into the
+//!    *new* `s × s` grid, per-block scheme selection reruns from scratch
+//!    (COO/CSR/bitmap/dense byte minimization — the optimum depends on
+//!    the block geometry, so a re-partition *requires* re-selection),
+//!    and each rank writes a fresh `matrix-<k>.h5spm` plus the leader a
+//!    new `dataset.json`, through the same storer/`H5Writer` path
+//!    `Dataset::store` uses.
+//!
+//! [`RepackForecast`] (via [`RepackPlan::forecast`]) prices the
+//! operation against repeated direct different-configuration loads with
+//! the [`crate::parfs`] model; see DESIGN.md §8 for when the break-even
+//! favors repacking.
+
+mod forecast;
+mod report;
+
+pub use forecast::RepackForecast;
+pub use report::{PhaseStats, RepackReport};
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::abhsf::cost::CostModel;
+use crate::abhsf::store::store_data_chunked;
+use crate::abhsf::{
+    matrix_file_path, rebucket_into_abhsf, visit_elements, visit_elements_pruned, Rebucketer,
+};
+use crate::coordinator::cluster::Cluster;
+use crate::coordinator::dataset::Dataset;
+use crate::coordinator::error::DatasetError;
+use crate::coordinator::metrics::StoreReport;
+use crate::formats::element::window_or_tight;
+use crate::h5::{H5Reader, IoStats};
+use crate::mapping::{MappingDesc, ProcessMapping};
+use crate::parfs::FsModel;
+
+/// Default staging-chunk size (elements) for irregular target mappings —
+/// bounds the unsorted working set of the re-bucketer at ~1.5 MiB per
+/// rank.
+pub const DEFAULT_STAGING_CHUNK: usize = 64 * 1024;
+
+/// Builder for one repack of a [`Dataset`]: target process count,
+/// mapping, block size and container chunking, validated as a whole by
+/// [`RepackPlan::run`]. Obtained from [`Dataset::repack`].
+#[derive(Clone)]
+pub struct RepackPlan<'d> {
+    dataset: &'d Dataset,
+    nprocs: Option<usize>,
+    mapping: Option<Arc<dyn ProcessMapping>>,
+    block_size: Option<u64>,
+    chunk_elems: u64,
+    cost_model: CostModel,
+    prune: bool,
+    staging_chunk: Option<usize>,
+    model: FsModel,
+}
+
+impl Dataset {
+    /// Begin planning a repack of this dataset to a new configuration.
+    pub fn repack(&self) -> RepackPlan<'_> {
+        RepackPlan {
+            dataset: self,
+            nprocs: None,
+            mapping: None,
+            block_size: None,
+            chunk_elems: crate::h5::DEFAULT_CHUNK_ELEMS,
+            cost_model: CostModel::default(),
+            prune: true,
+            staging_chunk: None,
+            model: FsModel::anselm_lustre(),
+        }
+    }
+}
+
+impl<'d> RepackPlan<'d> {
+    /// Target process count (defaults to the cluster's size at
+    /// [`RepackPlan::run`]).
+    pub fn nprocs(mut self, p: usize) -> Self {
+        self.nprocs = Some(p);
+        self
+    }
+
+    /// Target mapping `M(i, j)`. Optional when repacking with the stored
+    /// process count: the stored mapping is reused (a block-size-only
+    /// repack).
+    pub fn mapping(mut self, mapping: &Arc<dyn ProcessMapping>) -> Self {
+        self.mapping = Some(Arc::clone(mapping));
+        self
+    }
+
+    /// Target ABHSF block size `s` (defaults to the stored one).
+    pub fn block_size(mut self, s: u64) -> Self {
+        self.block_size = Some(s);
+        self
+    }
+
+    /// Container dataset chunk size for the written files (elements).
+    pub fn chunk_elems(mut self, elems: u64) -> Self {
+        self.chunk_elems = elems;
+        self
+    }
+
+    /// Scheme-selection cost model for the re-encoded blocks.
+    pub fn cost_model(mut self, model: CostModel) -> Self {
+        self.cost_model = model;
+        self
+    }
+
+    /// Block-pruned reading of the source containers (default `true`);
+    /// `false` restores the decode-everything loop (A/B measurements).
+    pub fn prune(mut self, prune: bool) -> Self {
+        self.prune = prune;
+        self
+    }
+
+    /// Override the staging-chunk size (elements) of the re-bucketer.
+    /// `0` forces spill-free single-buffer staging. The default is
+    /// automatic: spill-free for rectangular target mappings,
+    /// [`DEFAULT_STAGING_CHUNK`] for irregular ones.
+    pub fn staging_chunk(mut self, elems: usize) -> Self {
+        self.staging_chunk = Some(elems);
+        self
+    }
+
+    /// File-system model used by [`RepackPlan::forecast`].
+    pub fn fs_model(mut self, model: FsModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Price this repack against repeated direct different-configuration
+    /// loads under the plan's [`FsModel`] (no I/O happens).
+    pub fn forecast(&self) -> RepackForecast {
+        let p = self
+            .nprocs
+            .or_else(|| self.mapping.as_ref().map(|m| m.nprocs()))
+            .unwrap_or_else(|| self.dataset.nprocs());
+        forecast::forecast(
+            self.dataset,
+            p,
+            self.mapping.as_deref(),
+            self.prune,
+            &self.model,
+        )
+    }
+
+    /// Validate the plan, stream-transcode the dataset into `out_dir`
+    /// (one fresh container per target rank plus a new manifest), and
+    /// return the new dataset handle with the per-phase report.
+    pub fn run(
+        &self,
+        cluster: &Cluster,
+        out_dir: impl AsRef<Path>,
+    ) -> Result<(Dataset, RepackReport), DatasetError> {
+        let out_dir = out_dir.as_ref();
+        let p = self.nprocs.unwrap_or_else(|| cluster.nprocs());
+        if cluster.nprocs() != p {
+            return Err(DatasetError::ClusterMismatch {
+                cluster: cluster.nprocs(),
+                required: p,
+                what: "the plan's target process count",
+            });
+        }
+        if let Some(mapping) = &self.mapping {
+            if mapping.nprocs() != p {
+                return Err(DatasetError::MappingMismatch {
+                    mapping: mapping.nprocs(),
+                    nprocs: p,
+                });
+            }
+        }
+        let block_size = self.block_size.unwrap_or_else(|| self.dataset.block_size());
+        if block_size == 0 || block_size > u16::MAX as u64 + 1 {
+            return Err(DatasetError::InvalidBlockSize(block_size));
+        }
+        // A zero chunk size would otherwise only surface as an H5Writer
+        // panic inside a worker, after the whole read phase was paid.
+        if self.chunk_elems == 0 {
+            return Err(DatasetError::InvalidChunkSize);
+        }
+        let mapping = self.resolve_mapping(p)?;
+        let stored = self.dataset.nprocs();
+        self.dataset.verify_files()?;
+        std::fs::create_dir_all(out_dir)?;
+        // Refuse to clobber the containers being read. Both directories
+        // exist by now, so canonicalization is exact (symlinks included).
+        if std::fs::canonicalize(out_dir)? == std::fs::canonicalize(self.dataset.dir())? {
+            return Err(DatasetError::RepackIntoSource {
+                dir: out_dir.to_path_buf(),
+            });
+        }
+        let staging_chunk = self.staging_chunk.unwrap_or_else(|| {
+            if mapping.is_rectangular() {
+                0
+            } else {
+                DEFAULT_STAGING_CHUNK
+            }
+        });
+
+        let src = self.dataset.dir().to_path_buf();
+        let dst = out_dir.to_path_buf();
+        let (m, n) = self.dataset.dims();
+        let z = self.dataset.nnz();
+        let prune = self.prune;
+        let cost_model = self.cost_model;
+        let chunk_elems = self.chunk_elems;
+        let map = Arc::clone(&mapping);
+
+        type RankOut = anyhow::Result<RankRepack>;
+        let t0 = Instant::now();
+        let results: Vec<RankOut> = cluster.run(move |ctx| {
+            let rank = ctx.rank;
+            let map = map.as_ref();
+            // Phase 1: pruned streaming read of every source container.
+            let t_read = Instant::now();
+            let mut read_io = IoStats::default();
+            let mut bucket = Rebucketer::new(staging_chunk);
+            for file in 0..stored {
+                let reader = H5Reader::open(matrix_file_path(&src, file))?;
+                if prune {
+                    let ps = visit_elements_pruned(
+                        &reader,
+                        |r0, c0, rows, cols| map.intersects(rank, (r0, c0, rows, cols)),
+                        |i, j, v| {
+                            if map.owner(i, j) == rank {
+                                bucket.push(i, j, v);
+                            }
+                        },
+                    )?;
+                    read_io.blocks_total += ps.blocks_total;
+                    read_io.blocks_skipped += ps.blocks_skipped;
+                    read_io.bytes_skipped += ps.bytes_skipped;
+                } else {
+                    visit_elements(&reader, |i, j, v| {
+                        if map.owner(i, j) == rank {
+                            bucket.push(i, j, v);
+                        }
+                    })?;
+                }
+                read_io.add(reader.stats());
+            }
+            let read_s = t_read.elapsed().as_secs_f64();
+
+            // Phase 2: merge the staged runs and re-encode into the new
+            // block grid with fresh scheme selection.
+            let t_encode = Instant::now();
+            let peak_staging = bucket.len();
+            let peak_unsorted = bucket.peak_unsorted();
+            let elems = bucket.into_sorted_global();
+            // Whole-matrix declarations (irregular mappings) tighten to
+            // the owned bounding box, as the storer does (paper §2).
+            let window = window_or_tight(map.window(rank), m, n, &elems);
+            let data =
+                rebucket_into_abhsf(elems, window, (m, n, z), block_size, &cost_model)?;
+            let mut scheme_counts = [0u64; 4];
+            for &tag in &data.schemes {
+                scheme_counts[tag as usize] += 1;
+            }
+            let encode_s = t_encode.elapsed().as_secs_f64();
+
+            // Phase 3: write this rank's fresh container.
+            let t_write = Instant::now();
+            let nnz = data.info.z_local;
+            let payload_bytes = data.payload_bytes();
+            let write_io = store_data_chunked(matrix_file_path(&dst, rank), &data, chunk_elems)?;
+            Ok(RankRepack {
+                read_io,
+                write_io,
+                read_s,
+                encode_s,
+                write_s: t_write.elapsed().as_secs_f64(),
+                nnz,
+                payload_bytes,
+                peak_staging,
+                peak_unsorted,
+                scheme_counts,
+            })
+        });
+
+        let mut read = PhaseStats::default();
+        let mut write = PhaseStats::default();
+        let mut per_rank_encode_s = Vec::with_capacity(p);
+        let mut per_rank_nnz = Vec::with_capacity(p);
+        let mut per_rank_bytes = Vec::with_capacity(p);
+        let mut per_rank_peak_staging = Vec::with_capacity(p);
+        let mut per_rank_peak_unsorted = Vec::with_capacity(p);
+        let mut scheme_counts = [0u64; 4];
+        for r in results {
+            let r = r.map_err(DatasetError::from)?;
+            read.per_rank_io.push(r.read_io);
+            read.per_rank_s.push(r.read_s);
+            write.per_rank_io.push(r.write_io);
+            write.per_rank_s.push(r.write_s);
+            per_rank_encode_s.push(r.encode_s);
+            per_rank_nnz.push(r.nnz);
+            per_rank_bytes.push(r.payload_bytes);
+            per_rank_peak_staging.push(r.peak_staging);
+            per_rank_peak_unsorted.push(r.peak_unsorted);
+            for (acc, c) in scheme_counts.iter_mut().zip(r.scheme_counts) {
+                *acc += c;
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        // The new manifest: target mapping descriptor, target block size,
+        // per-file sizes scanned from the freshly written containers.
+        let store_report = StoreReport {
+            wall_s,
+            per_rank_io: write.per_rank_io.clone(),
+            per_rank_nnz: per_rank_nnz.clone(),
+            per_rank_bytes,
+        };
+        let new_dataset = Dataset::write_manifest(
+            out_dir,
+            mapping.descriptor(),
+            m,
+            n,
+            &store_report,
+            block_size,
+        )?;
+
+        let report = RepackReport {
+            source_nprocs: stored,
+            nprocs: p,
+            block_size,
+            pruned: self.prune,
+            wall_s,
+            read,
+            write,
+            per_rank_encode_s,
+            per_rank_nnz,
+            per_rank_peak_staging,
+            per_rank_peak_unsorted,
+            scheme_counts,
+        };
+        Ok((new_dataset, report))
+    }
+
+    /// The target mapping: the explicit one, or the stored mapping
+    /// rebuilt from its descriptor when repacking with the stored process
+    /// count (block-size-only repacks).
+    fn resolve_mapping(&self, p: usize) -> Result<Arc<dyn ProcessMapping>, DatasetError> {
+        if let Some(mapping) = &self.mapping {
+            return Ok(Arc::clone(mapping));
+        }
+        let stored = self.dataset.nprocs();
+        if p != stored {
+            return Err(DatasetError::MappingRequired { nprocs: p, stored });
+        }
+        self.dataset.mapping().build().ok_or_else(|| {
+            DatasetError::MappingNotReconstructible {
+                label: match self.dataset.mapping() {
+                    MappingDesc::Opaque { label, .. } => label.clone(),
+                    other => other.kind().to_string(),
+                },
+            }
+        })
+    }
+}
+
+/// One target rank's repack outcome (worker → leader).
+struct RankRepack {
+    read_io: IoStats,
+    write_io: IoStats,
+    read_s: f64,
+    encode_s: f64,
+    write_s: f64,
+    nnz: u64,
+    payload_bytes: u64,
+    peak_staging: u64,
+    peak_unsorted: u64,
+    scheme_counts: [u64; 4],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    use crate::coordinator::{InMemFormat, LoadedMatrix, StoreOptions, Strategy};
+    use crate::gen::{KroneckerGen, SeedMatrix};
+    use crate::mapping::{Block2d, Colwise, CyclicRows, Rowwise};
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("abhsf-repack-tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn setup(name: &str, p_store: usize, s: u64) -> (PathBuf, Arc<KroneckerGen>, u64, Dataset) {
+        let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 42), 2));
+        let n = gen.dim();
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p_store));
+        let cluster = Cluster::new(p_store, 64);
+        let dir = tmpdir(name);
+        let (dataset, _) = Dataset::store(
+            &cluster,
+            &gen,
+            &mapping,
+            &dir,
+            StoreOptions {
+                block_size: s,
+                chunk_elems: 1024,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        (dir, gen, n, dataset)
+    }
+
+    fn collect(mats: Vec<LoadedMatrix>) -> Vec<(u64, u64, f64)> {
+        let mut out = Vec::new();
+        for lm in mats {
+            let coo = lm.into_coo();
+            let (ro, co) = (coo.info.m_offset, coo.info.n_offset);
+            for (i, j, v) in coo.iter() {
+                out.push((i + ro, j + co, v));
+            }
+        }
+        out.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        out
+    }
+
+    /// The acceptance scenario: Rowwise P=4 → Block2d P=6 with a new
+    /// block size. All three load strategies (plus the same-config fast
+    /// path) read the repacked dataset back element-identically, the
+    /// pruned read phase skips blocks, and no rank ever staged more than
+    /// its own region (peak < total nnz).
+    #[test]
+    fn acceptance_rowwise4_to_block2d6() {
+        let (dir, gen, n, dataset) = setup("accept", 4, 8);
+        let truth = {
+            let cluster = Cluster::new(4, 64);
+            let (mats, _) = dataset
+                .load()
+                .format(InMemFormat::Coo)
+                .run(&cluster)
+                .unwrap();
+            collect(mats)
+        };
+        assert_eq!(truth.len() as u64, gen.nnz());
+
+        let p_new = 6;
+        let new_map: Arc<dyn ProcessMapping> = Arc::new(Block2d::regular(n, n, 2, 3));
+        let out = tmpdir("accept-out");
+        let cluster = Cluster::new(p_new, 64);
+        let (repacked, report) = dataset
+            .repack()
+            .nprocs(p_new)
+            .mapping(&new_map)
+            .block_size(16)
+            .chunk_elems(512)
+            .run(&cluster, &out)
+            .unwrap();
+
+        // Report invariants.
+        assert_eq!(report.nprocs, 6);
+        assert_eq!(report.source_nprocs, 4);
+        assert_eq!(report.block_size, 16);
+        assert_eq!(report.total_nnz(), gen.nnz());
+        assert!(report.blocks_skipped() > 0, "pruned read skipped nothing");
+        assert!(report.bytes_skipped() > 0);
+        assert!(report.prune_ratio().unwrap() > 0.0);
+        assert!(
+            report.max_peak_staging() < gen.nnz(),
+            "a rank staged the whole matrix: {} of {}",
+            report.max_peak_staging(),
+            gen.nnz()
+        );
+        let max_rank_nnz = report.per_rank_nnz.iter().copied().max().unwrap();
+        assert_eq!(report.max_peak_staging(), max_rank_nnz);
+        assert!(report.blocks_written() > 0);
+        assert_eq!(report.write.total_opens(), p_new as u64);
+
+        // Manifest invariants: self-describing under the new config, and
+        // the per-file nnz sum to the original.
+        assert_eq!(repacked.nprocs(), p_new);
+        assert_eq!(repacked.block_size(), 16);
+        assert_eq!(repacked.dims(), (n, n));
+        let manifest_nnz: u64 = repacked.manifest().files.iter().map(|f| f.nnz).sum();
+        assert_eq!(manifest_nnz, gen.nnz());
+        assert!(repacked
+            .mapping()
+            .same_mapping(&new_map.descriptor()));
+
+        // Reopen from disk: the new dataset must be fully self-describing.
+        let reopened = Dataset::open(&out).unwrap();
+        assert_eq!(reopened.manifest(), repacked.manifest());
+
+        // Same-config fast path on the new layout.
+        let same_cluster = Cluster::new(p_new, 64);
+        let (mats, lreport) = reopened
+            .load()
+            .format(InMemFormat::Csr)
+            .run(&same_cluster)
+            .unwrap();
+        assert_eq!(lreport.scenario, "same-config");
+        assert_eq!(collect(mats), truth, "same-config diverged after repack");
+
+        // All three explicit strategies under yet another configuration.
+        let p_load = 5;
+        let load_map: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+        let load_cluster = Cluster::new(p_load, 8);
+        for strategy in [Strategy::Independent, Strategy::Collective, Strategy::Exchange] {
+            let (mats, _) = reopened
+                .load()
+                .mapping(&load_map)
+                .strategy(strategy)
+                .format(InMemFormat::Csr)
+                .run(&load_cluster)
+                .unwrap();
+            assert_eq!(collect(mats), truth, "{strategy} diverged after repack");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&out);
+    }
+
+    /// Block-size-only repack: same process count, no explicit mapping —
+    /// the stored mapping is rebuilt from the manifest.
+    #[test]
+    fn reblock_without_mapping_reuses_stored() {
+        let (dir, gen, _n, dataset) = setup("reblock", 3, 8);
+        let out = tmpdir("reblock-out");
+        let cluster = Cluster::new(3, 64);
+        let (repacked, report) = dataset
+            .repack()
+            .block_size(32)
+            .run(&cluster, &out)
+            .unwrap();
+        assert_eq!(report.total_nnz(), gen.nnz());
+        assert_eq!(repacked.block_size(), 32);
+        assert_eq!(repacked.nprocs(), 3);
+        assert!(repacked.mapping().same_mapping(dataset.mapping()));
+        // Content identical.
+        let (a, _) = dataset
+            .load()
+            .format(InMemFormat::Coo)
+            .run(&cluster)
+            .unwrap();
+        let (b, _) = Dataset::open(&out)
+            .unwrap()
+            .load()
+            .format(InMemFormat::Coo)
+            .run(&cluster)
+            .unwrap();
+        assert_eq!(collect(a), collect(b));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&out);
+    }
+
+    /// Irregular target mapping (CyclicRows): chunked staging kicks in
+    /// (bounded unsorted working set), pruning degrades to a no-op
+    /// conservatively, and content survives.
+    #[test]
+    fn irregular_mapping_repacks_with_chunked_staging() {
+        let (dir, gen, n, dataset) = setup("cyclic", 4, 8);
+        let p_new = 3;
+        let new_map: Arc<dyn ProcessMapping> = Arc::new(CyclicRows { m: n, n, p: p_new });
+        let out = tmpdir("cyclic-out");
+        let cluster = Cluster::new(p_new, 64);
+        let (repacked, report) = dataset
+            .repack()
+            .nprocs(p_new)
+            .mapping(&new_map)
+            .staging_chunk(64)
+            .run(&cluster, &out)
+            .unwrap();
+        assert_eq!(report.total_nnz(), gen.nnz());
+        // Conservative pruning: every block intersects (keep-all).
+        assert_eq!(report.blocks_skipped(), 0);
+        // The falsifiable staging bound: the unsorted working set never
+        // exceeded the requested chunk, even though every rank's
+        // resident share is far larger.
+        assert!(
+            report.max_peak_unsorted() <= 64,
+            "unsorted staging {} exceeded the 64-element chunk",
+            report.max_peak_unsorted()
+        );
+        assert!(report.max_peak_staging() > 64);
+        let (mats, _) = Dataset::open(&out)
+            .unwrap()
+            .load()
+            .format(InMemFormat::Coo)
+            .run(&cluster)
+            .unwrap();
+        let orig_cluster = Cluster::new(4, 64);
+        let (orig, _) = dataset
+            .load()
+            .format(InMemFormat::Coo)
+            .run(&orig_cluster)
+            .unwrap();
+        assert_eq!(collect(mats), collect(orig));
+        assert_eq!(repacked.nprocs(), p_new);
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&out);
+    }
+
+    /// Typed validation: repacking into the source directory, block sizes
+    /// out of range, missing mapping for a different process count.
+    #[test]
+    fn plan_validation_is_typed() {
+        let (dir, _gen, n, dataset) = setup("validate", 2, 8);
+        let cluster = Cluster::new(2, 64);
+        let err = dataset.repack().run(&cluster, &dir).unwrap_err();
+        assert!(matches!(err, DatasetError::RepackIntoSource { .. }), "{err}");
+
+        let out = tmpdir("validate-out");
+        let err = dataset
+            .repack()
+            .block_size(0)
+            .run(&cluster, &out)
+            .unwrap_err();
+        assert!(matches!(err, DatasetError::InvalidBlockSize(0)), "{err}");
+
+        let err = dataset
+            .repack()
+            .chunk_elems(0)
+            .run(&cluster, &out)
+            .unwrap_err();
+        assert!(matches!(err, DatasetError::InvalidChunkSize), "{err}");
+
+        let cluster5 = Cluster::new(5, 64);
+        let err = dataset
+            .repack()
+            .nprocs(5)
+            .run(&cluster5, &out)
+            .unwrap_err();
+        assert!(matches!(err, DatasetError::MappingRequired { .. }), "{err}");
+
+        let wrong: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, 3));
+        let err = dataset
+            .repack()
+            .nprocs(5)
+            .mapping(&wrong)
+            .run(&cluster5, &out)
+            .unwrap_err();
+        assert!(matches!(err, DatasetError::MappingMismatch { .. }), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&out);
+    }
+
+    /// The forecast is reachable from the plan and self-consistent.
+    #[test]
+    fn plan_forecast_is_consistent() {
+        let (dir, _gen, n, dataset) = setup("forecast", 4, 8);
+        let new_map: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, 6));
+        let f = dataset.repack().nprocs(6).mapping(&new_map).forecast();
+        assert!(f.repack_s > 0.0);
+        assert!(f.direct_load_s > 0.0);
+        assert!(f.post_repack_load_s > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,215 @@
+//! Outcome report of one dataset repack, phase by phase.
+
+use crate::abhsf::Scheme;
+use crate::h5::IoStats;
+use crate::parfs::{FsModel, IoStrategy, RankLoadProfile, SimReport};
+
+/// One phase's per-rank I/O traces and wall times (the read phase carries
+/// the prune counters in its [`IoStats`]; the write phase the fresh
+/// container writes).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseStats {
+    /// Per-rank I/O counters for this phase.
+    pub per_rank_io: Vec<IoStats>,
+    /// Per-rank wall times of this phase, s.
+    pub per_rank_s: Vec<f64>,
+}
+
+impl PhaseStats {
+    /// Total bytes transferred in this phase.
+    pub fn total_bytes(&self) -> u64 {
+        self.per_rank_io.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Total file opens in this phase.
+    pub fn total_opens(&self) -> u64 {
+        self.per_rank_io.iter().map(|s| s.opens).sum()
+    }
+
+    /// Slowest rank's wall time, s.
+    pub fn max_s(&self) -> f64 {
+        self.per_rank_s.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Bridge into the [`crate::parfs`] cost model (independent I/O —
+    /// repack phases never synchronize per-operation).
+    pub fn simulate(&self, model: &FsModel, unique_bytes: u64) -> SimReport {
+        let profiles: Vec<RankLoadProfile> = self
+            .per_rank_io
+            .iter()
+            .map(|s| RankLoadProfile {
+                opens: s.opens,
+                ops: s.ops,
+                bytes: s.bytes,
+            })
+            .collect();
+        model.simulate(&profiles, unique_bytes, IoStrategy::Independent)
+    }
+}
+
+/// Outcome of one [`crate::repack::RepackPlan::run`]: the per-phase I/O
+/// traces (pruned read, re-encoded write), staging-memory evidence, and
+/// the scheme re-selection histogram of the new containers.
+#[derive(Debug, Clone)]
+pub struct RepackReport {
+    /// Source (stored) process count.
+    pub source_nprocs: usize,
+    /// Target process count (= files written).
+    pub nprocs: usize,
+    /// Target ABHSF block size.
+    pub block_size: u64,
+    /// Whether the read phase went through the block-pruned decoder.
+    pub pruned: bool,
+    /// Wall time of the whole repack (leader-observed), s.
+    pub wall_s: f64,
+    /// Read phase: pruned streaming of the source containers
+    /// (`blocks_total` / `blocks_skipped` / `bytes_skipped` live in its
+    /// [`IoStats`]).
+    pub read: PhaseStats,
+    /// Write phase: fresh containers through the storer.
+    pub write: PhaseStats,
+    /// Per-rank re-encode (re-bucket + scheme selection) times, s.
+    pub per_rank_encode_s: Vec<f64>,
+    /// Per-rank nonzeros written.
+    pub per_rank_nnz: Vec<u64>,
+    /// Per-rank peak staging set (elements resident at once). By
+    /// construction of the per-rank owner filter this equals the rank's
+    /// own nonzero count — recorded as bookkeeping evidence that no rank
+    /// ever stages the whole matrix.
+    pub per_rank_peak_staging: Vec<u64>,
+    /// Per-rank peak *unsorted* working set of the re-bucketer — the
+    /// falsifiable staging bound: in chunked mode it must never exceed
+    /// the plan's `staging_chunk` (asserted by the differential
+    /// harness); in spill-free mode it equals the resident set.
+    pub per_rank_peak_unsorted: Vec<u64>,
+    /// Blocks written per scheme, indexed by [`Scheme`] tag — the
+    /// re-selection outcome over the new block geometry.
+    pub scheme_counts: [u64; 4],
+}
+
+impl RepackReport {
+    /// Total nonzeros written (must equal the source dataset's).
+    pub fn total_nnz(&self) -> u64 {
+        self.per_rank_nnz.iter().sum()
+    }
+
+    /// Source blocks examined across all ranks (pruned reads only).
+    pub fn blocks_total(&self) -> u64 {
+        self.read.per_rank_io.iter().map(|s| s.blocks_total).sum()
+    }
+
+    /// Source blocks skipped without fetching their payload.
+    pub fn blocks_skipped(&self) -> u64 {
+        self.read.per_rank_io.iter().map(|s| s.blocks_skipped).sum()
+    }
+
+    /// Payload bytes of the skipped source blocks.
+    pub fn bytes_skipped(&self) -> u64 {
+        self.read.per_rank_io.iter().map(|s| s.bytes_skipped).sum()
+    }
+
+    /// Fraction of examined source blocks that were skipped; `None` for
+    /// unpruned repacks.
+    pub fn prune_ratio(&self) -> Option<f64> {
+        let total = self.blocks_total();
+        (total > 0).then(|| self.blocks_skipped() as f64 / total as f64)
+    }
+
+    /// Largest per-rank staging set (elements) — the quantity the
+    /// bounded-memory claim is about.
+    pub fn max_peak_staging(&self) -> u64 {
+        self.per_rank_peak_staging.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Largest per-rank unsorted working set (elements); ≤ the plan's
+    /// `staging_chunk` whenever chunked staging was in effect.
+    pub fn max_peak_unsorted(&self) -> u64 {
+        self.per_rank_peak_unsorted.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Blocks written into the new containers.
+    pub fn blocks_written(&self) -> u64 {
+        self.scheme_counts.iter().sum()
+    }
+
+    /// Human-readable scheme histogram (`COO a, CSR b, …`).
+    pub fn scheme_summary(&self) -> String {
+        Scheme::ALL
+            .iter()
+            .map(|&s| format!("{} {}", s.name(), self.scheme_counts[s as u8 as usize]))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy() -> RepackReport {
+        RepackReport {
+            source_nprocs: 4,
+            nprocs: 6,
+            block_size: 16,
+            pruned: true,
+            wall_s: 0.25,
+            read: PhaseStats {
+                per_rank_io: vec![
+                    IoStats {
+                        bytes: 4000,
+                        ops: 12,
+                        opens: 4,
+                        blocks_total: 10,
+                        blocks_skipped: 6,
+                        bytes_skipped: 900,
+                    };
+                    6
+                ],
+                per_rank_s: vec![0.1; 6],
+            },
+            write: PhaseStats {
+                per_rank_io: vec![
+                    IoStats {
+                        bytes: 700,
+                        ops: 3,
+                        opens: 1,
+                        ..IoStats::default()
+                    };
+                    6
+                ],
+                per_rank_s: vec![0.05; 6],
+            },
+            per_rank_encode_s: vec![0.01; 6],
+            per_rank_nnz: vec![10, 20, 30, 5, 15, 20],
+            per_rank_peak_staging: vec![10, 20, 30, 5, 15, 20],
+            per_rank_peak_unsorted: vec![8, 8, 8, 5, 8, 8],
+            scheme_counts: [3, 1, 2, 4],
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = dummy();
+        assert_eq!(r.total_nnz(), 100);
+        assert_eq!(r.blocks_total(), 60);
+        assert_eq!(r.blocks_skipped(), 36);
+        assert_eq!(r.bytes_skipped(), 5400);
+        assert_eq!(r.prune_ratio(), Some(0.6));
+        assert_eq!(r.max_peak_staging(), 30);
+        assert_eq!(r.max_peak_unsorted(), 8);
+        assert_eq!(r.blocks_written(), 10);
+        assert_eq!(r.read.total_bytes(), 24000);
+        assert_eq!(r.write.total_bytes(), 4200);
+        assert_eq!(r.write.total_opens(), 6);
+        assert!(r.scheme_summary().contains("bitmap 2"), "{}", r.scheme_summary());
+    }
+
+    #[test]
+    fn phase_simulation_runs() {
+        let r = dummy();
+        let model = FsModel::anselm_lustre();
+        let sim = r.read.simulate(&model, 24000);
+        assert!(sim.makespan_s > 0.0);
+        assert_eq!(sim.per_rank_s.len(), 6);
+    }
+}

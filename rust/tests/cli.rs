@@ -20,15 +20,28 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_subcommands() {
     let out = run_ok(&["help"]);
-    for sub in ["generate", "store", "info", "load", "roundtrip", "spmv", "fig1"] {
+    for sub in [
+        "generate",
+        "store",
+        "info",
+        "load",
+        "roundtrip",
+        "repack",
+        "spmv",
+        "fig1",
+    ] {
         assert!(out.contains(sub), "help missing {sub}");
     }
 }
 
 #[test]
-fn unknown_subcommand_fails() {
+fn unknown_subcommand_fails_with_usage() {
     let out = bin().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("Usage:"), "no usage on unknown subcommand");
+    assert!(stderr.contains("frobnicate"), "{stderr}");
 }
 
 #[test]
@@ -69,6 +82,12 @@ fn store_info_load_cycle() {
     ]);
     assert!(out.contains("diff-config/exchange"), "{out}");
 
+    // The help-advertised 2d / cyclic target mappings parse on `load` too.
+    let out = run_ok(&[
+        "load", "--dir", dirs, "--procs", "4", "--mapping", "2d", "--strategy", "independent",
+    ]);
+    assert!(out.contains("diff-config/independent"), "{out}");
+
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -107,6 +126,71 @@ fn load_reports_block_pruning_and_auto_decision() {
     assert!(out.contains("independent"), "{out}");
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance scenario end to end: store row-wise with P=4, repack to
+/// a 2×3 Block2d grid with a new block size, and use `spmv` (power
+/// iteration) as the smoke test. The loaded *elements* are bitwise
+/// identical (asserted in the repack unit/differential tests); the SpMV
+/// numbers are compared to 1e-9 relative, because a Block2d layout splits
+/// rows across parts and regroups the per-row FP summation.
+#[test]
+fn repack_then_spmv_matches_original() {
+    let dir = std::env::temp_dir().join(format!("abhsf-cli-repack-{}", std::process::id()));
+    let out_dir = std::env::temp_dir().join(format!("abhsf-cli-repack-out-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let dirs = dir.to_str().unwrap();
+    let outs = out_dir.to_str().unwrap();
+
+    run_ok(&[
+        "store", "--dir", dirs, "--seed-size", "8", "--procs", "4", "--block-size", "8",
+    ]);
+    // Per-iteration |A x|, the eigenvalue estimate and the residual, as
+    // printed by `abhsf spmv` (last token of each metric line).
+    let spmv_metrics = |dir: &str| -> Vec<f64> {
+        run_ok(&["spmv", "--dir", dir, "--iters", "5"])
+            .lines()
+            .filter(|l| l.contains("|A x|_2") || l.contains("eigenvalue") || l.contains("residual"))
+            .map(|l| {
+                l.split_whitespace()
+                    .last()
+                    .unwrap()
+                    .parse::<f64>()
+                    .unwrap_or_else(|_| panic!("unparsable metric line: {l}"))
+            })
+            .collect()
+    };
+    let before = spmv_metrics(dirs);
+    assert!(before.len() >= 7, "spmv printed too little: {before:?}");
+
+    let out = run_ok(&[
+        "repack", "--dir", dirs, "--out", outs, "--nprocs", "6", "--mapping", "2d",
+        "--block-size", "16", "--chunk-size", "512",
+    ]);
+    assert!(out.contains("repacked"), "{out}");
+    assert!(out.contains("block pruning"), "{out}");
+    assert!(out.contains("peak staging"), "{out}");
+    assert!(out.contains("forecast"), "{out}");
+
+    let after = spmv_metrics(outs);
+    assert_eq!(before.len(), after.len(), "{before:?} vs {after:?}");
+    for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+        assert!(
+            (b - a).abs() <= 1e-9 * b.abs().max(1.0),
+            "spmv metric {i} diverged after repack: {b} vs {a}"
+        );
+    }
+
+    // A repack into the source directory itself must be refused.
+    let err = bin()
+        .args(["repack", "--dir", outs, "--out", outs])
+        .output()
+        .unwrap();
+    assert!(!err.status.success());
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&out_dir);
 }
 
 #[test]

@@ -78,20 +78,13 @@ fn draw_cfg(rng: &mut Xoshiro256, idx: usize) -> Cfg {
     }
 }
 
-/// Kind index → concrete mapping. 2D grids use the largest divisor split.
+/// Kind index → concrete mapping. 2D grids use the most-square split
+/// ([`Block2d::regular_auto`] — same rule the CLI applies).
 fn build_mapping(kind: usize, m: u64, n: u64, p: usize) -> Arc<dyn ProcessMapping> {
     match kind {
         0 => Arc::new(Rowwise::regular(m, n, p)),
         1 => Arc::new(Colwise::regular(m, n, p)),
-        2 => {
-            let mut pr = 1;
-            for d in 1..=p {
-                if p % d == 0 && d * d <= p {
-                    pr = d;
-                }
-            }
-            Arc::new(Block2d::regular(m, n, pr, p / pr))
-        }
+        2 => Arc::new(Block2d::regular_auto(m, n, p)),
         _ => Arc::new(CyclicRows { m, n, p }),
     }
 }
@@ -260,6 +253,151 @@ fn all_strategies_agree_on_random_configurations() {
 
         let _ = std::fs::remove_dir_all(&dir);
     }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Repack round-trip property: for ~10 seeded configurations,
+/// `load(repack(D, cfg'), any_strategy)` is element-identical to
+/// `load(D)`, the repacked manifest's per-file nnz sum to the original
+/// count, and no target rank ever stages more than its own region's
+/// elements. Config #0 is pinned to the acceptance shape (Rowwise P=4 →
+/// Block2d P=6, new block size) so the pruned read phase provably skips
+/// blocks under every master seed.
+#[test]
+fn repack_roundtrip_is_element_identical() {
+    const REPACK_CONFIGS: usize = 10;
+    let seed = master_seed();
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x9E37_79B9_7F4A_7C15);
+    let root = std::env::temp_dir().join(format!(
+        "abhsf-repack-differential-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut total_skipped = 0u64;
+    for idx in 0..REPACK_CONFIGS {
+        // (m, n, nnz, s_store, chunk_store, p_store, store_kind,
+        //  p_new, new_kind, s_new, chunk_new, p_load, load_kind)
+        let cfg = if idx == 0 {
+            (32, 32, 256, 4, 128, 4, 0, 6, 2, 8, 128, 5, 1)
+        } else {
+            let m = 8 + rng.next_below(73);
+            let n = 8 + rng.next_below(73);
+            let density = 0.02 + rng.next_f64() * 0.25;
+            let nnz = (((m * n) as f64 * density) as usize).clamp(1, (m * n) as usize);
+            (
+                m,
+                n,
+                nnz,
+                [2u64, 3, 4, 8, 16][rng.range_usize(0, 5)],
+                [16u64, 128, 65536][rng.range_usize(0, 3)],
+                1 + rng.range_usize(0, 5),
+                rng.range_usize(0, 4),
+                1 + rng.range_usize(0, 6),
+                rng.range_usize(0, 4),
+                [2u64, 3, 4, 8, 16][rng.range_usize(0, 5)],
+                [16u64, 128, 65536][rng.range_usize(0, 3)],
+                1 + rng.range_usize(0, 6),
+                rng.range_usize(0, 4),
+            )
+        };
+        let (m, n, nnz, s1, chunk1, p_store, store_kind) =
+            (cfg.0, cfg.1, cfg.2, cfg.3, cfg.4, cfg.5, cfg.6);
+        let (p_new, new_kind, s2, chunk2, p_load, load_kind) =
+            (cfg.7, cfg.8, cfg.9, cfg.10, cfg.11, cfg.12);
+        let ctx = format!(
+            "[reproduce: ABHSF_DIFF_SEED={seed} repack config #{idx}: {m}x{n} nnz={nnz} \
+             s {s1}->{s2} chunks {chunk1}->{chunk2} store P={p_store}/kind{store_kind} \
+             -> P={p_new}/kind{new_kind}, load P={p_load}/kind{load_kind}]"
+        );
+        let mut truth = random_elements(&mut rng, m, n, nnz);
+        truth.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+
+        let store_map = build_mapping(store_kind, m, n, p_store);
+        let parts = parts_for(store_map.as_ref(), m, n, &truth);
+        let dir = root.join(format!("src-{idx}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let store_cluster = Cluster::new(p_store, 64);
+        let (dataset, _) = Dataset::store_parts(
+            &store_cluster,
+            parts,
+            &store_map,
+            &dir,
+            StoreOptions {
+                block_size: s1,
+                chunk_elems: chunk1,
+                ..Default::default()
+            },
+        )
+        .unwrap_or_else(|e| panic!("store failed: {e} {ctx}"));
+
+        // Repack to the new configuration.
+        let new_map = build_mapping(new_kind, m, n, p_new);
+        let out = root.join(format!("out-{idx}"));
+        let repack_cluster = Cluster::new(p_new, 8);
+        // Pin a small staging chunk so the memory bound below is a real,
+        // falsifiable property of the re-bucketer, not the default mode.
+        const STAGING_CHUNK: usize = 257;
+        let (repacked, report) = dataset
+            .repack()
+            .nprocs(p_new)
+            .mapping(&new_map)
+            .block_size(s2)
+            .chunk_elems(chunk2)
+            .staging_chunk(STAGING_CHUNK)
+            .run(&repack_cluster, &out)
+            .unwrap_or_else(|e| panic!("repack failed: {e} {ctx}"));
+        total_skipped += report.blocks_skipped();
+        if idx == 0 {
+            assert!(report.blocks_skipped() > 0, "pinned config must prune {ctx}");
+        }
+        assert_eq!(report.total_nnz() as usize, nnz, "repack nnz {ctx}");
+        let manifest_nnz: u64 = repacked.manifest().files.iter().map(|f| f.nnz).sum();
+        assert_eq!(manifest_nnz as usize, nnz, "manifest nnz sum {ctx}");
+        assert_eq!(repacked.block_size(), s2, "{ctx}");
+        assert_eq!(repacked.nprocs(), p_new, "{ctx}");
+        // The falsifiable staging bound: with chunked accumulation the
+        // unsorted working set never exceeds the pinned chunk.
+        assert!(
+            report.max_peak_unsorted() as usize <= STAGING_CHUNK,
+            "unsorted staging {} exceeded chunk {STAGING_CHUNK} {ctx}",
+            report.max_peak_unsorted()
+        );
+        // Bookkeeping: the resident set per rank is its own share (no
+        // rank ever gathers the whole matrix).
+        assert_eq!(
+            report.max_peak_staging(),
+            report.per_rank_nnz.iter().copied().max().unwrap_or(0),
+            "staging exceeded the rank regions {ctx}"
+        );
+
+        // Reopen from disk and read back through every strategy.
+        let reopened = Dataset::open(&out).unwrap_or_else(|e| panic!("reopen: {e} {ctx}"));
+        let same_cluster = Cluster::new(p_new, 8);
+        let (mats, rep) = reopened
+            .load()
+            .format(InMemFormat::Csr)
+            .run(&same_cluster)
+            .unwrap_or_else(|e| panic!("same-config after repack: {e} {ctx}"));
+        assert_eq!(rep.scenario, "same-config", "{ctx}");
+        assert_eq!(collect(&mats), truth, "same-config diverged after repack {ctx}");
+
+        let load_map = build_mapping(load_kind, m, n, p_load);
+        let load_cluster = Cluster::new(p_load, 8);
+        for strategy in [Strategy::Independent, Strategy::Collective, Strategy::Exchange] {
+            let (mats, _) = reopened
+                .load()
+                .mapping(&load_map)
+                .strategy(strategy)
+                .format(InMemFormat::Coo)
+                .run(&load_cluster)
+                .unwrap_or_else(|e| panic!("{strategy} after repack: {e} {ctx}"));
+            assert_eq!(collect(&mats), truth, "{strategy} diverged after repack {ctx}");
+        }
+
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&out);
+    }
+    assert!(total_skipped > 0, "no repack pruning observed");
     let _ = std::fs::remove_dir_all(&root);
 }
 
