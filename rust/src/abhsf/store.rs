@@ -5,6 +5,7 @@ use std::path::{Path, PathBuf};
 
 use crate::abhsf::{names, AbhsfData, Result};
 use crate::h5::{H5Writer, IoStats};
+use crate::vfs::{LocalFs, Storage};
 
 /// Path of process `k`'s file inside the matrix directory:
 /// `<dir>/matrix-<k>.h5spm` (paper §2).
@@ -12,7 +13,8 @@ pub fn matrix_file_path<P: AsRef<Path>>(dir: P, rank: usize) -> PathBuf {
     dir.as_ref().join(format!("matrix-{rank}.h5spm"))
 }
 
-/// Write `data` to `path`, returning writer I/O statistics.
+/// Write `data` to `path` on the local filesystem, returning writer I/O
+/// statistics.
 ///
 /// Attribute and dataset names follow the paper's `abhsf` structure; empty
 /// datasets are written too so loaders can open cursors unconditionally.
@@ -26,11 +28,23 @@ pub fn store_data_chunked<P: AsRef<Path>>(
     data: &AbhsfData,
     chunk_elems: u64,
 ) -> Result<IoStats> {
+    store_data_chunked_on(&LocalFs, path, data, chunk_elems)
+}
+
+/// [`store_data_chunked`] on an arbitrary storage backend.
+pub fn store_data_chunked_on<P: AsRef<Path>>(
+    storage: &dyn Storage,
+    path: P,
+    data: &AbhsfData,
+    chunk_elems: u64,
+) -> Result<IoStats> {
     data.validate()?;
     if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent).map_err(crate::h5::H5Error::Io)?;
+        storage
+            .create_dir_all(parent)
+            .map_err(crate::h5::H5Error::Io)?;
     }
-    let mut w = H5Writer::create(&path)?;
+    let mut w = H5Writer::create_on(storage, &path)?;
     w.set_chunk_elems(chunk_elems);
 
     w.set_attr(names::M, data.info.m)?;

@@ -49,6 +49,7 @@ use crate::gen::KroneckerGen;
 use crate::mapping::{MappingDesc, ProcessMapping};
 use crate::parfs::{FsModel, IoStrategy, RankLoadProfile};
 use crate::util::json::Json;
+use crate::vfs::Storage;
 
 /// Manifest file name inside a dataset directory.
 pub const MANIFEST_FILE: &str = "dataset.json";
@@ -233,18 +234,23 @@ impl DatasetManifest {
     }
 }
 
-/// A handle to a stored ABHSF dataset: directory + manifest. Obtained
-/// from [`Dataset::store`] / [`Dataset::store_parts`] (which write the
-/// manifest) or [`Dataset::open`] (which reads or reconstructs it).
+/// A handle to a stored ABHSF dataset: directory + manifest + the
+/// storage backend the directory lives on. Obtained from
+/// [`Dataset::store`] / [`Dataset::store_parts`] (which write the
+/// manifest) or [`Dataset::open`] (which reads or reconstructs it); the
+/// `_on` variants of each take an explicit [`Storage`] backend, the plain
+/// forms default to the local filesystem.
 #[derive(Debug, Clone)]
 pub struct Dataset {
     dir: PathBuf,
     manifest: DatasetManifest,
+    storage: Arc<dyn Storage>,
 }
 
 impl Dataset {
-    /// Store a generated matrix under `mapping` and write the manifest;
-    /// returns the dataset handle and the per-rank store report.
+    /// Store a generated matrix under `mapping` on the local filesystem
+    /// and write the manifest; returns the dataset handle and the
+    /// per-rank store report.
     pub fn store(
         cluster: &Cluster,
         gen: &Arc<KroneckerGen>,
@@ -252,9 +258,22 @@ impl Dataset {
         dir: impl AsRef<Path>,
         opts: StoreOptions,
     ) -> Result<(Dataset, StoreReport), DatasetError> {
+        Self::store_on(crate::vfs::local(), cluster, gen, mapping, dir, opts)
+    }
+
+    /// [`Dataset::store`] on an arbitrary storage backend.
+    pub fn store_on(
+        storage: Arc<dyn Storage>,
+        cluster: &Cluster,
+        gen: &Arc<KroneckerGen>,
+        mapping: &Arc<dyn ProcessMapping>,
+        dir: impl AsRef<Path>,
+        opts: StoreOptions,
+    ) -> Result<(Dataset, StoreReport), DatasetError> {
         let dir = dir.as_ref();
-        let report = store_distributed_impl(cluster, gen, mapping, dir, opts)?;
+        let report = store_distributed_impl(cluster, &storage, gen, mapping, dir, opts)?;
         let dataset = Self::write_manifest(
+            storage,
             dir,
             mapping.descriptor(),
             gen.dim(),
@@ -267,8 +286,20 @@ impl Dataset {
 
     /// Store pre-built local parts (one COO per rank, partitioned by
     /// `mapping` — the caller guarantees the parts actually follow it)
-    /// and write the manifest.
+    /// on the local filesystem and write the manifest.
     pub fn store_parts(
+        cluster: &Cluster,
+        parts: Vec<Coo>,
+        mapping: &Arc<dyn ProcessMapping>,
+        dir: impl AsRef<Path>,
+        opts: StoreOptions,
+    ) -> Result<(Dataset, StoreReport), DatasetError> {
+        Self::store_parts_on(crate::vfs::local(), cluster, parts, mapping, dir, opts)
+    }
+
+    /// [`Dataset::store_parts`] on an arbitrary storage backend.
+    pub fn store_parts_on(
+        storage: Arc<dyn Storage>,
         cluster: &Cluster,
         parts: Vec<Coo>,
         mapping: &Arc<dyn ProcessMapping>,
@@ -287,9 +318,16 @@ impl Dataset {
             .first()
             .map(|c| (c.info.m, c.info.n))
             .unwrap_or((0, 0));
-        let report = store_parts_impl(cluster, parts, dir, opts)?;
-        let dataset =
-            Self::write_manifest(dir, mapping.descriptor(), m, n, &report, opts.block_size)?;
+        let report = store_parts_impl(cluster, &storage, parts, dir, opts)?;
+        let dataset = Self::write_manifest(
+            storage,
+            dir,
+            mapping.descriptor(),
+            m,
+            n,
+            &report,
+            opts.block_size,
+        )?;
         Ok((dataset, report))
     }
 
@@ -297,6 +335,7 @@ impl Dataset {
     /// Shared by the store entry points above and the repack subsystem
     /// (which writes its containers rank-by-rank before describing them).
     pub(crate) fn write_manifest(
+        storage: Arc<dyn Storage>,
         dir: &Path,
         mapping: MappingDesc,
         m: u64,
@@ -305,7 +344,7 @@ impl Dataset {
         block_size: u64,
     ) -> Result<Dataset, DatasetError> {
         let nprocs = report.per_rank_nnz.len();
-        let sizes = stored_file_sizes(dir, nprocs)?;
+        let sizes = stored_file_sizes(storage.as_ref(), dir, nprocs)?;
         let files: Vec<StoredFile> = report
             .per_rank_nnz
             .iter()
@@ -322,23 +361,37 @@ impl Dataset {
             files,
         };
         let text = format!("{}\n", manifest.to_json());
-        std::fs::write(dir.join(MANIFEST_FILE), text)?;
+        storage.write_file(&dir.join(MANIFEST_FILE), text.as_bytes())?;
         Ok(Dataset {
             dir: dir.to_path_buf(),
             manifest,
+            storage,
         })
     }
 
-    /// Open a dataset directory: parse `dataset.json`, or — for legacy
-    /// directories written before the manifest existed — reconstruct what
-    /// can be reconstructed by scanning `matrix-<k>.h5spm` headers (the
-    /// mapping then stays opaque, disabling only the same-config
-    /// fast-path *detection*, not any load path).
+    /// Open a dataset directory on the local filesystem: parse
+    /// `dataset.json`, or — for legacy directories written before the
+    /// manifest existed — reconstruct what can be reconstructed by
+    /// scanning `matrix-<k>.h5spm` headers (the mapping then stays
+    /// opaque, disabling only the same-config fast-path *detection*, not
+    /// any load path).
     pub fn open(dir: impl AsRef<Path>) -> Result<Dataset, DatasetError> {
+        Self::open_on(crate::vfs::local(), dir)
+    }
+
+    /// [`Dataset::open`] on an arbitrary storage backend.
+    pub fn open_on(
+        storage: Arc<dyn Storage>,
+        dir: impl AsRef<Path>,
+    ) -> Result<Dataset, DatasetError> {
         let dir = dir.as_ref();
         let path = dir.join(MANIFEST_FILE);
-        match std::fs::read_to_string(&path) {
-            Ok(text) => {
+        match storage.read_file(&path) {
+            Ok(bytes) => {
+                let text = String::from_utf8(bytes).map_err(|_| DatasetError::BadManifest {
+                    path: path.clone(),
+                    reason: "not UTF-8".into(),
+                })?;
                 let json = Json::parse(&text).map_err(|reason| DatasetError::BadManifest {
                     path: path.clone(),
                     reason,
@@ -352,9 +405,12 @@ impl Dataset {
                 Ok(Dataset {
                     dir: dir.to_path_buf(),
                     manifest,
+                    storage,
                 })
             }
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Self::open_legacy(dir),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Self::open_legacy(storage, dir)
+            }
             Err(e) => Err(DatasetError::BadManifest {
                 path,
                 reason: format!("unreadable: {e}"),
@@ -362,25 +418,25 @@ impl Dataset {
         }
     }
 
-    fn open_legacy(dir: &Path) -> Result<Dataset, DatasetError> {
+    fn open_legacy(storage: Arc<dyn Storage>, dir: &Path) -> Result<Dataset, DatasetError> {
         let mut files = Vec::new();
         let mut header = None;
         loop {
             let path = matrix_file_path(dir, files.len());
-            let md = match std::fs::metadata(&path) {
-                Ok(md) => md,
+            let bytes = match storage.len(&path) {
+                Ok(bytes) => bytes,
                 // A gap in the matrix-<k> sequence ends the scan; any
                 // other failure (e.g. EACCES) is an I/O problem on a file
                 // that *exists* and must not masquerade as end-of-data.
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => break,
                 Err(source) => return Err(DatasetError::MissingFile { path, source }),
             };
-            let reader = crate::h5::H5Reader::open(&path)
+            let reader = crate::h5::H5Reader::open_on(storage.as_ref(), &path)
                 .map_err(|e| DatasetError::Internal(Box::new(e)))?;
             let hdr = crate::abhsf::load::read_header(&reader)
                 .map_err(|e| DatasetError::Internal(Box::new(e)))?;
             files.push(StoredFile {
-                bytes: md.len(),
+                bytes,
                 nnz: hdr.info.z_local,
             });
             header.get_or_insert(hdr);
@@ -423,6 +479,7 @@ impl Dataset {
                 block_size: hdr.block_size,
                 files,
             },
+            storage,
         })
     }
 
@@ -436,12 +493,18 @@ impl Dataset {
             strategy: Strategy::Auto,
             model: FsModel::anselm_lustre(),
             prune: true,
+            storage: Arc::clone(&self.storage),
         }
     }
 
     /// Dataset directory.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// The storage backend this dataset lives on.
+    pub fn storage(&self) -> &Arc<dyn Storage> {
+        &self.storage
     }
 
     /// The manifest (discovered storing configuration).
@@ -477,7 +540,7 @@ impl Dataset {
     /// Verify every stored file named by the manifest is present and
     /// readable (typed [`DatasetError::MissingFile`] otherwise).
     pub fn verify_files(&self) -> Result<(), DatasetError> {
-        stored_file_sizes(&self.dir, self.manifest.nprocs).map(|_| ())
+        stored_file_sizes(self.storage.as_ref(), &self.dir, self.manifest.nprocs).map(|_| ())
     }
 
     /// Test-only constructor: a dataset handle over a synthetic manifest
@@ -514,6 +577,7 @@ impl Dataset {
                     nprocs
                 ],
             },
+            storage: crate::vfs::local(),
         }
     }
 
@@ -650,16 +714,19 @@ pub(crate) fn ops_estimate(bytes: u64) -> u64 {
     20 + bytes / (512 * 1024)
 }
 
-/// On-disk sizes of `matrix-<k>.h5spm` for `k` in `0..count`, with a
+/// Stored sizes of `matrix-<k>.h5spm` for `k` in `0..count`, with a
 /// typed [`DatasetError::MissingFile`] for any absent or unreadable
-/// container. Shared by manifest writing, plan validation and the
-/// deprecated shims' unique-byte accounting.
-pub(crate) fn stored_file_sizes(dir: &Path, count: usize) -> Result<Vec<u64>, DatasetError> {
+/// container. Shared by manifest writing and plan validation.
+pub(crate) fn stored_file_sizes(
+    storage: &dyn Storage,
+    dir: &Path,
+    count: usize,
+) -> Result<Vec<u64>, DatasetError> {
     (0..count)
         .map(|k| {
             let path = matrix_file_path(dir, k);
-            std::fs::metadata(&path)
-                .map(|md| md.len())
+            storage
+                .len(&path)
                 .map_err(|source| DatasetError::MissingFile { path, source })
         })
         .collect()
@@ -677,6 +744,7 @@ pub struct LoadPlan<'d> {
     strategy: Strategy,
     model: FsModel,
     prune: bool,
+    storage: Arc<dyn Storage>,
 }
 
 impl<'d> LoadPlan<'d> {
@@ -726,6 +794,15 @@ impl<'d> LoadPlan<'d> {
         self
     }
 
+    /// Storage backend to read through (default: the backend the dataset
+    /// was opened on). Overriding is mainly useful to wrap the dataset's
+    /// backend in a [`crate::vfs::SimFs`] for cost emulation or fault
+    /// injection without reopening the dataset.
+    pub fn storage(mut self, storage: Arc<dyn Storage>) -> Self {
+        self.storage = storage;
+        self
+    }
+
     /// Validate the plan against the cluster and the manifest, pick the
     /// strategy (for [`Strategy::Auto`]), and execute the load.
     pub fn run(&self, cluster: &Cluster) -> Result<(Vec<LoadedMatrix>, LoadReport), DatasetError> {
@@ -748,8 +825,8 @@ impl<'d> LoadPlan<'d> {
         let stored = self.dataset.nprocs();
         // One metadata pass doubles as the missing-file check and the
         // load-time `unique_bytes` measurement (files may have changed
-        // since the manifest was written; the disk is the truth here).
-        let unique: u64 = stored_file_sizes(&self.dataset.dir, stored)?
+        // since the manifest was written; the backend is the truth here).
+        let unique: u64 = stored_file_sizes(self.storage.as_ref(), &self.dataset.dir, stored)?
             .iter()
             .sum();
         // Same configuration ⇔ same process count and provably the same
@@ -782,8 +859,13 @@ impl<'d> LoadPlan<'d> {
                 let (mats, mut report, chosen_label) = if same_config {
                     // The fast path is both predicted-fastest and exact:
                     // prefer it unconditionally when eligible (paper §4).
-                    let out =
-                        same_config_impl(cluster, &self.dataset.dir, self.format, unique)?;
+                    let out = same_config_impl(
+                        cluster,
+                        &self.storage,
+                        &self.dataset.dir,
+                        self.format,
+                        unique,
+                    )?;
                     (out.0, out.1, "same-config".to_string())
                 } else {
                     let (chosen, _) = predicted
@@ -820,6 +902,7 @@ impl<'d> LoadPlan<'d> {
             Strategy::Auto => unreachable!("Auto is resolved in run()"),
             Strategy::Independent | Strategy::Collective => different_config_impl(
                 cluster,
+                &self.storage,
                 &self.dataset.dir,
                 &mapping,
                 &DiffLoadOptions {
@@ -836,6 +919,7 @@ impl<'d> LoadPlan<'d> {
             )?,
             Strategy::Exchange => exchange_impl(
                 cluster,
+                &self.storage,
                 &self.dataset.dir,
                 &mapping,
                 stored_files,
@@ -979,6 +1063,7 @@ mod tests {
                 block_size: 64,
                 files,
             },
+            storage: crate::vfs::local(),
         };
         let model = FsModel::anselm_lustre();
         let p = 16;
@@ -1034,6 +1119,7 @@ mod tests {
                 block_size: 64,
                 files,
             },
+            storage: crate::vfs::local(),
         };
         let model = FsModel::anselm_lustre();
         let t_same = ds.predict_same_config(&model);

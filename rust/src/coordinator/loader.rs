@@ -1,9 +1,8 @@
 //! Parallel loading orchestration — the paper's §3 in executable form.
 //!
 //! Three scenarios, all reached through
-//! [`crate::coordinator::LoadPlan::run`] (the deprecated free functions
-//! [`load_same_config`] / [`load_different_config`] / [`load_exchange`]
-//! remain as thin shims for one release):
+//! [`crate::coordinator::LoadPlan::run`], and all reading through the
+//! plan's [`crate::vfs::Storage`] backend:
 //!
 //! * same-configuration — the storing and loading configurations match:
 //!   rank `k` streams its own `matrix-<k>.h5spm` through Algorithm 1.
@@ -31,6 +30,7 @@ use crate::formats::{Coo, Csr, LocalInfo};
 use crate::h5::{H5Reader, IoStats};
 use crate::mapping::ProcessMapping;
 use crate::parfs::IoStrategy;
+use crate::vfs::Storage;
 
 /// A loaded local submatrix in the requested in-memory format.
 #[derive(Debug, Clone)]
@@ -101,49 +101,26 @@ pub struct DiffLoadOptions {
     pub prune: bool,
 }
 
-/// Sum of on-disk sizes of the stored files (distinct bytes; every re-read
-/// hits server caches in the cost model). A missing or unreadable file is
-/// a hard, typed error — it used to be silently counted as 0 bytes, which
-/// made every downstream `unique_bytes` figure (and the cost-model
-/// simulations built on it) quietly wrong.
-fn unique_bytes(dir: &Path, stored_files: usize) -> Result<u64, DatasetError> {
-    Ok(crate::coordinator::dataset::stored_file_sizes(dir, stored_files)?
-        .iter()
-        .sum())
-}
-
 type RankLoad = anyhow::Result<(LoadedMatrix, IoStats, f64)>;
 
 /// Same-configuration load: rank `k` runs Algorithm 1 on its own file.
-/// The cluster size must equal the storing process count.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Dataset::open(dir)?.load().format(..).run(&cluster)"
-)]
-pub fn load_same_config(
-    cluster: &Cluster,
-    dir: &Path,
-    format: InMemFormat,
-) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
-    let unique = unique_bytes(dir, cluster.nprocs())?;
-    same_config_impl(cluster, dir, format, unique)
-}
-
-/// `unique` is the sum of the stored files' on-disk sizes — from the
-/// dataset manifest (planned loads) or [`unique_bytes`] (shims); passing
+/// The cluster size must equal the storing process count. `unique` is
+/// the sum of the stored files' sizes, measured by the planner — passing
 /// it in keeps metadata round-trips out of the timed region.
 pub(crate) fn same_config_impl(
     cluster: &Cluster,
+    storage: &Arc<dyn Storage>,
     dir: &Path,
     format: InMemFormat,
     unique: u64,
 ) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
     let dirb = dir.to_path_buf();
+    let storage = Arc::clone(storage);
     let t0 = Instant::now();
     let results: Vec<RankLoad> = cluster.run(move |ctx| {
         let t = Instant::now();
         let path = matrix_file_path(&dirb, ctx.rank);
-        let reader = H5Reader::open(&path)?;
+        let reader = H5Reader::open_on(storage.as_ref(), &path)?;
         let loaded = match format {
             InMemFormat::Csr => LoadedMatrix::Csr(load_csr(&reader)?),
             InMemFormat::Coo => LoadedMatrix::Coo(load_coo(&reader)?),
@@ -161,24 +138,11 @@ pub(crate) fn same_config_impl(
 }
 
 /// Different-configuration load (paper §3): every rank reads every stored
-/// file and keeps the elements the new `mapping` assigns to it.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Dataset::open(dir)?.load().mapping(..).strategy(..).run(&cluster)"
-)]
-pub fn load_different_config(
-    cluster: &Cluster,
-    dir: &Path,
-    mapping: &Arc<dyn ProcessMapping>,
-    opts: &DiffLoadOptions,
-) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
-    let unique = unique_bytes(dir, opts.stored_files)?;
-    different_config_impl(cluster, dir, mapping, opts, unique)
-}
-
-/// See [`same_config_impl`] for the `unique` contract.
+/// file and keeps the elements the new `mapping` assigns to it. See
+/// [`same_config_impl`] for the `unique` contract.
 pub(crate) fn different_config_impl(
     cluster: &Cluster,
+    storage: &Arc<dyn Storage>,
     dir: &Path,
     mapping: &Arc<dyn ProcessMapping>,
     opts: &DiffLoadOptions,
@@ -192,6 +156,7 @@ pub(crate) fn different_config_impl(
         .into());
     }
     let dirb = dir.to_path_buf();
+    let storage = Arc::clone(storage);
     let mapping = Arc::clone(mapping);
     let opts_c = opts.clone();
     let t0 = Instant::now();
@@ -208,7 +173,7 @@ pub(crate) fn different_config_impl(
                 ctx.barrier();
             }
             let path = matrix_file_path(&dirb, file);
-            let reader = H5Reader::open(&path)?;
+            let reader = H5Reader::open_on(storage.as_ref(), &path)?;
             let hdr = crate::abhsf::load::read_header(&reader)?;
             global.get_or_insert((hdr.info.m, hdr.info.n, hdr.info.z));
             let rank = ctx.rank;
@@ -265,27 +230,7 @@ pub(crate) fn different_config_impl(
 /// Exchange-based different-configuration load (ablation / future-work):
 /// stored files are read once each (round-robin over loading ranks) and
 /// elements are routed to their new owners through the bounded channels.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Dataset::open(dir)?.load().mapping(..).strategy(Strategy::Exchange).run(&cluster)"
-)]
-pub fn load_exchange(
-    cluster: &Cluster,
-    dir: &Path,
-    mapping: &Arc<dyn ProcessMapping>,
-    stored_files: usize,
-    format: InMemFormat,
-) -> anyhow::Result<(Vec<LoadedMatrix>, LoadReport)> {
-    let unique = unique_bytes(dir, stored_files)?;
-    // The shim has no manifest to take the global dims from; read them
-    // from file 0's header up front (outside the timed region and the
-    // per-rank I/O accounting, like the other shims' metadata passes).
-    let reader = H5Reader::open(matrix_file_path(dir, 0))?;
-    let hdr = crate::abhsf::load::read_header(&reader)?;
-    let dims = (hdr.info.m, hdr.info.n, hdr.info.z);
-    exchange_impl(cluster, dir, mapping, stored_files, format, unique, dims)
-}
-
+///
 /// See [`same_config_impl`] for the `unique` contract. `dims` is the
 /// global `(m, n, z)` from the dataset manifest: a rank that reads no file
 /// (P_load > P_store) must not open a container just for the dims — that
@@ -293,6 +238,7 @@ pub fn load_exchange(
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn exchange_impl(
     cluster: &Cluster,
+    storage: &Arc<dyn Storage>,
     dir: &Path,
     mapping: &Arc<dyn ProcessMapping>,
     stored_files: usize,
@@ -309,6 +255,7 @@ pub(crate) fn exchange_impl(
     }
     const BATCH: usize = 4096;
     let dirb = dir.to_path_buf();
+    let storage = Arc::clone(storage);
     let mapping = Arc::clone(mapping);
     let t0 = Instant::now();
     type ExchangeOut = anyhow::Result<(LoadedMatrix, IoStats, f64, u64)>;
@@ -335,7 +282,7 @@ pub(crate) fn exchange_impl(
         let mut file = rank;
         while file < stored_files {
             let path = matrix_file_path(&dirb, file);
-            let reader = H5Reader::open(&path)?;
+            let reader = H5Reader::open_on(storage.as_ref(), &path)?;
             visit_elements(&reader, |i, j, v| {
                 let owner = map.owner(i, j);
                 if owner == rank {

@@ -106,6 +106,22 @@ impl LoadReport {
         (total > 0).then(|| self.blocks_skipped() as f64 / total as f64)
     }
 
+    /// Read-ahead batches across all ranks that were already fetched when
+    /// the decoder asked for them (block-pruned loads only).
+    pub fn prefetch_hits(&self) -> u64 {
+        self.per_rank_io.iter().map(|s| s.prefetch_hits).sum()
+    }
+
+    /// Total seconds decoders spent blocked waiting on the read-ahead
+    /// fetcher, across all ranks (block-pruned loads only).
+    pub fn prefetch_stall_s(&self) -> f64 {
+        self.per_rank_io
+            .iter()
+            .map(|s| s.prefetch_stall_ns)
+            .sum::<u64>() as f64
+            / 1e9
+    }
+
     /// Extract the per-rank footprints for the cost model.
     pub fn profiles(&self) -> Vec<RankLoadProfile> {
         self.per_rank_io
@@ -148,6 +164,8 @@ mod tests {
                     blocks_total: 8,
                     blocks_skipped: 6,
                     bytes_skipped: 500,
+                    prefetch_hits: 3,
+                    prefetch_stall_ns: 1_500_000_000,
                 },
             ],
             per_rank_nnz: vec![50, 70],
@@ -167,6 +185,8 @@ mod tests {
         assert_eq!(r.blocks_skipped(), 6);
         assert_eq!(r.bytes_skipped(), 500);
         assert_eq!(r.prune_ratio(), Some(0.75));
+        assert_eq!(r.prefetch_hits(), 3);
+        assert!((r.prefetch_stall_s() - 1.5).abs() < 1e-12);
         let mut unpruned = dummy_report();
         for io in &mut unpruned.per_rank_io {
             io.blocks_total = 0;

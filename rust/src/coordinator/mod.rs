@@ -26,9 +26,12 @@
 //!   [`Strategy::Auto`] decision record, and the bridge into the
 //!   [`crate::parfs`] cost model.
 //!
-//! The pre-0.2 free functions (`load_same_config`,
-//! `load_different_config`, `load_exchange`, `store_distributed`,
-//! `store_parts`) remain as `#[deprecated]` shims for one release.
+//! Every layer reads and writes through a pluggable
+//! [`crate::vfs::Storage`] backend carried by the [`Dataset`] (default:
+//! the local filesystem; see `Dataset::open_on` / `Dataset::store_on` and
+//! the `LoadPlan::storage` / `RepackPlan::storage` hooks). The pre-0.2
+//! deprecated free functions were removed in 0.3; use the
+//! [`Dataset`] / [`LoadPlan`] API.
 
 pub mod cluster;
 pub mod dataset;
@@ -41,12 +44,8 @@ pub use cluster::{Cluster, WorkerCtx};
 pub use dataset::{Dataset, DatasetManifest, LoadPlan, StoredFile, Strategy, MANIFEST_FILE};
 pub use error::DatasetError;
 pub use loader::{DiffLoadOptions, LoadedMatrix};
-#[allow(deprecated)]
-pub use loader::{load_different_config, load_exchange, load_same_config};
 pub use metrics::{AutoDecision, LoadReport, StoreReport};
 pub use storer::StoreOptions;
-#[allow(deprecated)]
-pub use storer::{store_distributed, store_parts};
 // The repack subsystem lives in `crate::repack` (it is the first
 // store-path-at-load-scale subsystem and owns its own module tree), but
 // its planning types are part of the coordinator-facing API surface.

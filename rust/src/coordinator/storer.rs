@@ -7,13 +7,14 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::abhsf::cost::CostModel;
-use crate::abhsf::{matrix_file_path, store::store_data_chunked, AbhsfData};
+use crate::abhsf::{matrix_file_path, store::store_data_chunked_on, AbhsfData};
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::error::DatasetError;
 use crate::coordinator::metrics::StoreReport;
 use crate::formats::Coo;
 use crate::gen::KroneckerGen;
 use crate::mapping::ProcessMapping;
+use crate::vfs::Storage;
 
 /// Options controlling the storage conversion.
 #[derive(Debug, Clone, Copy)]
@@ -38,23 +39,10 @@ impl Default for StoreOptions {
 
 /// Store a generated matrix: every rank of `cluster` lazily generates its
 /// own portion under `mapping` (no rank ever holds the global matrix),
-/// converts it to ABHSF and writes its file into `dir`.
-#[deprecated(
-    since = "0.2.0",
-    note = "use Dataset::store(..), which also writes the dataset manifest"
-)]
-pub fn store_distributed(
-    cluster: &Cluster,
-    gen: &Arc<KroneckerGen>,
-    mapping: &Arc<dyn ProcessMapping>,
-    dir: &Path,
-    opts: StoreOptions,
-) -> anyhow::Result<StoreReport> {
-    Ok(store_distributed_impl(cluster, gen, mapping, dir, opts)?)
-}
-
+/// converts it to ABHSF and writes its file into `dir` on `storage`.
 pub(crate) fn store_distributed_impl(
     cluster: &Cluster,
+    storage: &Arc<dyn Storage>,
     gen: &Arc<KroneckerGen>,
     mapping: &Arc<dyn ProcessMapping>,
     dir: &Path,
@@ -67,34 +55,23 @@ pub(crate) fn store_distributed_impl(
             what: "the storage mapping",
         });
     }
-    std::fs::create_dir_all(dir)?;
+    storage.create_dir_all(dir)?;
     let dir = dir.to_path_buf();
+    let storage = Arc::clone(storage);
     let gen = Arc::clone(gen);
     let mapping = Arc::clone(mapping);
     let t0 = Instant::now();
     let results = cluster.run(move |ctx| {
         let coo = gen.local_coo(mapping.as_ref(), ctx.rank);
-        store_local(&coo, &dir, ctx.rank, &opts)
+        store_local(storage.as_ref(), &coo, &dir, ctx.rank, &opts)
     });
     finish_report(results, t0)
 }
 
 /// Store pre-built local parts (one COO per rank).
-#[deprecated(
-    since = "0.2.0",
-    note = "use Dataset::store_parts(..), which also writes the dataset manifest"
-)]
-pub fn store_parts(
-    cluster: &Cluster,
-    parts: Vec<Coo>,
-    dir: &Path,
-    opts: StoreOptions,
-) -> anyhow::Result<StoreReport> {
-    Ok(store_parts_impl(cluster, parts, dir, opts)?)
-}
-
 pub(crate) fn store_parts_impl(
     cluster: &Cluster,
+    storage: &Arc<dyn Storage>,
     parts: Vec<Coo>,
     dir: &Path,
     opts: StoreOptions,
@@ -105,23 +82,30 @@ pub(crate) fn store_parts_impl(
             cluster: cluster.nprocs(),
         });
     }
-    std::fs::create_dir_all(dir)?;
+    storage.create_dir_all(dir)?;
     let dir = dir.to_path_buf();
+    let storage = Arc::clone(storage);
     let parts = Arc::new(parts);
     let t0 = Instant::now();
     let results = cluster.run(move |ctx| {
         let coo = &parts[ctx.rank];
-        store_local(coo, &dir, ctx.rank, &opts)
+        store_local(storage.as_ref(), coo, &dir, ctx.rank, &opts)
     });
     finish_report(results, t0)
 }
 
 type RankStoreResult = anyhow::Result<(crate::h5::IoStats, u64, u64)>;
 
-fn store_local(coo: &Coo, dir: &Path, rank: usize, opts: &StoreOptions) -> RankStoreResult {
+fn store_local(
+    storage: &dyn Storage,
+    coo: &Coo,
+    dir: &Path,
+    rank: usize,
+    opts: &StoreOptions,
+) -> RankStoreResult {
     let data = AbhsfData::from_coo(coo, opts.block_size, &opts.cost_model)?;
     let path = matrix_file_path(dir, rank);
-    let io = store_data_chunked(&path, &data, opts.chunk_elems)?;
+    let io = store_data_chunked_on(storage, &path, &data, opts.chunk_elems)?;
     Ok((io, coo.nnz() as u64, data.payload_bytes()))
 }
 

@@ -120,6 +120,14 @@ pub struct IoStats {
     /// independent of container chunk granularity; block-pruned loading
     /// only, zero elsewhere).
     pub bytes_skipped: u64,
+    /// Read-ahead batches that were already fetched when the decoder
+    /// asked for them — each hit is a fetch fully overlapped with decode
+    /// (block-pruned loading only; zero elsewhere).
+    pub prefetch_hits: u64,
+    /// Nanoseconds the decoder spent blocked waiting for the read-ahead
+    /// fetcher (block-pruned loading only; zero elsewhere). Zero stall
+    /// with nonzero hits means the pipeline fully hid the fetch time.
+    pub prefetch_stall_ns: u64,
 }
 
 impl IoStats {
@@ -131,5 +139,7 @@ impl IoStats {
         self.blocks_total += other.blocks_total;
         self.blocks_skipped += other.blocks_skipped;
         self.bytes_skipped += other.bytes_skipped;
+        self.prefetch_hits += other.prefetch_hits;
+        self.prefetch_stall_ns += other.prefetch_stall_ns;
     }
 }

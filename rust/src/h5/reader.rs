@@ -1,19 +1,28 @@
 //! h5spm container reader: directory parsing, attribute access, whole /
 //! sliced (hyperslab) dataset reads, checksum verification, I/O counters.
+//!
+//! Readers are backend-agnostic: [`H5Reader::open_on`] takes any
+//! [`crate::vfs::Storage`] implementation ([`H5Reader::open`] is the
+//! local-filesystem shorthand), and all positioned reads go through the
+//! shared [`StorageRead`] handle — which also powers the crate-internal
+//! double-buffered `PrefetchStream` used by block-pruned loading to
+//! overlap payload fetching with decoding.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::fs::File;
-use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::h5::dtype::{decode_slice, Dtype, Scalar};
 use crate::h5::writer::{AttrEntry, ChunkEntry, DatasetEntry};
 use crate::h5::{H5Error, IoStats, Result, MAGIC};
+use crate::vfs::{LocalFs, Storage, StorageRead};
 
 /// Read-only view of one h5spm container.
 pub struct H5Reader {
-    pub(crate) file: RefCell<File>,
+    pub(crate) file: Arc<dyn StorageRead>,
     path: PathBuf,
     attrs: BTreeMap<String, AttrEntry>,
     pub(crate) datasets: BTreeMap<String, DatasetEntry>,
@@ -23,33 +32,53 @@ pub struct H5Reader {
 }
 
 impl H5Reader {
-    /// Open and parse the directory.
+    /// Open and parse the directory on the local filesystem.
     pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Self::open_on(&LocalFs, path)
+    }
+
+    /// Open and parse the directory on an arbitrary storage backend.
+    pub fn open_on<P: AsRef<Path>>(storage: &dyn Storage, path: P) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
-        let mut file = File::open(&path)?;
-        let mut magic = [0u8; 8];
-        file.read_exact(&mut magic)
+        let file = storage.open(&path)?;
+        // Superblock: magic + directory offset/len.
+        let mut superblock = [0u8; 24];
+        file.read_exact_at(0, &mut superblock)
             .map_err(|_| H5Error::BadMagic(format!("{}: too short", path.display())))?;
-        if &magic != MAGIC {
+        if &superblock[..8] != MAGIC {
             return Err(H5Error::BadMagic(format!(
                 "{}: bad magic {:?}",
                 path.display(),
-                magic
+                &superblock[..8]
             )));
         }
-        let dir_offset = read_u64(&mut file)?;
-        let dir_len = read_u64(&mut file)?;
+        let dir_offset = u64::from_le_bytes(superblock[8..16].try_into().unwrap());
+        let dir_len = u64::from_le_bytes(superblock[16..24].try_into().unwrap());
         if dir_offset == 0 {
             return Err(H5Error::Corrupt(format!(
                 "{}: unfinished file (no directory)",
                 path.display()
             )));
         }
-        file.seek(SeekFrom::Start(dir_offset))?;
-        let mut dir = vec![0u8; dir_len as usize];
-        file.read_exact(&mut dir)?;
-        let mut crc_bytes = [0u8; 4];
-        file.read_exact(&mut crc_bytes)?;
+        // Never trust the stored directory extent: a corrupt superblock
+        // must be a typed error, not a huge allocation or an overflow.
+        let file_len = file.len()?;
+        let dir_end = dir_offset
+            .checked_add(dir_len)
+            .and_then(|end| end.checked_add(4));
+        match dir_end {
+            Some(end) if end <= file_len => {}
+            _ => {
+                return Err(H5Error::Corrupt(format!(
+                    "{}: directory [{dir_offset}, +{dir_len}+4) exceeds file size {file_len}",
+                    path.display()
+                )))
+            }
+        }
+        let mut dir = vec![0u8; dir_len as usize + 4];
+        file.read_exact_at(dir_offset, &mut dir)?;
+        let crc_bytes: [u8; 4] = dir[dir_len as usize..].try_into().unwrap();
+        dir.truncate(dir_len as usize);
         if crc32fast::hash(&dir) != u32::from_le_bytes(crc_bytes) {
             return Err(H5Error::Corrupt(format!(
                 "{}: directory checksum mismatch",
@@ -101,7 +130,7 @@ impl H5Reader {
         }
 
         Ok(Self {
-            file: RefCell::new(file),
+            file,
             path,
             attrs,
             datasets,
@@ -191,11 +220,7 @@ impl H5Reader {
     ) -> Result<Vec<u8>> {
         let nbytes = chunk.elems as usize * width;
         let mut buf = vec![0u8; nbytes];
-        {
-            let mut f = self.file.borrow_mut();
-            f.seek(SeekFrom::Start(chunk.offset))?;
-            f.read_exact(&mut buf)?;
-        }
+        self.file.read_exact_at(chunk.offset, &mut buf)?;
         let mut st = self.stats.borrow_mut();
         st.bytes += nbytes as u64;
         st.ops += 1;
@@ -264,72 +289,268 @@ impl H5Reader {
         ranges: &[(u64, u64)],
     ) -> Result<Vec<Vec<T>>> {
         let e = self.check_dtype::<T>(name)?.clone();
-        let mut prev_end = 0u64;
-        for &(start, count) in ranges {
-            if start < prev_end {
-                return Err(H5Error::Usage(format!(
-                    "read_ranges({name}): ranges not ascending/disjoint at {start}"
-                )));
-            }
-            if start + count > e.total_elems {
-                return Err(H5Error::OutOfBounds {
-                    name: name.into(),
-                    start,
-                    count,
-                    len: e.total_elems,
-                });
-            }
-            prev_end = start + count;
-        }
-        let mut out: Vec<Vec<T>> = ranges
+        let (raw, io) = fetch_ranges_raw(
+            self.file.as_ref(),
+            name,
+            &e,
+            T::DTYPE.size(),
+            ranges,
+            self.verify_checksums,
+        )?;
+        self.stats.borrow_mut().add(io);
+        Ok(raw.iter().map(|bytes| decode_slice::<T>(bytes)).collect())
+    }
+
+    /// Merge externally accumulated counters (the prefetch worker's) into
+    /// this reader's statistics.
+    pub(crate) fn merge_stats(&self, io: IoStats) {
+        self.stats.borrow_mut().add(io);
+    }
+
+    /// Start a double-buffered background fetch over `datasets`.
+    ///
+    /// Each [`BatchRequest`] names, per dataset (aligned with the
+    /// `datasets` slice), the ascending disjoint element ranges to fetch.
+    /// A background thread fetches batches in order through the *same*
+    /// storage handle (no extra open is charged) and hands them over a
+    /// bounded channel, staying at most two batches ahead of the
+    /// consumer — fetch of batch `i + 1` overlaps decode of batch `i`.
+    /// Consume with [`PrefetchStream::next`].
+    pub(crate) fn prefetch(
+        &self,
+        datasets: &[&str],
+        batches: Vec<BatchRequest>,
+    ) -> Result<PrefetchStream> {
+        let entries: Vec<(String, DatasetEntry, usize)> = datasets
             .iter()
-            .map(|&(_, count)| Vec::with_capacity(count as usize))
-            .collect();
-        // Walk chunks and ranges in lockstep; `next` is the first range
-        // not yet fully served.
-        let mut next = 0usize;
-        let mut chunk_start = 0u64;
-        for (ci, c) in e.chunks.iter().enumerate() {
-            let chunk_end = chunk_start + c.elems;
-            // Skip ranges that end before this chunk (already served).
-            while next < ranges.len() && ranges[next].0 + ranges[next].1 <= chunk_start {
-                next += 1;
-            }
-            if next >= ranges.len() {
-                break;
-            }
-            // Does any range overlap this chunk?
-            let overlaps = ranges[next..]
-                .iter()
-                .take_while(|&&(start, _)| start < chunk_end)
-                .any(|&(_, count)| count > 0);
-            if !overlaps {
-                chunk_start = chunk_end;
-                continue;
-            }
-            let bytes = self.read_chunk_bytes(name, ci, c, T::DTYPE.size())?;
-            let all = decode_slice::<T>(&bytes);
-            for (k, &(start, count)) in ranges.iter().enumerate().skip(next) {
-                if start >= chunk_end {
-                    break;
+            .map(|name| {
+                let e = self.entry(name)?.clone();
+                let width = e.dtype.size();
+                Ok((name.to_string(), e, width))
+            })
+            .collect::<Result<_>>()?;
+        let file = Arc::clone(&self.file);
+        let verify = self.verify_checksums;
+        let (tx, rx) = mpsc::sync_channel::<Result<(BatchData, IoStats)>>(1);
+        let handle = std::thread::spawn(move || {
+            for batch in batches {
+                let mut io = IoStats::default();
+                let mut data = Vec::with_capacity(entries.len());
+                let mut failed = None;
+                for ((name, entry, width), ranges) in entries.iter().zip(&batch.ranges) {
+                    match fetch_ranges_raw(file.as_ref(), name, entry, *width, ranges, verify) {
+                        Ok((d, st)) => {
+                            io.add(st);
+                            data.push(d);
+                        }
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
+                    }
                 }
-                let end = start + count;
-                if end <= chunk_start || count == 0 {
-                    continue;
+                match failed {
+                    None => {
+                        if tx.send(Ok((BatchData { data }, io))).is_err() {
+                            return; // consumer gone
+                        }
+                    }
+                    Some(e) => {
+                        let _ = tx.send(Err(e));
+                        return;
+                    }
                 }
-                let lo = start.max(chunk_start) - chunk_start;
-                let hi = end.min(chunk_end) - chunk_start;
-                out[k].extend_from_slice(&all[lo as usize..hi as usize]);
             }
-            chunk_start = chunk_end;
-        }
-        Ok(out)
+        });
+        Ok(PrefetchStream {
+            rx: Some(rx),
+            handle: Some(handle),
+            hits: 0,
+            stall_ns: 0,
+        })
     }
 
     /// I/O counters accumulated by this reader.
     pub fn stats(&self) -> IoStats {
         *self.stats.borrow()
     }
+}
+
+/// One prefetch batch: per dataset (aligned with the `datasets` slice
+/// given to [`H5Reader::prefetch`]), ascending disjoint `(start, count)`
+/// element ranges; an empty list skips that dataset for this batch.
+pub(crate) struct BatchRequest {
+    pub ranges: Vec<Vec<(u64, u64)>>,
+}
+
+/// One fetched batch: `data[d][r]` holds the raw little-endian bytes of
+/// range `r` of dataset `d`, aligned with the request.
+pub(crate) struct BatchData {
+    pub data: Vec<Vec<Vec<u8>>>,
+}
+
+/// Consumer half of [`H5Reader::prefetch`]: yields batches in order and
+/// accounts the overlap — a batch already fetched when asked for is a
+/// *prefetch hit*, time spent waiting for the fetcher is *stall*.
+pub(crate) struct PrefetchStream {
+    rx: Option<mpsc::Receiver<Result<(BatchData, IoStats)>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    hits: u64,
+    stall_ns: u64,
+}
+
+impl PrefetchStream {
+    /// The next batch, or `None` after the last. Fetch I/O counters are
+    /// merged into `reader`'s statistics as batches arrive; the
+    /// hit/stall counters land there when the stream finishes (including
+    /// the error path).
+    pub(crate) fn next(&mut self, reader: &H5Reader) -> Result<Option<BatchData>> {
+        let Some(rx) = &self.rx else {
+            return Ok(None);
+        };
+        let msg = match rx.try_recv() {
+            Ok(m) => {
+                self.hits += 1;
+                m
+            }
+            Err(mpsc::TryRecvError::Empty) => {
+                let t = Instant::now();
+                match rx.recv() {
+                    Ok(m) => {
+                        self.stall_ns += t.elapsed().as_nanos() as u64;
+                        m
+                    }
+                    Err(_) => {
+                        self.finish(reader);
+                        return Ok(None);
+                    }
+                }
+            }
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.finish(reader);
+                return Ok(None);
+            }
+        };
+        match msg {
+            Ok((batch, io)) => {
+                reader.merge_stats(io);
+                Ok(Some(batch))
+            }
+            Err(e) => {
+                self.finish(reader);
+                Err(e)
+            }
+        }
+    }
+
+    /// Join the worker and flush hit/stall counters into the reader.
+    fn finish(&mut self, reader: &H5Reader) {
+        self.rx = None; // unblocks a worker waiting to send
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        reader.merge_stats(IoStats {
+            prefetch_hits: self.hits,
+            prefetch_stall_ns: self.stall_ns,
+            ..IoStats::default()
+        });
+        self.hits = 0;
+        self.stall_ns = 0;
+    }
+}
+
+impl Drop for PrefetchStream {
+    fn drop(&mut self) {
+        // Abandoned mid-stream (error propagation): dropping the receiver
+        // unblocks the worker; join it so no fetch outlives the reader.
+        self.rx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fetch many hyperslabs of one dataset as raw bytes in a single forward
+/// pass (the chunk-coalescing walk behind [`H5Reader::read_ranges`] and
+/// the prefetch worker). Within one call each needed chunk is read at
+/// most once and untouched chunks never; CRCs are verified per chunk when
+/// `verify` is set. Returns the per-range bytes and the I/O counters of
+/// this pass (the caller owns merging them into reader statistics).
+pub(crate) fn fetch_ranges_raw(
+    file: &dyn StorageRead,
+    name: &str,
+    entry: &DatasetEntry,
+    width: usize,
+    ranges: &[(u64, u64)],
+    verify: bool,
+) -> Result<(Vec<Vec<u8>>, IoStats)> {
+    let mut prev_end = 0u64;
+    for &(start, count) in ranges {
+        if start < prev_end {
+            return Err(H5Error::Usage(format!(
+                "read_ranges({name}): ranges not ascending/disjoint at {start}"
+            )));
+        }
+        if start + count > entry.total_elems {
+            return Err(H5Error::OutOfBounds {
+                name: name.into(),
+                start,
+                count,
+                len: entry.total_elems,
+            });
+        }
+        prev_end = start + count;
+    }
+    let mut io = IoStats::default();
+    let mut out: Vec<Vec<u8>> = ranges
+        .iter()
+        .map(|&(_, count)| Vec::with_capacity(count as usize * width))
+        .collect();
+    // Walk chunks and ranges in lockstep; `next` is the first range
+    // not yet fully served.
+    let mut next = 0usize;
+    let mut chunk_start = 0u64;
+    for (ci, c) in entry.chunks.iter().enumerate() {
+        let chunk_end = chunk_start + c.elems;
+        // Skip ranges that end before this chunk (already served).
+        while next < ranges.len() && ranges[next].0 + ranges[next].1 <= chunk_start {
+            next += 1;
+        }
+        if next >= ranges.len() {
+            break;
+        }
+        // Does any range overlap this chunk?
+        let overlaps = ranges[next..]
+            .iter()
+            .take_while(|&&(start, _)| start < chunk_end)
+            .any(|&(_, count)| count > 0);
+        if !overlaps {
+            chunk_start = chunk_end;
+            continue;
+        }
+        let nbytes = c.elems as usize * width;
+        let mut buf = vec![0u8; nbytes];
+        file.read_exact_at(c.offset, &mut buf)?;
+        io.bytes += nbytes as u64;
+        io.ops += 1;
+        if verify && crc32fast::hash(&buf) != c.crc {
+            return Err(H5Error::Checksum(name.to_string(), ci));
+        }
+        for (k, &(start, count)) in ranges.iter().enumerate().skip(next) {
+            if start >= chunk_end {
+                break;
+            }
+            let end = start + count;
+            if end <= chunk_start || count == 0 {
+                continue;
+            }
+            let lo = (start.max(chunk_start) - chunk_start) as usize * width;
+            let hi = (end.min(chunk_end) - chunk_start) as usize * width;
+            out[k].extend_from_slice(&buf[lo..hi]);
+        }
+        chunk_start = chunk_end;
+    }
+    Ok((out, io))
 }
 
 struct Parser<'a> {
@@ -366,16 +587,11 @@ impl<'a> Parser<'a> {
     }
 }
 
-fn read_u64(f: &mut File) -> Result<u64> {
-    let mut b = [0u8; 8];
-    f.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::h5::writer::H5Writer;
+    use crate::vfs::MemFs;
 
     fn ranged_file(name: &str, len: u32, chunk: u64) -> PathBuf {
         let dir = std::env::temp_dir().join("abhsf-h5-reader-tests");
@@ -459,5 +675,93 @@ mod tests {
         assert_eq!(got[0], want);
         let want: Vec<u32> = (200..300).collect();
         assert_eq!(got[1], want);
+    }
+
+    /// The container format round-trips bit-identically through MemFs.
+    #[test]
+    fn open_on_memfs_roundtrip() {
+        let fs = MemFs::new();
+        let path = Path::new("/mem/file.h5spm");
+        let data: Vec<u32> = (0..500).collect();
+        {
+            let mut w = H5Writer::create_on(&fs, path).unwrap();
+            w.set_chunk_elems(64);
+            w.set_attr("answer", 42u64).unwrap();
+            w.write_dataset("d", &data).unwrap();
+            w.finish().unwrap();
+        }
+        let r = H5Reader::open_on(&fs, path).unwrap();
+        assert_eq!(r.attr::<u64>("answer").unwrap(), 42);
+        assert_eq!(r.read_all::<u32>("d").unwrap(), data);
+        assert_eq!(
+            r.read_ranges::<u32>("d", &[(10, 5), (400, 10)]).unwrap()[1][0],
+            400
+        );
+    }
+
+    /// The double-buffered prefetch stream delivers exactly the bytes the
+    /// synchronous path would, merges its I/O into the reader's counters,
+    /// and accounts hits/stalls.
+    #[test]
+    fn prefetch_stream_matches_synchronous_ranges() {
+        let path = ranged_file("prefetch.h5spm", 4000, 64);
+        let r = H5Reader::open(&path).unwrap();
+        let batches: Vec<BatchRequest> = (0..8)
+            .map(|b| BatchRequest {
+                ranges: vec![vec![(b * 500, 300)]],
+            })
+            .collect();
+        let mut stream = r.prefetch(&["d"], batches).unwrap();
+        let mut got: Vec<u32> = Vec::new();
+        let mut first = true;
+        while let Some(batch) = stream.next(&r).unwrap() {
+            assert_eq!(batch.data.len(), 1);
+            for raw in &batch.data[0] {
+                got.extend(decode_slice::<u32>(raw));
+            }
+            if first {
+                // Give the worker ample time to stage the next batch, so
+                // at least one delivery is a guaranteed prefetch hit.
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                first = false;
+            }
+        }
+        let want: Vec<u32> = (0..8u32)
+            .flat_map(|b| (b * 500..b * 500 + 300))
+            .collect();
+        assert_eq!(got, want);
+        let st = r.stats();
+        assert!(st.bytes > 4000 * 2, "fetch I/O not merged: {st:?}");
+        assert!(st.prefetch_hits >= 1, "no overlap accounting: {st:?}");
+    }
+
+    /// A fetch error (bad range) surfaces through the stream as Err, and
+    /// the worker thread is joined cleanly.
+    #[test]
+    fn prefetch_stream_propagates_errors() {
+        let path = ranged_file("prefetch-err.h5spm", 100, 10);
+        let r = H5Reader::open(&path).unwrap();
+        let batches = vec![
+            BatchRequest {
+                ranges: vec![vec![(0, 10)]],
+            },
+            BatchRequest {
+                ranges: vec![vec![(90, 20)]], // out of bounds
+            },
+        ];
+        let mut stream = r.prefetch(&["d"], batches).unwrap();
+        let mut saw_err = false;
+        loop {
+            match stream.next(&r) {
+                Ok(Some(_)) => {}
+                Ok(None) => break,
+                Err(e) => {
+                    assert!(matches!(e, H5Error::OutOfBounds { .. }), "{e}");
+                    saw_err = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_err, "out-of-bounds batch must error");
     }
 }

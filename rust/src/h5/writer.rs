@@ -1,12 +1,15 @@
 //! h5spm container writer.
+//!
+//! Writers are backend-agnostic: [`H5Writer::create_on`] streams through
+//! any [`crate::vfs::Storage`] write handle ([`H5Writer::create`] is the
+//! local-filesystem shorthand).
 
 use std::collections::BTreeMap;
-use std::fs::File;
-use std::io::{BufWriter, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use crate::h5::dtype::{encode_slice, Dtype, Scalar};
 use crate::h5::{H5Error, IoStats, Result, DEFAULT_CHUNK_ELEMS, MAGIC};
+use crate::vfs::{LocalFs, Storage, StorageWrite};
 
 /// One chunk's directory entry.
 #[derive(Debug, Clone, Copy)]
@@ -39,7 +42,7 @@ pub(crate) struct AttrEntry {
 /// finishing leaves an unreadable file, mirroring HDF5's behaviour on
 /// unclosed files.
 pub struct H5Writer {
-    file: BufWriter<File>,
+    file: Box<dyn StorageWrite>,
     pos: u64,
     attrs: BTreeMap<String, AttrEntry>,
     datasets: BTreeMap<String, DatasetEntry>,
@@ -49,13 +52,19 @@ pub struct H5Writer {
 }
 
 impl H5Writer {
-    /// Create (truncate) a container at `path`.
+    /// Create (truncate) a container at `path` on the local filesystem.
     pub fn create<P: AsRef<Path>>(path: P) -> Result<Self> {
-        let mut file = BufWriter::new(File::create(path)?);
+        Self::create_on(&LocalFs, path)
+    }
+
+    /// Create (truncate) a container at `path` on an arbitrary storage
+    /// backend.
+    pub fn create_on<P: AsRef<Path>>(storage: &dyn Storage, path: P) -> Result<Self> {
+        let mut file = storage.create(path.as_ref())?;
         // Superblock: magic + placeholder directory offset/len.
-        file.write_all(MAGIC)?;
-        file.write_all(&0u64.to_le_bytes())?;
-        file.write_all(&0u64.to_le_bytes())?;
+        file.append(MAGIC)?;
+        file.append(&0u64.to_le_bytes())?;
+        file.append(&0u64.to_le_bytes())?;
         Ok(Self {
             file,
             pos: (MAGIC.len() + 16) as u64,
@@ -131,7 +140,7 @@ impl H5Writer {
     fn write_chunk_bytes(&mut self, bytes: &[u8]) -> Result<(u64, u32)> {
         let offset = self.pos;
         let crc = crc32fast::hash(bytes);
-        self.file.write_all(bytes)?;
+        self.file.append(bytes)?;
         self.pos += bytes.len() as u64;
         self.stats.bytes += bytes.len() as u64;
         self.stats.ops += 1;
@@ -163,15 +172,14 @@ impl H5Writer {
             }
         }
         let dir_crc = crc32fast::hash(&dir);
-        self.file.write_all(&dir)?;
-        self.file.write_all(&dir_crc.to_le_bytes())?;
-        // Patch the superblock.
-        self.file.flush()?;
-        let f = self.file.get_mut();
-        f.seek(SeekFrom::Start(MAGIC.len() as u64))?;
-        f.write_all(&dir_offset.to_le_bytes())?;
-        f.write_all(&(dir.len() as u64).to_le_bytes())?;
-        f.sync_all()?;
+        self.file.append(&dir)?;
+        self.file.append(&dir_crc.to_le_bytes())?;
+        // Patch the superblock, then persist.
+        let mut patch = [0u8; 16];
+        patch[..8].copy_from_slice(&dir_offset.to_le_bytes());
+        patch[8..].copy_from_slice(&(dir.len() as u64).to_le_bytes());
+        self.file.patch_at(MAGIC.len() as u64, &patch)?;
+        self.file.sync()?;
         self.finished = true;
         Ok(self.stats)
     }

@@ -25,6 +25,12 @@
 //!   mapping and block size without materializing the full matrix
 //!   anywhere (`dataset.repack().nprocs(p).mapping(m).block_size(s)
 //!   .run(&cluster, out_dir)`).
+//!   Every layer reads and writes through a pluggable storage backend
+//!   ([`vfs`]): the real filesystem, an `Arc`-shared in-memory namespace,
+//!   or a [`vfs::SimFs`] decorator that emulates the [`parfs`] cost model
+//!   and injects storage faults; block-pruned reads overlap fetch and
+//!   decode through a double-buffered read-ahead pipeline
+//!   (DESIGN.md §9).
 //! * **Layer 2/1 (python/, build-time)** — a JAX blocked-SpMV consumer with
 //!   Pallas kernels, AOT-lowered to HLO text and executed from Rust via the
 //!   PJRT CPU client ([`runtime`]).
@@ -43,3 +49,4 @@ pub mod repack;
 pub mod runtime;
 pub mod spmv;
 pub mod util;
+pub mod vfs;

@@ -34,6 +34,7 @@ use abhsf::parfs::FsModel;
 use abhsf::util::args::Args;
 use abhsf::util::bench::Table;
 use abhsf::util::human;
+use abhsf::vfs::{FaultSpec, MemFs, SimFs, Storage};
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -89,10 +90,56 @@ fn print_usage() {
          --mapping rowwise|colwise|2d|cyclic\n\
          \x20               --strategy auto|independent|collective|exchange --format csr|coo\n\
          \x20               --no-prune (disable block-pruned diff-config reading)\n\
+         \x20               --backend local|mem|sim  storage backend for \
+         store/info/load/roundtrip/repack/spmv\n\
+         \x20                 local = the real filesystem (default)\n\
+         \x20                 mem   = a fresh in-memory namespace that dies with \
+         this invocation — nothing\n\
+         \x20                         persists, so only self-contained cycles \
+         (roundtrip) are meaningful\n\
+         \x20                 sim   = parfs-cost simulation over the local files, \
+         with optional fault injection\n\
+         Sim options:    --sim-scale X  sleep X real seconds per simulated second \
+         (default 0: account only)\n\
+         \x20               --fault kind:substr[,kind:substr...]  inject faults on \
+         matching paths\n\
+         \x20                 (kinds: missing | truncate | fail-writes)\n\
          Repack options: --out PATH --nprocs P --mapping KIND --block-size S \
          --chunk-size C\n\
          Spmv options:   --iters N --pjrt-check\n"
     );
+}
+
+/// `--backend local|mem|sim` (+ `--sim-scale`, `--fault` for sim): the
+/// storage backend every dataset-touching subcommand goes through. The
+/// second return is the concrete [`SimFs`] handle when simulating, so
+/// commands can print the simulated clock at the end.
+fn parse_backend(a: &Args) -> anyhow::Result<(Arc<dyn Storage>, Option<Arc<SimFs>>)> {
+    Ok(match a.str_or("backend", "local").as_str() {
+        "local" => (abhsf::vfs::local(), None),
+        "mem" => {
+            let mem: Arc<dyn Storage> = Arc::new(MemFs::new());
+            (mem, None)
+        }
+        "sim" => {
+            let mut sim = SimFs::new(abhsf::vfs::local(), FsModel::anselm_lustre())
+                .time_scale(a.parse_or("sim-scale", 0.0f64)?);
+            if let Some(spec) = a.get("fault") {
+                sim = sim.faults(FaultSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?);
+            }
+            let sim = Arc::new(sim);
+            (Arc::clone(&sim) as Arc<dyn Storage>, Some(sim))
+        }
+        other => anyhow::bail!("unknown backend {other} (local|mem|sim)"),
+    })
+}
+
+/// Trailer line for `--backend sim` runs: the parfs-model cost of every
+/// storage operation the command issued.
+fn print_sim_clock(sim: &Option<Arc<SimFs>>) {
+    if let Some(sim) = sim {
+        println!("sim backend     : {:.3} s simulated I/O", sim.simulated_seconds());
+    }
 }
 
 /// Shared workload options.
@@ -171,8 +218,10 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
     let p: usize = a.parse_or("procs", 4usize)?;
     let s: u64 = a.parse_or("block-size", 64u64)?;
     let mapping = parse_mapping(&a, &w.gen, p)?;
+    let (storage, sim) = parse_backend(&a)?;
     let cluster = Cluster::new(p, 64);
-    let (dataset, report) = Dataset::store(
+    let (dataset, report) = Dataset::store_on(
+        storage,
         &cluster,
         &w.gen,
         &mapping,
@@ -183,20 +232,23 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
         },
     )?;
     println!(
-        "stored {} nnz into {} files in {:.3}s ({} payload, mapping {})",
+        "stored {} nnz into {} files in {:.3}s ({} payload, mapping {}, backend {})",
         human::count(report.total_nnz()),
         p,
         report.wall_s,
         human::bytes(report.total_bytes()),
         dataset.mapping().kind(),
+        dataset.storage().label(),
     );
+    print_sim_clock(&sim);
     Ok(())
 }
 
 fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf info", argv, &[])?;
     let dir = PathBuf::from(a.str_or("dir", "matrix"));
-    let dataset = Dataset::open(&dir)?;
+    let (storage, sim) = parse_backend(&a)?;
+    let dataset = Dataset::open_on(storage, &dir)?;
     let (m, n) = dataset.dims();
     println!(
         "dataset: {} x {}, {} nnz, stored by P={} ({} mapping), s={}, {}",
@@ -214,14 +266,14 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
     ]);
     for k in 0..dataset.nprocs() {
         let path = abhsf::abhsf::matrix_file_path(&dir, k);
-        let r = H5Reader::open(&path)?;
+        let r = H5Reader::open_on(dataset.storage().as_ref(), &path)?;
         let hdr = read_header(&r)?;
         let schemes: Vec<u8> = r.read_all("schemes")?;
         let mut counts = [0u64; 4];
         for tag in &schemes {
             counts[*tag as usize] += 1;
         }
-        let bytes = std::fs::metadata(&path)?.len();
+        let bytes = dataset.storage().len(&path)?;
         t.row(&[
             format!("matrix-{k}"),
             hdr.info.m_local.to_string(),
@@ -237,13 +289,15 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    print_sim_clock(&sim);
     Ok(())
 }
 
 fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf load", argv, &["same-config", "no-prune"])?;
     let dir = PathBuf::from(a.str_or("dir", "matrix"));
-    let dataset = Dataset::open(&dir)?;
+    let (storage, sim) = parse_backend(&a)?;
+    let dataset = Dataset::open_on(storage, &dir)?;
     let format: InMemFormat = a.str_or("format", "csr").parse()?;
     let model = FsModel::anselm_lustre();
 
@@ -252,6 +306,7 @@ fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
         let cluster = Cluster::new(dataset.nprocs(), 64);
         let (_, report) = dataset.load().format(format).run(&cluster)?;
         print_load_report(&report, &model);
+        print_sim_clock(&sim);
         return Ok(());
     }
     let p: usize = a.parse_or("procs", dataset.nprocs())?;
@@ -268,6 +323,7 @@ fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
         .prune(!a.flag("no-prune"))
         .run(&cluster)?;
     print_load_report(&report, &model);
+    print_sim_clock(&sim);
     Ok(())
 }
 
@@ -289,6 +345,11 @@ fn print_load_report(report: &abhsf::coordinator::LoadReport, model: &FsModel) {
             human::count(report.blocks_total()),
             ratio * 100.0,
             human::bytes(report.bytes_skipped()),
+        );
+        println!(
+            "read-ahead      : {} prefetch hits, {:.2} ms decoder stall",
+            human::count(report.prefetch_hits()),
+            report.prefetch_stall_s() * 1e3,
         );
     }
     println!(
@@ -321,8 +382,10 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
     let p: usize = a.parse_or("procs", 4usize)?;
     let s: u64 = a.parse_or("block-size", 32u64)?;
     let mapping = parse_mapping(&a, &w.gen, p)?;
+    let (storage, sim) = parse_backend(&a)?;
     let cluster = Cluster::new(p, 64);
-    let (dataset, sreport) = Dataset::store(
+    let (dataset, sreport) = Dataset::store_on(
+        storage,
         &cluster,
         &w.gen,
         &mapping,
@@ -349,11 +412,14 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
     let diff = abhsf::spmv::max_abs_diff(&y, &want);
     anyhow::ensure!(diff < 1e-9, "spmv mismatch {diff}");
     println!(
-        "roundtrip OK: {} nnz, store {:.3}s, load {:.3}s, spmv maxdiff {diff:.2e}",
+        "roundtrip OK: {} nnz, store {:.3}s, load {:.3}s, spmv maxdiff {diff:.2e} \
+         (backend {})",
         human::count(sreport.total_nnz()),
         sreport.wall_s,
-        lreport.wall_s
+        lreport.wall_s,
+        dataset.storage().label(),
     );
+    print_sim_clock(&sim);
     let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }
@@ -369,7 +435,8 @@ fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf spmv", argv, &["pjrt-check"])?;
     let dir = PathBuf::from(a.str_or("dir", "matrix"));
     let iters: usize = a.parse_or("iters", 10usize)?;
-    let dataset = Dataset::open(&dir)?;
+    let (storage, sim) = parse_backend(&a)?;
+    let dataset = Dataset::open_on(storage, &dir)?;
     let (gm, gn) = dataset.dims();
     anyhow::ensure!(
         gm == gn,
@@ -439,6 +506,7 @@ fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
             Err(e) => println!("pjrt engine unavailable ({e}); skipping cross-check"),
         }
     }
+    print_sim_clock(&sim);
     Ok(())
 }
 
@@ -468,7 +536,8 @@ fn cmd_repack(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf repack", argv, &["no-prune"])?;
     let dir = PathBuf::from(a.str_or("dir", "matrix"));
     let out = PathBuf::from(a.str_or("out", "matrix-repacked"));
-    let dataset = Dataset::open(&dir)?;
+    let (storage, sim) = parse_backend(&a)?;
+    let dataset = Dataset::open_on(storage, &dir)?;
     let p: usize = if a.get("nprocs").is_some() {
         a.parse_or("nprocs", dataset.nprocs())?
     } else {
@@ -550,6 +619,7 @@ fn cmd_repack(argv: Vec<String>) -> anyhow::Result<()> {
             forecast.post_repack_load_s,
         ),
     }
+    print_sim_clock(&sim);
     Ok(())
 }
 

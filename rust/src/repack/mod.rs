@@ -45,7 +45,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::abhsf::cost::CostModel;
-use crate::abhsf::store::store_data_chunked;
+use crate::abhsf::store::store_data_chunked_on;
 use crate::abhsf::{
     matrix_file_path, rebucket_into_abhsf, visit_elements, visit_elements_pruned, Rebucketer,
 };
@@ -57,6 +57,7 @@ use crate::formats::element::window_or_tight;
 use crate::h5::{H5Reader, IoStats};
 use crate::mapping::{MappingDesc, ProcessMapping};
 use crate::parfs::FsModel;
+use crate::vfs::Storage;
 
 /// Default staging-chunk size (elements) for irregular target mappings —
 /// bounds the unsorted working set of the re-bucketer at ~1.5 MiB per
@@ -77,6 +78,7 @@ pub struct RepackPlan<'d> {
     prune: bool,
     staging_chunk: Option<usize>,
     model: FsModel,
+    out_storage: Option<Arc<dyn Storage>>,
 }
 
 impl Dataset {
@@ -92,6 +94,7 @@ impl Dataset {
             prune: true,
             staging_chunk: None,
             model: FsModel::anselm_lustre(),
+            out_storage: None,
         }
     }
 }
@@ -152,6 +155,15 @@ impl<'d> RepackPlan<'d> {
         self
     }
 
+    /// Storage backend the repacked dataset is written to (default: the
+    /// source dataset's backend). Reads always go through the source
+    /// backend, so a repack can migrate a dataset *between* media — e.g.
+    /// stage an in-memory dataset out to disk.
+    pub fn storage(mut self, storage: Arc<dyn Storage>) -> Self {
+        self.out_storage = Some(storage);
+        self
+    }
+
     /// Price this repack against repeated direct different-configuration
     /// loads under the plan's [`FsModel`] (no I/O happens).
     pub fn forecast(&self) -> RepackForecast {
@@ -205,10 +217,20 @@ impl<'d> RepackPlan<'d> {
         let mapping = self.resolve_mapping(p)?;
         let stored = self.dataset.nprocs();
         self.dataset.verify_files()?;
-        std::fs::create_dir_all(out_dir)?;
-        // Refuse to clobber the containers being read. Both directories
-        // exist by now, so canonicalization is exact (symlinks included).
-        if std::fs::canonicalize(out_dir)? == std::fs::canonicalize(self.dataset.dir())? {
+        let src_storage = Arc::clone(self.dataset.storage());
+        let out_storage = self
+            .out_storage
+            .clone()
+            .unwrap_or_else(|| Arc::clone(&src_storage));
+        out_storage.create_dir_all(out_dir)?;
+        // Refuse to clobber the containers being read: same backing
+        // medium and same canonical directory. Both directories exist by
+        // now, so LocalFs canonicalization is exact (symlinks included);
+        // writing the same path on a *different* medium is a migration,
+        // not a clobber.
+        if out_storage.medium() == src_storage.medium()
+            && out_storage.canonical(out_dir) == src_storage.canonical(self.dataset.dir())
+        {
             return Err(DatasetError::RepackIntoSource {
                 dir: out_dir.to_path_buf(),
             });
@@ -229,6 +251,8 @@ impl<'d> RepackPlan<'d> {
         let cost_model = self.cost_model;
         let chunk_elems = self.chunk_elems;
         let map = Arc::clone(&mapping);
+        let src_fs = Arc::clone(&src_storage);
+        let out_fs = Arc::clone(&out_storage);
 
         type RankOut = anyhow::Result<RankRepack>;
         let t0 = Instant::now();
@@ -240,7 +264,7 @@ impl<'d> RepackPlan<'d> {
             let mut read_io = IoStats::default();
             let mut bucket = Rebucketer::new(staging_chunk);
             for file in 0..stored {
-                let reader = H5Reader::open(matrix_file_path(&src, file))?;
+                let reader = H5Reader::open_on(src_fs.as_ref(), matrix_file_path(&src, file))?;
                 if prune {
                     let ps = visit_elements_pruned(
                         &reader,
@@ -286,7 +310,12 @@ impl<'d> RepackPlan<'d> {
             let t_write = Instant::now();
             let nnz = data.info.z_local;
             let payload_bytes = data.payload_bytes();
-            let write_io = store_data_chunked(matrix_file_path(&dst, rank), &data, chunk_elems)?;
+            let write_io = store_data_chunked_on(
+                out_fs.as_ref(),
+                matrix_file_path(&dst, rank),
+                &data,
+                chunk_elems,
+            )?;
             Ok(RankRepack {
                 read_io,
                 write_io,
@@ -335,6 +364,7 @@ impl<'d> RepackPlan<'d> {
             per_rank_bytes,
         };
         let new_dataset = Dataset::write_manifest(
+            out_storage,
             out_dir,
             mapping.descriptor(),
             m,

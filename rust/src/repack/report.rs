@@ -162,6 +162,7 @@ mod tests {
                         blocks_total: 10,
                         blocks_skipped: 6,
                         bytes_skipped: 900,
+                        ..IoStats::default()
                     };
                     6
                 ],

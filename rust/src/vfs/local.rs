@@ -1,0 +1,141 @@
+//! [`LocalFs`] — the real filesystem backend (`std::fs`), the default.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::vfs::{normalize, Storage, StorageRead, StorageWrite};
+
+/// The real filesystem. Stateless: every instance sees the same files, so
+/// all instances share one [`Storage::medium`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LocalFs;
+
+/// Read handle: a shared [`File`] behind a mutex. Positioned reads seek
+/// then read under the lock, which keeps the handle `Sync` without
+/// platform-specific `pread` extensions; the lock is uncontended except
+/// when the read-ahead pipeline and a decoder race, and the pipeline owns
+/// all reads while it runs.
+struct LocalFile {
+    file: Mutex<File>,
+    len: u64,
+}
+
+impl StorageRead for LocalFile {
+    fn read_exact_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        let mut f = self.file.lock().expect("local file lock poisoned");
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+
+    fn len(&self) -> io::Result<u64> {
+        Ok(self.len)
+    }
+}
+
+/// Write handle: buffered appends, flush-then-seek patching, fsync.
+struct LocalWriter {
+    file: BufWriter<File>,
+    pos: u64,
+}
+
+impl StorageWrite for LocalWriter {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.file.write_all(buf)?;
+        self.pos += buf.len() as u64;
+        Ok(())
+    }
+
+    fn patch_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<()> {
+        if offset + buf.len() as u64 > self.pos {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "patch_at beyond written bytes",
+            ));
+        }
+        self.file.flush()?;
+        let f = self.file.get_mut();
+        f.seek(SeekFrom::Start(offset))?;
+        f.write_all(buf)?;
+        // Restore the append position for the (unsupported but cheap to
+        // keep correct) case of further appends.
+        f.seek(SeekFrom::Start(self.pos))?;
+        Ok(())
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.file.flush()?;
+        self.file.get_mut().sync_all()
+    }
+}
+
+impl Storage for LocalFs {
+    fn open(&self, path: &Path) -> io::Result<Arc<dyn StorageRead>> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        Ok(Arc::new(LocalFile {
+            file: Mutex::new(file),
+            len,
+        }))
+    }
+
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StorageWrite>> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(Box::new(LocalWriter {
+            file: BufWriter::new(file),
+            pos: 0,
+        }))
+    }
+
+    fn len(&self, path: &Path) -> io::Result<u64> {
+        Ok(std::fs::metadata(path)?.len())
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        let mut out: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_type().map(|t| t.is_file()).unwrap_or(false))
+            .map(|e| e.path())
+            .collect();
+        out.sort();
+        Ok(out)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn write_file(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        // Atomic publish: write a sibling temp file, then rename over the
+        // destination — a failed write never leaves a partial file.
+        let tmp = path.with_extension("tmp-write");
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, path)
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(dir)
+    }
+
+    fn canonical(&self, path: &Path) -> PathBuf {
+        std::fs::canonicalize(path).unwrap_or_else(|_| normalize(path))
+    }
+
+    fn medium(&self) -> usize {
+        0
+    }
+
+    fn label(&self) -> &'static str {
+        "local"
+    }
+}

@@ -1,0 +1,257 @@
+//! [`MemFs`] — an in-memory backend: a path → bytes map shared across
+//! clones, so the cluster's worker threads all see one namespace.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+use crate::vfs::{normalize, Storage, StorageRead, StorageWrite};
+
+type FileMap = BTreeMap<PathBuf, Arc<Vec<u8>>>;
+
+/// In-memory file namespace. `Clone` shares the underlying map (the
+/// worker threads of a [`crate::coordinator::Cluster`] each hold a clone
+/// and observe each other's writes); `MemFs::new` creates an independent
+/// one. Paths are normalized lexically, so `a/b/../c` and `a/c` are the
+/// same file; directories are implicit (any prefix exists).
+#[derive(Clone, Default)]
+pub struct MemFs {
+    files: Arc<RwLock<FileMap>>,
+}
+
+impl std::fmt::Debug for MemFs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let files = self.files.read().expect("memfs lock poisoned");
+        write!(f, "MemFs({} files)", files.len())
+    }
+}
+
+impl MemFs {
+    /// A fresh, empty namespace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total bytes held across all files (tests and reports).
+    pub fn total_bytes(&self) -> u64 {
+        let files = self.files.read().expect("memfs lock poisoned");
+        files.values().map(|v| v.len() as u64).sum()
+    }
+
+    fn not_found(path: &Path) -> io::Error {
+        io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("no such file in MemFs: {}", path.display()),
+        )
+    }
+}
+
+/// Read handle: an immutable snapshot of the file's bytes at open time
+/// (like an open POSIX fd surviving a concurrent replace).
+struct MemFile {
+    data: Arc<Vec<u8>>,
+}
+
+impl StorageRead for MemFile {
+    fn read_exact_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        let end = offset + buf.len() as u64;
+        if end > self.data.len() as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!(
+                    "read [{offset}, {end}) past end of {}-byte in-memory file",
+                    self.data.len()
+                ),
+            ));
+        }
+        buf.copy_from_slice(&self.data[offset as usize..end as usize]);
+        Ok(())
+    }
+
+    fn len(&self) -> io::Result<u64> {
+        Ok(self.data.len() as u64)
+    }
+}
+
+/// Write handle: buffers locally and publishes into the shared map on
+/// [`StorageWrite::sync`] and on drop — dropping an unfinished writer
+/// leaves the partial bytes visible, exactly like an unflushed file on a
+/// real filesystem (the h5spm "unfinished file" detection depends on it).
+struct MemWriter {
+    files: Arc<RwLock<FileMap>>,
+    path: PathBuf,
+    buf: Vec<u8>,
+    /// Bytes appended since the last publish. Cleared on publish so a
+    /// drop after a clean [`StorageWrite::sync`] is free (no second full
+    /// copy of the file's bytes).
+    dirty: bool,
+}
+
+impl MemWriter {
+    fn publish(&mut self, bytes: Vec<u8>) {
+        let mut files = self.files.write().expect("memfs lock poisoned");
+        files.insert(self.path.clone(), Arc::new(bytes));
+        self.dirty = false;
+    }
+}
+
+impl StorageWrite for MemWriter {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.buf.extend_from_slice(buf);
+        self.dirty = true;
+        Ok(())
+    }
+
+    fn patch_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<()> {
+        let end = offset as usize + buf.len();
+        if end > self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "patch_at beyond written bytes",
+            ));
+        }
+        self.buf[offset as usize..end].copy_from_slice(buf);
+        self.dirty = true;
+        Ok(())
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        // The buffer must stay usable for post-sync appends, so sync
+        // pays one copy; the (usual) drop right after is then free.
+        let bytes = self.buf.clone();
+        self.publish(bytes);
+        Ok(())
+    }
+}
+
+impl Drop for MemWriter {
+    fn drop(&mut self) {
+        if self.dirty {
+            let bytes = std::mem::take(&mut self.buf);
+            self.publish(bytes);
+        }
+    }
+}
+
+impl Storage for MemFs {
+    fn open(&self, path: &Path) -> io::Result<Arc<dyn StorageRead>> {
+        let path = normalize(path);
+        let files = self.files.read().expect("memfs lock poisoned");
+        let data = files.get(&path).ok_or_else(|| Self::not_found(&path))?;
+        Ok(Arc::new(MemFile {
+            data: Arc::clone(data),
+        }))
+    }
+
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StorageWrite>> {
+        // A create *is* a truncation: publish the empty file immediately
+        // so a never-written handle still leaves the truncated state,
+        // like O_TRUNC does.
+        let mut w = MemWriter {
+            files: Arc::clone(&self.files),
+            path: normalize(path),
+            buf: Vec::new(),
+            dirty: false,
+        };
+        w.publish(Vec::new());
+        Ok(Box::new(w))
+    }
+
+    fn len(&self, path: &Path) -> io::Result<u64> {
+        let path = normalize(path);
+        let files = self.files.read().expect("memfs lock poisoned");
+        files
+            .get(&path)
+            .map(|d| d.len() as u64)
+            .ok_or_else(|| Self::not_found(&path))
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        let dir = normalize(dir);
+        let files = self.files.read().expect("memfs lock poisoned");
+        Ok(files
+            .keys()
+            .filter(|p| p.parent() == Some(dir.as_path()))
+            .cloned()
+            .collect())
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        let (from, to) = (normalize(from), normalize(to));
+        let mut files = self.files.write().expect("memfs lock poisoned");
+        let data = files.remove(&from).ok_or_else(|| Self::not_found(&from))?;
+        files.insert(to, data);
+        Ok(())
+    }
+
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>> {
+        let path = normalize(path);
+        let files = self.files.read().expect("memfs lock poisoned");
+        files
+            .get(&path)
+            .map(|d| d.as_ref().clone())
+            .ok_or_else(|| Self::not_found(&path))
+    }
+
+    fn write_file(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        let mut files = self.files.write().expect("memfs lock poisoned");
+        files.insert(normalize(path), Arc::new(bytes.to_vec()));
+        Ok(())
+    }
+
+    fn create_dir_all(&self, _dir: &Path) -> io::Result<()> {
+        // Directories are implicit.
+        Ok(())
+    }
+
+    fn canonical(&self, path: &Path) -> PathBuf {
+        normalize(path)
+    }
+
+    fn medium(&self) -> usize {
+        Arc::as_ptr(&self.files) as usize
+    }
+
+    fn label(&self) -> &'static str {
+        "mem"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_the_namespace() {
+        let a = MemFs::new();
+        let b = a.clone();
+        a.write_file(Path::new("/x/f"), b"abc").unwrap();
+        assert_eq!(b.read_file(Path::new("/x/f")).unwrap(), b"abc");
+        assert_eq!(b.total_bytes(), 3);
+        // Lexical aliasing: same file through a noisy path.
+        assert_eq!(b.read_file(Path::new("/x/y/../f")).unwrap(), b"abc");
+    }
+
+    #[test]
+    fn open_snapshots_survive_replacement() {
+        let fs = MemFs::new();
+        fs.write_file(Path::new("/f"), b"old!").unwrap();
+        let r = fs.open(Path::new("/f")).unwrap();
+        fs.write_file(Path::new("/f"), b"new").unwrap();
+        let mut buf = [0u8; 4];
+        r.read_exact_at(0, &mut buf).unwrap();
+        assert_eq!(&buf, b"old!", "open handle must keep its snapshot");
+    }
+
+    #[test]
+    fn dropped_writer_publishes_partial_bytes() {
+        let fs = MemFs::new();
+        {
+            let mut w = fs.create(Path::new("/partial")).unwrap();
+            w.append(b"half").unwrap();
+            // Dropped without sync.
+        }
+        assert_eq!(fs.read_file(Path::new("/partial")).unwrap(), b"half");
+    }
+}

@@ -1,0 +1,242 @@
+//! Storage virtualization — pluggable backends behind every byte of
+//! container I/O.
+//!
+//! The paper defines its loading algorithms against an abstract parallel
+//! file system; this module is that abstraction made executable. A
+//! [`Storage`] implementation owns a namespace of files and hands out
+//! positioned read handles ([`StorageRead`]) and append-oriented write
+//! handles ([`StorageWrite`]). Everything above the container layer —
+//! [`crate::h5`], the [`crate::coordinator`] store/load orchestration,
+//! [`crate::repack`] — is written against these traits, so the same
+//! store/load/repack code runs over:
+//!
+//! * [`LocalFs`] — the real filesystem (`std::fs`), the default and the
+//!   pre-virtualization behavior;
+//! * [`MemFs`] — an in-memory file map shared (`Arc`) across the cluster
+//!   worker threads: exact same bytes, no disk, used to run the
+//!   differential harness an order of magnitude faster;
+//! * [`SimFs`] — a decorator over any backend that *accounts* (and
+//!   optionally sleeps) the [`crate::parfs::FsModel`] latency/bandwidth
+//!   costs of every operation and injects storage faults (missing files,
+//!   truncated reads, failed writes) so error paths are testable without
+//!   hand-corrupting files on disk.
+//!
+//! See DESIGN.md §9 for the trait contract and the backend matrix.
+
+pub mod local;
+pub mod mem;
+pub mod sim;
+
+pub use local::LocalFs;
+pub use mem::MemFs;
+pub use sim::{FaultSpec, SimFs};
+
+use std::io;
+use std::path::{Component, Path, PathBuf};
+use std::sync::Arc;
+
+/// Positioned read handle to one stored file.
+///
+/// Handles are stateless (`read_exact_at` takes an explicit offset and a
+/// `&self` receiver) and `Send + Sync`, so the read-ahead pipeline can
+/// fetch from a background thread through the *same* handle the decoder
+/// holds — no extra `open` is charged to the I/O trace.
+pub trait StorageRead: Send + Sync {
+    /// Fill `buf` from the bytes at `offset`, erroring (like
+    /// [`std::io::Read::read_exact`]) if the file ends first.
+    fn read_exact_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()>;
+
+    /// Current file length in bytes.
+    fn len(&self) -> io::Result<u64>;
+
+    /// Whether the file has zero bytes.
+    fn is_empty(&self) -> io::Result<bool> {
+        Ok(self.len()? == 0)
+    }
+}
+
+/// Append-oriented write handle to one file being created.
+///
+/// The h5spm writer streams chunks forward and patches the superblock
+/// once at [`StorageWrite::sync`] time; the trait mirrors exactly that
+/// life cycle: append, optionally patch already-written bytes, sync.
+/// Appending after a patch is not part of the contract.
+pub trait StorageWrite: Send {
+    /// Append `buf` at the current end of the file.
+    fn append(&mut self, buf: &[u8]) -> io::Result<()>;
+
+    /// Overwrite already-written bytes at `offset` (superblock patching).
+    fn patch_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<()>;
+
+    /// Flush and durably persist everything written so far.
+    fn sync(&mut self) -> io::Result<()>;
+}
+
+/// A storage backend: a named-file namespace with open/create/metadata
+/// operations. All methods take `&self`; implementations are shared
+/// across cluster worker threads behind an `Arc<dyn Storage>`.
+pub trait Storage: Send + Sync + std::fmt::Debug {
+    /// Open an existing file for positioned reads.
+    fn open(&self, path: &Path) -> io::Result<Arc<dyn StorageRead>>;
+
+    /// Create (truncate) a file for appending.
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StorageWrite>>;
+
+    /// Length of an existing file in bytes (the `stat` of this API).
+    fn len(&self, path: &Path) -> io::Result<u64>;
+
+    /// File paths directly inside `dir`, sorted.
+    fn list(&self, dir: &Path) -> io::Result<Vec<PathBuf>>;
+
+    /// Atomically rename `from` to `to` (same backend).
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+
+    /// Read a whole small file (manifests).
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>>;
+
+    /// Write a whole small file **atomically**: on error, no partial file
+    /// may remain at `path` (the manifest-write contract — a dataset
+    /// directory either has a complete `dataset.json` or none).
+    fn write_file(&self, path: &Path, bytes: &[u8]) -> io::Result<()>;
+
+    /// Create a directory and its ancestors (no-op where the backend has
+    /// no directory objects).
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()>;
+
+    /// Canonical identity of `path` within this backend, for same-file /
+    /// same-directory checks (e.g. refusing to repack a dataset into its
+    /// own source directory). Purely lexical backends normalize; `LocalFs`
+    /// resolves symlinks when the path exists.
+    fn canonical(&self, path: &Path) -> PathBuf;
+
+    /// Identity of the backing medium: two `Storage` values with the same
+    /// medium see the same files. `LocalFs` instances all share medium 0
+    /// (one real filesystem); each `MemFs` map is its own medium; [`SimFs`]
+    /// reports its inner backend's.
+    fn medium(&self) -> usize;
+
+    /// Short label for reports and CLI output (`"local"`, `"mem"`, `"sim"`).
+    fn label(&self) -> &'static str;
+}
+
+/// The default backend: the real filesystem.
+pub fn local() -> Arc<dyn Storage> {
+    Arc::new(LocalFs)
+}
+
+/// Lexical path normalization: resolve `.`/`..` components without
+/// touching any filesystem. Shared by [`MemFs`] (which has no inodes) and
+/// by [`LocalFs::canonical`] as the fallback for paths that do not exist
+/// yet.
+pub(crate) fn normalize(path: &Path) -> PathBuf {
+    let mut out = PathBuf::new();
+    for c in path.components() {
+        match c {
+            Component::CurDir => {}
+            Component::ParentDir => {
+                if !out.pop() {
+                    out.push(Component::ParentDir);
+                }
+            }
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every backend satisfies the same observable contract; the matrix
+    /// below runs each backend through one create/read/metadata cycle.
+    fn exercise(storage: &dyn Storage) {
+        let dir = std::env::temp_dir().join(format!(
+            "abhsf-vfs-contract-{}-{}",
+            storage.label(),
+            std::process::id()
+        ));
+        storage.create_dir_all(&dir).unwrap();
+        let path = dir.join("file.bin");
+
+        // Create: append, patch, sync.
+        let mut w = storage.create(&path).unwrap();
+        w.append(b"0123456789").unwrap();
+        w.append(b"abcdef").unwrap();
+        w.patch_at(2, b"XY").unwrap();
+        w.sync().unwrap();
+        drop(w);
+
+        assert_eq!(storage.len(&path).unwrap(), 16);
+        let r = storage.open(&path).unwrap();
+        assert_eq!(r.len().unwrap(), 16);
+        let mut buf = [0u8; 4];
+        r.read_exact_at(0, &mut buf).unwrap();
+        assert_eq!(&buf, b"01XY");
+        r.read_exact_at(12, &mut buf).unwrap();
+        assert_eq!(&buf, b"cdef");
+        // Reading past the end errors instead of short-reading.
+        assert!(r.read_exact_at(14, &mut buf).is_err());
+
+        // Whole-file helpers + rename + list.
+        storage.write_file(&dir.join("note.txt"), b"hello").unwrap();
+        assert_eq!(storage.read_file(&dir.join("note.txt")).unwrap(), b"hello");
+        storage
+            .rename(&dir.join("note.txt"), &dir.join("note2.txt"))
+            .unwrap();
+        assert!(storage.read_file(&dir.join("note.txt")).is_err());
+        let listed = storage.list(&dir).unwrap();
+        assert!(listed.iter().any(|p| p.ends_with("file.bin")), "{listed:?}");
+        assert!(listed.iter().any(|p| p.ends_with("note2.txt")), "{listed:?}");
+
+        // Missing files are NotFound, not panics.
+        assert!(storage.open(&dir.join("absent")).is_err());
+        assert!(storage.len(&dir.join("absent")).is_err());
+
+        // Canonical identity is stable under lexical noise.
+        let noisy = dir.join("sub").join("..").join("file.bin");
+        assert_eq!(storage.canonical(&noisy), storage.canonical(&path));
+    }
+
+    #[test]
+    fn local_fs_contract() {
+        exercise(&LocalFs);
+    }
+
+    #[test]
+    fn mem_fs_contract() {
+        exercise(&MemFs::new());
+    }
+
+    #[test]
+    fn sim_fs_contract() {
+        // A fault-free SimFs is behaviorally transparent.
+        let sim = SimFs::new(
+            Arc::new(MemFs::new()),
+            crate::parfs::FsModel::local_nvme(),
+        );
+        exercise(&sim);
+        assert!(sim.simulated_seconds() > 0.0, "no cost accounted");
+    }
+
+    #[test]
+    fn normalize_is_lexical() {
+        assert_eq!(
+            normalize(Path::new("/a/b/../c/./d")),
+            PathBuf::from("/a/c/d")
+        );
+        assert_eq!(normalize(Path::new("a/../../b")), PathBuf::from("../b"));
+    }
+
+    #[test]
+    fn media_identities() {
+        let a = MemFs::new();
+        let b = a.clone();
+        let c = MemFs::new();
+        assert_eq!(a.medium(), b.medium(), "clones share the map");
+        assert_ne!(a.medium(), c.medium(), "fresh maps are distinct");
+        assert_eq!(LocalFs.medium(), LocalFs.medium());
+        let sim = SimFs::new(Arc::new(a.clone()), crate::parfs::FsModel::local_nvme());
+        assert_eq!(sim.medium(), a.medium(), "sim is transparent to identity");
+    }
+}

@@ -1,0 +1,422 @@
+//! [`SimFs`] — a decorator backend that prices every operation with the
+//! [`crate::parfs::FsModel`] constants and injects storage faults.
+//!
+//! Two independent jobs, both impossible against the raw backends:
+//!
+//! * **Cost emulation.** Every open/read/write charges the parfs model's
+//!   latency and per-client bandwidth terms to a simulated clock
+//!   ([`SimFs::simulated_seconds`]); with a nonzero
+//!   [`SimFs::time_scale`], the charge is also *slept*, turning the model
+//!   from a prediction into an emulation the wall clock can observe.
+//! * **Fault injection.** A [`FaultSpec`] makes files matching a
+//!   substring disappear ([`FaultSpec::missing`]), appear truncated to
+//!   half their length ([`FaultSpec::truncate`]), or reject writes
+//!   ([`FaultSpec::fail_writes`]) — the three storage failure classes the
+//!   dataset layer must surface as typed errors instead of panics.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::parfs::FsModel;
+use crate::vfs::{Storage, StorageRead, StorageWrite};
+
+/// Which operations fail, selected by a substring of the path. `None`
+/// disables that fault class.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSpec {
+    /// Files whose path contains this substring do not exist: `open`,
+    /// `len` and `read_file` return `NotFound`.
+    pub missing: Option<String>,
+    /// Files whose path contains this substring appear truncated to half
+    /// their real length: reads past the cut fail with `UnexpectedEof`.
+    pub truncate: Option<String>,
+    /// Writes to paths containing this substring fail (`create` and
+    /// `write_file` return `PermissionDenied`); nothing partial is left.
+    pub fail_writes: Option<String>,
+}
+
+impl FaultSpec {
+    /// Parse a CLI fault list: comma-separated `kind:substring` entries
+    /// with kinds `missing`, `truncate` and `fail-writes`, e.g.
+    /// `missing:matrix-1,truncate:matrix-0`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut out = FaultSpec::default();
+        for entry in spec.split(',').filter(|e| !e.trim().is_empty()) {
+            let (kind, pat) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("fault entry {entry:?} is not kind:substring"))?;
+            // Trim the pattern too: `kind: pattern` with a space would
+            // otherwise never match anything and the fault would be a
+            // silent no-op. An empty pattern would match *every* path —
+            // reject it rather than guess.
+            let pat = pat.trim();
+            if pat.is_empty() {
+                return Err(format!("fault entry {entry:?} has an empty path substring"));
+            }
+            let pat = Some(pat.to_string());
+            match kind.trim() {
+                "missing" => out.missing = pat,
+                "truncate" => out.truncate = pat,
+                "fail-writes" => out.fail_writes = pat,
+                other => {
+                    return Err(format!(
+                        "unknown fault kind {other:?} (missing|truncate|fail-writes)"
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn matches(pattern: &Option<String>, path: &Path) -> bool {
+        pattern
+            .as_deref()
+            .is_some_and(|pat| path.to_string_lossy().contains(pat))
+    }
+}
+
+/// Shared simulated-cost state: model constants, the accumulated clock,
+/// and the sleep scale.
+struct SimState {
+    model: FsModel,
+    clock_ns: AtomicU64,
+    scale: f64,
+}
+
+impl SimState {
+    /// Account `cost_s` of simulated time, sleeping `cost_s * scale`.
+    fn charge(&self, cost_s: f64) {
+        self.clock_ns
+            .fetch_add((cost_s * 1e9) as u64, Ordering::Relaxed);
+        if self.scale > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(cost_s * self.scale));
+        }
+    }
+
+    fn charge_bytes(&self, op_lat: bool, bytes: u64) {
+        let lat = if op_lat { self.model.op_lat_s } else { 0.0 };
+        self.charge(lat + bytes as f64 / self.model.client_bps);
+    }
+}
+
+/// The simulating decorator. Wrap any backend:
+///
+/// ```no_run
+/// # use std::sync::Arc;
+/// # use abhsf::vfs::{MemFs, SimFs, FaultSpec};
+/// # use abhsf::parfs::FsModel;
+/// let sim = SimFs::new(Arc::new(MemFs::new()), FsModel::anselm_lustre())
+///     .faults(FaultSpec::parse("missing:matrix-1").unwrap());
+/// ```
+pub struct SimFs {
+    inner: Arc<dyn Storage>,
+    faults: FaultSpec,
+    state: Arc<SimState>,
+}
+
+impl std::fmt::Debug for SimFs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SimFs(over {:?}, {:.3}s simulated)",
+            self.inner,
+            self.simulated_seconds()
+        )
+    }
+}
+
+impl SimFs {
+    /// Simulate `model` over `inner`, with no faults and no sleeping.
+    pub fn new(inner: Arc<dyn Storage>, model: FsModel) -> Self {
+        Self {
+            inner,
+            faults: FaultSpec::default(),
+            state: Arc::new(SimState {
+                model,
+                clock_ns: AtomicU64::new(0),
+                scale: 0.0,
+            }),
+        }
+    }
+
+    /// Sleep `scale` real seconds per simulated second (0 = account
+    /// only, 1 = real-time emulation).
+    pub fn time_scale(mut self, scale: f64) -> Self {
+        self.state = Arc::new(SimState {
+            model: self.state.model,
+            clock_ns: AtomicU64::new(self.state.clock_ns.load(Ordering::Relaxed)),
+            scale,
+        });
+        self
+    }
+
+    /// Install a fault specification.
+    pub fn faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Simulated seconds accumulated across all operations so far.
+    pub fn simulated_seconds(&self) -> f64 {
+        self.state.clock_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    fn missing(&self, path: &Path) -> io::Result<()> {
+        if FaultSpec::matches(&self.faults.missing, path) {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("injected fault: {} is missing", path.display()),
+            ));
+        }
+        Ok(())
+    }
+
+    fn writable(&self, path: &Path) -> io::Result<()> {
+        if FaultSpec::matches(&self.faults.fail_writes, path) {
+            return Err(io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                format!("injected fault: writes to {} fail", path.display()),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Read handle decorator: charges per read, optionally truncates.
+struct SimFile {
+    inner: Arc<dyn StorageRead>,
+    state: Arc<SimState>,
+    /// `Some(limit)` when the truncation fault applies: the file claims
+    /// to end at `limit` and reads beyond it fail.
+    truncate_to: Option<u64>,
+}
+
+impl StorageRead for SimFile {
+    fn read_exact_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        if let Some(limit) = self.truncate_to {
+            if offset + buf.len() as u64 > limit {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!(
+                        "injected fault: read [{offset}, {}) past simulated truncation at {limit}",
+                        offset + buf.len() as u64
+                    ),
+                ));
+            }
+        }
+        self.state.charge_bytes(true, buf.len() as u64);
+        self.inner.read_exact_at(offset, buf)
+    }
+
+    fn len(&self) -> io::Result<u64> {
+        match self.truncate_to {
+            Some(limit) => Ok(limit),
+            None => self.inner.len(),
+        }
+    }
+}
+
+/// Write handle decorator: charges per append.
+struct SimWriter {
+    inner: Box<dyn StorageWrite>,
+    state: Arc<SimState>,
+}
+
+impl StorageWrite for SimWriter {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.state.charge_bytes(true, buf.len() as u64);
+        self.inner.append(buf)
+    }
+
+    fn patch_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<()> {
+        self.state.charge_bytes(true, buf.len() as u64);
+        self.inner.patch_at(offset, buf)
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.state.charge(self.state.model.op_lat_s);
+        self.inner.sync()
+    }
+}
+
+impl Storage for SimFs {
+    fn open(&self, path: &Path) -> io::Result<Arc<dyn StorageRead>> {
+        self.missing(path)?;
+        self.state.charge(self.state.model.open_lat_s);
+        let inner = self.inner.open(path)?;
+        let truncate_to = if FaultSpec::matches(&self.faults.truncate, path) {
+            Some(inner.len()? / 2)
+        } else {
+            None
+        };
+        Ok(Arc::new(SimFile {
+            inner,
+            state: Arc::clone(&self.state),
+            truncate_to,
+        }))
+    }
+
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StorageWrite>> {
+        self.writable(path)?;
+        self.state.charge(self.state.model.open_lat_s);
+        Ok(Box::new(SimWriter {
+            inner: self.inner.create(path)?,
+            state: Arc::clone(&self.state),
+        }))
+    }
+
+    fn len(&self, path: &Path) -> io::Result<u64> {
+        self.missing(path)?;
+        self.state.charge(self.state.model.op_lat_s);
+        let len = self.inner.len(path)?;
+        if FaultSpec::matches(&self.faults.truncate, path) {
+            return Ok(len / 2);
+        }
+        Ok(len)
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        self.state.charge(self.state.model.op_lat_s);
+        let mut out = self.inner.list(dir)?;
+        out.retain(|p| !FaultSpec::matches(&self.faults.missing, p));
+        Ok(out)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        self.writable(to)?;
+        self.state.charge(self.state.model.op_lat_s);
+        self.inner.rename(from, to)
+    }
+
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>> {
+        self.missing(path)?;
+        let mut bytes = self.inner.read_file(path)?;
+        if FaultSpec::matches(&self.faults.truncate, path) {
+            // Whole-file reads see the same half-length view `len` and
+            // the positioned handles report.
+            bytes.truncate(bytes.len() / 2);
+        }
+        self.state.charge_bytes(true, bytes.len() as u64);
+        Ok(bytes)
+    }
+
+    fn write_file(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        self.writable(path)?;
+        self.state.charge_bytes(true, bytes.len() as u64);
+        self.inner.write_file(path, bytes)
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        self.inner.create_dir_all(dir)
+    }
+
+    fn canonical(&self, path: &Path) -> PathBuf {
+        self.inner.canonical(path)
+    }
+
+    fn medium(&self) -> usize {
+        self.inner.medium()
+    }
+
+    fn label(&self) -> &'static str {
+        "sim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vfs::MemFs;
+
+    fn base() -> Arc<dyn Storage> {
+        let fs = MemFs::new();
+        fs.write_file(Path::new("/d/matrix-0.h5spm"), &[7u8; 100])
+            .unwrap();
+        fs.write_file(Path::new("/d/matrix-1.h5spm"), &[8u8; 100])
+            .unwrap();
+        Arc::new(fs)
+    }
+
+    #[test]
+    fn fault_spec_parses() {
+        let f = FaultSpec::parse("missing:matrix-1, truncate:matrix-0").unwrap();
+        assert_eq!(f.missing.as_deref(), Some("matrix-1"));
+        assert_eq!(f.truncate.as_deref(), Some("matrix-0"));
+        assert!(f.fail_writes.is_none());
+        assert!(FaultSpec::parse("").unwrap().missing.is_none());
+        assert!(FaultSpec::parse("explode:everything").is_err());
+        assert!(FaultSpec::parse("garbage").is_err());
+        // A space after the colon must not silently disarm the fault.
+        let f = FaultSpec::parse("truncate: matrix-0").unwrap();
+        assert_eq!(f.truncate.as_deref(), Some("matrix-0"));
+        // An empty pattern would match every path: rejected.
+        assert!(FaultSpec::parse("missing:").is_err());
+        assert!(FaultSpec::parse("missing:  ").is_err());
+    }
+
+    #[test]
+    fn missing_fault_hides_matches_only() {
+        let sim = SimFs::new(base(), FsModel::local_nvme())
+            .faults(FaultSpec::parse("missing:matrix-1").unwrap());
+        assert!(sim.open(Path::new("/d/matrix-0.h5spm")).is_ok());
+        let err = sim.open(Path::new("/d/matrix-1.h5spm")).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::NotFound);
+        assert!(sim.len(Path::new("/d/matrix-1.h5spm")).is_err());
+        let listed = sim.list(Path::new("/d")).unwrap();
+        assert_eq!(listed.len(), 1, "{listed:?}");
+    }
+
+    #[test]
+    fn truncate_fault_halves_and_rejects_tail_reads() {
+        let sim = SimFs::new(base(), FsModel::local_nvme())
+            .faults(FaultSpec::parse("truncate:matrix-0").unwrap());
+        let r = sim.open(Path::new("/d/matrix-0.h5spm")).unwrap();
+        assert_eq!(r.len().unwrap(), 50);
+        assert_eq!(sim.len(Path::new("/d/matrix-0.h5spm")).unwrap(), 50);
+        // Whole-file reads agree with the truncated view.
+        assert_eq!(sim.read_file(Path::new("/d/matrix-0.h5spm")).unwrap().len(), 50);
+        let mut buf = [0u8; 10];
+        r.read_exact_at(40, &mut buf).unwrap();
+        let err = r.read_exact_at(45, &mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // The untouched file reads in full.
+        let r1 = sim.open(Path::new("/d/matrix-1.h5spm")).unwrap();
+        assert_eq!(r1.len().unwrap(), 100);
+    }
+
+    #[test]
+    fn write_fault_rejects_cleanly() {
+        let inner = MemFs::new();
+        let sim = SimFs::new(Arc::new(inner.clone()), FsModel::local_nvme())
+            .faults(FaultSpec::parse("fail-writes:dataset.json").unwrap());
+        let err = sim
+            .write_file(Path::new("/d/dataset.json"), b"{}")
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::PermissionDenied);
+        assert!(sim.create(Path::new("/d/dataset.json")).is_err());
+        assert!(
+            inner.read_file(Path::new("/d/dataset.json")).is_err(),
+            "failed write must leave nothing behind"
+        );
+        // Other writes pass through.
+        sim.write_file(Path::new("/d/other"), b"ok").unwrap();
+    }
+
+    #[test]
+    fn clock_accumulates_model_costs() {
+        let sim = SimFs::new(base(), FsModel::anselm_lustre());
+        assert_eq!(sim.simulated_seconds(), 0.0);
+        let r = sim.open(Path::new("/d/matrix-0.h5spm")).unwrap();
+        let mut buf = [0u8; 64];
+        r.read_exact_at(0, &mut buf).unwrap();
+        let m = FsModel::anselm_lustre();
+        let want = m.open_lat_s + m.op_lat_s + 64.0 / m.client_bps;
+        assert!(
+            (sim.simulated_seconds() - want).abs() < 1e-9,
+            "{} vs {want}",
+            sim.simulated_seconds()
+        );
+    }
+}

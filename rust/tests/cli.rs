@@ -199,6 +199,55 @@ fn roundtrip_subcommand() {
     assert!(out.contains("roundtrip OK"), "{out}");
 }
 
+/// `--backend mem`: the full store → load → SpMV cycle without touching
+/// the disk (one-process run; the map is shared across worker threads).
+#[test]
+fn backend_mem_roundtrip() {
+    let out = run_ok(&[
+        "roundtrip", "--seed-size", "8", "--procs", "2", "--backend", "mem",
+    ]);
+    assert!(out.contains("roundtrip OK"), "{out}");
+    assert!(out.contains("backend mem"), "{out}");
+}
+
+/// `--backend sim`: fault injection surfaces as a clean `error:` exit
+/// (status 1), never a panic; fault-free simulation reports the
+/// parfs-model clock.
+#[test]
+fn backend_sim_faults_and_clock() {
+    let dir = std::env::temp_dir().join(format!("abhsf-cli-sim-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_str().unwrap();
+    run_ok(&[
+        "store", "--dir", dirs, "--seed-size", "8", "--procs", "2", "--block-size", "8",
+    ]);
+
+    // Injected truncation: typed error, exit code 1 (a worker panic
+    // would exit 101).
+    let out = bin()
+        .args([
+            "load", "--dir", dirs, "--same-config", "--backend", "sim", "--fault",
+            "truncate:matrix-0",
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error"), "{stderr}");
+
+    // Fault-free simulation loads fine and prints the simulated clock.
+    let out = run_ok(&["load", "--dir", dirs, "--same-config", "--backend", "sim"]);
+    assert!(out.contains("sim backend"), "{out}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn fig1_quick_run() {
     let out = run_ok(&[

@@ -1,5 +1,5 @@
 //! Dataset/LoadPlan API: manifest round-trip, `Strategy::Auto`
-//! selection, legacy-directory discovery, and the deprecated shims.
+//! selection, legacy-directory discovery, and storage-backend plumbing.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -9,6 +9,7 @@ use abhsf::coordinator::{
 };
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::mapping::{Colwise, ProcessMapping, Rowwise};
+use abhsf::vfs::MemFs;
 
 fn tmpdir(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join("abhsf-dataset-api").join(name);
@@ -293,23 +294,44 @@ fn plan_validation_is_typed() {
     ));
 }
 
-/// The deprecated free functions still work during the transition
-/// release and agree with the planner.
+/// The whole store → manifest → open → load cycle runs unchanged over
+/// the in-memory backend, and its contents agree with a local-disk store
+/// of the same workload — the two-backend equivalence at the heart of
+/// storage virtualization.
 #[test]
-#[allow(deprecated)]
-fn deprecated_shims_still_work() {
+fn memfs_store_load_agrees_with_localfs() {
     let gen = workload();
     let n = gen.dim();
     let p = 2;
     let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p));
     let cluster = Cluster::new(p, 64);
-    let dir = tmpdir("shims");
-    let (dataset, _) =
-        Dataset::store(&cluster, &gen, &mapping, &dir, StoreOptions::default()).unwrap();
 
-    let (mats_old, report_old) =
-        abhsf::coordinator::load_same_config(&cluster, &dir, InMemFormat::Csr).unwrap();
-    let (mats_new, report_new) = dataset.load().run(&cluster).unwrap();
-    assert_eq!(report_old.total_nnz(), report_new.total_nnz());
-    assert_eq!(collect(&mats_old), collect(&mats_new));
+    let dir = tmpdir("backend-local");
+    let (on_disk, disk_report) =
+        Dataset::store(&cluster, &gen, &mapping, &dir, StoreOptions::default()).unwrap();
+    let (mats_disk, _) = on_disk.load().run(&cluster).unwrap();
+
+    let mem = MemFs::new();
+    let mem_storage: Arc<dyn abhsf::vfs::Storage> = Arc::new(mem.clone());
+    let (in_mem, mem_report) = Dataset::store_on(
+        Arc::clone(&mem_storage),
+        &cluster,
+        &gen,
+        &mapping,
+        "/mem/backend",
+        StoreOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(mem_report.total_nnz(), disk_report.total_nnz());
+    assert!(mem.total_bytes() > 0, "nothing landed in the map");
+
+    // Reopen through the backend: the manifest is discovered from MemFs.
+    let reopened = Dataset::open_on(Arc::clone(&mem_storage), "/mem/backend").unwrap();
+    assert_eq!(reopened.nprocs(), in_mem.nprocs());
+    let (mats_mem, report) = reopened.load().run(&cluster).unwrap();
+    assert_eq!(report.scenario, "same-config");
+    assert_eq!(collect(&mats_mem), collect(&mats_disk), "backends diverged");
+
+    // And nothing of the in-memory dataset ever touched the disk.
+    assert!(!std::path::Path::new("/mem/backend").exists());
 }

@@ -11,6 +11,12 @@
 //! The master seed comes from `ABHSF_DIFF_SEED` (default below) so CI and
 //! local runs are reproducible; every assertion message carries the seed
 //! and the configuration index needed to replay a failure.
+//!
+//! Configurations run on the in-memory [`MemFs`] backend by default —
+//! same bytes, no disk I/O or per-file fsyncs across the ~40 random
+//! stores — with the first [`LOCALFS_CONFIGS`] configurations of each
+//! property pinned to the real filesystem so real-disk coverage never
+//! disappears.
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -20,9 +26,23 @@ use abhsf::formats::element::tight_window;
 use abhsf::formats::{Coo, LocalInfo};
 use abhsf::mapping::{Block2d, Colwise, CyclicRows, ProcessMapping, Rowwise};
 use abhsf::util::rng::Xoshiro256;
+use abhsf::vfs::{MemFs, Storage};
 
 const DEFAULT_SEED: u64 = 0xD1FF_2026;
 const CONFIGS: usize = 30;
+
+/// Configurations 0..LOCALFS_CONFIGS of each property stay on LocalFs.
+const LOCALFS_CONFIGS: usize = 2;
+
+/// The backend for configuration `idx`: a fresh in-memory namespace,
+/// except the pinned real-disk configurations.
+fn storage_for(idx: usize) -> Arc<dyn Storage> {
+    if idx < LOCALFS_CONFIGS {
+        abhsf::vfs::local()
+    } else {
+        Arc::new(MemFs::new())
+    }
+}
 
 fn master_seed() -> u64 {
     match std::env::var("ABHSF_DIFF_SEED") {
@@ -177,9 +197,11 @@ fn all_strategies_agree_on_random_configurations() {
         let store_map = build_mapping(cfg.store_kind, cfg.m, cfg.n, cfg.p_store);
         let parts = parts_for(store_map.as_ref(), cfg.m, cfg.n, &truth);
         let dir = root.join(format!("cfg-{idx}"));
-        std::fs::create_dir_all(&dir).unwrap();
+        let storage = storage_for(idx);
+        storage.create_dir_all(&dir).unwrap();
         let store_cluster = Cluster::new(cfg.p_store, 64);
-        let (dataset, sreport) = Dataset::store_parts(
+        let (dataset, sreport) = Dataset::store_parts_on(
+            storage,
             &store_cluster,
             parts,
             &store_map,
@@ -315,9 +337,11 @@ fn repack_roundtrip_is_element_identical() {
         let store_map = build_mapping(store_kind, m, n, p_store);
         let parts = parts_for(store_map.as_ref(), m, n, &truth);
         let dir = root.join(format!("src-{idx}"));
-        std::fs::create_dir_all(&dir).unwrap();
+        let storage = storage_for(idx);
+        storage.create_dir_all(&dir).unwrap();
         let store_cluster = Cluster::new(p_store, 64);
-        let (dataset, _) = Dataset::store_parts(
+        let (dataset, _) = Dataset::store_parts_on(
+            Arc::clone(&storage),
             &store_cluster,
             parts,
             &store_map,
@@ -370,8 +394,9 @@ fn repack_roundtrip_is_element_identical() {
             "staging exceeded the rank regions {ctx}"
         );
 
-        // Reopen from disk and read back through every strategy.
-        let reopened = Dataset::open(&out).unwrap_or_else(|e| panic!("reopen: {e} {ctx}"));
+        // Reopen from the backend and read back through every strategy.
+        let reopened = Dataset::open_on(Arc::clone(&storage), &out)
+            .unwrap_or_else(|e| panic!("reopen: {e} {ctx}"));
         let same_cluster = Cluster::new(p_new, 8);
         let (mats, rep) = reopened
             .load()
@@ -425,9 +450,12 @@ fn exchange_survives_maximal_backpressure() {
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
+        // The property under stress is channel routing, not disk I/O:
+        // the dense-ish store runs in memory so the 60 s watchdog budget
+        // is spent on the exchange itself.
         let store_cluster = Cluster::new(p_store, 64);
-        let (dataset, _) = Dataset::store_parts(
+        let (dataset, _) = Dataset::store_parts_on(
+            Arc::new(MemFs::new()),
             &store_cluster,
             parts,
             &store_map,

@@ -1,0 +1,299 @@
+//! Storage-virtualization integration: the same store/load/repack stack
+//! over every backend, and the [`SimFs`] fault-injection suite — a
+//! truncated container, a missing per-rank file and a failed manifest
+//! write must each surface as a *typed* [`DatasetError`] (no panics) and
+//! never leave a partial `dataset.json` behind.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use abhsf::coordinator::{
+    Cluster, Dataset, DatasetError, InMemFormat, LoadedMatrix, StoreOptions, Strategy,
+    MANIFEST_FILE,
+};
+use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::mapping::{Colwise, ProcessMapping, Rowwise};
+use abhsf::parfs::FsModel;
+use abhsf::vfs::{FaultSpec, MemFs, SimFs, Storage};
+
+const P: usize = 3;
+const DIR: &str = "/vfs-test/matrix";
+
+/// Store a small matrix on a fresh MemFs; returns the map and the
+/// dataset handle bound to it.
+fn mem_dataset() -> (MemFs, Dataset) {
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 11), 2));
+    let n = gen.dim();
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, P));
+    let cluster = Cluster::new(P, 64);
+    let mem = MemFs::new();
+    let (dataset, report) = Dataset::store_on(
+        Arc::new(mem.clone()),
+        &cluster,
+        &gen,
+        &mapping,
+        DIR,
+        StoreOptions {
+            block_size: 8,
+            chunk_elems: 256,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(report.total_nnz() > 0);
+    (mem, dataset)
+}
+
+/// Reopen the MemFs dataset through a SimFs with the given faults.
+fn sim_view(mem: &MemFs, faults: &str) -> Arc<SimFs> {
+    Arc::new(
+        SimFs::new(Arc::new(mem.clone()), FsModel::local_nvme())
+            .faults(FaultSpec::parse(faults).unwrap()),
+    )
+}
+
+fn collect(mats: &[LoadedMatrix]) -> Vec<(u64, u64, f64)> {
+    let mut out = Vec::new();
+    for lm in mats {
+        let coo = lm.clone().into_coo();
+        let (ro, co) = (coo.info.m_offset, coo.info.n_offset);
+        for (i, j, v) in coo.iter() {
+            out.push((i + ro, j + co, v));
+        }
+    }
+    out.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    out
+}
+
+// ---------------------------------------------------------------- load
+
+/// A truncated container fails the load with a typed error — every
+/// strategy, no panic, no hand-corrupted files needed.
+#[test]
+fn truncated_container_is_typed_error_on_load() {
+    let (mem, _) = mem_dataset();
+    let sim = sim_view(&mem, "truncate:matrix-0");
+    let dataset = Dataset::open_on(sim, DIR).unwrap();
+    let n = dataset.dims().0;
+    // All-read-all strategies fail on the shared first file, so every
+    // rank errors symmetrically. (The exchange loader is exercised via
+    // the *missing* fault below: its peers wait on Done messages an
+    // erroring reader never sends, so a mid-read fault is a routing-
+    // protocol liveness question, not a storage-error-typing one.)
+    for (strategy, p_load) in [(Strategy::Independent, 2usize), (Strategy::Collective, 2)] {
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, p_load));
+        let cluster = Cluster::new(p_load, 8);
+        let err = dataset
+            .load()
+            .mapping(&mapping)
+            .strategy(strategy)
+            .run(&cluster)
+            .expect_err("truncated container must fail the load");
+        // Typed (matchable) and descriptive, not a panic.
+        assert!(
+            matches!(err, DatasetError::Internal(_)),
+            "{strategy}: {err}"
+        );
+    }
+    // Same-config fast path too.
+    let cluster = Cluster::new(P, 8);
+    assert!(dataset.load().run(&cluster).is_err());
+}
+
+/// A missing per-rank file surfaces as `DatasetError::MissingFile`
+/// naming the absent path, before any worker runs — for every strategy,
+/// including exchange (the planner's up-front check is what keeps a
+/// mid-exchange disappearance from wedging the routing protocol).
+#[test]
+fn missing_file_is_typed_error_on_load() {
+    let (mem, _) = mem_dataset();
+    let sim = sim_view(&mem, "missing:matrix-1");
+    let dataset = Dataset::open_on(sim, DIR).unwrap();
+    let n = dataset.dims().0;
+    for strategy in [Strategy::Auto, Strategy::Exchange] {
+        let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, P));
+        let cluster = Cluster::new(P, 8);
+        let err = dataset
+            .load()
+            .mapping(&mapping)
+            .strategy(strategy)
+            .run(&cluster)
+            .expect_err("missing container must fail the plan");
+        match err {
+            DatasetError::MissingFile { path, .. } => {
+                assert!(path.ends_with("matrix-1.h5spm"), "{}", path.display());
+            }
+            other => panic!("{strategy}: expected MissingFile, got {other}"),
+        }
+    }
+}
+
+// --------------------------------------------------------------- store
+
+/// A failed manifest write fails the store with a typed error and leaves
+/// NO partial `dataset.json` behind — a dataset directory either has a
+/// complete manifest or none.
+#[test]
+fn failed_manifest_write_leaves_no_partial_manifest() {
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 11), 2));
+    let n = gen.dim();
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, P));
+    let cluster = Cluster::new(P, 64);
+    let mem = MemFs::new();
+    let sim = sim_view(&mem, "fail-writes:dataset.json");
+    let err = Dataset::store_on(sim, &cluster, &gen, &mapping, DIR, StoreOptions::default())
+        .expect_err("manifest write fault must fail the store");
+    assert!(matches!(err, DatasetError::Internal(_)), "{err}");
+    assert!(
+        mem.read_file(&Path::new(DIR).join(MANIFEST_FILE)).is_err(),
+        "failed manifest write left a dataset.json behind"
+    );
+}
+
+/// A failed container write fails the store before the manifest is ever
+/// attempted: typed error, no `dataset.json`.
+#[test]
+fn failed_container_write_is_typed_error_on_store() {
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 11), 2));
+    let n = gen.dim();
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, P));
+    let cluster = Cluster::new(P, 64);
+    let mem = MemFs::new();
+    let sim = sim_view(&mem, "fail-writes:matrix-1");
+    let err = Dataset::store_on(sim, &cluster, &gen, &mapping, DIR, StoreOptions::default())
+        .expect_err("container write fault must fail the store");
+    assert!(matches!(err, DatasetError::Internal(_)), "{err}");
+    assert!(
+        mem.read_file(&Path::new(DIR).join(MANIFEST_FILE)).is_err(),
+        "store failed but a manifest was written"
+    );
+}
+
+// -------------------------------------------------------------- repack
+
+/// Repack read phase: a truncated source container is a typed error.
+#[test]
+fn truncated_source_is_typed_error_on_repack() {
+    let (mem, _) = mem_dataset();
+    let sim = sim_view(&mem, "truncate:matrix-2");
+    let dataset = Dataset::open_on(sim, DIR).unwrap();
+    let n = dataset.dims().0;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, 2));
+    let cluster = Cluster::new(2, 8);
+    let err = dataset
+        .repack()
+        .nprocs(2)
+        .mapping(&mapping)
+        .run(&cluster, "/vfs-test/out")
+        .expect_err("truncated source must fail the repack");
+    assert!(matches!(err, DatasetError::Internal(_)), "{err}");
+}
+
+/// Repack write phase: a failed output manifest write is a typed error
+/// and leaves no partial `dataset.json` in the output directory.
+#[test]
+fn failed_output_writes_are_typed_errors_on_repack() {
+    let (mem, dataset) = mem_dataset();
+    let n = dataset.dims().0;
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, 2));
+    let cluster = Cluster::new(2, 8);
+
+    // Container writes fail.
+    let out_faulty = sim_view(&mem, "fail-writes:out-a/matrix");
+    let err = dataset
+        .repack()
+        .nprocs(2)
+        .mapping(&mapping)
+        .storage(out_faulty)
+        .run(&cluster, "/vfs-test/out-a")
+        .expect_err("output container fault must fail the repack");
+    assert!(matches!(err, DatasetError::Internal(_)), "{err}");
+    assert!(
+        mem.read_file(&Path::new("/vfs-test/out-a").join(MANIFEST_FILE))
+            .is_err(),
+        "failed repack left a manifest"
+    );
+
+    // Only the manifest write fails (containers land).
+    let out_manifest_faulty = sim_view(&mem, "fail-writes:out-b/dataset.json");
+    let err = dataset
+        .repack()
+        .nprocs(2)
+        .mapping(&mapping)
+        .storage(out_manifest_faulty)
+        .run(&cluster, "/vfs-test/out-b")
+        .expect_err("output manifest fault must fail the repack");
+    assert!(matches!(err, DatasetError::Internal(_)), "{err}");
+    assert!(
+        mem.read_file(&Path::new("/vfs-test/out-b").join(MANIFEST_FILE))
+            .is_err(),
+        "failed manifest write left a dataset.json behind"
+    );
+}
+
+// ------------------------------------------- backend equivalence + misc
+
+/// Repack migrates a dataset *between* media: read from one MemFs, write
+/// to another, element-identical; and the into-source refusal keys on
+/// the medium, not just the path.
+#[test]
+fn repack_migrates_across_backends() {
+    let (_, dataset) = mem_dataset();
+    let cluster = Cluster::new(P, 8);
+    let (orig, _) = dataset
+        .load()
+        .format(InMemFormat::Coo)
+        .run(&cluster)
+        .unwrap();
+
+    // Same path, same medium: refused.
+    let err = dataset.repack().run(&cluster, DIR).unwrap_err();
+    assert!(matches!(err, DatasetError::RepackIntoSource { .. }), "{err}");
+
+    // Same path, different medium: a migration, not a clobber.
+    let other = MemFs::new();
+    let (migrated, report) = dataset
+        .repack()
+        .storage(Arc::new(other.clone()))
+        .run(&cluster, DIR)
+        .unwrap();
+    assert_eq!(report.total_nnz(), dataset.nnz());
+    assert!(other.total_bytes() > 0);
+    let reopened = Dataset::open_on(Arc::new(other), DIR).unwrap();
+    assert_eq!(reopened.manifest(), migrated.manifest());
+    let (mats, _) = reopened
+        .load()
+        .format(InMemFormat::Coo)
+        .run(&cluster)
+        .unwrap();
+    assert_eq!(collect(&mats), collect(&orig), "migration diverged");
+}
+
+/// A fault-free SimFs is behaviorally transparent: the load succeeds
+/// element-identically and the simulated clock has advanced by the
+/// parfs-model cost of the traffic.
+#[test]
+fn faultless_sim_is_transparent_and_accounts_cost() {
+    let (mem, dataset) = mem_dataset();
+    let cluster = Cluster::new(P, 8);
+    let (plain, _) = dataset
+        .load()
+        .format(InMemFormat::Coo)
+        .run(&cluster)
+        .unwrap();
+
+    let sim = sim_view(&mem, "");
+    let viewed = Dataset::open_on(Arc::clone(&sim) as Arc<dyn Storage>, DIR).unwrap();
+    let (mats, report) = viewed
+        .load()
+        .format(InMemFormat::Coo)
+        .run(&cluster)
+        .unwrap();
+    assert_eq!(collect(&mats), collect(&plain));
+    let floor = report.total_read_bytes() as f64 / FsModel::local_nvme().client_bps;
+    assert!(
+        sim.simulated_seconds() >= floor,
+        "sim clock {} below bandwidth floor {floor}",
+        sim.simulated_seconds()
+    );
+}
