@@ -29,6 +29,13 @@
 //! whose mapping region cannot intersect a block's rectangle skips that
 //! block's payload entirely — fewer bytes fetched and, asymptotically,
 //! only `O(own share)` elements decoded instead of all of them.
+//!
+//! [`BlockDirectory`] + [`fetch_blocks`] expose the same machinery at
+//! block granularity: the directory is parsed once (payload offsets
+//! resolved, no payload bytes touched) and arbitrary subsets of blocks
+//! can then be fetched and decoded in isolation — the primitive behind
+//! the serving layer's decoded-block cache (`crate::serve`), where the
+//! subset is exactly a query's cache misses.
 
 use crate::abhsf::{names, AbhsfError, Result, Scheme};
 use crate::formats::element::sort_lex;
@@ -637,6 +644,356 @@ const PAYLOAD_DTYPES: [crate::h5::Dtype; 9] = [
     crate::h5::Dtype::F64,
 ];
 
+/// One block-directory entry with its resolved payload offsets: the
+/// metadata needed to fetch and decode this block in isolation. Offsets
+/// are in element units into the per-scheme payload datasets; which
+/// datasets they index is scheme-dependent (see [`BlockDirectory`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockEntry {
+    /// Storage scheme of the block.
+    pub scheme: Scheme,
+    /// Nonzeros in the block.
+    pub zeta: u64,
+    /// Block row index (file-local grid).
+    pub brow: u64,
+    /// Block column index (file-local grid).
+    pub bcol: u64,
+    /// First payload offset: COO triplets / CSR row pointers / bitmap
+    /// occupancy bytes / dense values, by scheme.
+    off_a: u64,
+    /// Second payload offset: CSR colinds+vals / bitmap values; unused
+    /// for COO and dense.
+    off_b: u64,
+}
+
+/// Parsed block directory of one ABHSF file: the header plus one
+/// [`BlockEntry`] per stored block, in stored (block-row-major) order.
+///
+/// Reading the directory touches only the four directory datasets
+/// (`schemes`/`zetas`/`brows`/`bcols`) — never any payload bytes — and
+/// walks the per-scheme payload offsets once, so arbitrary subsets of
+/// blocks can later be fetched in isolation with [`fetch_blocks`]. The
+/// payload dtypes are validated here, up front: the raw-byte prefetch
+/// path cannot type-check per read the way the cursor decoders do, so a
+/// foreign writer's wrong dtype must surface as a typed error before any
+/// fetch, never as a decode panic.
+#[derive(Debug, Clone)]
+pub struct BlockDirectory {
+    /// File-level attribute header.
+    pub header: Header,
+    /// Directory entries in stored order.
+    pub entries: Vec<BlockEntry>,
+}
+
+impl BlockDirectory {
+    /// Read and resolve the block directory of `r`.
+    pub fn read(r: &H5Reader) -> Result<Self> {
+        let header = read_header(r)?;
+        let s = header.block_size;
+        let schemes: Vec<u8> = r.read_all(names::SCHEMES)?;
+        let zetas: Vec<u32> = r.read_all(names::ZETAS)?;
+        let brows: Vec<u32> = r.read_all(names::BROWS)?;
+        let bcols: Vec<u32> = r.read_all(names::BCOLS)?;
+        if schemes.len() as u64 != header.blocks
+            || zetas.len() != schemes.len()
+            || brows.len() != schemes.len()
+            || bcols.len() != schemes.len()
+        {
+            return Err(AbhsfError::Invalid(format!(
+                "block directory length mismatch: header says {} blocks",
+                header.blocks
+            )));
+        }
+        for (name, want) in PAYLOAD_DATASETS.iter().zip(PAYLOAD_DTYPES) {
+            let stored = r.dataset_dtype(name)?;
+            if stored != want {
+                return Err(crate::h5::H5Error::DtypeMismatch {
+                    name: (*name).to_string(),
+                    stored,
+                    requested: want,
+                }
+                .into());
+            }
+        }
+        let mut entries = Vec::with_capacity(schemes.len());
+        let (mut coo_off, mut csr_ptr_off, mut csr_off) = (0u64, 0u64, 0u64);
+        let (mut bm_off, mut bmv_off, mut dn_off) = (0u64, 0u64, 0u64);
+        let bm_bytes = (s * s).div_ceil(8);
+        for k in 0..schemes.len() {
+            let scheme = Scheme::from_tag(schemes[k]).ok_or_else(|| {
+                AbhsfError::Invalid(format!("wrong scheme tag {}", schemes[k]))
+            })?;
+            let zeta = zetas[k] as u64;
+            let (brow, bcol) = (brows[k] as u64, bcols[k] as u64);
+            let (off_a, off_b) = match scheme {
+                Scheme::Coo => (coo_off, 0),
+                Scheme::Csr => (csr_ptr_off, csr_off),
+                Scheme::Bitmap => (bm_off, bmv_off),
+                Scheme::Dense => (dn_off, 0),
+            };
+            entries.push(BlockEntry {
+                scheme,
+                zeta,
+                brow,
+                bcol,
+                off_a,
+                off_b,
+            });
+            match scheme {
+                Scheme::Coo => coo_off += zeta,
+                Scheme::Csr => {
+                    csr_ptr_off += s + 1;
+                    csr_off += zeta;
+                }
+                Scheme::Bitmap => {
+                    bm_off += bm_bytes;
+                    bmv_off += zeta;
+                }
+                Scheme::Dense => dn_off += s * s,
+            }
+        }
+        Ok(Self { header, entries })
+    }
+
+    /// Global rectangle `(r0, c0, rows, cols)` of entry `k`, clipped to
+    /// the file's submatrix window (edge blocks are partial).
+    pub fn global_rect(&self, k: usize) -> (u64, u64, u64, u64) {
+        let s = self.header.block_size;
+        let info = &self.header.info;
+        let e = &self.entries[k];
+        (
+            info.m_offset + e.brow * s,
+            info.n_offset + e.bcol * s,
+            s.min(info.m_local.saturating_sub(e.brow * s)),
+            s.min(info.n_local.saturating_sub(e.bcol * s)),
+        )
+    }
+
+    /// On-disk payload bytes of entry `k` (the store-side cost model
+    /// mirrors the exact on-disk layout).
+    pub fn payload_bytes(&self, k: usize) -> u64 {
+        let e = &self.entries[k];
+        crate::abhsf::cost::scheme_cost(e.scheme, self.header.block_size, e.zeta)
+    }
+}
+
+/// The read-ahead batch size [`visit_elements_pruned`] and
+/// [`fetch_blocks`] use for `r`: [`READAHEAD_BATCH_BYTES`] raised to
+/// dominate the file's largest container chunk.
+///
+/// Seam-cost bound: a container chunk straddling a batch boundary is
+/// fetched once per side, so the batch must *dominate* the file's
+/// largest payload chunk — 4x caps the worst-case read amplification at
+/// ~25% (one chunk re-read per dataset per seam, one seam per batch)
+/// while still engaging the pipeline on any multi-megabyte file. Default
+/// chunking (64 Ki elements = 512 KiB for f64 values) thus yields 2 MiB
+/// batches.
+pub(crate) fn default_batch_bytes(r: &H5Reader) -> u64 {
+    let mut batch_bytes = READAHEAD_BATCH_BYTES;
+    for name in PAYLOAD_DATASETS {
+        if let Ok(entry) = r.entry(name) {
+            let width = entry.dtype.size() as u64;
+            for c in &entry.chunks {
+                batch_bytes = batch_bytes.max(4 * c.elems * width);
+            }
+        }
+    }
+    batch_bytes
+}
+
+/// Fetch and decode the directory entries at `indices` (strictly
+/// ascending positions into `dir.entries`) through the double-buffered
+/// read-ahead pipeline, calling `sink(k, elements)` for each block in
+/// order with its decoded elements in **global** coordinates. Returns
+/// the number of elements decoded.
+///
+/// This is the block-granular decode entry point: full pruned loads
+/// ([`visit_elements_pruned`]) and the serving layer's cache-miss path
+/// (`crate::serve`) share it, so both inherit the pipeline's chunk
+/// coalescing (each container chunk read at most once per batch) and the
+/// prefetch hit/stall accounting in the reader's
+/// [`IoStats`](crate::h5::IoStats).
+pub fn fetch_blocks<F>(
+    r: &H5Reader,
+    dir: &BlockDirectory,
+    indices: &[usize],
+    sink: F,
+) -> Result<u64>
+where
+    F: FnMut(usize, &[(u64, u64, f64)]),
+{
+    fetch_blocks_batched(r, dir, indices, default_batch_bytes(r), sink)
+}
+
+/// [`fetch_blocks`] with an explicit read-ahead batch size in payload
+/// bytes (tests force multi-batch pipelines on small files).
+pub(crate) fn fetch_blocks_batched<F>(
+    r: &H5Reader,
+    dir: &BlockDirectory,
+    indices: &[usize],
+    batch_bytes: u64,
+    mut sink: F,
+) -> Result<u64>
+where
+    F: FnMut(usize, &[(u64, u64, f64)]),
+{
+    if indices.is_empty() {
+        return Ok(0);
+    }
+    for w in indices.windows(2) {
+        if w[1] <= w[0] {
+            return Err(AbhsfError::Invalid(format!(
+                "fetch_blocks: indices not strictly ascending at {}",
+                w[1]
+            )));
+        }
+    }
+    if *indices.last().unwrap() >= dir.entries.len() {
+        return Err(AbhsfError::Invalid(format!(
+            "fetch_blocks: index {} beyond directory of {} blocks",
+            indices.last().unwrap(),
+            dir.entries.len()
+        )));
+    }
+    let s = dir.header.block_size;
+    let (ro, co) = (dir.header.info.m_offset, dir.header.info.n_offset);
+    let bm_bytes = (s * s).div_ceil(8);
+
+    // Pass 1: group the payload byte ranges of the requested blocks into
+    // read-ahead batches of ~`batch_bytes` payload each. Slot indices
+    // follow PAYLOAD_DATASETS order; ranges stay ascending because the
+    // directory's payload offsets are monotone in stored order.
+    let empty_batch = || BatchRequest {
+        ranges: vec![Vec::new(); PAYLOAD_DATASETS.len()],
+    };
+    let mut batches: Vec<BatchRequest> = Vec::new();
+    let mut blocks_per_batch: Vec<usize> = Vec::new();
+    let mut cur = empty_batch();
+    let (mut cur_blocks, mut cur_bytes) = (0usize, 0u64);
+    for &k in indices {
+        let e = &dir.entries[k];
+        match e.scheme {
+            Scheme::Coo => {
+                cur.ranges[0].push((e.off_a, e.zeta));
+                cur.ranges[1].push((e.off_a, e.zeta));
+                cur.ranges[2].push((e.off_a, e.zeta));
+            }
+            Scheme::Csr => {
+                cur.ranges[3].push((e.off_a, s + 1));
+                cur.ranges[4].push((e.off_b, e.zeta));
+                cur.ranges[5].push((e.off_b, e.zeta));
+            }
+            Scheme::Bitmap => {
+                cur.ranges[6].push((e.off_a, bm_bytes));
+                cur.ranges[7].push((e.off_b, e.zeta));
+            }
+            Scheme::Dense => cur.ranges[8].push((e.off_a, s * s)),
+        }
+        cur_blocks += 1;
+        cur_bytes += dir.payload_bytes(k);
+        if cur_bytes >= batch_bytes {
+            batches.push(std::mem::replace(&mut cur, empty_batch()));
+            blocks_per_batch.push(cur_blocks);
+            cur_blocks = 0;
+            cur_bytes = 0;
+        }
+    }
+    if cur_blocks > 0 {
+        batches.push(cur);
+        blocks_per_batch.push(cur_blocks);
+    }
+
+    // Pass 2: the background fetcher streams the requested ranges batch
+    // by batch while this thread decodes the previous batch.
+    let mut total = 0u64;
+    let mut stream = r.prefetch(&PAYLOAD_DATASETS, batches)?;
+    let mut buf: Vec<Element> = Vec::new();
+    let mut global: Vec<(u64, u64, f64)> = Vec::new();
+    let mut block_cursor = 0usize;
+    for &nblocks in &blocks_per_batch {
+        let batch = stream.next(r)?.ok_or_else(|| {
+            AbhsfError::Invalid("read-ahead stream ended before the last batch".into())
+        })?;
+        let (mut ci, mut ri, mut bi, mut di) = (0usize, 0usize, 0usize, 0usize);
+        for &k in &indices[block_cursor..block_cursor + nblocks] {
+            let e = dir.entries[k];
+            buf.clear();
+            match e.scheme {
+                Scheme::Coo => {
+                    decode_coo_block(
+                        &decode_slice::<u16>(&batch.data[0][ci]),
+                        &decode_slice::<u16>(&batch.data[1][ci]),
+                        &decode_slice::<f64>(&batch.data[2][ci]),
+                        e.brow,
+                        e.bcol,
+                        s,
+                        &mut buf,
+                    );
+                    ci += 1;
+                }
+                Scheme::Csr => {
+                    decode_csr_block(
+                        &decode_slice::<u32>(&batch.data[3][ri]),
+                        &decode_slice::<u16>(&batch.data[4][ri]),
+                        &decode_slice::<f64>(&batch.data[5][ri]),
+                        e.zeta,
+                        e.brow,
+                        e.bcol,
+                        s,
+                        &mut buf,
+                    )?;
+                    ri += 1;
+                }
+                Scheme::Bitmap => {
+                    decode_bitmap_block(
+                        &batch.data[6][bi],
+                        &decode_slice::<f64>(&batch.data[7][bi]),
+                        e.zeta,
+                        e.brow,
+                        e.bcol,
+                        s,
+                        &mut buf,
+                    )?;
+                    bi += 1;
+                }
+                Scheme::Dense => {
+                    decode_dense_block(
+                        &decode_slice::<f64>(&batch.data[8][di]),
+                        e.zeta,
+                        e.brow,
+                        e.bcol,
+                        s,
+                        &mut buf,
+                    )?;
+                    di += 1;
+                }
+            }
+            if buf.len() as u64 != e.zeta {
+                return Err(AbhsfError::Invalid(format!(
+                    "block ({},{}): decoded {} elements, zeta {}",
+                    e.brow,
+                    e.bcol,
+                    buf.len(),
+                    e.zeta
+                )));
+            }
+            total += e.zeta;
+            global.clear();
+            global.extend(buf.iter().map(|el| (el.row + ro, el.col + co, el.val)));
+            sink(k, &global);
+        }
+        block_cursor += nblocks;
+    }
+    // Drain the stream's end marker: this joins the fetcher and flushes
+    // the prefetch hit/stall counters into the reader stats.
+    if stream.next(r)?.is_some() {
+        return Err(AbhsfError::Invalid(
+            "read-ahead stream yielded an extra batch".into(),
+        ));
+    }
+    Ok(total)
+}
+
 /// Block-pruned streaming decoder (global coordinates): walk the block
 /// directory first, skip every block whose global rectangle fails `keep`,
 /// and fetch only the payload byte ranges of the surviving blocks.
@@ -668,23 +1025,7 @@ where
     P: FnMut(u64, u64, u64, u64) -> bool,
     F: FnMut(u64, u64, f64),
 {
-    // Seam-cost bound: a container chunk straddling a batch boundary is
-    // fetched once per side, so the batch must *dominate* the file's
-    // largest payload chunk — 4x caps the worst-case read amplification
-    // at ~25% (one chunk re-read per dataset per seam, one seam per
-    // batch) while still engaging the pipeline on any multi-megabyte
-    // file. Default chunking (64 Ki elements = 512 KiB for f64 values)
-    // thus yields 2 MiB batches.
-    let mut batch_bytes = READAHEAD_BATCH_BYTES;
-    for name in PAYLOAD_DATASETS {
-        if let Ok(entry) = r.entry(name) {
-            let width = entry.dtype.size() as u64;
-            for c in &entry.chunks {
-                batch_bytes = batch_bytes.max(4 * c.elems * width);
-            }
-        }
-    }
-    visit_elements_pruned_batched(r, keep, sink, batch_bytes)
+    visit_elements_pruned_batched(r, keep, sink, default_batch_bytes(r))
 }
 
 /// [`visit_elements_pruned`] with an explicit read-ahead batch size in
@@ -699,208 +1040,30 @@ where
     P: FnMut(u64, u64, u64, u64) -> bool,
     F: FnMut(u64, u64, f64),
 {
-    let header = read_header(r)?;
-    let s = header.block_size;
-    let (ro, co) = (header.info.m_offset, header.info.n_offset);
-    let schemes: Vec<u8> = r.read_all(names::SCHEMES)?;
-    let zetas: Vec<u32> = r.read_all(names::ZETAS)?;
-    let brows: Vec<u32> = r.read_all(names::BROWS)?;
-    let bcols: Vec<u32> = r.read_all(names::BCOLS)?;
-    if schemes.len() as u64 != header.blocks
-        || zetas.len() != schemes.len()
-        || brows.len() != schemes.len()
-        || bcols.len() != schemes.len()
-    {
-        return Err(AbhsfError::Invalid(format!(
-            "block directory length mismatch: header says {} blocks",
-            header.blocks
-        )));
-    }
-    // The raw-byte prefetch path cannot type-check per read the way the
-    // cursor decoders do, so validate every payload dtype up front — a
-    // foreign writer's wrong dtype is a typed error, never a decode
-    // panic inside a worker.
-    for (name, want) in PAYLOAD_DATASETS.iter().zip(PAYLOAD_DTYPES) {
-        let stored = r.dataset_dtype(name)?;
-        if stored != want {
-            return Err(crate::h5::H5Error::DtypeMismatch {
-                name: (*name).to_string(),
-                stored,
-                requested: want,
-            }
-            .into());
-        }
-    }
-
-    // Pass 1: walk the directory, advancing per-scheme payload offsets,
-    // and group the byte ranges of the blocks that survive `keep` into
-    // read-ahead batches of ~`batch_bytes` payload each.
+    let dir = BlockDirectory::read(r)?;
     let mut stats = PruneStats {
-        blocks_total: header.blocks,
+        blocks_total: dir.header.blocks,
         ..PruneStats::default()
     };
-    // One surviving block: (scheme, zeta, brow, bcol).
-    let mut kept: Vec<(Scheme, u64, u64, u64)> = Vec::new();
-    let mut batches: Vec<BatchRequest> = Vec::new();
-    let mut blocks_per_batch: Vec<usize> = Vec::new();
-    let empty_batch = || BatchRequest {
-        ranges: vec![Vec::new(); PAYLOAD_DATASETS.len()],
-    };
-    let mut cur = empty_batch();
-    let (mut cur_blocks, mut cur_bytes) = (0usize, 0u64);
-    let (mut coo_off, mut csr_ptr_off, mut csr_off) = (0u64, 0u64, 0u64);
-    let (mut bm_off, mut bmv_off, mut dn_off) = (0u64, 0u64, 0u64);
-    let bm_bytes = (s * s).div_ceil(8);
-    for k in 0..schemes.len() {
-        let scheme = Scheme::from_tag(schemes[k])
-            .ok_or_else(|| AbhsfError::Invalid(format!("wrong scheme tag {}", schemes[k])))?;
-        let zeta = zetas[k] as u64;
-        let (brow, bcol) = (brows[k] as u64, bcols[k] as u64);
-        let rect = (
-            ro + brow * s,
-            co + bcol * s,
-            s.min(header.info.m_local.saturating_sub(brow * s)),
-            s.min(header.info.n_local.saturating_sub(bcol * s)),
-        );
-        if keep(rect.0, rect.1, rect.2, rect.3) {
-            kept.push((scheme, zeta, brow, bcol));
-            // Slot indices follow PAYLOAD_DATASETS order.
-            match scheme {
-                Scheme::Coo => {
-                    cur.ranges[0].push((coo_off, zeta));
-                    cur.ranges[1].push((coo_off, zeta));
-                    cur.ranges[2].push((coo_off, zeta));
-                }
-                Scheme::Csr => {
-                    cur.ranges[3].push((csr_ptr_off, s + 1));
-                    cur.ranges[4].push((csr_off, zeta));
-                    cur.ranges[5].push((csr_off, zeta));
-                }
-                Scheme::Bitmap => {
-                    cur.ranges[6].push((bm_off, bm_bytes));
-                    cur.ranges[7].push((bmv_off, zeta));
-                }
-                Scheme::Dense => cur.ranges[8].push((dn_off, s * s)),
-            }
-            cur_blocks += 1;
-            // The store-side cost model mirrors the exact on-disk layout.
-            cur_bytes += crate::abhsf::cost::scheme_cost(scheme, s, zeta);
-            if cur_bytes >= batch_bytes {
-                batches.push(std::mem::replace(&mut cur, empty_batch()));
-                blocks_per_batch.push(cur_blocks);
-                cur_blocks = 0;
-                cur_bytes = 0;
-            }
+    let mut indices: Vec<usize> = Vec::new();
+    for k in 0..dir.entries.len() {
+        let (r0, c0, rows, cols) = dir.global_rect(k);
+        if keep(r0, c0, rows, cols) {
+            indices.push(k);
         } else {
             stats.blocks_skipped += 1;
-            stats.bytes_skipped += crate::abhsf::cost::scheme_cost(scheme, s, zeta);
-        }
-        match scheme {
-            Scheme::Coo => coo_off += zeta,
-            Scheme::Csr => {
-                csr_ptr_off += s + 1;
-                csr_off += zeta;
-            }
-            Scheme::Bitmap => {
-                bm_off += bm_bytes;
-                bmv_off += zeta;
-            }
-            Scheme::Dense => dn_off += s * s,
+            stats.bytes_skipped += dir.payload_bytes(k);
         }
     }
-    if cur_blocks > 0 {
-        batches.push(cur);
-        blocks_per_batch.push(cur_blocks);
-    }
-
-    // Pass 2: the background fetcher streams the surviving ranges batch
-    // by batch while this thread decodes the previous batch.
-    if !kept.is_empty() {
-        let mut stream = r.prefetch(&PAYLOAD_DATASETS, batches)?;
-        let mut buf: Vec<Element> = Vec::new();
-        let mut block_cursor = 0usize;
-        for &nblocks in &blocks_per_batch {
-            let batch = stream.next(r)?.ok_or_else(|| {
-                AbhsfError::Invalid("read-ahead stream ended before the last batch".into())
-            })?;
-            let (mut ci, mut ri, mut bi, mut di) = (0usize, 0usize, 0usize, 0usize);
-            for &(scheme, zeta, brow, bcol) in &kept[block_cursor..block_cursor + nblocks] {
-                buf.clear();
-                match scheme {
-                    Scheme::Coo => {
-                        decode_coo_block(
-                            &decode_slice::<u16>(&batch.data[0][ci]),
-                            &decode_slice::<u16>(&batch.data[1][ci]),
-                            &decode_slice::<f64>(&batch.data[2][ci]),
-                            brow,
-                            bcol,
-                            s,
-                            &mut buf,
-                        );
-                        ci += 1;
-                    }
-                    Scheme::Csr => {
-                        decode_csr_block(
-                            &decode_slice::<u32>(&batch.data[3][ri]),
-                            &decode_slice::<u16>(&batch.data[4][ri]),
-                            &decode_slice::<f64>(&batch.data[5][ri]),
-                            zeta,
-                            brow,
-                            bcol,
-                            s,
-                            &mut buf,
-                        )?;
-                        ri += 1;
-                    }
-                    Scheme::Bitmap => {
-                        decode_bitmap_block(
-                            &batch.data[6][bi],
-                            &decode_slice::<f64>(&batch.data[7][bi]),
-                            zeta,
-                            brow,
-                            bcol,
-                            s,
-                            &mut buf,
-                        )?;
-                        bi += 1;
-                    }
-                    Scheme::Dense => {
-                        decode_dense_block(
-                            &decode_slice::<f64>(&batch.data[8][di]),
-                            zeta,
-                            brow,
-                            bcol,
-                            s,
-                            &mut buf,
-                        )?;
-                        di += 1;
-                    }
-                }
-                if buf.len() as u64 != zeta {
-                    return Err(AbhsfError::Invalid(format!(
-                        "block ({brow},{bcol}): decoded {} elements, zeta {zeta}",
-                        buf.len()
-                    )));
-                }
-                stats.elements_decoded += zeta;
-                for e in &buf {
-                    sink(e.row + ro, e.col + co, e.val);
-                }
-            }
-            block_cursor += nblocks;
+    stats.elements_decoded = fetch_blocks_batched(r, &dir, &indices, batch_bytes, |_, elems| {
+        for &(i, j, v) in elems {
+            sink(i, j, v);
         }
-        // Drain the stream's end marker: this joins the fetcher and
-        // flushes the prefetch hit/stall counters into the reader stats.
-        if stream.next(r)?.is_some() {
-            return Err(AbhsfError::Invalid(
-                "read-ahead stream yielded an extra batch".into(),
-            ));
-        }
-    }
-    if stats.blocks_skipped == 0 && stats.elements_decoded != header.info.z_local {
+    })?;
+    if stats.blocks_skipped == 0 && stats.elements_decoded != dir.header.info.z_local {
         return Err(AbhsfError::Invalid(format!(
             "decoded {} elements with nothing pruned, header says {}",
-            stats.elements_decoded, header.info.z_local
+            stats.elements_decoded, dir.header.info.z_local
         )));
     }
     Ok(stats)
@@ -1213,6 +1376,55 @@ mod tests {
             "batching must not change pruning"
         );
         assert_eq!(prune_one.elements_decoded, prune_many.elements_decoded);
+    }
+
+    /// The block-granular fetch decodes exactly the requested blocks, in
+    /// directory order, element-identical to the streaming decoder
+    /// restricted to those blocks' rectangles.
+    #[test]
+    fn fetch_blocks_subset_matches_visit_elements() {
+        let coo = random_coo(59, 64, 64, 900, (8, 4));
+        let data = AbhsfData::from_coo(&coo, 8, &CostModel::default()).unwrap();
+        let path = tmpdir().join("rt-fetch-blocks.h5spm");
+        store_data(&path, &data).unwrap();
+        let r = H5Reader::open(&path).unwrap();
+        let dir = BlockDirectory::read(&r).unwrap();
+        assert_eq!(dir.entries.len() as u64, data.blocks());
+        // Every other block of the directory.
+        let indices: Vec<usize> = (0..dir.entries.len()).step_by(2).collect();
+        let rects: Vec<(u64, u64, u64, u64)> =
+            indices.iter().map(|&k| dir.global_rect(k)).collect();
+        let mut got: Vec<(u64, u64, f64)> = Vec::new();
+        let mut zeta_sum = 0u64;
+        let n = fetch_blocks(&r, &dir, &indices, |k, elems| {
+            zeta_sum += dir.entries[k].zeta;
+            got.extend_from_slice(elems);
+        })
+        .unwrap();
+        assert_eq!(n, zeta_sum);
+        assert_eq!(got.len() as u64, n);
+        // Reference: the full streaming decoder, restricted to the
+        // selected blocks' (disjoint) rectangles.
+        let r2 = H5Reader::open(&path).unwrap();
+        let mut want: Vec<(u64, u64, f64)> = Vec::new();
+        visit_elements(&r2, |i, j, v| {
+            let inside = rects.iter().any(|&(r0, c0, rows, cols)| {
+                i >= r0 && i < r0 + rows && j >= c0 && j < c0 + cols
+            });
+            if inside {
+                want.push((i, j, v));
+            }
+        })
+        .unwrap();
+        let key = |e: &(u64, u64, f64)| (e.0, e.1);
+        got.sort_by_key(key);
+        want.sort_by_key(key);
+        assert_eq!(got, want);
+        // Out-of-order or out-of-range indices are usage errors.
+        assert!(fetch_blocks(&r, &dir, &[1, 0], |_, _| {}).is_err());
+        assert!(fetch_blocks(&r, &dir, &[dir.entries.len()], |_, _| {}).is_err());
+        // The empty request is a no-op.
+        assert_eq!(fetch_blocks(&r, &dir, &[], |_, _| {}).unwrap(), 0);
     }
 
     #[test]

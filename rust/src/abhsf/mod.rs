@@ -31,7 +31,10 @@ pub mod store;
 pub use block::{partition_into_blocks, Block};
 pub use cost::{choose_scheme, scheme_cost, CostModel};
 pub use data::AbhsfData;
-pub use load::{load_coo, load_csr, visit_elements, visit_elements_pruned, PruneStats};
+pub use load::{
+    fetch_blocks, load_coo, load_csr, visit_elements, visit_elements_pruned, BlockDirectory,
+    BlockEntry, PruneStats,
+};
 pub use rebucket::{rebucket_into_abhsf, Rebucketer};
 pub use store::{matrix_file_path, store_data};
 

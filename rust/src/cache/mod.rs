@@ -1,0 +1,599 @@
+//! Concurrent decoded-block cache — the resident working set behind the
+//! serving layer (`crate::serve`).
+//!
+//! Every load path before this module was one-shot batch: each
+//! [`LoadPlan`](crate::coordinator::LoadPlan) re-reads and re-decodes
+//! every surviving ABHSF block, even when the same dataset is queried
+//! repeatedly. A [`BlockCache`] keeps *decoded* block triplets resident
+//! so repeated queries against the same dataset never touch storage for
+//! blocks already seen:
+//!
+//! * **Sharded**: keys hash to one of N shards, each behind its own
+//!   mutex, so concurrent serving threads contend only when they touch
+//!   the same slice of the key space.
+//! * **Byte-budgeted LRU**: the cache holds at most a configured number
+//!   of *decoded* bytes (24 B per element triplet plus a fixed per-block
+//!   overhead — what the blocks actually cost in RAM, which is what a
+//!   memory budget must bound; on-disk bytes are smaller for every
+//!   scheme except dense-of-full-blocks and would undercount the
+//!   footprint). The budget is partitioned evenly across shards
+//!   (slab-style); a shard over its slice evicts its least-recently-used
+//!   resident blocks even if the global total is under budget.
+//! * **Single-flight**: concurrent requests for the same absent block
+//!   decode it once. The first requester becomes the *loader* (its
+//!   [`Claim::Miss`] carries a [`LoadToken`] it must resolve);
+//!   latecomers receive a [`Claim::InFlight`] waiter parked on the
+//!   in-flight slot until the loader publishes or fails.
+//!
+//! Eviction removes a block from the map only — `Arc` hand-outs keep
+//! already-claimed blocks alive for their holders, so a query never
+//! observes a block disappearing under it.
+//!
+//! See DESIGN.md §10 for the key/invariant contract.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::{Hash, Hasher};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Identity of one decoded block: which dataset, which stored file,
+/// which cell of that file's block grid.
+///
+/// `dataset` comes from [`BlockCache::dataset_id`], which canonicalizes
+/// `(storage medium, dataset directory)` — two readers over the same
+/// stored dataset share ids (and therefore blocks), readers over
+/// distinct datasets never collide. Block coordinates are file-local:
+/// two files of one dataset cover disjoint submatrix windows, so
+/// `(file, brow, bcol)` is unambiguous within a dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockKey {
+    /// Cache-assigned dataset id (see [`BlockCache::dataset_id`]).
+    pub dataset: u64,
+    /// Stored file index (`matrix-<file>.h5spm`).
+    pub file: u32,
+    /// Block row in the file's grid.
+    pub brow: u32,
+    /// Block column in the file's grid.
+    pub bcol: u32,
+}
+
+/// Fixed per-block bookkeeping charge (map entry, Arc, Vec header) added
+/// to the element payload when accounting a block against the budget —
+/// keeps a pathological all-tiny-blocks working set from looking free.
+const BLOCK_FIXED_BYTES: u64 = 96;
+
+/// One decoded block: its elements in **global** coordinates, exactly as
+/// the block-granular decoder
+/// ([`fetch_blocks`](crate::abhsf::load::fetch_blocks)) produced them.
+#[derive(Debug, Clone)]
+pub struct DecodedBlock {
+    /// Decoded `(row, col, value)` triplets, global coordinates.
+    pub elements: Vec<(u64, u64, f64)>,
+}
+
+impl DecodedBlock {
+    /// Bytes this block is charged against the cache budget: decoded
+    /// in-memory triplets (24 B each) plus the fixed per-block
+    /// bookkeeping overhead.
+    pub fn decoded_bytes(&self) -> u64 {
+        BLOCK_FIXED_BYTES + 24 * self.elements.len() as u64
+    }
+}
+
+/// Result of one in-flight decode, shared between the loader and any
+/// coalesced waiters.
+#[derive(Debug)]
+enum FlightState {
+    Pending,
+    Done(Arc<DecodedBlock>),
+    Failed(String),
+}
+
+#[derive(Debug)]
+struct Flight {
+    state: Mutex<FlightState>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(FlightState::Pending),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn resolve(&self, outcome: Result<Arc<DecodedBlock>, String>) {
+        let mut st = self.state.lock().expect("flight poisoned");
+        *st = match outcome {
+            Ok(b) => FlightState::Done(b),
+            Err(e) => FlightState::Failed(e),
+        };
+        self.cv.notify_all();
+    }
+}
+
+/// One shard slot: a resident block or a decode in flight. In-flight
+/// slots are never in the LRU index and are therefore never evicted —
+/// eviction only forgets bytes that are actually resident.
+#[derive(Debug)]
+enum Slot {
+    Resident { block: Arc<DecodedBlock>, tick: u64 },
+    InFlight(Arc<Flight>),
+}
+
+#[derive(Debug, Default)]
+struct Shard {
+    slots: HashMap<BlockKey, Slot>,
+    /// Recency index over resident slots: tick → key, oldest first.
+    lru: BTreeMap<u64, BlockKey>,
+    resident_bytes: u64,
+}
+
+/// Outcome of [`BlockCache::claim`].
+pub enum Claim<'c> {
+    /// The block is resident; use it.
+    Hit(Arc<DecodedBlock>),
+    /// The block is absent and the caller just became its loader: decode
+    /// it and resolve the token with [`LoadToken::publish`] (or
+    /// [`LoadToken::fail`]). Dropping the token unresolved fails the
+    /// flight so coalesced waiters never hang.
+    Miss(LoadToken<'c>),
+    /// Another thread is already decoding this block; park on
+    /// [`FlightWaiter::wait`] for its result.
+    InFlight(FlightWaiter),
+}
+
+/// The loader side of a single-flight slot (see [`Claim::Miss`]).
+pub struct LoadToken<'c> {
+    cache: &'c BlockCache,
+    key: BlockKey,
+    flight: Arc<Flight>,
+    resolved: bool,
+}
+
+impl LoadToken<'_> {
+    /// The block this token is responsible for.
+    pub fn key(&self) -> BlockKey {
+        self.key
+    }
+
+    /// Install the decoded elements, wake every coalesced waiter, and
+    /// return the shared block. May immediately evict older blocks (or,
+    /// if this block alone exceeds the shard budget, the block itself —
+    /// the returned `Arc` stays valid either way).
+    pub fn publish(mut self, elements: Vec<(u64, u64, f64)>) -> Arc<DecodedBlock> {
+        self.resolved = true;
+        self.cache.publish_inner(self.key, &self.flight, elements)
+    }
+
+    /// Abandon the flight with an error: the slot is removed (a retry
+    /// will claim a fresh miss) and waiters receive the error.
+    pub fn fail(mut self, error: String) {
+        self.resolved = true;
+        self.cache.fail_inner(self.key, &self.flight, error);
+    }
+}
+
+impl Drop for LoadToken<'_> {
+    fn drop(&mut self) {
+        if !self.resolved {
+            self.cache.fail_inner(
+                self.key,
+                &self.flight,
+                "block loader dropped without publishing".to_string(),
+            );
+        }
+    }
+}
+
+/// The waiter side of a single-flight slot (see [`Claim::InFlight`]).
+pub struct FlightWaiter {
+    flight: Arc<Flight>,
+}
+
+impl FlightWaiter {
+    /// Block until the loader resolves the flight; returns its block or
+    /// its error message.
+    pub fn wait(&self) -> Result<Arc<DecodedBlock>, String> {
+        let mut st = self.flight.state.lock().expect("flight poisoned");
+        while matches!(*st, FlightState::Pending) {
+            st = self.flight.cv.wait(st).expect("flight poisoned");
+        }
+        match &*st {
+            FlightState::Done(b) => Ok(Arc::clone(b)),
+            FlightState::Failed(e) => Err(e.clone()),
+            FlightState::Pending => unreachable!("loop exits only when resolved"),
+        }
+    }
+}
+
+/// Monotonic counters of one cache, plus the current residency. All
+/// counters are lifetime totals; snapshot via [`BlockCache::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Claims answered from a resident block.
+    pub hits: u64,
+    /// Claims that became loaders (each corresponds to one decode,
+    /// successful or not).
+    pub misses: u64,
+    /// Resident blocks evicted under budget pressure.
+    pub evictions: u64,
+    /// Claims that found a decode already in flight and waited on it
+    /// instead of decoding again.
+    pub coalesced_waits: u64,
+    /// Decoded bytes ever inserted (publishes).
+    pub inserted_bytes: u64,
+    /// Decoded bytes currently resident.
+    pub resident_bytes: u64,
+    /// Blocks currently resident.
+    pub resident_blocks: u64,
+}
+
+impl CacheStats {
+    /// Fraction of hit-or-miss claims answered from residency
+    /// (coalesced waits count toward neither side: they are misses whose
+    /// decode someone else paid for).
+    pub fn hit_rate(&self) -> f64 {
+        let denom = self.hits + self.misses;
+        if denom == 0 {
+            0.0
+        } else {
+            self.hits as f64 / denom as f64
+        }
+    }
+}
+
+/// Default shard count (see [`BlockCache::with_budget`]).
+const DEFAULT_SHARDS: usize = 16;
+
+/// A concurrent, byte-budgeted cache of decoded ABHSF blocks (module
+/// docs for the full contract).
+#[derive(Debug)]
+pub struct BlockCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: u64,
+    budget: u64,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    coalesced_waits: AtomicU64,
+    inserted_bytes: AtomicU64,
+    /// `(storage medium, canonical dataset dir)` → assigned dataset id.
+    datasets: Mutex<HashMap<(usize, PathBuf), u64>>,
+}
+
+impl BlockCache {
+    /// Cache with the given decoded-byte budget and [`DEFAULT_SHARDS`]
+    /// shards.
+    pub fn with_budget(budget_bytes: u64) -> Self {
+        Self::with_budget_sharded(budget_bytes, DEFAULT_SHARDS)
+    }
+
+    /// Cache with an explicit shard count (tests use 1 shard to make LRU
+    /// order globally observable). The budget is split evenly across
+    /// shards.
+    pub fn with_budget_sharded(budget_bytes: u64, shards: usize) -> Self {
+        let shards = shards.max(1);
+        Self {
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: budget_bytes / shards as u64,
+            budget: budget_bytes,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            coalesced_waits: AtomicU64::new(0),
+            inserted_bytes: AtomicU64::new(0),
+            datasets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The configured decoded-byte budget.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    /// Stable id for the dataset at `canonical_dir` on storage medium
+    /// `medium`: the same `(medium, dir)` always maps to the same id
+    /// within this cache, so independent readers of one dataset share
+    /// blocks while distinct datasets never collide.
+    pub fn dataset_id(&self, medium: usize, canonical_dir: &Path) -> u64 {
+        let mut map = self.datasets.lock().expect("dataset map poisoned");
+        let next = map.len() as u64;
+        *map.entry((medium, canonical_dir.to_path_buf())).or_insert(next)
+    }
+
+    fn shard_of(&self, key: &BlockKey) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Claim `key`: a hit, a loader token, or a waiter (see [`Claim`]).
+    pub fn claim(&self, key: BlockKey) -> Claim<'_> {
+        let mut shard = self.shards[self.shard_of(&key)]
+            .lock()
+            .expect("cache shard poisoned");
+        match shard.slots.get(&key) {
+            Some(Slot::Resident { block, tick }) => {
+                let block = Arc::clone(block);
+                let old_tick = *tick;
+                let new_tick = self.next_tick();
+                shard.lru.remove(&old_tick);
+                shard.lru.insert(new_tick, key);
+                if let Some(Slot::Resident { tick, .. }) = shard.slots.get_mut(&key) {
+                    *tick = new_tick;
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Claim::Hit(block)
+            }
+            Some(Slot::InFlight(flight)) => {
+                let flight = Arc::clone(flight);
+                self.coalesced_waits.fetch_add(1, Ordering::Relaxed);
+                Claim::InFlight(FlightWaiter { flight })
+            }
+            None => {
+                let flight = Arc::new(Flight::new());
+                shard.slots.insert(key, Slot::InFlight(Arc::clone(&flight)));
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Claim::Miss(LoadToken {
+                    cache: self,
+                    key,
+                    flight,
+                    resolved: false,
+                })
+            }
+        }
+    }
+
+    fn publish_inner(
+        &self,
+        key: BlockKey,
+        flight: &Arc<Flight>,
+        elements: Vec<(u64, u64, f64)>,
+    ) -> Arc<DecodedBlock> {
+        let block = Arc::new(DecodedBlock { elements });
+        let bytes = block.decoded_bytes();
+        {
+            let mut shard = self.shards[self.shard_of(&key)]
+                .lock()
+                .expect("cache shard poisoned");
+            // The slot is still this flight's (in-flight slots are never
+            // evicted and only its loader resolves it).
+            let tick = self.next_tick();
+            shard.slots.insert(
+                key,
+                Slot::Resident {
+                    block: Arc::clone(&block),
+                    tick,
+                },
+            );
+            shard.lru.insert(tick, key);
+            shard.resident_bytes += bytes;
+            self.inserted_bytes.fetch_add(bytes, Ordering::Relaxed);
+            while shard.resident_bytes > self.shard_budget {
+                let Some((&oldest, &victim)) = shard.lru.iter().next() else {
+                    break;
+                };
+                shard.lru.remove(&oldest);
+                if let Some(Slot::Resident { block: b, .. }) = shard.slots.remove(&victim) {
+                    shard.resident_bytes -= b.decoded_bytes();
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        // Wake waiters outside the shard lock.
+        flight.resolve(Ok(Arc::clone(&block)));
+        block
+    }
+
+    fn fail_inner(&self, key: BlockKey, flight: &Arc<Flight>, error: String) {
+        {
+            let mut shard = self.shards[self.shard_of(&key)]
+                .lock()
+                .expect("cache shard poisoned");
+            // Remove the slot only if it still belongs to this flight —
+            // a racing retry may have claimed a fresh one.
+            let same_flight = matches!(
+                shard.slots.get(&key),
+                Some(Slot::InFlight(f)) if Arc::ptr_eq(f, flight)
+            );
+            if same_flight {
+                shard.slots.remove(&key);
+            }
+        }
+        flight.resolve(Err(error));
+    }
+
+    /// Snapshot the counters and the current residency.
+    pub fn stats(&self) -> CacheStats {
+        let mut resident_bytes = 0u64;
+        let mut resident_blocks = 0u64;
+        for shard in &self.shards {
+            let s = shard.lock().expect("cache shard poisoned");
+            resident_bytes += s.resident_bytes;
+            resident_blocks += s.lru.len() as u64;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            coalesced_waits: self.coalesced_waits.load(Ordering::Relaxed),
+            inserted_bytes: self.inserted_bytes.load(Ordering::Relaxed),
+            resident_bytes,
+            resident_blocks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(b: u32) -> BlockKey {
+        BlockKey {
+            dataset: 0,
+            file: 0,
+            brow: b,
+            bcol: 0,
+        }
+    }
+
+    fn elems(n: usize) -> Vec<(u64, u64, f64)> {
+        (0..n as u64).map(|i| (i, i, 1.0)).collect()
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let cache = BlockCache::with_budget(1 << 20);
+        let Claim::Miss(tok) = cache.claim(key(1)) else {
+            panic!("first claim must miss");
+        };
+        let block = tok.publish(elems(10));
+        assert_eq!(block.elements.len(), 10);
+        let Claim::Hit(b) = cache.claim(key(1)) else {
+            panic!("second claim must hit");
+        };
+        assert!(Arc::ptr_eq(&b, &block));
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert_eq!(st.resident_blocks, 1);
+        assert_eq!(st.resident_bytes, block.decoded_bytes());
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    /// LRU order under a budget: the least recently *used* (not
+    /// inserted) block is evicted first.
+    #[test]
+    fn lru_eviction_under_budget() {
+        let one = DecodedBlock { elements: elems(10) }.decoded_bytes();
+        // Room for exactly two blocks in a single shard.
+        let cache = BlockCache::with_budget_sharded(2 * one, 1);
+        for b in [1u32, 2] {
+            let Claim::Miss(tok) = cache.claim(key(b)) else {
+                panic!("miss expected");
+            };
+            tok.publish(elems(10));
+        }
+        assert_eq!(cache.stats().evictions, 0);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(matches!(cache.claim(key(1)), Claim::Hit(_)));
+        let Claim::Miss(tok) = cache.claim(key(3)) else {
+            panic!("miss expected");
+        };
+        tok.publish(elems(10));
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.resident_blocks, 2);
+        assert!(matches!(cache.claim(key(1)), Claim::Hit(_)), "1 was touched");
+        assert!(matches!(cache.claim(key(3)), Claim::Hit(_)), "3 is fresh");
+        assert!(matches!(cache.claim(key(2)), Claim::Miss(_)), "2 evicted");
+    }
+
+    /// A block bigger than the whole budget is still served (the Arc
+    /// stays valid) but does not stay resident.
+    #[test]
+    fn oversized_block_served_but_not_retained() {
+        let cache = BlockCache::with_budget_sharded(64, 1);
+        let Claim::Miss(tok) = cache.claim(key(1)) else {
+            panic!("miss expected");
+        };
+        let block = tok.publish(elems(1000));
+        assert_eq!(block.elements.len(), 1000);
+        let st = cache.stats();
+        assert_eq!(st.resident_blocks, 0);
+        assert_eq!(st.resident_bytes, 0);
+        assert_eq!(st.evictions, 1);
+        assert!(matches!(cache.claim(key(1)), Claim::Miss(_)));
+    }
+
+    /// Concurrent claims of one absent key: exactly one loader; everyone
+    /// else coalesces onto its flight and sees the same block.
+    #[test]
+    fn single_flight_coalesces() {
+        let cache = Arc::new(BlockCache::with_budget(1 << 20));
+        let threads = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(threads));
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let cache = Arc::clone(&cache);
+            let barrier = Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                match cache.claim(key(7)) {
+                    Claim::Hit(b) => b,
+                    Claim::InFlight(w) => w.wait().unwrap(),
+                    Claim::Miss(tok) => {
+                        // Slow decode: give peers time to coalesce.
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        tok.publish(elems(5))
+                    }
+                }
+            }));
+        }
+        let blocks: Vec<Arc<DecodedBlock>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for b in &blocks {
+            assert!(Arc::ptr_eq(b, &blocks[0]), "all threads share one decode");
+        }
+        let st = cache.stats();
+        assert_eq!(st.misses, 1, "exactly one loader: {st:?}");
+        assert_eq!(
+            st.hits + st.coalesced_waits,
+            threads as u64 - 1,
+            "everyone else hit or coalesced: {st:?}"
+        );
+    }
+
+    /// A dropped (unresolved) loader fails its waiters instead of
+    /// hanging them, and a retry claims a fresh miss.
+    #[test]
+    fn dropped_loader_fails_waiters() {
+        let cache = BlockCache::with_budget(1 << 20);
+        let waiter = {
+            let Claim::Miss(tok) = cache.claim(key(9)) else {
+                panic!("miss expected");
+            };
+            let Claim::InFlight(w) = cache.claim(key(9)) else {
+                panic!("in-flight expected");
+            };
+            drop(tok);
+            w
+        };
+        assert!(waiter.wait().is_err());
+        assert!(matches!(cache.claim(key(9)), Claim::Miss(_)), "retry is a fresh miss");
+    }
+
+    /// An explicit `fail` behaves like a drop, with the caller's error.
+    #[test]
+    fn failed_loader_reports_error() {
+        let cache = BlockCache::with_budget(1 << 20);
+        let Claim::Miss(tok) = cache.claim(key(3)) else {
+            panic!("miss expected");
+        };
+        let Claim::InFlight(w) = cache.claim(key(3)) else {
+            panic!("in-flight expected");
+        };
+        tok.fail("decode exploded".into());
+        assert_eq!(w.wait().unwrap_err(), "decode exploded");
+    }
+
+    #[test]
+    fn dataset_ids_are_stable_and_distinct() {
+        let cache = BlockCache::with_budget(1 << 20);
+        let a = cache.dataset_id(0, Path::new("/data/a"));
+        let b = cache.dataset_id(0, Path::new("/data/b"));
+        let a2 = cache.dataset_id(0, Path::new("/data/a"));
+        let a_other_medium = cache.dataset_id(1, Path::new("/data/a"));
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_ne!(a, a_other_medium);
+    }
+}

@@ -483,6 +483,21 @@ impl Dataset {
         })
     }
 
+    /// Open a random-access cached reader over this dataset: queries
+    /// (`rect` / `row_slice` / `nnz_in` / `spmv`) walk the per-file
+    /// block directories, serve resident blocks from `cache` without
+    /// touching storage, and fetch only the missing blocks through the
+    /// read-ahead pipeline (see [`crate::serve::DatasetReader`]).
+    ///
+    /// Readers are per-thread; concurrent serving threads each open
+    /// their own reader against the same shared cache.
+    pub fn reader<'c>(
+        &self,
+        cache: &'c crate::cache::BlockCache,
+    ) -> Result<crate::serve::DatasetReader<'c>, DatasetError> {
+        crate::serve::DatasetReader::open(self, cache)
+    }
+
     /// Begin planning a load of this dataset.
     pub fn load(&self) -> LoadPlan<'_> {
         LoadPlan {

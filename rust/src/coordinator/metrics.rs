@@ -1,6 +1,8 @@
-//! Reports produced by the parallel store/load orchestration, and the
-//! bridge from measured I/O traces into the [`crate::parfs`] cost model.
+//! Reports produced by the parallel store/load orchestration and the
+//! serving harness, and the bridge from measured I/O traces into the
+//! [`crate::parfs`] cost model.
 
+use crate::cache::CacheStats;
 use crate::h5::IoStats;
 use crate::parfs::{FsModel, IoStrategy, RankLoadProfile, SimReport};
 
@@ -140,6 +142,48 @@ impl LoadReport {
     }
 }
 
+/// Outcome of one closed-loop serving run
+/// ([`crate::serve::run_closed_loop`]): N worker threads issuing seeded
+/// random rect/row-slice/nnz/SpMV queries against one or more datasets
+/// through a shared [`crate::cache::BlockCache`].
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Worker threads.
+    pub threads: usize,
+    /// Queries completed across all threads (SpMV queries included).
+    pub queries: u64,
+    /// How many of those were whole-matrix SpMV queries.
+    pub spmv_queries: u64,
+    /// Wall time of the whole run (leader-observed), s.
+    pub wall_s: f64,
+    /// Per-query latency percentiles across all threads, ms.
+    pub p50_ms: f64,
+    /// 99th percentile latency, ms.
+    pub p99_ms: f64,
+    /// Slowest single query, ms.
+    pub max_ms: f64,
+    /// Elements returned by rect/row-slice queries plus elements counted
+    /// by nnz queries (a work proxy; an SpMV query contributes its output
+    /// vector length `m`).
+    pub elements_returned: u64,
+    /// Aggregate reader I/O across every worker's readers — what
+    /// actually reached storage (cache hits contribute nothing here).
+    pub io: IoStats,
+    /// Cache counters at the end of the run.
+    pub cache: CacheStats,
+}
+
+impl ServeReport {
+    /// Query throughput, queries/s.
+    pub fn qps(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.queries as f64 / self.wall_s
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,5 +254,24 @@ mod tests {
         let sim = r.simulate(&FsModel::anselm_lustre());
         assert!(sim.makespan_s > 0.0);
         assert_eq!(sim.per_rank_s.len(), 2);
+    }
+
+    #[test]
+    fn serve_report_qps() {
+        let r = ServeReport {
+            threads: 2,
+            queries: 100,
+            spmv_queries: 5,
+            wall_s: 2.0,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            max_ms: 3.0,
+            elements_returned: 10,
+            io: IoStats::default(),
+            cache: CacheStats::default(),
+        };
+        assert!((r.qps() - 50.0).abs() < 1e-12);
+        let idle = ServeReport { wall_s: 0.0, ..r };
+        assert_eq!(idle.qps(), 0.0);
     }
 }

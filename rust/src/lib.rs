@@ -30,7 +30,11 @@
 //!   or a [`vfs::SimFs`] decorator that emulates the [`parfs`] cost model
 //!   and injects storage faults; block-pruned reads overlap fetch and
 //!   decode through a double-buffered read-ahead pipeline
-//!   (DESIGN.md §9).
+//!   (DESIGN.md §9). Repeated-query workloads are served through
+//!   [`cache`] + [`serve`]: a sharded, byte-budgeted decoded-block cache
+//!   with single-flight coalescing behind
+//!   `Dataset::reader(&cache)`'s rect / row-slice / nnz / SpMV queries
+//!   and a multi-threaded closed-loop harness (DESIGN.md §10).
 //! * **Layer 2/1 (python/, build-time)** — a JAX blocked-SpMV consumer with
 //!   Pallas kernels, AOT-lowered to HLO text and executed from Rust via the
 //!   PJRT CPU client ([`runtime`]).
@@ -38,6 +42,7 @@
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
 pub mod abhsf;
+pub mod cache;
 pub mod coordinator;
 pub mod experiments;
 pub mod formats;
@@ -47,6 +52,7 @@ pub mod mapping;
 pub mod parfs;
 pub mod repack;
 pub mod runtime;
+pub mod serve;
 pub mod spmv;
 pub mod util;
 pub mod vfs;

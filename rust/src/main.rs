@@ -18,12 +18,17 @@
 //! * `spmv`      — load a dataset and run normalized power iteration on
 //!   it (the end-to-end consumer), optionally cross-checking one SpMV
 //!   against the PJRT engine;
+//! * `serve`     — concurrent serving harness: N worker threads issue
+//!   seeded random rect/row-slice/nnz/SpMV queries against one or more
+//!   datasets through a shared byte-budgeted decoded-block cache,
+//!   reporting throughput, p50/p99 latency and cache counters;
 //! * `fig1`      — regenerate the paper's Figure 1 table quickly.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use abhsf::abhsf::load::read_header;
+use abhsf::cache::BlockCache;
 use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions, Strategy};
 use abhsf::experiments::{run_fig1, Fig1Config};
 use abhsf::formats::Csr;
@@ -31,6 +36,8 @@ use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::h5::H5Reader;
 use abhsf::mapping::{Block2d, Colwise, CyclicRows, ProcessMapping, Rowwise};
 use abhsf::parfs::FsModel;
+use abhsf::serve::ServeConfig;
+use abhsf::spmv::SpmvParts;
 use abhsf::util::args::Args;
 use abhsf::util::bench::Table;
 use abhsf::util::human;
@@ -51,6 +58,7 @@ fn main() {
         "roundtrip" => cmd_roundtrip(argv),
         "repack" => cmd_repack(argv),
         "spmv" => cmd_spmv(argv),
+        "serve" => cmd_serve(argv),
         "fig1" => cmd_fig1(argv),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -84,6 +92,8 @@ fn print_usage() {
          mapping, block size\n\
          \x20 spmv       load a dataset and run power iteration \
          (optional PJRT cross-check)\n\
+         \x20 serve      concurrent random-access query harness over a \
+         shared decoded-block cache\n\
          \x20 fig1       regenerate the paper's Figure 1 (quick profile)\n\n\
          Common options: --seed-size N --seed cage|diag|random|rmat --order D\n\
          \x20               --procs P --block-size S --dir PATH \
@@ -106,7 +116,13 @@ fn print_usage() {
          \x20                 (kinds: missing | truncate | fail-writes)\n\
          Repack options: --out PATH --nprocs P --mapping KIND --block-size S \
          --chunk-size C\n\
-         Spmv options:   --iters N --pjrt-check\n"
+         Spmv options:   --iters N --pjrt-check\n\
+         Serve options:  --dir A[,B,...] --threads N --queries Q --budget BYTES \
+         (e.g. 1MiB)\n\
+         \x20               --query-seed S --spmv-every K (0 = no SpMV queries) \
+         --gen (store a generated\n\
+         \x20               workload first when the directory holds no dataset; \
+         implied on --backend mem)\n"
     );
 }
 
@@ -140,6 +156,16 @@ fn print_sim_clock(sim: &Option<Arc<SimFs>>) {
     if let Some(sim) = sim {
         println!("sim backend     : {:.3} s simulated I/O", sim.simulated_seconds());
     }
+}
+
+/// Dataset-open boilerplate shared by every dataset-consuming subcommand
+/// (`info`/`load`/`repack`/`spmv`/`serve`): resolve the `--backend`
+/// selection (+ sim options) and open `--dir` (default `matrix`) on it.
+fn open_dataset(a: &Args) -> anyhow::Result<(Dataset, Option<Arc<SimFs>>)> {
+    let (storage, sim) = parse_backend(a)?;
+    let dir = PathBuf::from(a.str_or("dir", "matrix"));
+    let dataset = Dataset::open_on(storage, &dir)?;
+    Ok((dataset, sim))
 }
 
 /// Shared workload options.
@@ -246,9 +272,7 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
 
 fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf info", argv, &[])?;
-    let dir = PathBuf::from(a.str_or("dir", "matrix"));
-    let (storage, sim) = parse_backend(&a)?;
-    let dataset = Dataset::open_on(storage, &dir)?;
+    let (dataset, sim) = open_dataset(&a)?;
     let (m, n) = dataset.dims();
     println!(
         "dataset: {} x {}, {} nnz, stored by P={} ({} mapping), s={}, {}",
@@ -265,7 +289,7 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
         "bytes",
     ]);
     for k in 0..dataset.nprocs() {
-        let path = abhsf::abhsf::matrix_file_path(&dir, k);
+        let path = abhsf::abhsf::matrix_file_path(dataset.dir(), k);
         let r = H5Reader::open_on(dataset.storage().as_ref(), &path)?;
         let hdr = read_header(&r)?;
         let schemes: Vec<u8> = r.read_all("schemes")?;
@@ -295,9 +319,7 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
 
 fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf load", argv, &["same-config", "no-prune"])?;
-    let dir = PathBuf::from(a.str_or("dir", "matrix"));
-    let (storage, sim) = parse_backend(&a)?;
-    let dataset = Dataset::open_on(storage, &dir)?;
+    let (dataset, sim) = open_dataset(&a)?;
     let format: InMemFormat = a.str_or("format", "csr").parse()?;
     let model = FsModel::anselm_lustre();
 
@@ -433,10 +455,8 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
 /// the per-row accumulation).
 fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf spmv", argv, &["pjrt-check"])?;
-    let dir = PathBuf::from(a.str_or("dir", "matrix"));
     let iters: usize = a.parse_or("iters", 10usize)?;
-    let (storage, sim) = parse_backend(&a)?;
-    let dataset = Dataset::open_on(storage, &dir)?;
+    let (dataset, sim) = open_dataset(&a)?;
     let (gm, gn) = dataset.dims();
     anyhow::ensure!(
         gm == gn,
@@ -453,11 +473,13 @@ fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
         report.scenario
     );
 
-    // Normalized power iteration: x' = A x / |A x|_2.
+    // Normalized power iteration: x' = A x / |A x|_2, over the shared
+    // kernel path (`SpmvParts`) the cached serving reader also uses.
+    let kernel = SpmvParts::Csr(&parts);
     let mut x: Vec<f64> = vec![1.0 / (n as f64).sqrt(); n as usize];
     let mut lambda = 0.0f64;
     for it in 1..=iters {
-        let (next, norm) = abhsf::spmv::power_iteration_step(&parts, &x);
+        let (next, norm) = abhsf::spmv::power_iteration_step_parts(&kernel, &x);
         lambda = norm;
         x = next;
         println!("iter {it:>3}: |A x|_2 = {lambda:.12e}");
@@ -465,7 +487,7 @@ fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
             break;
         }
     }
-    let y = abhsf::spmv::spmv_distributed_csr(&parts, &x);
+    let y = kernel.spmv(&x);
     let resid = y
         .iter()
         .zip(&x)
@@ -510,6 +532,120 @@ fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `abhsf serve` — the concurrent serving harness: `--threads` workers
+/// issue `--queries` seeded random rect/row-slice/nnz/SpMV queries
+/// against the datasets named by `--dir` (comma-separated), all through
+/// one shared decoded-block cache of `--budget` bytes, and the final
+/// report shows throughput, latency percentiles and the cache counters.
+///
+/// With `--gen` (implied on the ephemeral `--backend mem`, which can
+/// never hold a pre-stored dataset) a directory without a dataset gets a
+/// small generated workload stored into it first, so a self-contained
+/// smoke run is one invocation.
+fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf serve", argv, &["gen"])?;
+    let (storage, sim) = parse_backend(&a)?;
+    let dirs: Vec<String> = a
+        .str_or("dir", "matrix")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    anyhow::ensure!(!dirs.is_empty(), "--dir names no dataset directory");
+    let budget = human::parse_bytes(&a.str_or("budget", "64MiB"))
+        .map_err(|e| anyhow::anyhow!("--budget: {e}"))?;
+    let cfg = ServeConfig {
+        threads: a.parse_or("threads", 4usize)?,
+        queries: a.parse_or("queries", 200u64)?,
+        seed: a.parse_or("query-seed", 42u64)?,
+        spmv_every: a.parse_or("spmv-every", 16u64)?,
+    };
+
+    let mut datasets = Vec::with_capacity(dirs.len());
+    for d in &dirs {
+        let dir = PathBuf::from(d);
+        let dataset = match Dataset::open_on(Arc::clone(&storage), &dir) {
+            Ok(ds) => ds,
+            // Generation is only for a directory that holds NO dataset
+            // (`--gen`, implied on the ephemeral mem backend). Any other
+            // open failure — corrupt manifest, unreadable files — must
+            // surface, never be papered over by storing generated data
+            // on top of the user's directory.
+            Err(abhsf::coordinator::DatasetError::NotADataset { .. })
+                if a.flag("gen") || storage.label() == "mem" =>
+            {
+                let w = parse_workload(&a)?;
+                let p: usize = a.parse_or("procs", 4usize)?;
+                let s: u64 = a.parse_or("block-size", 16u64)?;
+                let mapping = parse_mapping(&a, &w.gen, p)?;
+                let cluster = Cluster::new(p, 64);
+                let (ds, report) = Dataset::store_on(
+                    Arc::clone(&storage),
+                    &cluster,
+                    &w.gen,
+                    &mapping,
+                    &dir,
+                    StoreOptions {
+                        block_size: s,
+                        ..Default::default()
+                    },
+                )?;
+                println!(
+                    "stored {} nnz into {d} ({p} files, backend {}) for serving",
+                    human::count(report.total_nnz()),
+                    ds.storage().label(),
+                );
+                ds
+            }
+            Err(e) => return Err(e.into()),
+        };
+        datasets.push(dataset);
+    }
+
+    let cache = BlockCache::with_budget(budget);
+    let report = abhsf::serve::run_closed_loop(&datasets, &cache, &cfg)?;
+    println!(
+        "serve           : {} queries ({} spmv) over {} dataset(s), {} threads",
+        human::count(report.queries),
+        human::count(report.spmv_queries),
+        datasets.len(),
+        report.threads,
+    );
+    println!(
+        "throughput      : {:.0} q/s ({:.3} s wall)",
+        report.qps(),
+        report.wall_s,
+    );
+    println!(
+        "latency         : p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms",
+        report.p50_ms, report.p99_ms, report.max_ms,
+    );
+    println!(
+        "elements        : {} returned/counted",
+        human::count(report.elements_returned),
+    );
+    println!(
+        "storage I/O     : {} in {} ops, {} opens (hits never touch storage)",
+        human::bytes(report.io.bytes),
+        human::count(report.io.ops),
+        human::count(report.io.opens),
+    );
+    let cs = report.cache;
+    println!(
+        "cache           : {:.1}% hit rate ({} hits, {} misses, {} coalesced), \
+         {} evictions, resident {} of {} budget",
+        cs.hit_rate() * 100.0,
+        human::count(cs.hits),
+        human::count(cs.misses),
+        human::count(cs.coalesced_waits),
+        human::count(cs.evictions),
+        human::bytes(cs.resident_bytes),
+        human::bytes(budget),
+    );
+    print_sim_clock(&sim);
+    Ok(())
+}
+
 /// Target-mapping parser for configurations derived from a dataset's
 /// global dims (repack / future commands that have no generator at hand).
 fn parse_target_mapping(
@@ -534,10 +670,8 @@ fn parse_target_mapping(
 /// and the parfs forecast (repack-then-load vs direct loads).
 fn cmd_repack(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf repack", argv, &["no-prune"])?;
-    let dir = PathBuf::from(a.str_or("dir", "matrix"));
     let out = PathBuf::from(a.str_or("out", "matrix-repacked"));
-    let (storage, sim) = parse_backend(&a)?;
-    let dataset = Dataset::open_on(storage, &dir)?;
+    let (dataset, sim) = open_dataset(&a)?;
     let p: usize = if a.get("nprocs").is_some() {
         a.parse_or("nprocs", dataset.nprocs())?
     } else {

@@ -1,0 +1,427 @@
+//! Random-access dataset serving over the decoded-block cache — the
+//! first subsystem where one stored dataset is exercised by many
+//! concurrent clients instead of one batch load.
+//!
+//! A [`DatasetReader`] (from
+//! [`Dataset::reader`](crate::coordinator::Dataset::reader)) answers
+//! rectangle, row-slice, nonzero-count and SpMV queries against a stored
+//! dataset. Per stored file it parses the block directory **once** at
+//! open ([`BlockDirectory`]); a query then
+//!
+//! 1. geometrically prunes the directory — only blocks whose global
+//!    rectangle intersects the query rectangle are considered (the same
+//!    intersection contract as block-pruned loading);
+//! 2. claims each surviving block from the shared
+//!    [`BlockCache`]: hits are served from memory and **never touch
+//!    storage**, misses are fetched through the VFS read-ahead pipeline
+//!    ([`fetch_blocks`](crate::abhsf::load::fetch_blocks)) and
+//!    published, and blocks already being decoded by another thread are
+//!    awaited (single-flight coalescing);
+//! 3. filters the decoded triplets down to the query rectangle.
+//!
+//! **Deadlock freedom.** A query claims, fetches and publishes all of
+//! its misses for file `i` before waiting on any of file `i`'s in-flight
+//! blocks, and every reader walks files in ascending index order. A
+//! file-`i` flight is therefore always published by a loader whose only
+//! possible blocking is on files `< i`, so waits terminate by induction
+//! on the file index.
+//!
+//! [`run_closed_loop`] is the multi-threaded serving harness behind the
+//! `serve` CLI subcommand and `benches/serve.rs`: N worker threads, each
+//! with its own readers over the shared cache, issue seeded random
+//! queries and report throughput, latency percentiles and cache
+//! counters as a [`ServeReport`].
+
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::abhsf::load::{default_batch_bytes, fetch_blocks_batched, BlockDirectory};
+use crate::abhsf::matrix_file_path;
+use crate::cache::{BlockCache, BlockKey, Claim, DecodedBlock, FlightWaiter, LoadToken};
+use crate::coordinator::error::DatasetError;
+use crate::coordinator::metrics::ServeReport;
+use crate::coordinator::Dataset;
+use crate::h5::{H5Reader, IoStats};
+use crate::mapping::rects_intersect;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::percentile_sorted;
+
+/// One stored file's open handle, its parsed block directory, and the
+/// file's read-ahead batch size (a per-file constant derived from its
+/// chunk tables — computed once at open, not per query).
+struct FileSlot {
+    reader: H5Reader,
+    dir: BlockDirectory,
+    batch_bytes: u64,
+}
+
+/// Random-access cached reader over one [`Dataset`] (module docs for the
+/// query path and the concurrency contract).
+///
+/// A reader is cheap relative to a load — opening parses each file's
+/// block directory but fetches no payload — and is **not** shared across
+/// threads: each serving thread opens its own reader against the shared
+/// [`BlockCache`], which is where all cross-thread state lives.
+pub struct DatasetReader<'c> {
+    cache: &'c BlockCache,
+    dataset_id: u64,
+    dims: (u64, u64),
+    files: Vec<FileSlot>,
+}
+
+impl<'c> DatasetReader<'c> {
+    /// Open a reader: parse every stored file's block directory (no
+    /// payload fetched) and register the dataset with the cache.
+    pub fn open(dataset: &Dataset, cache: &'c BlockCache) -> Result<Self, DatasetError> {
+        let storage = dataset.storage();
+        let dataset_id = cache.dataset_id(storage.medium(), &storage.canonical(dataset.dir()));
+        let mut files = Vec::with_capacity(dataset.nprocs());
+        for k in 0..dataset.nprocs() {
+            let path = matrix_file_path(dataset.dir(), k);
+            let reader = H5Reader::open_on(storage.as_ref(), &path)
+                .map_err(|e| DatasetError::Internal(Box::new(e)))?;
+            let dir = BlockDirectory::read(&reader)
+                .map_err(|e| DatasetError::Internal(Box::new(e)))?;
+            let batch_bytes = default_batch_bytes(&reader);
+            files.push(FileSlot {
+                reader,
+                dir,
+                batch_bytes,
+            });
+        }
+        Ok(Self {
+            cache,
+            dataset_id,
+            dims: dataset.dims(),
+            files,
+        })
+    }
+
+    /// Global shape `(m, n)` of the served matrix.
+    pub fn dims(&self) -> (u64, u64) {
+        self.dims
+    }
+
+    /// The cache this reader serves through.
+    pub fn cache(&self) -> &'c BlockCache {
+        self.cache
+    }
+
+    /// Aggregate I/O counters of this reader's file handles — every byte
+    /// this reader ever took from storage (directory parsing at open plus
+    /// cache-miss fetches; hits add nothing).
+    pub fn io_stats(&self) -> IoStats {
+        let mut io = IoStats::default();
+        for f in &self.files {
+            io.add(f.reader.stats());
+        }
+        io
+    }
+
+    /// Visit every cached-or-fetched block intersecting `rect`, in
+    /// ascending file order (the module-level deadlock-freedom contract
+    /// lives here).
+    fn gather<F>(&self, rect: (u64, u64, u64, u64), mut emit: F) -> Result<(), DatasetError>
+    where
+        F: FnMut(&Arc<DecodedBlock>),
+    {
+        for (fi, slot) in self.files.iter().enumerate() {
+            let mut hits: Vec<Arc<DecodedBlock>> = Vec::new();
+            let mut miss: Vec<usize> = Vec::new();
+            let mut tokens: Vec<LoadToken<'_>> = Vec::new();
+            let mut waiters: Vec<FlightWaiter> = Vec::new();
+            for k in 0..slot.dir.entries.len() {
+                if !rects_intersect(slot.dir.global_rect(k), rect) {
+                    continue;
+                }
+                let e = &slot.dir.entries[k];
+                let key = BlockKey {
+                    dataset: self.dataset_id,
+                    file: fi as u32,
+                    brow: e.brow as u32,
+                    bcol: e.bcol as u32,
+                };
+                match self.cache.claim(key) {
+                    Claim::Hit(block) => hits.push(block),
+                    Claim::Miss(token) => {
+                        miss.push(k);
+                        tokens.push(token);
+                    }
+                    Claim::InFlight(waiter) => waiters.push(waiter),
+                }
+            }
+            for block in &hits {
+                emit(block);
+            }
+            if !miss.is_empty() {
+                // Cache misses go through the read-ahead pipeline; each
+                // decoded block is published before the next is decoded,
+                // so coalesced waiters unblock as early as possible. On a
+                // fetch error the unconsumed tokens are dropped, which
+                // fails their flights — waiters in other threads error
+                // out instead of hanging.
+                let mut pending = tokens.into_iter();
+                fetch_blocks_batched(&slot.reader, &slot.dir, &miss, slot.batch_bytes, |_, elems| {
+                    let token = pending.next().expect("one token per missed block");
+                    let block = token.publish(elems.to_vec());
+                    emit(&block);
+                })
+                .map_err(|e| DatasetError::Internal(Box::new(e)))?;
+            }
+            for waiter in waiters {
+                let block = waiter
+                    .wait()
+                    .map_err(|e| DatasetError::Internal(e.into()))?;
+                emit(&block);
+            }
+        }
+        Ok(())
+    }
+
+    /// All nonzeros with `row ∈ rows` and `col ∈ cols`, in global
+    /// coordinates, sorted lexicographically.
+    pub fn rect(
+        &self,
+        rows: Range<u64>,
+        cols: Range<u64>,
+    ) -> Result<Vec<(u64, u64, f64)>, DatasetError> {
+        let q = (
+            rows.start,
+            cols.start,
+            rows.end.saturating_sub(rows.start),
+            cols.end.saturating_sub(cols.start),
+        );
+        let mut out: Vec<(u64, u64, f64)> = Vec::new();
+        self.gather(q, |block| {
+            for &(i, j, v) in &block.elements {
+                if i >= rows.start && i < rows.end && j >= cols.start && j < cols.end {
+                    out.push((i, j, v));
+                }
+            }
+        })?;
+        out.sort_unstable_by_key(|e| (e.0, e.1));
+        Ok(out)
+    }
+
+    /// All nonzeros of the row band `rows` (every column).
+    pub fn row_slice(&self, rows: Range<u64>) -> Result<Vec<(u64, u64, f64)>, DatasetError> {
+        let n = self.dims.1;
+        self.rect(rows, 0..n)
+    }
+
+    /// Count the nonzeros inside the rectangle without materializing
+    /// them (the blocks still have to be resident or fetched — counting
+    /// is a decode-side operation in ABHSF, not a directory-side one,
+    /// because a block's rectangle only bounds where its `zeta` elements
+    /// may lie).
+    pub fn nnz_in(&self, rows: Range<u64>, cols: Range<u64>) -> Result<u64, DatasetError> {
+        let q = (
+            rows.start,
+            cols.start,
+            rows.end.saturating_sub(rows.start),
+            cols.end.saturating_sub(cols.start),
+        );
+        let mut count = 0u64;
+        self.gather(q, |block| {
+            for &(i, j, _) in &block.elements {
+                if i >= rows.start && i < rows.end && j >= cols.start && j < cols.end {
+                    count += 1;
+                }
+            }
+        })?;
+        Ok(count)
+    }
+
+    /// `y = A x` over the whole matrix, through the cache: every block is
+    /// claimed (fetching only the absent ones) and accumulated through
+    /// the shared [`SpmvParts::Elements`](crate::spmv::SpmvParts) kernel
+    /// path — the same kernel the CLI `spmv` consumer uses on CSR parts.
+    /// Blocks stream through one at a time, so the query's resident set
+    /// stays bounded by the cache budget plus one block, not the whole
+    /// decoded matrix.
+    pub fn spmv(&self, x: &[f64]) -> Result<Vec<f64>, DatasetError> {
+        let (m, n) = self.dims;
+        let mut y = vec![0.0; m as usize];
+        self.gather((0, 0, m, n), |block| {
+            let part = [block.elements.as_slice()];
+            crate::spmv::SpmvParts::Elements {
+                m,
+                n,
+                parts: &part,
+            }
+            .spmv_into(x, &mut y);
+        })?;
+        Ok(y)
+    }
+}
+
+/// Configuration of one [`run_closed_loop`] serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads (each opens its own readers; min 1).
+    pub threads: usize,
+    /// Total queries across all threads.
+    pub queries: u64,
+    /// Master seed; thread `t` derives its private query stream from it.
+    pub seed: u64,
+    /// Every `spmv_every`-th query of a thread is a whole-matrix SpMV
+    /// (`0` disables SpMV queries).
+    pub spmv_every: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            threads: 4,
+            queries: 200,
+            seed: 42,
+            spmv_every: 16,
+        }
+    }
+}
+
+/// Per-thread tallies, merged into the final [`ServeReport`].
+struct ThreadOut {
+    latencies_s: Vec<f64>,
+    elements: u64,
+    spmvs: u64,
+    io: IoStats,
+}
+
+/// Run the closed-loop serving harness: `cfg.threads` workers issue
+/// `cfg.queries` seeded random queries (rect / row-slice / nnz, plus a
+/// whole-matrix SpMV every `cfg.spmv_every`-th query) against `datasets`
+/// through the shared `cache`. Returns throughput, latency percentiles,
+/// aggregate reader I/O and the cache counters.
+pub fn run_closed_loop(
+    datasets: &[Dataset],
+    cache: &BlockCache,
+    cfg: &ServeConfig,
+) -> Result<ServeReport, DatasetError> {
+    assert!(!datasets.is_empty(), "no datasets to serve");
+    let threads = cfg.threads.max(1);
+    let per_thread: Vec<u64> = (0..threads as u64)
+        .map(|t| cfg.queries / threads as u64 + u64::from(t < cfg.queries % threads as u64))
+        .collect();
+    let t0 = Instant::now();
+    let results: Vec<Result<ThreadOut, DatasetError>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (t, &share) in per_thread.iter().enumerate() {
+            handles.push(scope.spawn(move || worker(datasets, cache, cfg, t, share)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("serve worker panicked"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut latencies: Vec<f64> = Vec::with_capacity(cfg.queries as usize);
+    let mut elements = 0u64;
+    let mut spmvs = 0u64;
+    let mut io = IoStats::default();
+    for r in results {
+        let out = r?;
+        latencies.extend(out.latencies_s);
+        elements += out.elements;
+        spmvs += out.spmvs;
+        io.add(out.io);
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("latency NaN"));
+    let (p50_ms, p99_ms, max_ms) = if latencies.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            percentile_sorted(&latencies, 50.0) * 1e3,
+            percentile_sorted(&latencies, 99.0) * 1e3,
+            latencies[latencies.len() - 1] * 1e3,
+        )
+    };
+    Ok(ServeReport {
+        threads,
+        queries: latencies.len() as u64,
+        spmv_queries: spmvs,
+        wall_s,
+        p50_ms,
+        p99_ms,
+        max_ms,
+        elements_returned: elements,
+        io,
+        cache: cache.stats(),
+    })
+}
+
+/// One worker: open private readers, run `share` seeded queries.
+fn worker(
+    datasets: &[Dataset],
+    cache: &BlockCache,
+    cfg: &ServeConfig,
+    t: usize,
+    share: u64,
+) -> Result<ThreadOut, DatasetError> {
+    let mut readers = Vec::with_capacity(datasets.len());
+    for d in datasets {
+        readers.push(d.reader(cache)?);
+    }
+    // Distinct, reproducible stream per thread.
+    let mut rng =
+        Xoshiro256::seed_from_u64(cfg.seed ^ (t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut out = ThreadOut {
+        latencies_s: Vec::with_capacity(share as usize),
+        elements: 0,
+        spmvs: 0,
+        io: IoStats::default(),
+    };
+    for q in 0..share {
+        let reader = &readers[rng.next_below(readers.len() as u64) as usize];
+        let (m, n) = reader.dims();
+        let is_spmv = cfg.spmv_every > 0 && (q + 1) % cfg.spmv_every == 0;
+        let q0 = Instant::now();
+        if is_spmv {
+            let x: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) * 0.25 + 0.5).collect();
+            let y = reader.spmv(&x)?;
+            out.elements += y.len() as u64;
+            out.spmvs += 1;
+        } else {
+            let (rows, cols) = (random_span(&mut rng, m), random_span(&mut rng, n));
+            match rng.next_below(4) {
+                0 => out.elements += reader.nnz_in(rows, cols)?,
+                1 => out.elements += reader.row_slice(rows)?.len() as u64,
+                _ => out.elements += reader.rect(rows, cols)?.len() as u64,
+            }
+        }
+        out.latencies_s.push(q0.elapsed().as_secs_f64());
+    }
+    for r in &readers {
+        out.io.add(r.io_stats());
+    }
+    Ok(out)
+}
+
+/// A random sub-range of `[0, extent)` spanning between 1 element and
+/// half the extent — big enough to touch several blocks, small enough
+/// that distinct queries have distinct footprints.
+fn random_span(rng: &mut Xoshiro256, extent: u64) -> Range<u64> {
+    let extent = extent.max(1);
+    let span = 1 + rng.next_below(extent.div_ceil(2));
+    let start = rng.next_below(extent - span + 1);
+    start..start + span
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_span_in_bounds() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for extent in [1u64, 2, 7, 64, 1000] {
+            for _ in 0..200 {
+                let r = random_span(&mut rng, extent);
+                assert!(r.start < r.end, "empty span for extent {extent}");
+                assert!(r.end <= extent, "span {r:?} beyond extent {extent}");
+                assert!(r.end - r.start <= extent.div_ceil(2));
+            }
+        }
+    }
+}

@@ -26,15 +26,98 @@ pub fn spmv_distributed_coo(parts: &[Coo], x: &[f64]) -> Vec<f64> {
     y
 }
 
-/// One normalized power-iteration step: `x' = A x / ‖A x‖₂`.
-/// Returns `(x', ‖A x‖₂)`.
-pub fn power_iteration_step(parts: &[Csr], x: &[f64]) -> (Vec<f64>, f64) {
-    let y = spmv_distributed_csr(parts, x);
+/// A distributed matrix in any of the in-memory part representations the
+/// crate produces — the one SpMV kernel path shared by the CLI `spmv`
+/// consumer (CSR parts from a [`crate::coordinator::LoadPlan`]), COO
+/// loads, and the serving layer's cached reader
+/// (`crate::serve::DatasetReader::spmv`), whose parts are decoded-block
+/// element slices in **global** coordinates.
+pub enum SpmvParts<'a> {
+    /// Local CSR submatrices covering the global matrix.
+    Csr(&'a [Csr]),
+    /// Local COO submatrices covering the global matrix.
+    Coo(&'a [Coo]),
+    /// Raw `(row, col, value)` triplet slices in global coordinates
+    /// (e.g. one slice per cached decoded block), with the global shape
+    /// stated explicitly since the slices carry no metadata.
+    Elements {
+        /// Global rows.
+        m: u64,
+        /// Global columns.
+        n: u64,
+        /// The triplet slices; together they must cover each nonzero
+        /// exactly once.
+        parts: &'a [&'a [(u64, u64, f64)]],
+    },
+}
+
+impl SpmvParts<'_> {
+    /// Global row count `m`.
+    pub fn rows(&self) -> u64 {
+        match self {
+            SpmvParts::Csr(parts) => {
+                assert!(!parts.is_empty(), "no local parts");
+                parts[0].info.m
+            }
+            SpmvParts::Coo(parts) => {
+                assert!(!parts.is_empty(), "no local parts");
+                parts[0].info.m
+            }
+            SpmvParts::Elements { m, .. } => *m,
+        }
+    }
+
+    /// `y = A x` over all parts.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows() as usize];
+        self.spmv_into(x, &mut y);
+        y
+    }
+
+    /// Accumulate `y += A x` over all parts into a caller-owned global
+    /// vector — the streaming form: the serving layer feeds cached
+    /// blocks through here one at a time, so a whole-matrix product
+    /// never has to hold every decoded block alive at once.
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            SpmvParts::Csr(parts) => {
+                for p in *parts {
+                    p.spmv_into(x, y);
+                }
+            }
+            SpmvParts::Coo(parts) => {
+                for p in *parts {
+                    p.spmv_into(x, y);
+                }
+            }
+            SpmvParts::Elements { m, n, parts } => {
+                assert_eq!(x.len() as u64, *n, "x length != n");
+                assert_eq!(y.len() as u64, *m, "y length != m");
+                for part in *parts {
+                    for &(i, j, v) in *part {
+                        y[i as usize] += v * x[j as usize];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One normalized power-iteration step over any part representation:
+/// `x' = A x / ‖A x‖₂`. Returns `(x', ‖A x‖₂)`.
+pub fn power_iteration_step_parts(parts: &SpmvParts<'_>, x: &[f64]) -> (Vec<f64>, f64) {
+    let y = parts.spmv(x);
     let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
     if norm == 0.0 {
         return (y, 0.0);
     }
     (y.iter().map(|v| v / norm).collect(), norm)
+}
+
+/// One normalized power-iteration step over CSR parts (the historical
+/// signature; delegates to [`power_iteration_step_parts`]).
+pub fn power_iteration_step(parts: &[Csr], x: &[f64]) -> (Vec<f64>, f64) {
+    power_iteration_step_parts(&SpmvParts::Csr(parts), x)
 }
 
 /// Max-abs difference between two vectors.
@@ -113,6 +196,34 @@ mod tests {
         assert!(norm > 0.0);
         let n2 = x2.iter().map(|v| v * v).sum::<f64>().sqrt();
         assert!((n2 - 1.0).abs() < 1e-12);
+    }
+
+    /// The `Elements` variant (the serving layer's cached-block shape)
+    /// computes the same product and power step as the CSR parts.
+    #[test]
+    fn elements_parts_match_csr() {
+        let (parts, dense) = two_part_matrix();
+        let triplets: Vec<Vec<(u64, u64, f64)>> = parts
+            .iter()
+            .map(|p| {
+                let coo = p.to_coo();
+                let (ro, co) = (coo.info.m_offset, coo.info.n_offset);
+                coo.iter().map(|(i, j, v)| (i + ro, j + co, v)).collect()
+            })
+            .collect();
+        let slices: Vec<&[(u64, u64, f64)]> = triplets.iter().map(|t| t.as_slice()).collect();
+        let elems = SpmvParts::Elements {
+            m: 4,
+            n: 4,
+            parts: &slices,
+        };
+        assert_eq!(elems.rows(), 4);
+        let x = vec![1.0, -2.0, 0.5, 3.0];
+        assert!(max_abs_diff(&elems.spmv(&x), &dense.matvec(&x)) < 1e-12);
+        let (xa, na) = power_iteration_step(&parts, &x);
+        let (xb, nb) = power_iteration_step_parts(&elems, &x);
+        assert!((na - nb).abs() < 1e-12);
+        assert!(max_abs_diff(&xa, &xb) < 1e-12);
     }
 
     #[test]

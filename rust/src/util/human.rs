@@ -15,6 +15,31 @@ pub fn bytes(n: u64) -> String {
     format!("{v:.2} {}", UNITS[u])
 }
 
+/// Parse a human byte size: a plain number, or a number with a binary
+/// suffix — `KiB`/`MiB`/`GiB`/`TiB`, case-insensitive, with the `iB`/`B`
+/// tail optional and `KB`-style spellings accepted as their binary
+/// meaning (`64K`, `1m`, `2GiB`, `512kb` all parse). The inverse of
+/// [`bytes`] for CLI options like `serve --budget 1MiB`.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    let split = t
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(t.len());
+    let (num, suffix) = t.split_at(split);
+    let value: f64 = num
+        .parse()
+        .map_err(|_| format!("unparsable byte count {s:?}"))?;
+    let mult: f64 = match suffix.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1.0,
+        "k" | "kib" | "kb" => 1024.0,
+        "m" | "mib" | "mb" => 1024.0 * 1024.0,
+        "g" | "gib" | "gb" => 1024.0 * 1024.0 * 1024.0,
+        "t" | "tib" | "tb" => 1024.0 * 1024.0 * 1024.0 * 1024.0,
+        other => return Err(format!("unknown byte suffix {other:?} in {s:?}")),
+    };
+    Ok((value * mult) as u64)
+}
+
 /// Format a large count with thousands separators.
 pub fn count(n: u64) -> String {
     let s = n.to_string();
@@ -41,6 +66,25 @@ mod tests {
         assert_eq!(bytes(1536), "1.50 KiB");
         assert_eq!(bytes(1024 * 1024), "1.00 MiB");
         assert_eq!(bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn parse_bytes_roundtrips_common_spellings() {
+        assert_eq!(parse_bytes("0").unwrap(), 0);
+        assert_eq!(parse_bytes("1234").unwrap(), 1234);
+        assert_eq!(parse_bytes("1KiB").unwrap(), 1024);
+        assert_eq!(parse_bytes("1MiB").unwrap(), 1 << 20);
+        assert_eq!(parse_bytes("1mib").unwrap(), 1 << 20);
+        assert_eq!(parse_bytes("64K").unwrap(), 64 * 1024);
+        assert_eq!(parse_bytes("512kb").unwrap(), 512 * 1024);
+        assert_eq!(parse_bytes("2GiB").unwrap(), 2u64 << 30);
+        assert_eq!(parse_bytes("1TiB").unwrap(), 1u64 << 40);
+        assert_eq!(parse_bytes(" 1.5 MiB ").unwrap(), 3 << 19);
+        assert_eq!(parse_bytes("100B").unwrap(), 100);
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("MiB").is_err());
+        assert!(parse_bytes("10x").is_err());
+        assert!(parse_bytes("-5").is_err());
     }
 
     #[test]

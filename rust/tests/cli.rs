@@ -28,6 +28,7 @@ fn help_lists_subcommands() {
         "roundtrip",
         "repack",
         "spmv",
+        "serve",
         "fig1",
     ] {
         assert!(out.contains(sub), "help missing {sub}");
@@ -244,6 +245,46 @@ fn backend_sim_faults_and_clock() {
     // Fault-free simulation loads fine and prints the simulated clock.
     let out = run_ok(&["load", "--dir", dirs, "--same-config", "--backend", "sim"]);
     assert!(out.contains("sim backend"), "{out}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `serve --backend mem` is self-contained: the dataset is generated,
+/// stored and queried in one invocation, and the report ends with the
+/// throughput/latency/cache lines the CI smoke greps for.
+#[test]
+fn serve_mem_backend_self_contained() {
+    let out = run_ok(&[
+        "serve", "--backend", "mem", "--seed-size", "8", "--procs", "2", "--threads", "4",
+        "--queries", "64", "--budget", "1MiB",
+    ]);
+    assert!(out.contains("stored"), "{out}");
+    assert!(out.contains("throughput"), "{out}");
+    assert!(out.contains("latency"), "{out}");
+    assert!(out.contains("hit rate"), "{out}");
+}
+
+/// `serve` against a previously stored dataset on disk; a missing
+/// dataset without `--gen` stays a clean error.
+#[test]
+fn serve_on_stored_dataset() {
+    let dir = std::env::temp_dir().join(format!("abhsf-cli-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_str().unwrap();
+    run_ok(&[
+        "store", "--dir", dirs, "--seed-size", "8", "--procs", "3", "--block-size", "8",
+    ]);
+    let out = run_ok(&[
+        "serve", "--dir", dirs, "--threads", "2", "--queries", "40", "--budget", "256KiB",
+    ]);
+    assert!(out.contains("throughput"), "{out}");
+    assert!(out.contains("hit rate"), "{out}");
+
+    let err = bin()
+        .args(["serve", "--dir", "/nonexistent-abhsf-serve-dir"])
+        .output()
+        .unwrap();
+    assert!(!err.status.success(), "missing dataset must fail without --gen");
 
     let _ = std::fs::remove_dir_all(&dir);
 }

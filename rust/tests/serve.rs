@@ -1,0 +1,334 @@
+//! Serving-layer integration: the cached random-access reader
+//! (`Dataset::reader`) against full `LoadPlan` loads, under concurrency
+//! and under byte-budget pressure.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use abhsf::cache::BlockCache;
+use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions};
+use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::mapping::{ProcessMapping, Rowwise};
+use abhsf::util::rng::Xoshiro256;
+use abhsf::vfs::{MemFs, Storage};
+
+type Elem = (u64, u64, f64);
+
+/// Store a Kronecker dataset on `storage` and return the handle, the
+/// reference elements from a full `LoadPlan` load (global coordinates,
+/// sorted lexicographically) and the global dimension.
+fn setup(
+    storage: Arc<dyn Storage>,
+    name: &str,
+    p: usize,
+    s: u64,
+) -> (Dataset, Vec<Elem>, u64) {
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 7), 2));
+    let n = gen.dim();
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, p));
+    let cluster = Cluster::new(p, 64);
+    let dir = std::env::temp_dir().join(format!(
+        "abhsf-serve-test-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (dataset, _) = Dataset::store_on(
+        storage,
+        &cluster,
+        &gen,
+        &mapping,
+        &dir,
+        StoreOptions {
+            block_size: s,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (mats, report) = dataset
+        .load()
+        .format(InMemFormat::Coo)
+        .run(&cluster)
+        .unwrap();
+    assert_eq!(report.total_nnz(), gen.nnz());
+    let mut reference: Vec<Elem> = Vec::new();
+    for m in mats {
+        let coo = m.into_coo();
+        let (ro, co) = (coo.info.m_offset, coo.info.n_offset);
+        for (i, j, v) in coo.iter() {
+            reference.push((i + ro, j + co, v));
+        }
+    }
+    reference.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    (dataset, reference, n)
+}
+
+/// Random half-open span inside `[0, extent)`, at least one wide.
+fn span(rng: &mut Xoshiro256, extent: u64) -> (u64, u64) {
+    let len = 1 + rng.next_below(extent);
+    let start = rng.next_below(extent - len + 1);
+    (start, start + len)
+}
+
+/// The reference elements inside `rows × cols`.
+fn rect_filter(reference: &[Elem], rows: (u64, u64), cols: (u64, u64)) -> Vec<Elem> {
+    reference
+        .iter()
+        .copied()
+        .filter(|&(i, j, _)| i >= rows.0 && i < rows.1 && j >= cols.0 && j < cols.1)
+        .collect()
+}
+
+/// Differential: every random rect / row-slice / nnz / SpMV answer of a
+/// cached reader is element-identical to the full `LoadPlan` load, on
+/// both the local filesystem and the in-memory backend — and once warm,
+/// repeated queries never touch storage.
+#[test]
+fn cached_queries_match_full_load_on_local_and_mem() {
+    for (label, storage) in [
+        ("local", abhsf::vfs::local()),
+        ("mem", Arc::new(MemFs::new()) as Arc<dyn Storage>),
+    ] {
+        let (dataset, reference, n) = setup(storage, &format!("diff-{label}"), 3, 8);
+        let cache = BlockCache::with_budget(64 << 20);
+        let reader = dataset.reader(&cache).unwrap();
+        assert_eq!(reader.dims(), (n, n));
+        let mut rng = Xoshiro256::seed_from_u64(0xD1FF ^ n);
+        let mut union: HashSet<(u64, u64)> = HashSet::new();
+        for q in 0..24 {
+            let (r0, r1) = span(&mut rng, n);
+            let (c0, c1) = span(&mut rng, n);
+            let got = reader.rect(r0..r1, c0..c1).unwrap();
+            let want = rect_filter(&reference, (r0, r1), (c0, c1));
+            assert_eq!(got, want, "[{label}] query {q}: rect {r0}..{r1} x {c0}..{c1}");
+            assert_eq!(
+                reader.nnz_in(r0..r1, c0..c1).unwrap(),
+                want.len() as u64,
+                "[{label}] nnz_in disagrees with rect"
+            );
+            union.extend(got.iter().map(|&(i, j, _)| (i, j)));
+        }
+        assert!(union.len() <= reference.len());
+        // The whole-matrix rect IS the full load.
+        let all = reader.rect(0..n, 0..n).unwrap();
+        assert_eq!(all, reference, "[{label}] full rect != full load");
+        // row_slice is rect over every column.
+        let rows = reader.row_slice(1..n / 2).unwrap();
+        assert_eq!(rows, rect_filter(&reference, (1, n / 2), (0, n)));
+        // SpMV through the cache equals the reference product (1e-9:
+        // block order regroups the per-row FP summation).
+        let x: Vec<f64> = (0..n).map(|i| ((i % 17) as f64) * 0.25 + 1.0).collect();
+        let y = reader.spmv(&x).unwrap();
+        let mut want = vec![0.0; n as usize];
+        for &(i, j, v) in &reference {
+            want[i as usize] += v * x[j as usize];
+        }
+        assert!(
+            abhsf::spmv::max_abs_diff(&y, &want) < 1e-9,
+            "[{label}] spmv diverged"
+        );
+        // Everything is resident now (the budget dwarfs the dataset):
+        // warm queries must not touch storage at all.
+        let st = cache.stats();
+        assert_eq!(st.evictions, 0, "budget was ample: {st:?}");
+        let io_before = reader.io_stats();
+        let again = reader.rect(0..n, 0..n).unwrap();
+        assert_eq!(again, reference);
+        assert_eq!(reader.nnz_in(0..n, 0..n).unwrap(), reference.len() as u64);
+        let io_after = reader.io_stats();
+        assert_eq!(
+            (io_before.bytes, io_before.ops),
+            (io_after.bytes, io_after.ops),
+            "[{label}] warm queries touched storage"
+        );
+        let _ = std::fs::remove_dir_all(dataset.dir());
+    }
+}
+
+/// Stress: 8 threads issue overlapping random queries under a budget a
+/// quarter of the working set. Completion within the watchdog proves no
+/// deadlock; every answer stays correct, evictions occur, residency
+/// respects the budget, and a repeated full query after eviction still
+/// answers correctly.
+#[test]
+fn stress_under_small_budget() {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let storage: Arc<dyn Storage> = Arc::new(MemFs::new());
+        let (dataset, reference, n) = setup(storage, "stress", 4, 8);
+        // Working set = decoded bytes of every block, measured exactly by
+        // one warm pass through an unbounded cache.
+        let probe = BlockCache::with_budget(u64::MAX);
+        let probe_reader = dataset.reader(&probe).unwrap();
+        let all = probe_reader.rect(0..n, 0..n).unwrap();
+        assert_eq!(all, reference);
+        let ws = probe.stats().resident_bytes;
+        assert!(ws > 0);
+
+        let budget = ws / 4;
+        // One shard: the quarter-size budget is enforced globally (a
+        // 16-way split could leave each slice smaller than one block,
+        // which would make residency — and therefore hits — impossible
+        // by construction rather than by pressure).
+        let cache = BlockCache::with_budget_sharded(budget, 1);
+        let threads = 8;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let cache = &cache;
+                let dataset = &dataset;
+                let reference = &reference;
+                scope.spawn(move || {
+                    let reader = dataset.reader(cache).unwrap();
+                    let mut rng = Xoshiro256::seed_from_u64(0x57E5 + t as u64);
+                    for q in 0..30 {
+                        let (r0, r1) = span(&mut rng, n);
+                        let (c0, c1) = span(&mut rng, n);
+                        let got = reader.rect(r0..r1, c0..c1).unwrap();
+                        let want = rect_filter(reference, (r0, r1), (c0, c1));
+                        assert_eq!(got, want, "thread {t} query {q}");
+                    }
+                });
+            }
+        });
+        // A repeated whole-matrix query after eviction answers correctly.
+        let reader = dataset.reader(&cache).unwrap();
+        let got = reader.rect(0..n, 0..n).unwrap();
+        assert_eq!(&got, &reference);
+        let st = cache.stats();
+        assert!(
+            st.evictions > 0,
+            "working set {ws} through budget {budget} must evict: {st:?}"
+        );
+        assert!(
+            st.resident_bytes <= budget,
+            "residency beyond budget: {st:?}"
+        );
+        // Temporal locality survives the pressure: an immediate repeat
+        // of a known-nonempty one-element rect is answered from
+        // residency (its block is the most recently used, and one block
+        // always fits the quarter-size budget).
+        let (fi, fj, _) = reference[0];
+        let one = reader.rect(fi..fi + 1, fj..fj + 1).unwrap();
+        assert!(!one.is_empty());
+        let st1 = cache.stats();
+        let one2 = reader.rect(fi..fi + 1, fj..fj + 1).unwrap();
+        assert_eq!(one, one2);
+        let st2 = cache.stats();
+        assert_eq!(st2.misses, st1.misses, "immediate repeat must not re-decode");
+        assert!(st2.hits > st1.hits, "immediate repeat must hit: {st2:?}");
+        tx.send(()).unwrap();
+    });
+    match rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(()) => worker.join().unwrap(),
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("serve stress did not finish within 60 s (deadlock?)")
+        }
+        // The worker panicked before signalling: surface its panic.
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(e) = worker.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+/// Single-flight: with block size = matrix size the dataset is ONE
+/// block, so 8 threads racing the same whole-matrix query must record
+/// exactly one miss (one decode); everyone else hits or coalesces onto
+/// the in-flight slot.
+#[test]
+fn single_flight_records_one_miss() {
+    let storage: Arc<dyn Storage> = Arc::new(MemFs::new());
+    let (dataset, reference, n) = setup(storage, "flight", 1, 64);
+    {
+        let probe = BlockCache::with_budget(u64::MAX);
+        let r = dataset.reader(&probe).unwrap();
+        let _ = r.rect(0..n, 0..n).unwrap();
+        assert_eq!(
+            probe.stats().resident_blocks,
+            1,
+            "the whole matrix must be one block for this test"
+        );
+    }
+    let cache = BlockCache::with_budget(64 << 20);
+    let threads = 8;
+    let barrier = std::sync::Barrier::new(threads);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let cache = &cache;
+            let dataset = &dataset;
+            let reference = &reference;
+            let barrier = &barrier;
+            scope.spawn(move || {
+                let reader = dataset.reader(cache).unwrap();
+                barrier.wait();
+                let got = reader.rect(0..n, 0..n).unwrap();
+                assert_eq!(&got, reference);
+            });
+        }
+    });
+    let st = cache.stats();
+    assert_eq!(
+        st.misses, 1,
+        "concurrent same-block queries must decode exactly once: {st:?}"
+    );
+    assert_eq!(
+        st.hits + st.coalesced_waits,
+        threads as u64 - 1,
+        "every other claim hits or coalesces: {st:?}"
+    );
+    assert_eq!(st.evictions, 0);
+}
+
+/// Two datasets served through one cache never cross-contaminate: each
+/// reader answers from its own blocks.
+#[test]
+fn two_datasets_share_one_cache_without_collisions() {
+    let storage: Arc<dyn Storage> = Arc::new(MemFs::new());
+    let (ds_a, ref_a, n) = setup(Arc::clone(&storage), "multi-a", 2, 8);
+    let (ds_b, ref_b, _) = setup(storage, "multi-b", 3, 16);
+    let cache = BlockCache::with_budget(64 << 20);
+    let ra = ds_a.reader(&cache).unwrap();
+    let rb = ds_b.reader(&cache).unwrap();
+    assert_eq!(ra.rect(0..n, 0..n).unwrap(), ref_a);
+    assert_eq!(rb.rect(0..n, 0..n).unwrap(), ref_b);
+    // Warm re-reads stay correct and answer from the cache.
+    let st_before = cache.stats();
+    assert_eq!(ra.rect(0..n, 0..n).unwrap(), ref_a);
+    assert_eq!(rb.rect(0..n, 0..n).unwrap(), ref_b);
+    let st_after = cache.stats();
+    assert_eq!(st_before.misses, st_after.misses, "warm pass must not miss");
+}
+
+/// The closed-loop harness completes, reports sane numbers, and its
+/// query stream is reproducible from the seed.
+#[test]
+fn closed_loop_harness_reports() {
+    let storage: Arc<dyn Storage> = Arc::new(MemFs::new());
+    let (dataset, _, _) = setup(storage, "loop", 2, 8);
+    let cache = BlockCache::with_budget(1 << 20);
+    let cfg = abhsf::serve::ServeConfig {
+        threads: 4,
+        queries: 64,
+        seed: 9,
+        spmv_every: 8,
+    };
+    let report =
+        abhsf::serve::run_closed_loop(std::slice::from_ref(&dataset), &cache, &cfg).unwrap();
+    assert_eq!(report.queries, 64);
+    assert_eq!(report.threads, 4);
+    assert!(report.spmv_queries > 0);
+    assert!(report.wall_s > 0.0);
+    assert!(report.qps() > 0.0);
+    assert!(report.p50_ms <= report.p99_ms);
+    assert!(report.p99_ms <= report.max_ms);
+    assert!(report.elements_returned > 0);
+    let st = report.cache;
+    assert!(st.hits + st.misses > 0, "no blocks ever claimed: {st:?}");
+    // Same seed, fresh cache: the same total work is issued.
+    let cache2 = BlockCache::with_budget(1 << 20);
+    let report2 =
+        abhsf::serve::run_closed_loop(std::slice::from_ref(&dataset), &cache2, &cfg).unwrap();
+    assert_eq!(report.elements_returned, report2.elements_returned);
+    assert_eq!(report.spmv_queries, report2.spmv_queries);
+}
