@@ -9,7 +9,13 @@
 //! rate no matter how often the queries repeat.
 //!
 //! Run: `cargo bench --bench serve`
+//!
+//! Besides the printed table, the results are persisted as JSON (default
+//! `BENCH_serve.json` at the working directory, `--json PATH` to
+//! override) so future changes can diff per-config q/s, p99 and hit rate
+//! against the committed baseline.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use abhsf::cache::BlockCache;
@@ -19,6 +25,27 @@ use abhsf::mapping::ProcessMapping;
 use abhsf::serve::{run_closed_loop, ServeConfig};
 use abhsf::util::bench::Table;
 use abhsf::util::human;
+use abhsf::util::json::Json;
+
+/// `--json PATH` from the bench's argv (cargo passes through everything
+/// after `--`); the results file is always written.
+fn json_path() -> String {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_serve.json".to_string())
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
 
 fn main() -> anyhow::Result<()> {
     println!("== Table G: cold vs warm serving across cache budgets ==\n");
@@ -77,6 +104,7 @@ fn main() -> anyhow::Result<()> {
         "evictions",
         "storage reads",
     ]);
+    let mut json_rows = Vec::new();
     for (label, budget) in [
         ("ws x0.25", ws / 4),
         ("ws x0.5", ws / 2),
@@ -104,12 +132,51 @@ fn main() -> anyhow::Result<()> {
             human::count(after.evictions),
             human::bytes(cold.io.bytes + warm.io.bytes),
         ]);
+        json_rows.push(obj(vec![
+            ("label", Json::str(label)),
+            ("budget_bytes", Json::num(budget)),
+            ("cold_qps", Json::Num(cold.qps())),
+            ("cold_p99_ms", Json::Num(cold.p99_ms)),
+            ("warm_qps", Json::Num(warm.qps())),
+            ("warm_p99_ms", Json::Num(warm.p99_ms)),
+            ("warm_hit_rate", Json::Num(warm_hit_rate)),
+            ("evictions", Json::num(after.evictions)),
+            ("storage_read_bytes", Json::num(cold.io.bytes + warm.io.bytes)),
+        ]));
     }
     table.print();
     println!(
         "\n(cold = empty cache, warm = same seeded query stream repeated; \
          hit% is the warm run's claims answered from residency)"
     );
+
+    let doc = obj(vec![
+        ("bench", Json::str("serve")),
+        (
+            "workload",
+            obj(vec![
+                ("n", Json::num(n)),
+                ("nnz", Json::num(gen.nnz())),
+                ("files", Json::num(p_store as u64)),
+                ("stored_bytes", Json::num(sreport.total_bytes())),
+                ("working_set_bytes", Json::num(ws)),
+            ]),
+        ),
+        (
+            "config",
+            obj(vec![
+                ("threads", Json::num(cfg.threads as u64)),
+                ("queries", Json::num(cfg.queries)),
+                ("seed", Json::num(cfg.seed)),
+                ("spmv_every", Json::num(cfg.spmv_every)),
+            ]),
+        ),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    let path = json_path();
+    std::fs::write(&path, format!("{doc}\n"))
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    println!("wrote {path}");
 
     let _ = std::fs::remove_dir_all(&dir);
     Ok(())

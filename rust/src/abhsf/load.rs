@@ -1427,6 +1427,83 @@ mod tests {
         assert_eq!(fetch_blocks(&r, &dir, &[], |_, _| {}).unwrap(), 0);
     }
 
+    /// Live threads of this process (Linux); `None` elsewhere.
+    fn live_threads() -> Option<usize> {
+        std::fs::read_dir("/proc/self/task").ok().map(|d| d.count())
+    }
+
+    /// Satellite coverage for SimFs × read-ahead: a `truncate` fault that
+    /// strikes *inside a prefetched batch* (the directory read fine; the
+    /// background fetcher hits the cut mid-payload) must surface as a
+    /// typed error carrying the injected-fault message — convertible to
+    /// `DatasetError::Internal`, never a panic — and the fetcher thread
+    /// must shut down cleanly every time: no leaked thread, no poisoned
+    /// lock, and the reader stays usable once given a healthy handle.
+    #[test]
+    fn truncate_fault_inside_prefetched_batch_is_typed_error() {
+        use crate::abhsf::store::store_data_chunked_on;
+        use crate::parfs::FsModel;
+        use crate::vfs::{FaultSpec, MemFs, SimFs, Storage};
+        use std::sync::Arc;
+
+        let coo = random_coo(61, 96, 96, 3000, (0, 0));
+        let data = AbhsfData::from_coo(&coo, 8, &CostModel::default()).unwrap();
+        let mem = MemFs::new();
+        let path = std::path::Path::new("/prefetch-fault/m.h5spm");
+        mem.create_dir_all(path.parent().unwrap()).unwrap();
+        store_data_chunked_on(&mem, path, &data, 64).unwrap();
+
+        // Open + directory read through the healthy map. (A fresh open
+        // through the fault can never reach the payload: the h5 directory
+        // lives at the file tail, behind any truncation cut. The scenario
+        // under test is a file truncated *under* a live reader.)
+        let mut r = H5Reader::open_on(&mem, path).unwrap();
+        let dir = BlockDirectory::read(&r).unwrap();
+        let indices: Vec<usize> = (0..dir.entries.len()).collect();
+        let clean = Arc::clone(&r.file);
+
+        // Swap in a truncate-faulted view of the same bytes: reads below
+        // len/2 still succeed, so with per-block batches the pipeline
+        // streams real data before the fetcher hits the cut mid-batch.
+        let sim = SimFs::new(Arc::new(mem.clone()), FsModel::local_nvme())
+            .faults(FaultSpec::parse("truncate:m.h5spm").unwrap());
+        r.file = sim.open(path).unwrap();
+
+        let before = live_threads();
+        for _ in 0..50 {
+            let err = fetch_blocks_batched(&r, &dir, &indices, 1, |_, _| {})
+                .expect_err("truncated payload must fail the fetch");
+            let any = anyhow::Error::from(err);
+            assert!(
+                format!("{any:#}").contains("past simulated truncation"),
+                "wrong error: {any:#}"
+            );
+            let typed: crate::coordinator::DatasetError = any.into();
+            assert!(
+                matches!(typed, crate::coordinator::DatasetError::Internal(_)),
+                "{typed}"
+            );
+        }
+        // Every failed fetch joined its fetcher: 50 error paths must not
+        // accumulate threads (slack absorbs unrelated test-harness noise).
+        if let (Some(b), Some(a)) = (before, live_threads()) {
+            assert!(a <= b + 4, "fetcher threads leaked: {b} -> {a}");
+        }
+
+        // No poisoned lock, no wedged state: the same reader decodes
+        // everything once it gets a healthy handle back.
+        r.file = clean;
+        let stored: u64 = dir.entries.iter().map(|e| e.zeta).sum();
+        let mut decoded = 0u64;
+        let n = fetch_blocks_batched(&r, &dir, &indices, 1, |_, elems| {
+            decoded += elems.len() as u64;
+        })
+        .unwrap();
+        assert!(stored > 0, "degenerate workload");
+        assert_eq!(n, stored);
+        assert_eq!(decoded, n);
+    }
+
     #[test]
     fn corrupted_zeta_detected() {
         let coo = random_coo(31, 16, 16, 64, (0, 0));

@@ -27,8 +27,9 @@
 //!   .run(&cluster, out_dir)`).
 //!   Every layer reads and writes through a pluggable storage backend
 //!   ([`vfs`]): the real filesystem, an `Arc`-shared in-memory namespace,
-//!   or a [`vfs::SimFs`] decorator that emulates the [`parfs`] cost model
-//!   and injects storage faults; block-pruned reads overlap fetch and
+//!   a [`vfs::SimFs`] decorator that emulates the [`parfs`] cost model
+//!   and injects storage faults, or a [`net::RemoteFs`] TCP client to the
+//!   `pallas-served` storage daemon ([`net`], DESIGN.md §11); block-pruned reads overlap fetch and
 //!   decode through a double-buffered read-ahead pipeline
 //!   (DESIGN.md §9). Repeated-query workloads are served through
 //!   [`cache`] + [`serve`]: a sharded, byte-budgeted decoded-block cache
@@ -49,6 +50,7 @@ pub mod formats;
 pub mod gen;
 pub mod h5;
 pub mod mapping;
+pub mod net;
 pub mod parfs;
 pub mod repack;
 pub mod runtime;

@@ -22,10 +22,13 @@
 //!   seeded random rect/row-slice/nnz/SpMV queries against one or more
 //!   datasets through a shared byte-budgeted decoded-block cache,
 //!   reporting throughput, p50/p99 latency and cache counters;
+//! * `served`    — the `pallas-served` storage daemon: serve any VFS
+//!   backend over TCP to `--backend remote:HOST:PORT` clients;
 //! * `fig1`      — regenerate the paper's Figure 1 table quickly.
 
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 use abhsf::abhsf::load::read_header;
 use abhsf::cache::BlockCache;
@@ -35,6 +38,7 @@ use abhsf::formats::Csr;
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::h5::H5Reader;
 use abhsf::mapping::{Block2d, Colwise, CyclicRows, ProcessMapping, Rowwise};
+use abhsf::net::{RemoteFs, RetryPolicy, ServeOptions};
 use abhsf::parfs::FsModel;
 use abhsf::serve::ServeConfig;
 use abhsf::spmv::SpmvParts;
@@ -59,6 +63,7 @@ fn main() {
         "repack" => cmd_repack(argv),
         "spmv" => cmd_spmv(argv),
         "serve" => cmd_serve(argv),
+        "served" => cmd_served(argv),
         "fig1" => cmd_fig1(argv),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -71,9 +76,37 @@ fn main() {
         }
     };
     if let Err(e) = result {
+        // Usage mistakes (bad flag syntax, unknown --backend, malformed
+        // --fault) exit 2 with the usage text, like an unknown
+        // subcommand; runtime failures (missing dataset, I/O, injected
+        // faults) exit 1.
+        if e.downcast_ref::<UsageError>().is_some()
+            || e.downcast_ref::<abhsf::util::args::ArgError>().is_some()
+        {
+            eprintln!("usage error: {e:#}\n");
+            print_usage();
+            std::process::exit(2);
+        }
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// A command-line mistake (as opposed to a runtime failure): reported
+/// with the usage text and exit code 2.
+#[derive(Debug)]
+struct UsageError(String);
+
+impl std::fmt::Display for UsageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for UsageError {}
+
+fn usage_error(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(UsageError(msg.into()))
 }
 
 fn print_usage() {
@@ -94,14 +127,16 @@ fn print_usage() {
          (optional PJRT cross-check)\n\
          \x20 serve      concurrent random-access query harness over a \
          shared decoded-block cache\n\
+         \x20 served     pallas-served storage daemon: serve a directory \
+         over TCP to remote: clients\n\
          \x20 fig1       regenerate the paper's Figure 1 (quick profile)\n\n\
          Common options: --seed-size N --seed cage|diag|random|rmat --order D\n\
          \x20               --procs P --block-size S --dir PATH \
          --mapping rowwise|colwise|2d|cyclic\n\
          \x20               --strategy auto|independent|collective|exchange --format csr|coo\n\
          \x20               --no-prune (disable block-pruned diff-config reading)\n\
-         \x20               --backend local|mem|sim  storage backend for \
-         store/info/load/roundtrip/repack/spmv\n\
+         \x20               --backend local|mem|sim|remote:HOST:PORT  storage \
+         backend for store/info/load/roundtrip/repack/spmv/serve\n\
          \x20                 local = the real filesystem (default)\n\
          \x20                 mem   = a fresh in-memory namespace that dies with \
          this invocation — nothing\n\
@@ -109,11 +144,19 @@ fn print_usage() {
          (roundtrip) are meaningful\n\
          \x20                 sim   = parfs-cost simulation over the local files, \
          with optional fault injection\n\
+         \x20                 remote:HOST:PORT = a pallas-served daemon; dataset \
+         paths resolve under its --root\n\
          Sim options:    --sim-scale X  sleep X real seconds per simulated second \
          (default 0: account only)\n\
          \x20               --fault kind:substr[,kind:substr...]  inject faults on \
          matching paths\n\
          \x20                 (kinds: missing | truncate | fail-writes)\n\
+         Net options:    --net-timeout SECS (request timeout; default 10) \
+         --net-retries N (default 4)\n\
+         Served options: --listen ADDR (default 127.0.0.1:7311) --root DIR \
+         (default .) --backend local|mem|sim\n\
+         \x20               --drop-every N  hang up before every Nth request \
+         (transient-fault injection; 0 = off)\n\
          Repack options: --out PATH --nprocs P --mapping KIND --block-size S \
          --chunk-size C\n\
          Spmv options:   --iters N --pjrt-check\n\
@@ -126,46 +169,96 @@ fn print_usage() {
     );
 }
 
-/// `--backend local|mem|sim` (+ `--sim-scale`, `--fault` for sim): the
-/// storage backend every dataset-touching subcommand goes through. The
-/// second return is the concrete [`SimFs`] handle when simulating, so
-/// commands can print the simulated clock at the end.
-fn parse_backend(a: &Args) -> anyhow::Result<(Arc<dyn Storage>, Option<Arc<SimFs>>)> {
-    Ok(match a.str_or("backend", "local").as_str() {
-        "local" => (abhsf::vfs::local(), None),
-        "mem" => {
-            let mem: Arc<dyn Storage> = Arc::new(MemFs::new());
-            (mem, None)
-        }
+/// The resolved `--backend` selection: the type-erased storage every
+/// subcommand runs over, plus the concrete handles that carry end-of-run
+/// report counters (the [`SimFs`] clock, the [`RemoteFs`] wire stats).
+struct Backend {
+    storage: Arc<dyn Storage>,
+    sim: Option<Arc<SimFs>>,
+    remote: Option<RemoteFs>,
+}
+
+/// `--backend local|mem|sim|remote:HOST:PORT` (+ `--sim-scale`/`--fault`
+/// for sim, `--net-timeout`/`--net-retries` for remote): the storage
+/// backend every dataset-touching subcommand goes through. An unknown
+/// backend or a malformed fault spec is a *usage* error (exit 2); a
+/// daemon that refuses the connection is a runtime error (exit 1).
+fn parse_backend(a: &Args) -> anyhow::Result<Backend> {
+    let kind = a.str_or("backend", "local");
+    Ok(match kind.as_str() {
+        "local" => Backend {
+            storage: abhsf::vfs::local(),
+            sim: None,
+            remote: None,
+        },
+        "mem" => Backend {
+            storage: Arc::new(MemFs::new()),
+            sim: None,
+            remote: None,
+        },
         "sim" => {
             let mut sim = SimFs::new(abhsf::vfs::local(), FsModel::anselm_lustre())
                 .time_scale(a.parse_or("sim-scale", 0.0f64)?);
             if let Some(spec) = a.get("fault") {
-                sim = sim.faults(FaultSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?);
+                sim = sim.faults(FaultSpec::parse(spec).map_err(|e| {
+                    usage_error(format!("malformed --fault spec: {e}"))
+                })?);
             }
             let sim = Arc::new(sim);
-            (Arc::clone(&sim) as Arc<dyn Storage>, Some(sim))
+            Backend {
+                storage: Arc::clone(&sim) as Arc<dyn Storage>,
+                sim: Some(sim),
+                remote: None,
+            }
         }
-        other => anyhow::bail!("unknown backend {other} (local|mem|sim)"),
+        other => match other.strip_prefix("remote:") {
+            Some(addr) if !addr.is_empty() => {
+                let policy = RetryPolicy {
+                    max_retries: a.parse_or("net-retries", 4u32)?,
+                    io_timeout: Duration::from_secs_f64(a.parse_or("net-timeout", 10.0f64)?),
+                    ..Default::default()
+                };
+                let remote = RemoteFs::connect_with(addr, policy)
+                    .map_err(|e| anyhow::anyhow!("connecting to pallas-served at {addr}: {e}"))?;
+                Backend {
+                    storage: Arc::new(remote.clone()),
+                    sim: None,
+                    remote: Some(remote),
+                }
+            }
+            Some(_) => {
+                return Err(usage_error("--backend remote: needs an address (remote:HOST:PORT)"))
+            }
+            None => {
+                return Err(usage_error(format!(
+                    "unknown backend {other} (local|mem|sim|remote:HOST:PORT)"
+                )))
+            }
+        },
     })
 }
 
-/// Trailer line for `--backend sim` runs: the parfs-model cost of every
-/// storage operation the command issued.
-fn print_sim_clock(sim: &Option<Arc<SimFs>>) {
-    if let Some(sim) = sim {
-        println!("sim backend     : {:.3} s simulated I/O", sim.simulated_seconds());
+impl Backend {
+    /// Trailer lines for the backends that accumulate counters: the
+    /// simulated-I/O clock (`sim`) and the wire stats (`remote`).
+    fn print_trailer(&self) {
+        if let Some(sim) = &self.sim {
+            println!("sim backend     : {:.3} s simulated I/O", sim.simulated_seconds());
+        }
+        if let Some(remote) = &self.remote {
+            println!("remote backend  : {}: {}", remote.addr(), remote.stats());
+        }
     }
 }
 
 /// Dataset-open boilerplate shared by every dataset-consuming subcommand
 /// (`info`/`load`/`repack`/`spmv`/`serve`): resolve the `--backend`
 /// selection (+ sim options) and open `--dir` (default `matrix`) on it.
-fn open_dataset(a: &Args) -> anyhow::Result<(Dataset, Option<Arc<SimFs>>)> {
-    let (storage, sim) = parse_backend(a)?;
+fn open_dataset(a: &Args) -> anyhow::Result<(Dataset, Backend)> {
+    let backend = parse_backend(a)?;
     let dir = PathBuf::from(a.str_or("dir", "matrix"));
-    let dataset = Dataset::open_on(storage, &dir)?;
-    Ok((dataset, sim))
+    let dataset = Dataset::open_on(Arc::clone(&backend.storage), &dir)?;
+    Ok((dataset, backend))
 }
 
 /// Shared workload options.
@@ -244,10 +337,10 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
     let p: usize = a.parse_or("procs", 4usize)?;
     let s: u64 = a.parse_or("block-size", 64u64)?;
     let mapping = parse_mapping(&a, &w.gen, p)?;
-    let (storage, sim) = parse_backend(&a)?;
+    let backend = parse_backend(&a)?;
     let cluster = Cluster::new(p, 64);
     let (dataset, report) = Dataset::store_on(
-        storage,
+        Arc::clone(&backend.storage),
         &cluster,
         &w.gen,
         &mapping,
@@ -266,13 +359,13 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
         dataset.mapping().kind(),
         dataset.storage().label(),
     );
-    print_sim_clock(&sim);
+    backend.print_trailer();
     Ok(())
 }
 
 fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf info", argv, &[])?;
-    let (dataset, sim) = open_dataset(&a)?;
+    let (dataset, backend) = open_dataset(&a)?;
     let (m, n) = dataset.dims();
     println!(
         "dataset: {} x {}, {} nnz, stored by P={} ({} mapping), s={}, {}",
@@ -313,13 +406,13 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
         ]);
     }
     t.print();
-    print_sim_clock(&sim);
+    backend.print_trailer();
     Ok(())
 }
 
 fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf load", argv, &["same-config", "no-prune"])?;
-    let (dataset, sim) = open_dataset(&a)?;
+    let (dataset, backend) = open_dataset(&a)?;
     let format: InMemFormat = a.str_or("format", "csr").parse()?;
     let model = FsModel::anselm_lustre();
 
@@ -328,7 +421,7 @@ fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
         let cluster = Cluster::new(dataset.nprocs(), 64);
         let (_, report) = dataset.load().format(format).run(&cluster)?;
         print_load_report(&report, &model);
-        print_sim_clock(&sim);
+        backend.print_trailer();
         return Ok(());
     }
     let p: usize = a.parse_or("procs", dataset.nprocs())?;
@@ -345,7 +438,7 @@ fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
         .prune(!a.flag("no-prune"))
         .run(&cluster)?;
     print_load_report(&report, &model);
-    print_sim_clock(&sim);
+    backend.print_trailer();
     Ok(())
 }
 
@@ -404,10 +497,10 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
     let p: usize = a.parse_or("procs", 4usize)?;
     let s: u64 = a.parse_or("block-size", 32u64)?;
     let mapping = parse_mapping(&a, &w.gen, p)?;
-    let (storage, sim) = parse_backend(&a)?;
+    let backend = parse_backend(&a)?;
     let cluster = Cluster::new(p, 64);
     let (dataset, sreport) = Dataset::store_on(
-        storage,
+        Arc::clone(&backend.storage),
         &cluster,
         &w.gen,
         &mapping,
@@ -441,7 +534,7 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
         lreport.wall_s,
         dataset.storage().label(),
     );
-    print_sim_clock(&sim);
+    backend.print_trailer();
     let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }
@@ -456,7 +549,7 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
 fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf spmv", argv, &["pjrt-check"])?;
     let iters: usize = a.parse_or("iters", 10usize)?;
-    let (dataset, sim) = open_dataset(&a)?;
+    let (dataset, backend) = open_dataset(&a)?;
     let (gm, gn) = dataset.dims();
     anyhow::ensure!(
         gm == gn,
@@ -528,7 +621,7 @@ fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
             Err(e) => println!("pjrt engine unavailable ({e}); skipping cross-check"),
         }
     }
-    print_sim_clock(&sim);
+    backend.print_trailer();
     Ok(())
 }
 
@@ -544,7 +637,8 @@ fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
 /// smoke run is one invocation.
 fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf serve", argv, &["gen"])?;
-    let (storage, sim) = parse_backend(&a)?;
+    let backend = parse_backend(&a)?;
+    let storage = Arc::clone(&backend.storage);
     let dirs: Vec<String> = a
         .str_or("dir", "matrix")
         .split(',')
@@ -640,10 +734,65 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         human::count(cs.coalesced_waits),
         human::count(cs.evictions),
         human::bytes(cs.resident_bytes),
-        human::bytes(budget),
+        human::format_bytes(budget),
     );
-    print_sim_clock(&sim);
+    backend.print_trailer();
     Ok(())
+}
+
+/// `abhsf served` — the `pallas-served` storage daemon: bind `--listen`
+/// and serve the files under `--root` on any VFS backend to
+/// `--backend remote:HOST:PORT` clients, until killed. Wrapping the
+/// inner backend in `sim` (`--fault`, `--sim-scale`) makes the daemon a
+/// fault-injected storage node; `--drop-every N` injects *transport*
+/// faults by hanging up before every Nth request, exercising client
+/// retry.
+fn cmd_served(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf served", argv, &[])?;
+    let kind = a.str_or("backend", "local");
+    let inner: Arc<dyn Storage> = match kind.as_str() {
+        "local" => abhsf::vfs::local(),
+        "mem" => Arc::new(MemFs::new()),
+        "sim" => {
+            let mut sim = SimFs::new(abhsf::vfs::local(), FsModel::anselm_lustre())
+                .time_scale(a.parse_or("sim-scale", 0.0f64)?);
+            if let Some(spec) = a.get("fault") {
+                sim = sim.faults(FaultSpec::parse(spec).map_err(|e| {
+                    usage_error(format!("malformed --fault spec: {e}"))
+                })?);
+            }
+            Arc::new(sim)
+        }
+        other => {
+            return Err(usage_error(format!(
+                "served --backend must be local|mem|sim (a daemon serves storage, \
+                 it cannot chain to remote:), got {other}"
+            )))
+        }
+    };
+    let listen = a.str_or("listen", "127.0.0.1:7311");
+    let root = PathBuf::from(a.str_or("root", "."));
+    let opts = ServeOptions {
+        root: root.clone(),
+        io_timeout: Duration::from_secs_f64(a.parse_or("net-timeout", 30.0f64)?),
+        drop_every: a.parse_or("drop-every", 0u64)?,
+    };
+    let drop_every = opts.drop_every;
+    let mut handle = abhsf::net::serve(inner, &listen, opts)
+        .map_err(|e| anyhow::anyhow!("binding {listen}: {e}"))?;
+    println!(
+        "pallas-served   : listening on {} (backend {kind}, root {})",
+        handle.addr(),
+        root.display(),
+    );
+    if drop_every > 0 {
+        println!("fault injection : hanging up before every {drop_every}th request");
+    }
+    // The daemon usually runs piped/backgrounded: push the listening line
+    // out now, not at (never-reached) exit.
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    handle.run_forever()
 }
 
 /// Target-mapping parser for configurations derived from a dataset's
@@ -671,7 +820,7 @@ fn parse_target_mapping(
 fn cmd_repack(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf repack", argv, &["no-prune"])?;
     let out = PathBuf::from(a.str_or("out", "matrix-repacked"));
-    let (dataset, sim) = open_dataset(&a)?;
+    let (dataset, backend) = open_dataset(&a)?;
     let p: usize = if a.get("nprocs").is_some() {
         a.parse_or("nprocs", dataset.nprocs())?
     } else {
@@ -753,7 +902,7 @@ fn cmd_repack(argv: Vec<String>) -> anyhow::Result<()> {
             forecast.post_repack_load_s,
         ),
     }
-    print_sim_clock(&sim);
+    backend.print_trailer();
     Ok(())
 }
 

@@ -1,0 +1,526 @@
+//! [`RemoteFs`]: a [`Storage`] backend that speaks the wire protocol to a
+//! `pallas-served` daemon.
+//!
+//! Because `RemoteFs` is just another `Storage`, every existing layer —
+//! `LoadPlan`, `RepackPlan`, `BlockCache`/`DatasetReader`,
+//! `run_closed_loop` — works over the network unchanged; the loaders
+//! cannot tell a TCP daemon from a local directory except through the
+//! latency and the [`NetStats`] counters.
+//!
+//! ## Transport failures vs. remote errors
+//!
+//! The client distinguishes two failure classes strictly. A *remote
+//! error* is a typed error frame from the server — the request executed
+//! (or was validly refused) and the backend answered; it is surfaced to
+//! the caller immediately and **never retried** (retrying a `NotFound`
+//! cannot help). A *transport failure* — dial refusal, timeout, reset,
+//! a garbled or mismatched frame — means the request's fate is unknown;
+//! the connection is discarded and the call retries with exponential
+//! backoff + jitter, bounded by [`RetryPolicy::max_retries`], provided
+//! the request is safe to resend: always when it never hit the wire, and
+//! after send only for idempotent requests ([`super::wire::Request::idempotent`]
+//! — everything except `Rename`).
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::io::{self};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::net::wire::{self, Reply, Request};
+use crate::util::rng::SplitMix64;
+use crate::vfs::{Storage, StorageRead, StorageWrite};
+
+/// Cap on idle pooled connections per client.
+const POOL_CAP: usize = 8;
+
+/// Retry/backoff/timeout knobs for one [`RemoteFs`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (so `max_retries + 1` tries total).
+    pub max_retries: u32,
+    /// First backoff; doubles per retry.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Per-dial TCP connect budget.
+    pub connect_timeout: Duration,
+    /// Per-request read/write budget on an established connection.
+    pub io_timeout: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 4,
+            base_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Snapshot of a client's wire counters (the `IoStats` of the network
+/// tier).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Request attempts put on the wire (retries count again).
+    pub requests: u64,
+    /// Bytes sent, including frame headers.
+    pub wire_sent_bytes: u64,
+    /// Bytes received, including frame headers.
+    pub wire_received_bytes: u64,
+    /// Requests that were retried after a transport failure.
+    pub retries: u64,
+    /// Dials after the initial connect (dropped/expired connections).
+    pub reconnects: u64,
+}
+
+impl std::fmt::Display for NetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests, {} sent, {} received, {} retries, {} reconnects",
+            self.requests,
+            crate::util::human::bytes(self.wire_sent_bytes),
+            crate::util::human::bytes(self.wire_received_bytes),
+            self.retries,
+            self.reconnects
+        )
+    }
+}
+
+/// One established, handshaken connection.
+struct Conn {
+    stream: TcpStream,
+}
+
+struct Inner {
+    addr: String,
+    policy: RetryPolicy,
+    pool: Mutex<Vec<Conn>>,
+    next_id: AtomicU64,
+    dials: AtomicU64,
+    requests: AtomicU64,
+    wire_sent: AtomicU64,
+    wire_received: AtomicU64,
+    retries: AtomicU64,
+    /// Jitter source for backoff (seeded from the address so runs are
+    /// reproducible per target).
+    rng: Mutex<SplitMix64>,
+    /// The server's `Storage::medium`, learned in the first welcome.
+    server_medium: AtomicU64,
+}
+
+/// TCP client backend for `pallas-served`. Cheap to clone (all clones
+/// share the pool and counters).
+#[derive(Clone)]
+pub struct RemoteFs {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for RemoteFs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RemoteFs")
+            .field("addr", &self.inner.addr)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl RemoteFs {
+    /// Connect to a daemon at `addr` (`HOST:PORT`) with default policy.
+    /// Dials eagerly: a bad address or an incompatible server fails here,
+    /// not on the first read.
+    pub fn connect(addr: &str) -> io::Result<RemoteFs> {
+        RemoteFs::connect_with(addr, RetryPolicy::default())
+    }
+
+    /// [`RemoteFs::connect`] with explicit retry/timeout policy.
+    pub fn connect_with(addr: &str, policy: RetryPolicy) -> io::Result<RemoteFs> {
+        let fs = RemoteFs {
+            inner: Arc::new(Inner {
+                addr: addr.to_string(),
+                policy,
+                pool: Mutex::new(Vec::new()),
+                next_id: AtomicU64::new(1),
+                dials: AtomicU64::new(0),
+                requests: AtomicU64::new(0),
+                wire_sent: AtomicU64::new(0),
+                wire_received: AtomicU64::new(0),
+                retries: AtomicU64::new(0),
+                rng: Mutex::new(SplitMix64::new(seed_of(addr))),
+                server_medium: AtomicU64::new(0),
+            }),
+        };
+        // Eager handshake: validates the server and learns its medium, so
+        // a bad address or incompatible daemon fails here.
+        let (conn, medium) = fs.dial()?;
+        fs.inner.server_medium.store(medium, Ordering::Relaxed);
+        fs.checkin(conn);
+        Ok(fs)
+    }
+
+    /// The daemon address this client talks to.
+    pub fn addr(&self) -> &str {
+        &self.inner.addr
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> NetStats {
+        let dials = self.inner.dials.load(Ordering::Relaxed);
+        NetStats {
+            requests: self.inner.requests.load(Ordering::Relaxed),
+            wire_sent_bytes: self.inner.wire_sent.load(Ordering::Relaxed),
+            wire_received_bytes: self.inner.wire_received.load(Ordering::Relaxed),
+            retries: self.inner.retries.load(Ordering::Relaxed),
+            reconnects: dials.saturating_sub(1),
+        }
+    }
+
+    /// Dial, handshake, and return the connection plus the server medium.
+    fn dial(&self) -> io::Result<(Conn, u64)> {
+        self.inner.dials.fetch_add(1, Ordering::Relaxed);
+        let policy = &self.inner.policy;
+        let mut last: Option<io::Error> = None;
+        let addrs = self.inner.addr.to_socket_addrs()?;
+        for addr in addrs {
+            match TcpStream::connect_timeout(&addr, policy.connect_timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(Some(policy.io_timeout))?;
+                    stream.set_write_timeout(Some(policy.io_timeout))?;
+                    let mut conn = Conn { stream };
+                    wire::write_hello(&mut conn.stream)?;
+                    let (version, medium) = wire::read_welcome(&mut conn.stream)?;
+                    if version != wire::VERSION {
+                        return Err(io::Error::new(
+                            io::ErrorKind::Unsupported,
+                            format!(
+                                "protocol version mismatch: server {} speaks v{version}, \
+                                 client speaks v{}",
+                                self.inner.addr,
+                                wire::VERSION
+                            ),
+                        ));
+                    }
+                    return Ok((conn, medium));
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::AddrNotAvailable,
+                format!("{} resolved to no addresses", self.inner.addr),
+            )
+        }))
+    }
+
+    fn checkout(&self) -> Option<Conn> {
+        self.inner.pool.lock().unwrap().pop()
+    }
+
+    fn checkin(&self, conn: Conn) {
+        let mut pool = self.inner.pool.lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(conn);
+        }
+    }
+
+    /// Backoff before retry `attempt` (1-based): `base · 2^(attempt-1)`,
+    /// capped, jittered to 50–100% so synchronized clients desynchronize.
+    fn backoff(&self, attempt: u32) -> Duration {
+        let policy = &self.inner.policy;
+        let exp = policy
+            .base_backoff
+            .saturating_mul(1u32 << (attempt - 1).min(16));
+        let capped = exp.min(policy.max_backoff);
+        let jitter = {
+            let mut rng = self.inner.rng.lock().unwrap();
+            0.5 + 0.5 * (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+        };
+        capped.mul_f64(jitter)
+    }
+
+    /// Issue one request with the full retry loop; the heart of the
+    /// backend.
+    fn call(&self, req: &Request) -> io::Result<Reply> {
+        let mut attempt = 0u32;
+        loop {
+            match self.try_once(req) {
+                Ok(reply) => return Ok(reply),
+                // The server answered with a typed error: definitive.
+                Err(CallError::Remote(e)) => return Err(e),
+                Err(CallError::Transport { error, sent }) => {
+                    let resendable = !sent || req.idempotent();
+                    if !resendable || attempt >= self.inner.policy.max_retries {
+                        return Err(error);
+                    }
+                    attempt += 1;
+                    self.inner.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(self.backoff(attempt));
+                }
+            }
+        }
+    }
+
+    /// One attempt over one connection. On any transport failure the
+    /// connection is dropped (never pooled back).
+    fn try_once(&self, req: &Request) -> Result<Reply, CallError> {
+        let mut conn = match self.checkout() {
+            Some(c) => c,
+            None => {
+                let (c, _) = self
+                    .dial()
+                    .map_err(|e| CallError::Transport { error: e, sent: false })?;
+                c
+            }
+        };
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.inner.requests.fetch_add(1, Ordering::Relaxed);
+
+        let payload = req.encode(id);
+        let sent_bytes = 4 + payload.len() as u64;
+        if let Err(e) = wire::write_frame(&mut conn.stream, &payload) {
+            // The frame may be partially on the wire: treat as sent.
+            return Err(CallError::Transport { error: e, sent: true });
+        }
+        self.inner.wire_sent.fetch_add(sent_bytes, Ordering::Relaxed);
+
+        let frame = match wire::read_frame(&mut conn.stream) {
+            Ok(f) => f,
+            Err(e) => return Err(CallError::Transport { error: e, sent: true }),
+        };
+        self.inner
+            .wire_received
+            .fetch_add(4 + frame.len() as u64, Ordering::Relaxed);
+
+        let (reply_id, result) = match wire::decode_reply(&frame) {
+            Ok(r) => r,
+            Err(e) => return Err(CallError::Transport { error: e, sent: true }),
+        };
+        if reply_id != id {
+            return Err(CallError::Transport {
+                error: io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("reply id {reply_id} does not match request id {id}"),
+                ),
+                sent: true,
+            });
+        }
+        match result {
+            Ok(reply) => {
+                self.checkin(conn);
+                Ok(reply)
+            }
+            Err(wire_err) => {
+                // Typed remote error: the connection itself is healthy.
+                self.checkin(conn);
+                Err(CallError::Remote(wire_err.into()))
+            }
+        }
+    }
+}
+
+fn seed_of(addr: &str) -> u64 {
+    let mut h = DefaultHasher::new();
+    addr.hash(&mut h);
+    h.finish()
+}
+
+/// Why one attempt failed, and whether the request had hit the wire.
+enum CallError {
+    /// Typed error frame from the server; never retried.
+    Remote(io::Error),
+    /// The transport broke; `sent` records whether the request may have
+    /// reached the server.
+    Transport { error: io::Error, sent: bool },
+}
+
+// ------------------------------------------------------------ handles
+
+/// Positioned read handle over the wire: stateless `ReadAt` requests,
+/// chunked at [`wire::MAX_READ`].
+struct RemoteFile {
+    fs: RemoteFs,
+    path: PathBuf,
+    len: u64,
+}
+
+impl StorageRead for RemoteFile {
+    fn read_exact_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        let mut pos = 0usize;
+        while pos < buf.len() {
+            let chunk = (buf.len() - pos).min(wire::MAX_READ as usize);
+            let reply = self.fs.call(&Request::ReadAt {
+                path: self.path.clone(),
+                offset: offset + pos as u64,
+                len: chunk as u32,
+            })?;
+            let bytes = reply.into_bytes()?;
+            if bytes.len() != chunk {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("server returned {} bytes for a {chunk}-byte read", bytes.len()),
+                ));
+            }
+            buf[pos..pos + chunk].copy_from_slice(&bytes);
+            pos += chunk;
+        }
+        Ok(())
+    }
+
+    fn len(&self) -> io::Result<u64> {
+        Ok(self.len)
+    }
+}
+
+/// Write handle: buffers locally, ships the whole file as one atomic
+/// `WriteFile` on sync (mirroring `MemWriter` — the buffered bytes become
+/// visible all at once, and a resend after a transport failure converges
+/// on the same contents, which is what lets writes participate in the
+/// retry loop).
+struct RemoteWriter {
+    fs: RemoteFs,
+    path: PathBuf,
+    buf: Vec<u8>,
+    dirty: bool,
+}
+
+impl RemoteWriter {
+    fn publish(&mut self) -> io::Result<()> {
+        self.fs
+            .call(&Request::WriteFile {
+                path: self.path.clone(),
+                bytes: self.buf.clone(),
+            })?
+            .into_unit()?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+impl StorageWrite for RemoteWriter {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.buf.extend_from_slice(buf);
+        self.dirty = true;
+        Ok(())
+    }
+
+    fn patch_at(&mut self, offset: u64, buf: &[u8]) -> io::Result<()> {
+        let end = offset as usize + buf.len();
+        if end > self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "patch_at beyond written bytes",
+            ));
+        }
+        self.buf[offset as usize..end].copy_from_slice(buf);
+        self.dirty = true;
+        Ok(())
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.publish()
+    }
+}
+
+impl Drop for RemoteWriter {
+    fn drop(&mut self) {
+        if self.dirty {
+            let _ = self.publish();
+        }
+    }
+}
+
+// -------------------------------------------------------------- Storage
+
+impl Storage for RemoteFs {
+    fn open(&self, path: &Path) -> io::Result<Arc<dyn StorageRead>> {
+        // `Len` doubles as the existence check `open` promises.
+        let len = self.call(&Request::Len { path: path.to_path_buf() })?.into_num()?;
+        Ok(Arc::new(RemoteFile {
+            fs: self.clone(),
+            path: path.to_path_buf(),
+            len,
+        }))
+    }
+
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StorageWrite>> {
+        // Publish the empty file immediately: `create` is `O_TRUNC` on
+        // every other backend, and a crash between create and sync must
+        // leave a truncated file, not a stale one.
+        self.call(&Request::WriteFile {
+            path: path.to_path_buf(),
+            bytes: Vec::new(),
+        })?
+        .into_unit()?;
+        Ok(Box::new(RemoteWriter {
+            fs: self.clone(),
+            path: path.to_path_buf(),
+            buf: Vec::new(),
+            dirty: false,
+        }))
+    }
+
+    fn len(&self, path: &Path) -> io::Result<u64> {
+        self.call(&Request::Len { path: path.to_path_buf() })?.into_num()
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        self.call(&Request::List { dir: dir.to_path_buf() })?.into_paths()
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        self.call(&Request::Rename {
+            from: from.to_path_buf(),
+            to: to.to_path_buf(),
+        })?
+        .into_unit()
+    }
+
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>> {
+        self.call(&Request::ReadFile { path: path.to_path_buf() })?.into_bytes()
+    }
+
+    fn write_file(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        self.call(&Request::WriteFile {
+            path: path.to_path_buf(),
+            bytes: bytes.to_vec(),
+        })?
+        .into_unit()
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        self.call(&Request::CreateDirAll { dir: dir.to_path_buf() })?.into_unit()
+    }
+
+    fn canonical(&self, path: &Path) -> PathBuf {
+        // Server-side identity when reachable; lexical fallback keeps the
+        // method infallible.
+        match self.call(&Request::Canonical { path: path.to_path_buf() }) {
+            Ok(reply) => reply.into_path().unwrap_or_else(|_| crate::vfs::normalize(path)),
+            Err(_) => crate::vfs::normalize(path),
+        }
+    }
+
+    fn medium(&self) -> usize {
+        // Distinct from every local medium, stable per (address, server
+        // store): two clients of one daemon agree; a restarted daemon
+        // over a *different* MemFs does not.
+        let mut h = DefaultHasher::new();
+        "remote".hash(&mut h);
+        self.inner.addr.hash(&mut h);
+        self.inner.server_medium.load(Ordering::Relaxed).hash(&mut h);
+        h.finish() as usize
+    }
+
+    fn label(&self) -> &'static str {
+        "remote"
+    }
+}

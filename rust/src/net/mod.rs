@@ -1,0 +1,31 @@
+//! Network serving subsystem: datasets stored by one machine, loaded by
+//! another.
+//!
+//! The paper's central claim (arXiv:1412.8299 §3) is that ABHSF datasets
+//! are loadable by a *different* process configuration than stored them;
+//! this module removes the remaining assumption that both sides share a
+//! filesystem. Three pieces:
+//!
+//! * [`wire`] — a length-prefixed binary protocol: request ids, one
+//!   opcode per [`crate::vfs::Storage`] method, typed error frames and a
+//!   versioned handshake;
+//! * [`server`] — the `pallas-served` daemon (`abhsf served` in the
+//!   CLI): serves any existing VFS backend over TCP, thread per
+//!   connection, graceful shutdown;
+//! * [`client`] — [`RemoteFs`], a `Storage` backend speaking the
+//!   protocol, with a small connection pool, bounded retries with
+//!   exponential backoff + jitter, and wire-level [`NetStats`] counters.
+//!
+//! Because `RemoteFs` is just another `Storage`, every existing layer
+//! (`LoadPlan`, `RepackPlan`, `BlockCache`, `run_closed_loop`) works over
+//! the network unchanged — and serving a [`crate::vfs::SimFs`]-wrapped
+//! backend composes fault injection with real TCP, giving an N-daemon ×
+//! M-client fault-injected cluster simulation on one machine (DESIGN.md
+//! §11).
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetStats, RemoteFs, RetryPolicy};
+pub use server::{serve, ServeOptions, ServerHandle};

@@ -1,0 +1,462 @@
+//! `pallas-served`: the storage daemon. Serves any [`Storage`] backend
+//! over TCP to concurrent clients, one thread per connection.
+//!
+//! The server is a thin, stateless shim: each decoded [`Request`] maps to
+//! exactly one call on the inner backend, successes and failures both
+//! travel back as typed frames, and no request leaves server-side session
+//! state behind (no open-handle table to desynchronize on reconnect).
+//! Because the backend is `Arc<dyn Storage>`, serving a `SimFs`-wrapped
+//! backend turns the daemon into a fault-injected storage node — the
+//! building block of the N-daemon × M-client cluster simulation described
+//! in DESIGN.md §11.
+//!
+//! Client paths are confined to the served root: they are lexically
+//! normalized, absolute prefixes are stripped, and any `..` component is
+//! refused with `PermissionDenied` before the backend sees the path.
+
+use std::collections::HashMap;
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Component, Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::net::wire::{self, Reply, Request};
+use crate::vfs::{Storage, StorageRead};
+
+/// How often a connection thread wakes from a blocking read to check the
+/// shutdown flag and its idle budget.
+const POLL_TICK: Duration = Duration::from_millis(200);
+
+/// Cap on cached per-connection read handles (plain LRU-free reset:
+/// the map is cleared when full — datasets hold a handful of containers,
+/// so this effectively never triggers in practice).
+const HANDLE_CACHE_CAP: usize = 64;
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Directory prefix all client paths are resolved under.
+    pub root: PathBuf,
+    /// Per-connection inactivity budget and write timeout. A connection
+    /// idle longer than this is closed.
+    pub io_timeout: Duration,
+    /// Fault injection: if nonzero, close the connection *instead of*
+    /// executing every Nth request (counted across all connections).
+    /// Exercises client-side retry; `0` disables.
+    pub drop_every: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            root: PathBuf::from("."),
+            io_timeout: Duration::from_secs(30),
+            drop_every: 0,
+        }
+    }
+}
+
+struct Shared {
+    backend: Arc<dyn Storage>,
+    opts: ServeOptions,
+    shutdown: AtomicBool,
+    /// Requests received across all connections (drives `drop_every`).
+    served: AtomicU64,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A running daemon: bound socket + accept thread.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for ServerHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerHandle")
+            .field("addr", &self.addr)
+            .field("backend", &self.shared.backend.label())
+            .finish()
+    }
+}
+
+/// Bind `listen` and serve `backend` until [`ServerHandle::shutdown`].
+/// Returns once the socket is bound and accepting, so a caller can
+/// immediately connect (tests, CI) or park in
+/// [`ServerHandle::run_forever`] (the CLI).
+pub fn serve(
+    backend: Arc<dyn Storage>,
+    listen: &str,
+    opts: ServeOptions,
+) -> io::Result<ServerHandle> {
+    let listener = TcpListener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        backend,
+        opts,
+        shutdown: AtomicBool::new(false),
+        served: AtomicU64::new(0),
+        conns: Mutex::new(Vec::new()),
+    });
+
+    let accept_shared = Arc::clone(&shared);
+    let accept = std::thread::Builder::new()
+        .name("pallas-served-accept".into())
+        .spawn(move || accept_loop(listener, accept_shared))?;
+
+    Ok(ServerHandle {
+        addr,
+        shared,
+        accept: Some(accept),
+    })
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Total requests received so far, across all connections.
+    pub fn requests_served(&self) -> u64 {
+        self.shared.served.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, close every connection, join all threads. Safe to
+    /// call more than once; returns when the daemon is fully down.
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection; harmless
+        // if the listener already saw the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+
+    /// Park the calling thread until the process dies (CLI daemon mode).
+    pub fn run_forever(&mut self) -> ! {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        loop {
+            std::thread::park();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let conn_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("pallas-served-conn".into())
+            .spawn(move || {
+                let _ = handle_connection(stream, conn_shared);
+            });
+        if let Ok(h) = handle {
+            let mut conns = shared.conns.lock().unwrap();
+            conns.retain(|c| !c.is_finished());
+            conns.push(h);
+        }
+    }
+}
+
+/// One connection: handshake, then a request/reply loop until EOF, error,
+/// idle timeout or shutdown.
+fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) -> io::Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(POLL_TICK))?;
+    stream.set_write_timeout(Some(shared.opts.io_timeout))?;
+
+    // Handshake: reply with our version either way, then drop mismatches
+    // so the client can name both versions in its error.
+    let client_version = read_hello_polled(&mut stream, &shared)?;
+    wire::write_welcome(&mut stream, shared.backend.medium() as u64)?;
+    if client_version != wire::VERSION {
+        return Ok(());
+    }
+
+    let mut cache: HashMap<PathBuf, Arc<dyn StorageRead>> = HashMap::new();
+    loop {
+        let frame = match read_frame_polled(&mut stream, &shared)? {
+            Some(f) => f,
+            None => return Ok(()), // clean EOF, idle timeout or shutdown
+        };
+        let n = shared.served.fetch_add(1, Ordering::Relaxed) + 1;
+        if shared.opts.drop_every > 0 && n % shared.opts.drop_every == 0 {
+            // Injected transient fault: hang up *before* decoding, so the
+            // request provably did not execute.
+            return Ok(());
+        }
+        let (id, req) = match Request::decode(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                // Can't attribute a request id; answer id 0 and close.
+                let _ = wire::write_frame(
+                    &mut stream,
+                    &wire::encode_err(0, e.kind(), &e.to_string()),
+                );
+                return Ok(());
+            }
+        };
+        let payload = match execute(&req, &shared, &mut cache) {
+            Ok(reply) => wire::encode_ok(id, &reply),
+            Err(e) => wire::encode_err(id, e.kind(), &e.to_string()),
+        };
+        wire::write_frame(&mut stream, &payload)?;
+    }
+}
+
+/// Read the 8-byte hello under the poll tick, honoring shutdown and the
+/// idle budget.
+fn read_hello_polled(stream: &mut TcpStream, shared: &Shared) -> io::Result<u16> {
+    let mut buf = [0u8; 8];
+    let mut filled = 0;
+    let deadline = Instant::now() + shared.opts.io_timeout;
+    while filled < buf.len() {
+        if shared.shutdown.load(Ordering::SeqCst) || Instant::now() >= deadline {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "handshake timed out"));
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return Err(io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => filled += n,
+            Err(e) if is_poll_tick(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let mut cursor = &buf[..];
+    wire::read_hello(&mut cursor)
+}
+
+/// Read one frame under the poll tick. `Ok(None)` means the connection
+/// should close quietly: clean EOF between requests, shutdown, or the
+/// idle budget ran out.
+fn read_frame_polled(stream: &mut TcpStream, shared: &Shared) -> io::Result<Option<Vec<u8>>> {
+    let mut hdr = [0u8; 4];
+    let mut filled = 0;
+    let mut idle = Instant::now();
+    // Header: may legitimately wait forever-ish (idle budget) for the
+    // next request; a clean EOF at byte 0 is a normal close.
+    while filled < hdr.len() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        if idle.elapsed() >= shared.opts.io_timeout {
+            return Ok(None);
+        }
+        match stream.read(&mut hdr[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                return Err(io::ErrorKind::UnexpectedEof.into());
+            }
+            Ok(n) => {
+                filled += n;
+                idle = Instant::now();
+            }
+            Err(e) if is_poll_tick(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(hdr);
+    if len > wire::MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("peer announced a {len}-byte frame (cap {})", wire::MAX_FRAME),
+        ));
+    }
+    // Body: a partial frame followed by silence is a real timeout error.
+    let mut buf = vec![0u8; len as usize];
+    let mut filled = 0;
+    let mut idle = Instant::now();
+    while filled < buf.len() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        if idle.elapsed() >= shared.opts.io_timeout {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "mid-frame timeout"));
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return Err(io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => {
+                filled += n;
+                idle = Instant::now();
+            }
+            Err(e) if is_poll_tick(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(buf))
+}
+
+/// A read that merely hit the poll-tick timeout (platform-dependent kind).
+fn is_poll_tick(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Confine a client path to the served root: lexical normalization, strip
+/// absolute/current-dir components, refuse parent components outright.
+fn resolve(root: &Path, client: &Path) -> io::Result<PathBuf> {
+    let normalized = crate::vfs::normalize(client);
+    let mut out = root.to_path_buf();
+    for comp in normalized.components() {
+        match comp {
+            Component::RootDir | Component::Prefix(_) | Component::CurDir => {}
+            Component::ParentDir => {
+                return Err(io::Error::new(
+                    io::ErrorKind::PermissionDenied,
+                    format!("path escapes the served root: {}", client.display()),
+                ));
+            }
+            Component::Normal(c) => out.push(c),
+        }
+    }
+    Ok(out)
+}
+
+/// Execute one request against the backend. The per-connection `cache`
+/// memoizes read handles (`Storage::open` re-validates existence and
+/// re-reads nothing, but skipping it saves a round of backend lookups on
+/// every positioned read).
+fn execute(
+    req: &Request,
+    shared: &Shared,
+    cache: &mut HashMap<PathBuf, Arc<dyn StorageRead>>,
+) -> io::Result<Reply> {
+    let backend = &shared.backend;
+    let root = &shared.opts.root;
+    match req {
+        Request::ReadAt { path, offset, len } => {
+            if *len > wire::MAX_READ {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("read of {len} bytes exceeds MAX_READ {}", wire::MAX_READ),
+                ));
+            }
+            let resolved = resolve(root, path)?;
+            let file = match cache.get(&resolved) {
+                Some(f) => Arc::clone(f),
+                None => {
+                    let f = backend.open(&resolved)?;
+                    if cache.len() >= HANDLE_CACHE_CAP {
+                        cache.clear();
+                    }
+                    cache.insert(resolved, Arc::clone(&f));
+                    f
+                }
+            };
+            let mut buf = vec![0u8; *len as usize];
+            file.read_exact_at(*offset, &mut buf)?;
+            Ok(Reply::Bytes(buf))
+        }
+        Request::Len { path } => {
+            let n = backend.len(&resolve(root, path)?)?;
+            Ok(Reply::Num(n))
+        }
+        Request::List { dir } => {
+            let entries = backend.list(&resolve(root, dir)?)?;
+            // Map results back into the client's namespace: the client
+            // asked about `dir`, so that is the prefix it gets back.
+            let mapped = entries
+                .into_iter()
+                .map(|p| match p.file_name() {
+                    Some(name) => dir.join(name),
+                    None => p,
+                })
+                .collect();
+            Ok(Reply::Paths(mapped))
+        }
+        Request::ReadFile { path } => {
+            let bytes = backend.read_file(&resolve(root, path)?)?;
+            if bytes.len() as u64 > wire::MAX_FRAME as u64 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("file of {} bytes exceeds one frame; use ReadAt", bytes.len()),
+                ));
+            }
+            Ok(Reply::Bytes(bytes))
+        }
+        Request::WriteFile { path, bytes } => {
+            let resolved = resolve(root, path)?;
+            // The backend's write_file is the atomic temp+rename path —
+            // this is what makes WriteFile idempotent and so retryable.
+            backend.write_file(&resolved, bytes)?;
+            cache.remove(&resolved);
+            Ok(Reply::Unit)
+        }
+        Request::Rename { from, to } => {
+            let rfrom = resolve(root, from)?;
+            let rto = resolve(root, to)?;
+            backend.rename(&rfrom, &rto)?;
+            cache.remove(&rfrom);
+            cache.remove(&rto);
+            Ok(Reply::Unit)
+        }
+        Request::CreateDirAll { dir } => {
+            backend.create_dir_all(&resolve(root, dir)?)?;
+            Ok(Reply::Unit)
+        }
+        Request::Canonical { path } => {
+            // Server-side canonical identity: two clients naming the same
+            // file through different spellings agree on one path.
+            Ok(Reply::Path(backend.canonical(&resolve(root, path)?)))
+        }
+        Request::Ping => Ok(Reply::Unit),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_confines_to_root() {
+        let root = Path::new("/srv/data");
+        assert_eq!(
+            resolve(root, Path::new("matrix/m-0.h5spm")).unwrap(),
+            PathBuf::from("/srv/data/matrix/m-0.h5spm")
+        );
+        // Absolute client paths are re-rooted, not trusted.
+        assert_eq!(
+            resolve(root, Path::new("/matrix/a")).unwrap(),
+            PathBuf::from("/srv/data/matrix/a")
+        );
+        // `a/b/../c` normalizes away the inner parent, then resolves.
+        assert_eq!(
+            resolve(root, Path::new("a/b/../c")).unwrap(),
+            PathBuf::from("/srv/data/a/c")
+        );
+        // Escapes are refused with a typed error.
+        let err = resolve(root, Path::new("../secrets")).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::PermissionDenied);
+        let err = resolve(root, Path::new("a/../../x")).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::PermissionDenied);
+    }
+}

@@ -1,0 +1,704 @@
+//! The ABHSF storage wire protocol: length-prefixed binary frames, one
+//! opcode per [`crate::vfs::Storage`] method, typed error frames and a
+//! versioned handshake.
+//!
+//! Every message is a *frame* — a little-endian `u32` byte length followed
+//! by that many payload bytes, capped at [`MAX_FRAME`] so a corrupt or
+//! hostile peer cannot force an unbounded allocation. A request frame is
+//! `[req_id: u64][opcode: u8][body]`; the matching reply is
+//! `[req_id: u64][status: u8][body]` where the status byte tags the reply
+//! shape ([`Reply`]) or, for [`ERR_STATUS`], a typed error frame
+//! `[kind: u8][len: u32][utf8 message]` whose kind code round-trips
+//! through [`std::io::ErrorKind`] (the vocabulary [`crate::vfs`] backends
+//! and the dataset layer's typed errors are built from: `NotFound` becomes
+//! `DatasetError::MissingFile`, `UnexpectedEof` a truncation, and so on).
+//!
+//! All requests are *stateless*: a read names its path, offset and length
+//! explicitly, so any request may be sent over any connection and — for
+//! idempotent operations — safely resent after a transport failure. The
+//! connection handshake (`hello`/`welcome`) pins the protocol version and
+//! carries the server's storage medium identity back to the client (see
+//! DESIGN.md §11 for the full format table and the retry policy).
+
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Handshake magic: both sides lead with it so a stray connection from a
+/// non-ABHSF peer fails fast instead of being misparsed as a frame.
+pub const HELLO_MAGIC: [u8; 4] = *b"ABnp";
+
+/// Protocol version. A server answers a mismatched client with its own
+/// version in the welcome (so the client can report *both* numbers) and
+/// closes the connection.
+pub const VERSION: u16 = 1;
+
+/// Hard cap on one frame's payload bytes. Whole-file operations
+/// (`ReadFile`/`WriteFile`, i.e. manifests) must fit in one frame;
+/// positioned reads are chunked client-side at [`MAX_READ`] and never
+/// approach it.
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// Largest single `ReadAt` the client issues; longer reads are split into
+/// consecutive requests so per-request buffers stay bounded.
+pub const MAX_READ: u32 = 8 * 1024 * 1024;
+
+/// Reply status byte marking a typed error frame.
+pub const ERR_STATUS: u8 = 0xff;
+
+// ---------------------------------------------------------------- frames
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() as u64 > MAX_FRAME as u64 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame of {} bytes exceeds MAX_FRAME {MAX_FRAME}", payload.len()),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr);
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("peer announced a {len}-byte frame (cap {MAX_FRAME})"),
+        ));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ------------------------------------------------------------- handshake
+
+/// Client hello: magic + version (+ reserved pad), 8 bytes.
+pub fn write_hello(w: &mut impl Write) -> io::Result<()> {
+    let mut msg = [0u8; 8];
+    msg[..4].copy_from_slice(&HELLO_MAGIC);
+    msg[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    w.write_all(&msg)?;
+    w.flush()
+}
+
+/// Server side: read the client hello, returning its protocol version.
+pub fn read_hello(r: &mut impl Read) -> io::Result<u16> {
+    let mut msg = [0u8; 8];
+    r.read_exact(&mut msg)?;
+    if msg[..4] != HELLO_MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "peer is not an ABHSF client (bad hello magic)",
+        ));
+    }
+    Ok(u16::from_le_bytes([msg[4], msg[5]]))
+}
+
+/// Server welcome: magic + version + reserved pad + storage medium
+/// identity, 16 bytes.
+pub fn write_welcome(w: &mut impl Write, medium: u64) -> io::Result<()> {
+    let mut msg = [0u8; 16];
+    msg[..4].copy_from_slice(&HELLO_MAGIC);
+    msg[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    msg[8..16].copy_from_slice(&medium.to_le_bytes());
+    w.write_all(&msg)?;
+    w.flush()
+}
+
+/// Client side: read the server welcome, returning `(version, medium)`.
+pub fn read_welcome(r: &mut impl Read) -> io::Result<(u16, u64)> {
+    let mut msg = [0u8; 16];
+    r.read_exact(&mut msg)?;
+    if msg[..4] != HELLO_MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "peer is not an ABHSF server (bad welcome magic)",
+        ));
+    }
+    let version = u16::from_le_bytes([msg[4], msg[5]]);
+    let medium = u64::from_le_bytes(msg[8..16].try_into().unwrap());
+    Ok((version, medium))
+}
+
+// ----------------------------------------------------- error-kind codes
+
+/// The `io::ErrorKind`s that cross the wire losslessly; anything else
+/// degrades to code 0 / `ErrorKind::Other` (the message still travels).
+const KIND_CODES: [(u8, io::ErrorKind); 10] = [
+    (1, io::ErrorKind::NotFound),
+    (2, io::ErrorKind::PermissionDenied),
+    (3, io::ErrorKind::UnexpectedEof),
+    (4, io::ErrorKind::InvalidInput),
+    (5, io::ErrorKind::InvalidData),
+    (6, io::ErrorKind::TimedOut),
+    (7, io::ErrorKind::AlreadyExists),
+    (8, io::ErrorKind::ConnectionRefused),
+    (9, io::ErrorKind::ConnectionReset),
+    (10, io::ErrorKind::Unsupported),
+];
+
+/// Wire code of an [`io::ErrorKind`].
+pub fn kind_to_code(kind: io::ErrorKind) -> u8 {
+    KIND_CODES
+        .iter()
+        .find(|(_, k)| *k == kind)
+        .map(|(c, _)| *c)
+        .unwrap_or(0)
+}
+
+/// [`io::ErrorKind`] of a wire code.
+pub fn code_to_kind(code: u8) -> io::ErrorKind {
+    KIND_CODES
+        .iter()
+        .find(|(c, _)| *c == code)
+        .map(|(_, k)| *k)
+        .unwrap_or(io::ErrorKind::Other)
+}
+
+// -------------------------------------------------------------- requests
+
+/// One storage request, mirroring the [`crate::vfs::Storage`] surface.
+/// Every variant is self-contained (stateless): there are no server-side
+/// open handles to leak or to desynchronize on reconnect.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Positioned read: `len` bytes at `offset` of `path`.
+    ReadAt {
+        /// File path (client namespace; the server confines it to its root).
+        path: PathBuf,
+        /// Byte offset.
+        offset: u64,
+        /// Bytes to read (errors if the file ends first, like
+        /// `read_exact_at`).
+        len: u32,
+    },
+    /// File length (`Storage::len`, also backing `Storage::open`'s
+    /// existence check).
+    Len {
+        /// File path.
+        path: PathBuf,
+    },
+    /// Directory listing (`Storage::list`).
+    List {
+        /// Directory path.
+        dir: PathBuf,
+    },
+    /// Whole small file read (`Storage::read_file`).
+    ReadFile {
+        /// File path.
+        path: PathBuf,
+    },
+    /// Atomic whole-file write (`Storage::write_file`; the server routes
+    /// it through the backend's temp+rename path, so it is idempotent).
+    WriteFile {
+        /// File path.
+        path: PathBuf,
+        /// Full new contents.
+        bytes: Vec<u8>,
+    },
+    /// Rename (`Storage::rename`) — the one non-idempotent mutation.
+    Rename {
+        /// Source path.
+        from: PathBuf,
+        /// Destination path.
+        to: PathBuf,
+    },
+    /// Recursive directory creation (`Storage::create_dir_all`).
+    CreateDirAll {
+        /// Directory path.
+        dir: PathBuf,
+    },
+    /// Canonical path identity (`Storage::canonical`).
+    Canonical {
+        /// Path to canonicalize.
+        path: PathBuf,
+    },
+    /// Liveness probe (no storage side effect).
+    Ping,
+}
+
+impl Request {
+    /// Wire opcode of this request.
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Request::ReadAt { .. } => 1,
+            Request::Len { .. } => 2,
+            Request::List { .. } => 3,
+            Request::ReadFile { .. } => 4,
+            Request::WriteFile { .. } => 5,
+            Request::Rename { .. } => 6,
+            Request::CreateDirAll { .. } => 7,
+            Request::Canonical { .. } => 8,
+            Request::Ping => 9,
+        }
+    }
+
+    /// Whether this request may be resent after a transport failure that
+    /// happened *after* the request hit the wire. Reads are pure;
+    /// `WriteFile` is an atomic whole-file replace (resending the same
+    /// bytes converges) and `CreateDirAll` is naturally idempotent. Only
+    /// `Rename` is excluded: a retry after a success that the client never
+    /// saw would find the source gone and report a spurious `NotFound`.
+    pub fn idempotent(&self) -> bool {
+        !matches!(self, Request::Rename { .. })
+    }
+
+    /// Encode as a request-frame payload.
+    pub fn encode(&self, req_id: u64) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(req_id);
+        e.u8(self.opcode());
+        match self {
+            Request::ReadAt { path, offset, len } => {
+                e.path(path);
+                e.u64(*offset);
+                e.u32(*len);
+            }
+            Request::Len { path }
+            | Request::ReadFile { path }
+            | Request::Canonical { path } => e.path(path),
+            Request::List { dir } | Request::CreateDirAll { dir } => e.path(dir),
+            Request::WriteFile { path, bytes } => {
+                e.path(path);
+                e.bytes(bytes);
+            }
+            Request::Rename { from, to } => {
+                e.path(from);
+                e.path(to);
+            }
+            Request::Ping => {}
+        }
+        e.0
+    }
+
+    /// Decode a request-frame payload into `(req_id, request)`.
+    pub fn decode(frame: &[u8]) -> io::Result<(u64, Request)> {
+        let mut d = Dec::new(frame);
+        let id = d.u64()?;
+        let op = d.u8()?;
+        let req = match op {
+            1 => Request::ReadAt {
+                path: d.path()?,
+                offset: d.u64()?,
+                len: d.u32()?,
+            },
+            2 => Request::Len { path: d.path()? },
+            3 => Request::List { dir: d.path()? },
+            4 => Request::ReadFile { path: d.path()? },
+            5 => Request::WriteFile {
+                path: d.path()?,
+                bytes: d.bytes()?,
+            },
+            6 => Request::Rename {
+                from: d.path()?,
+                to: d.path()?,
+            },
+            7 => Request::CreateDirAll { dir: d.path()? },
+            8 => Request::Canonical { path: d.path()? },
+            9 => Request::Ping,
+            other => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("unknown opcode {other}"),
+                ))
+            }
+        };
+        d.done()?;
+        Ok((id, req))
+    }
+}
+
+// --------------------------------------------------------------- replies
+
+/// A successful reply's payload shape, tagged by the status byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reply {
+    /// No payload (mutations, `Ping`).
+    Unit,
+    /// Raw bytes (`ReadAt`, `ReadFile`).
+    Bytes(Vec<u8>),
+    /// One number (`Len`).
+    Num(u64),
+    /// One path (`Canonical`).
+    Path(PathBuf),
+    /// Path list (`List`).
+    Paths(Vec<PathBuf>),
+}
+
+impl Reply {
+    fn status(&self) -> u8 {
+        match self {
+            Reply::Unit => 0,
+            Reply::Bytes(_) => 1,
+            Reply::Num(_) => 2,
+            Reply::Path(_) => 3,
+            Reply::Paths(_) => 4,
+        }
+    }
+
+    /// Expect the `Bytes` shape.
+    pub fn into_bytes(self) -> io::Result<Vec<u8>> {
+        match self {
+            Reply::Bytes(b) => Ok(b),
+            other => Err(shape_error("Bytes", &other)),
+        }
+    }
+
+    /// Expect the `Num` shape.
+    pub fn into_num(self) -> io::Result<u64> {
+        match self {
+            Reply::Num(n) => Ok(n),
+            other => Err(shape_error("Num", &other)),
+        }
+    }
+
+    /// Expect the `Unit` shape.
+    pub fn into_unit(self) -> io::Result<()> {
+        match self {
+            Reply::Unit => Ok(()),
+            other => Err(shape_error("Unit", &other)),
+        }
+    }
+
+    /// Expect the `Path` shape.
+    pub fn into_path(self) -> io::Result<PathBuf> {
+        match self {
+            Reply::Path(p) => Ok(p),
+            other => Err(shape_error("Path", &other)),
+        }
+    }
+
+    /// Expect the `Paths` shape.
+    pub fn into_paths(self) -> io::Result<Vec<PathBuf>> {
+        match self {
+            Reply::Paths(p) => Ok(p),
+            other => Err(shape_error("Paths", &other)),
+        }
+    }
+}
+
+fn shape_error(want: &str, got: &Reply) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::InvalidData,
+        format!("server replied with the wrong shape: wanted {want}, got {got:?}"),
+    )
+}
+
+/// A typed error carried in an error frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// Wire error-kind code (see [`code_to_kind`]).
+    pub code: u8,
+    /// Human-readable message from the server side.
+    pub message: String,
+}
+
+impl From<WireError> for io::Error {
+    fn from(e: WireError) -> Self {
+        io::Error::new(code_to_kind(e.code), format!("remote: {}", e.message))
+    }
+}
+
+/// Encode a successful reply-frame payload.
+pub fn encode_ok(req_id: u64, reply: &Reply) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(req_id);
+    e.u8(reply.status());
+    match reply {
+        Reply::Unit => {}
+        Reply::Bytes(b) => e.bytes(b),
+        Reply::Num(n) => e.u64(*n),
+        Reply::Path(p) => e.path(p),
+        Reply::Paths(ps) => {
+            e.u32(ps.len() as u32);
+            for p in ps {
+                e.path(p);
+            }
+        }
+    }
+    e.0
+}
+
+/// Encode a typed error reply-frame payload.
+pub fn encode_err(req_id: u64, kind: io::ErrorKind, message: &str) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(req_id);
+    e.u8(ERR_STATUS);
+    e.u8(kind_to_code(kind));
+    e.bytes(message.as_bytes());
+    e.0
+}
+
+/// Decode a reply-frame payload into `(req_id, Ok(reply) | Err(wire))`.
+pub fn decode_reply(frame: &[u8]) -> io::Result<(u64, Result<Reply, WireError>)> {
+    let mut d = Dec::new(frame);
+    let id = d.u64()?;
+    let status = d.u8()?;
+    let res = match status {
+        0 => Ok(Reply::Unit),
+        1 => Ok(Reply::Bytes(d.bytes()?)),
+        2 => Ok(Reply::Num(d.u64()?)),
+        3 => Ok(Reply::Path(d.path()?)),
+        4 => {
+            let n = d.u32()? as usize;
+            // Bound the allocation by the frame itself: each path costs
+            // at least its 4-byte length prefix.
+            if n > frame.len() / 4 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("path list of {n} entries exceeds the frame"),
+                ));
+            }
+            let mut ps = Vec::with_capacity(n);
+            for _ in 0..n {
+                ps.push(d.path()?);
+            }
+            Ok(Reply::Paths(ps))
+        }
+        ERR_STATUS => {
+            let code = d.u8()?;
+            let message = String::from_utf8_lossy(&d.bytes()?).into_owned();
+            Err(WireError { code, message })
+        }
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unknown reply status {other}"),
+            ))
+        }
+    };
+    d.done()?;
+    Ok((id, res))
+}
+
+// ------------------------------------------------------ encode / decode
+
+/// Little-endian append-only encoder. Paths travel as UTF-8 strings
+/// (`to_string_lossy`); non-UTF-8 paths are not supported on the wire.
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn new() -> Self {
+        Enc(Vec::with_capacity(64))
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.0.extend_from_slice(b);
+    }
+    fn path(&mut self, p: &Path) {
+        let s = p.to_string_lossy();
+        self.bytes(s.as_bytes());
+    }
+}
+
+/// Bounds-checked decoder over one frame.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "truncated frame",
+            ));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> io::Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn path(&mut self) -> io::Result<PathBuf> {
+        let b = self.bytes()?;
+        let s = String::from_utf8(b).map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 path on the wire")
+        })?;
+        Ok(PathBuf::from(s))
+    }
+
+    /// The frame must be fully consumed — trailing bytes mean a framing
+    /// bug or a version skew and must not pass silently.
+    fn done(&self) -> io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{} trailing bytes in frame", self.buf.len() - self.pos),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: Request) {
+        let frame = req.encode(77);
+        let (id, back) = Request::decode(&frame).unwrap();
+        assert_eq!(id, 77);
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_request(Request::ReadAt {
+            path: PathBuf::from("d/matrix-0.h5spm"),
+            offset: 4096,
+            len: 1 << 20,
+        });
+        roundtrip_request(Request::Len {
+            path: PathBuf::from("d/f"),
+        });
+        roundtrip_request(Request::List {
+            dir: PathBuf::from("d"),
+        });
+        roundtrip_request(Request::ReadFile {
+            path: PathBuf::from("d/dataset.json"),
+        });
+        roundtrip_request(Request::WriteFile {
+            path: PathBuf::from("d/dataset.json"),
+            bytes: b"{}".to_vec(),
+        });
+        roundtrip_request(Request::Rename {
+            from: PathBuf::from("a"),
+            to: PathBuf::from("b"),
+        });
+        roundtrip_request(Request::CreateDirAll {
+            dir: PathBuf::from("x/y"),
+        });
+        roundtrip_request(Request::Canonical {
+            path: PathBuf::from("x/../y"),
+        });
+        roundtrip_request(Request::Ping);
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        for reply in [
+            Reply::Unit,
+            Reply::Bytes(vec![1, 2, 3]),
+            Reply::Num(42),
+            Reply::Path(PathBuf::from("/a/b")),
+            Reply::Paths(vec![PathBuf::from("a"), PathBuf::from("b/c")]),
+        ] {
+            let frame = encode_ok(9, &reply);
+            let (id, res) = decode_reply(&frame).unwrap();
+            assert_eq!(id, 9);
+            assert_eq!(res.unwrap(), reply);
+        }
+    }
+
+    #[test]
+    fn error_frames_carry_kind_and_message() {
+        let frame = encode_err(3, io::ErrorKind::NotFound, "no such file: m.h5spm");
+        let (id, res) = decode_reply(&frame).unwrap();
+        assert_eq!(id, 3);
+        let wire = res.unwrap_err();
+        assert_eq!(code_to_kind(wire.code), io::ErrorKind::NotFound);
+        let io_err: io::Error = wire.into();
+        assert_eq!(io_err.kind(), io::ErrorKind::NotFound);
+        assert!(io_err.to_string().contains("m.h5spm"), "{io_err}");
+    }
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        use io::ErrorKind::*;
+        for kind in [
+            NotFound,
+            PermissionDenied,
+            UnexpectedEof,
+            InvalidInput,
+            InvalidData,
+            TimedOut,
+            AlreadyExists,
+            ConnectionRefused,
+            ConnectionReset,
+            Unsupported,
+        ] {
+            assert_eq!(code_to_kind(kind_to_code(kind)), kind);
+        }
+        // Unmapped kinds degrade to Other, never panic.
+        assert_eq!(code_to_kind(kind_to_code(io::ErrorKind::BrokenPipe)), io::ErrorKind::Other);
+    }
+
+    #[test]
+    fn frames_roundtrip_and_reject_oversize() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+        // An announced length beyond the cap is rejected before allocating.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let err = read_frame(&mut &huge[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn handshake_roundtrips_and_rejects_bad_magic() {
+        let mut buf = Vec::new();
+        write_hello(&mut buf).unwrap();
+        assert_eq!(read_hello(&mut &buf[..]).unwrap(), VERSION);
+
+        let mut buf = Vec::new();
+        write_welcome(&mut buf, 0xdead_beef).unwrap();
+        let (v, medium) = read_welcome(&mut &buf[..]).unwrap();
+        assert_eq!(v, VERSION);
+        assert_eq!(medium, 0xdead_beef);
+
+        let junk = [0u8; 16];
+        assert!(read_hello(&mut &junk[..8]).is_err());
+        assert!(read_welcome(&mut &junk[..]).is_err());
+    }
+
+    #[test]
+    fn truncated_and_trailing_frames_are_typed_errors() {
+        let frame = Request::Ping.encode(1);
+        assert!(Request::decode(&frame[..5]).is_err());
+        let mut trailing = frame.clone();
+        trailing.push(0);
+        assert!(Request::decode(&trailing).is_err());
+        assert!(Request::decode(&[]).is_err());
+    }
+}

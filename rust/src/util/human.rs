@@ -15,26 +15,66 @@ pub fn bytes(n: u64) -> String {
     format!("{v:.2} {}", UNITS[u])
 }
 
-/// Parse a human byte size: a plain number, or a number with a binary
-/// suffix — `KiB`/`MiB`/`GiB`/`TiB`, case-insensitive, with the `iB`/`B`
-/// tail optional and `KB`-style spellings accepted as their binary
-/// meaning (`64K`, `1m`, `2GiB`, `512kb` all parse). The inverse of
-/// [`bytes`] for CLI options like `serve --budget 1MiB`.
+/// Format a byte count as the shortest spelling [`parse_bytes`] maps back
+/// to *exactly* the same value — the lossless inverse (`1536` →
+/// `"1.5KiB"`, `1 << 20` → `"1MiB"`), where [`bytes`] is the lossy
+/// two-decimal display. Falls back to the plain decimal count whenever a
+/// unit spelling would be long or inexact (fraction beyond 4 digits, or
+/// values past 2^53 where `f64` stops being exact).
+pub fn format_bytes(n: u64) -> String {
+    const UNITS: [(&str, u32); 5] =
+        [("PiB", 50), ("TiB", 40), ("GiB", 30), ("MiB", 20), ("KiB", 10)];
+    if n >= (1u64 << 53) {
+        return n.to_string();
+    }
+    for (unit, shift) in UNITS {
+        let div = 1u64 << shift;
+        if n >= div {
+            // Exact: n < 2^53 is representable, and dividing by a power
+            // of two only shifts the exponent. `{v}` prints the shortest
+            // string that parses back to v.
+            let v = n as f64 / div as f64;
+            let s = format!("{v}");
+            let short = match s.find('.') {
+                Some(dot) => s.len() - dot - 1 <= 4,
+                None => true,
+            };
+            return if short { format!("{s}{unit}") } else { n.to_string() };
+        }
+    }
+    n.to_string()
+}
+
+/// Parse a human byte size: a plain number, or a (possibly fractional)
+/// number with a binary suffix — `KiB`/`MiB`/`GiB`/`TiB`/`PiB`,
+/// case-insensitive, with the `iB`/`B` tail optional and `KB`-style
+/// spellings accepted as their binary meaning (`64K`, `1m`, `1.5GiB`,
+/// `512kb` all parse). The inverse of [`format_bytes`] for CLI options
+/// like `serve --budget 1MiB`.
 pub fn parse_bytes(s: &str) -> Result<u64, String> {
     let t = s.trim();
     let split = t
         .find(|c: char| !(c.is_ascii_digit() || c == '.'))
         .unwrap_or(t.len());
     let (num, suffix) = t.split_at(split);
+    let suffix = suffix.trim().to_ascii_lowercase();
+    // Suffixless integers (and plain `B`) parse as u64 directly, staying
+    // exact beyond 2^53 where the f64 path would round.
+    if (suffix.is_empty() || suffix == "b") && !num.contains('.') {
+        return num
+            .parse()
+            .map_err(|_| format!("unparsable byte count {s:?}"));
+    }
     let value: f64 = num
         .parse()
         .map_err(|_| format!("unparsable byte count {s:?}"))?;
-    let mult: f64 = match suffix.trim().to_ascii_lowercase().as_str() {
+    let mult: f64 = match suffix.as_str() {
         "" | "b" => 1.0,
         "k" | "kib" | "kb" => 1024.0,
         "m" | "mib" | "mb" => 1024.0 * 1024.0,
         "g" | "gib" | "gb" => 1024.0 * 1024.0 * 1024.0,
         "t" | "tib" | "tb" => 1024.0 * 1024.0 * 1024.0 * 1024.0,
+        "p" | "pib" | "pb" => 1024.0 * 1024.0 * 1024.0 * 1024.0 * 1024.0,
         other => return Err(format!("unknown byte suffix {other:?} in {s:?}")),
     };
     Ok((value * mult) as u64)
@@ -81,10 +121,56 @@ mod tests {
         assert_eq!(parse_bytes("1TiB").unwrap(), 1u64 << 40);
         assert_eq!(parse_bytes(" 1.5 MiB ").unwrap(), 3 << 19);
         assert_eq!(parse_bytes("100B").unwrap(), 100);
+        assert_eq!(parse_bytes("1.5GiB").unwrap(), 3u64 << 29);
+        assert_eq!(parse_bytes("0.5k").unwrap(), 512);
+        assert_eq!(parse_bytes("2PiB").unwrap(), 2u64 << 50);
+        assert_eq!(parse_bytes("1pb").unwrap(), 1u64 << 50);
+        // Suffixless integers stay exact even past 2^53.
+        assert_eq!(parse_bytes("18446744073709551615").unwrap(), u64::MAX);
         assert!(parse_bytes("").is_err());
         assert!(parse_bytes("MiB").is_err());
         assert!(parse_bytes("10x").is_err());
         assert!(parse_bytes("-5").is_err());
+    }
+
+    #[test]
+    fn format_bytes_picks_exact_spellings() {
+        assert_eq!(format_bytes(0), "0");
+        assert_eq!(format_bytes(1023), "1023");
+        assert_eq!(format_bytes(1024), "1KiB");
+        assert_eq!(format_bytes(1536), "1.5KiB");
+        assert_eq!(format_bytes(1 << 20), "1MiB");
+        assert_eq!(format_bytes(3 << 19), "1.5MiB");
+        assert_eq!(format_bytes(5 << 30), "5GiB");
+        assert_eq!(format_bytes(1 << 50), "1PiB");
+        // A fraction longer than 4 digits falls back to plain decimal.
+        assert_eq!(format_bytes(1025), "1025");
+        assert_eq!(format_bytes((1 << 20) + 1), "1048577");
+    }
+
+    /// The satellite property: `parse_bytes(format_bytes(n)) == n` for
+    /// every u64 — spot-checked over a seeded mix of raw values, unit
+    /// multiples and small counts.
+    #[test]
+    fn format_bytes_roundtrips_through_parse_bytes() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0x5eed);
+        for i in 0..4000u64 {
+            let n = match i % 4 {
+                // Raw values across all magnitudes (incl. >= 2^53).
+                0 => rng.next_u64() >> (rng.next_u64() % 64),
+                // Exact unit multiples: the cases that format with a suffix.
+                1 => (rng.next_u64() % (1 << 20)) << (10 * (rng.next_u64() % 6)),
+                // Small counts.
+                2 => rng.next_u64() % 4096,
+                _ => rng.next_u64(),
+            };
+            let s = format_bytes(n);
+            assert_eq!(parse_bytes(&s).unwrap(), n, "{n} -> {s:?}");
+        }
+        for n in [0, 1, 1023, 1024, 1025, u64::MAX, 1 << 53, (1 << 53) - 1] {
+            assert_eq!(parse_bytes(&format_bytes(n)).unwrap(), n);
+        }
     }
 
     #[test]

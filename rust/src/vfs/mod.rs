@@ -19,9 +19,14 @@
 //!   optionally sleeps) the [`crate::parfs::FsModel`] latency/bandwidth
 //!   costs of every operation and injects storage faults (missing files,
 //!   truncated reads, failed writes) so error paths are testable without
-//!   hand-corrupting files on disk.
+//!   hand-corrupting files on disk;
+//! * [`RemoteFs`] — a TCP client to the `pallas-served` storage daemon
+//!   ([`crate::net`]): the same trait surface spoken over a wire protocol
+//!   with retries, backoff and typed error frames, so store/load/repack
+//!   run against a dataset that lives on another machine.
 //!
-//! See DESIGN.md §9 for the trait contract and the backend matrix.
+//! See DESIGN.md §9 for the trait contract and the backend matrix, and
+//! §11 for the network tier.
 
 pub mod local;
 pub mod mem;
@@ -30,6 +35,8 @@ pub mod sim;
 pub use local::LocalFs;
 pub use mem::MemFs;
 pub use sim::{FaultSpec, SimFs};
+
+pub use crate::net::RemoteFs;
 
 use std::io;
 use std::path::{Component, Path, PathBuf};

@@ -29,10 +29,57 @@ fn help_lists_subcommands() {
         "repack",
         "spmv",
         "serve",
+        "served",
         "fig1",
+        "remote:HOST:PORT",
     ] {
         assert!(out.contains(sub), "help missing {sub}");
     }
+}
+
+/// An unknown `--backend` is a *usage* mistake: exit code 2 with the
+/// usage text, like an unknown subcommand — not a panic, not a generic
+/// runtime error.
+#[test]
+fn unknown_backend_is_usage_error() {
+    let out = bin()
+        .args(["load", "--dir", "/nonexistent", "--backend", "floppy"])
+        .output()
+        .unwrap();
+    assert_eq!(
+        out.status.code(),
+        Some(2),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("Usage:"), "no usage text:\n{stdout}");
+    assert!(stderr.contains("usage error"), "{stderr}");
+    assert!(stderr.contains("floppy"), "{stderr}");
+}
+
+/// A malformed `--fault` spec likewise exits 2 with usage, naming the
+/// bad spec.
+#[test]
+fn malformed_fault_spec_is_usage_error() {
+    let out = bin()
+        .args([
+            "load", "--dir", "/nonexistent", "--backend", "sim", "--fault", "explode:matrix-0",
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(
+        out.status.code(),
+        Some(2),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("Usage:"), "no usage text:\n{stdout}");
+    assert!(stderr.contains("usage error"), "{stderr}");
+    assert!(stderr.contains("fault"), "{stderr}");
 }
 
 #[test]

@@ -1,0 +1,395 @@
+//! Network-layer integration: a `pallas-served` daemon in front of any
+//! VFS backend must be behaviorally transparent to the whole coordinator
+//! stack — element-identical loads through [`RemoteFs`], typed
+//! [`DatasetError`]s (never hangs) when the daemon dies mid-load, bounded
+//! retries that absorb transient connection drops, and clean fault
+//! propagation when the daemon's *own* backend is a fault-injecting
+//! [`SimFs`] (the N-daemon × M-client simulation story of DESIGN.md §11).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use abhsf::coordinator::{Cluster, Dataset, DatasetError, InMemFormat, LoadedMatrix, StoreOptions};
+use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::mapping::{Colwise, ProcessMapping, Rowwise};
+use abhsf::net::{serve, wire, RemoteFs, RetryPolicy, ServeOptions, ServerHandle};
+use abhsf::parfs::FsModel;
+use abhsf::vfs::{FaultSpec, MemFs, SimFs, Storage};
+
+const P: usize = 3;
+const DIR: &str = "/net-test/matrix";
+
+/// Store a small matrix on a fresh MemFs (same workload as the vfs
+/// suite); returns the backing map so tests can serve it.
+fn mem_dataset() -> MemFs {
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 11), 2));
+    let n = gen.dim();
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, P));
+    let cluster = Cluster::new(P, 64);
+    let mem = MemFs::new();
+    let (_, report) = Dataset::store_on(
+        Arc::new(mem.clone()),
+        &cluster,
+        &gen,
+        &mapping,
+        DIR,
+        StoreOptions {
+            block_size: 8,
+            chunk_elems: 256,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(report.total_nnz() > 0);
+    mem
+}
+
+/// Serve `backend` on an ephemeral port with the whole namespace exposed
+/// (root `/`), so client paths and server paths coincide.
+fn serve_root(backend: Arc<dyn Storage>, opts: ServeOptions) -> ServerHandle {
+    serve(
+        backend,
+        "127.0.0.1:0",
+        ServeOptions {
+            root: "/".into(),
+            ..opts
+        },
+    )
+    .unwrap()
+}
+
+/// A retry policy tight enough for tests: failures resolve in well under
+/// a second instead of the production multi-second budget.
+fn fast_policy() -> RetryPolicy {
+    RetryPolicy {
+        max_retries: 4,
+        base_backoff: Duration::from_millis(10),
+        max_backoff: Duration::from_millis(100),
+        connect_timeout: Duration::from_millis(500),
+        io_timeout: Duration::from_secs(5),
+    }
+}
+
+fn client(h: &ServerHandle) -> RemoteFs {
+    RemoteFs::connect_with(&h.addr().to_string(), fast_policy()).unwrap()
+}
+
+fn collect(mats: &[LoadedMatrix]) -> Vec<(u64, u64, f64)> {
+    let mut out = Vec::new();
+    for lm in mats {
+        let coo = lm.clone().into_coo();
+        let (ro, co) = (coo.info.m_offset, coo.info.n_offset);
+        for (i, j, v) in coo.iter() {
+            out.push((i + ro, j + co, v));
+        }
+    }
+    out.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    out
+}
+
+fn load_coo(dataset: &Dataset, cluster: &Cluster) -> Vec<(u64, u64, f64)> {
+    let (mats, _) = dataset
+        .load()
+        .format(InMemFormat::Coo)
+        .run(cluster)
+        .unwrap();
+    collect(&mats)
+}
+
+// ------------------------------------------------------------- contract
+
+/// The full `Storage` surface works over the wire against a mem-backed
+/// daemon: files written through the client are readable both ways,
+/// positional reads see patched bytes, list/rename behave, and a missing
+/// file is a typed `NotFound` — with the daemon's request counter moving.
+#[test]
+fn remote_storage_contract_over_mem_daemon() {
+    let mem = MemFs::new();
+    let mut h = serve_root(Arc::new(mem.clone()), ServeOptions::default());
+    let fs = client(&h);
+    assert_eq!(fs.label(), "remote");
+    let dir = Path::new("/contract");
+    fs.create_dir_all(dir).unwrap();
+
+    // Whole-file write/read, visible to the daemon's inner backend.
+    fs.write_file(&dir.join("a.bin"), b"hello world").unwrap();
+    assert_eq!(fs.read_file(&dir.join("a.bin")).unwrap(), b"hello world");
+    assert_eq!(fs.len(&dir.join("a.bin")).unwrap(), 11);
+    assert_eq!(mem.read_file(&dir.join("a.bin")).unwrap(), b"hello world");
+
+    // Streaming writer: append + back-patch + sync, then positional reads.
+    let mut w = fs.create(&dir.join("b.bin")).unwrap();
+    w.append(&[0u8; 8]).unwrap();
+    w.patch_at(0, &1234u64.to_le_bytes()).unwrap();
+    w.append(b"tail").unwrap();
+    w.sync().unwrap();
+    drop(w);
+    let f = fs.open(&dir.join("b.bin")).unwrap();
+    assert_eq!(f.len().unwrap(), 12);
+    let mut head = [0u8; 8];
+    f.read_exact_at(0, &mut head).unwrap();
+    assert_eq!(u64::from_le_bytes(head), 1234);
+    let mut tail = [0u8; 4];
+    f.read_exact_at(8, &mut tail).unwrap();
+    assert_eq!(&tail, b"tail");
+
+    // Listing comes back in the client's namespace.
+    let mut names = fs.list(dir).unwrap();
+    names.sort();
+    assert_eq!(names, vec![dir.join("a.bin"), dir.join("b.bin")]);
+
+    // Rename moves the bytes and vacates the source.
+    fs.rename(&dir.join("a.bin"), &dir.join("c.bin")).unwrap();
+    assert!(fs.read_file(&dir.join("a.bin")).is_err());
+    assert_eq!(fs.read_file(&dir.join("c.bin")).unwrap(), b"hello world");
+
+    // Canonical identity is stable under lexical noise (resolved
+    // server-side, so every client agrees).
+    assert_eq!(
+        fs.canonical(&dir.join("sub").join("..").join("c.bin")),
+        fs.canonical(&dir.join("c.bin")),
+    );
+
+    // Absent file: a typed NotFound, not a hang or an opaque failure.
+    let err = fs.open(Path::new("/contract/missing.bin")).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::NotFound, "{err}");
+
+    let stats = fs.stats();
+    assert!(stats.requests > 0, "{stats}");
+    assert!(h.requests_served() > 0);
+    assert_eq!(stats.retries, 0, "healthy daemon should need no retries");
+    h.shutdown();
+}
+
+// --------------------------------------------------------- differential
+
+/// The acceptance scenario: a dataset stored on the *local filesystem*
+/// and served by the daemon loads element-identically through
+/// [`RemoteFs`] — same-config fast path and a different-configuration
+/// (new mapping, new process count) load both match direct local loads.
+#[test]
+fn remote_load_matches_local_loads() {
+    let gen = Arc::new(KroneckerGen::new(SeedMatrix::cage_like(8, 11), 2));
+    let n = gen.dim();
+    let mapping: Arc<dyn ProcessMapping> = Arc::new(Rowwise::regular(n, n, P));
+    let cluster = Cluster::new(P, 64);
+    let dir = std::env::temp_dir().join(format!("abhsf-net-diff-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (local_ds, _) = Dataset::store(
+        &cluster,
+        &gen,
+        &mapping,
+        &dir,
+        StoreOptions {
+            block_size: 8,
+            chunk_elems: 256,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let mut h = serve_root(abhsf::vfs::local(), ServeOptions::default());
+    let fs = client(&h);
+    let remote_ds = Dataset::open_on(Arc::new(fs.clone()), &dir).unwrap();
+    assert_eq!(remote_ds.manifest(), local_ds.manifest());
+
+    // Same configuration (stored mapping, stored process count).
+    let same_cluster = Cluster::new(P, 8);
+    assert_eq!(
+        load_coo(&remote_ds, &same_cluster),
+        load_coo(&local_ds, &same_cluster),
+        "same-config remote load diverged",
+    );
+
+    // Different configuration: colwise mapping on two processes forces
+    // the pruned/exchange machinery through the network client.
+    let remap: Arc<dyn ProcessMapping> = Arc::new(Colwise::regular(n, n, 2));
+    let two = Cluster::new(2, 8);
+    let (remote_mats, _) = remote_ds
+        .load()
+        .mapping(&remap)
+        .format(InMemFormat::Coo)
+        .run(&two)
+        .unwrap();
+    let (local_mats, _) = local_ds
+        .load()
+        .mapping(&remap)
+        .format(InMemFormat::Coo)
+        .run(&two)
+        .unwrap();
+    assert_eq!(
+        collect(&remote_mats),
+        collect(&local_mats),
+        "different-config remote load diverged",
+    );
+
+    let stats = fs.stats();
+    assert!(stats.requests > 0, "{stats}");
+    h.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------- failures
+
+/// Killing the daemon between open and load surfaces as a *typed*
+/// [`DatasetError`] within the retry budget — never a hang, never a
+/// panic. The load runs on a watchdog thread so a regression toward
+/// hanging fails the test instead of wedging the suite.
+#[test]
+fn daemon_kill_mid_load_is_typed_error_not_hang() {
+    let mem = mem_dataset();
+    let mut h = serve_root(Arc::new(mem.clone()), ServeOptions::default());
+    let policy = RetryPolicy {
+        max_retries: 2,
+        base_backoff: Duration::from_millis(10),
+        max_backoff: Duration::from_millis(50),
+        connect_timeout: Duration::from_millis(250),
+        io_timeout: Duration::from_secs(1),
+    };
+    let fs = RemoteFs::connect_with(&h.addr().to_string(), policy).unwrap();
+    let dataset = Dataset::open_on(Arc::new(fs), DIR).unwrap();
+
+    // Daemon dies; every pooled connection is now dead and redials are
+    // refused.
+    h.shutdown();
+
+    let (tx, rx) = mpsc::channel();
+    thread::spawn(move || {
+        let cluster = Cluster::new(P, 8);
+        let verdict = match dataset.load().format(InMemFormat::Coo).run(&cluster) {
+            Ok(_) => None,
+            Err(e) => Some((
+                matches!(
+                    e,
+                    DatasetError::Internal(_) | DatasetError::MissingFile { .. }
+                ),
+                e.to_string(),
+            )),
+        };
+        let _ = tx.send(verdict);
+    });
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(Some((typed, msg))) => assert!(typed, "untyped error after daemon kill: {msg}"),
+        Ok(None) => panic!("load succeeded against a dead daemon"),
+        Err(_) => panic!("load hung after daemon kill instead of erroring"),
+    }
+}
+
+/// Transient connection drops (the daemon hangs up before every Nth
+/// request) are absorbed by bounded retry-with-backoff: the load still
+/// succeeds element-identically and the client counted its retries and
+/// reconnects.
+#[test]
+fn transient_drops_are_retried_to_success() {
+    let mem = mem_dataset();
+    let direct = Dataset::open_on(Arc::new(mem.clone()), DIR).unwrap();
+    let cluster = Cluster::new(P, 8);
+    let want = load_coo(&direct, &cluster);
+
+    let mut h = serve_root(
+        Arc::new(mem.clone()),
+        ServeOptions {
+            drop_every: 4,
+            ..Default::default()
+        },
+    );
+    let fs = client(&h);
+    let dataset = Dataset::open_on(Arc::new(fs.clone()), DIR).unwrap();
+    assert_eq!(load_coo(&dataset, &cluster), want, "retried load diverged");
+
+    let stats = fs.stats();
+    assert!(stats.retries >= 1, "no retries counted: {stats}");
+    assert!(stats.reconnects >= 1, "no reconnects counted: {stats}");
+    h.shutdown();
+}
+
+/// A fault injected *behind* the daemon (SimFs missing-file on the
+/// daemon's own backend) crosses the wire as the same typed error a
+/// local load would see: `DatasetError::MissingFile` naming the absent
+/// container — the single-daemon cell of the N-daemon × M-client
+/// simulation story.
+#[test]
+fn sim_fault_behind_daemon_propagates_typed() {
+    let mem = mem_dataset();
+    let sim = Arc::new(
+        SimFs::new(Arc::new(mem.clone()), FsModel::local_nvme())
+            .faults(FaultSpec::parse("missing:matrix-1").unwrap()),
+    );
+    let mut h = serve_root(sim, ServeOptions::default());
+    let fs = client(&h);
+    let dataset = Dataset::open_on(Arc::new(fs), DIR).unwrap();
+    let cluster = Cluster::new(P, 8);
+    let err = dataset
+        .load()
+        .format(InMemFormat::Coo)
+        .run(&cluster)
+        .expect_err("missing container behind the daemon must fail the load");
+    match err {
+        DatasetError::MissingFile { path, source } => {
+            assert!(path.ends_with("matrix-1.h5spm"), "{}", path.display());
+            assert_eq!(source.kind(), std::io::ErrorKind::NotFound, "{source}");
+        }
+        other => panic!("expected MissingFile, got {other}"),
+    }
+    h.shutdown();
+}
+
+// ----------------------------------------------------------- concurrency
+
+/// Several clients hammer one daemon concurrently and every one of them
+/// decodes the identical element set.
+#[test]
+fn concurrent_clients_agree() {
+    let mem = mem_dataset();
+    let direct = Dataset::open_on(Arc::new(mem.clone()), DIR).unwrap();
+    let want = load_coo(&direct, &Cluster::new(P, 8));
+
+    let mut h = serve_root(Arc::new(mem.clone()), ServeOptions::default());
+    let addr = h.addr().to_string();
+    let workers: Vec<_> = (0..4)
+        .map(|_| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let fs = RemoteFs::connect_with(&addr, fast_policy()).unwrap();
+                let dataset = Dataset::open_on(Arc::new(fs), DIR).unwrap();
+                load_coo(&dataset, &Cluster::new(P, 8))
+            })
+        })
+        .collect();
+    for (i, w) in workers.into_iter().enumerate() {
+        assert_eq!(w.join().unwrap(), want, "client {i} diverged");
+    }
+    h.shutdown();
+}
+
+// -------------------------------------------------------------- protocol
+
+/// A client speaking the wrong protocol version gets the server's
+/// version in the welcome (so it can report both numbers) and a clean
+/// close — no bytes interpreted under the wrong framing.
+#[test]
+fn version_mismatch_is_welcome_then_close() {
+    let mut h = serve_root(Arc::new(MemFs::new()), ServeOptions::default());
+    let mut sock = TcpStream::connect(h.addr()).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // Hand-rolled hello claiming a future version 99.
+    let mut hello = [0u8; 8];
+    hello[..4].copy_from_slice(&wire::HELLO_MAGIC);
+    hello[4..6].copy_from_slice(&99u16.to_le_bytes());
+    sock.write_all(&hello).unwrap();
+
+    let (version, _medium) = wire::read_welcome(&mut sock).unwrap();
+    assert_eq!(version, wire::VERSION, "welcome must carry the server version");
+    let mut probe = [0u8; 1];
+    assert_eq!(
+        sock.read(&mut probe).unwrap(),
+        0,
+        "server must hang up after a version mismatch"
+    );
+    h.shutdown();
+}
