@@ -1,0 +1,169 @@
+//! Bench: per-scheme block SpMV kernel calibration.
+//!
+//! Times `spmv_block_into` on seeded random blocks across block sizes
+//! `s` and fills ζ for every scheme, fits the affine per-block cost
+//! `base_ps + per_elem_ps·ζ` per (s, scheme), and persists the result as
+//! `BENCH_kernels.json` — the measured cost table `abhsf store
+//! --calibrate` and `CostModel::from_measurements` consume, so adaptive
+//! scheme selection can minimize kernel time on *this* machine instead
+//! of stored bytes.
+//!
+//! Run: `cargo bench --bench kernels` (`--json PATH` to override the
+//! output path). `abhsf calibrate` pretty-prints the resulting decision
+//! maps against the analytic model.
+
+use std::collections::BTreeMap;
+
+use abhsf::abhsf::load::DecodedBlock;
+use abhsf::abhsf::{CostModel, MeasuredCosts, Scheme};
+use abhsf::spmv::kernels::spmv_block_into;
+use abhsf::util::bench::{fmt_rate, fmt_time, Bencher, Table};
+use abhsf::util::json::Json;
+use abhsf::util::rng::Xoshiro256;
+
+/// `--json PATH` from the bench's argv (cargo passes through everything
+/// after `--`); the results file is always written.
+fn json_path() -> String {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_kernels.json".to_string())
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// A seeded random `s × s` block with exactly `zeta` nonzeros, encoded
+/// under `scheme`.
+fn random_block(rng: &mut Xoshiro256, scheme: Scheme, s: u64, zeta: u64) -> DecodedBlock {
+    let mut cells = rng.sample_indices((s * s) as usize, zeta as usize);
+    cells.sort_unstable();
+    let elems: Vec<(u16, u16, f64)> = cells
+        .into_iter()
+        .map(|cell| {
+            let (lr, lc) = ((cell as u64 / s) as u16, (cell as u64 % s) as u16);
+            (lr, lc, rng.range_f64(0.5, 1.5))
+        })
+        .collect();
+    DecodedBlock::build(scheme, 0, 0, s, &elems).expect("random block is well-formed")
+}
+
+/// Fill grid for one block size: from a single element to completely
+/// full, dense enough that the affine fit sees both regimes.
+fn fills(s: u64) -> Vec<u64> {
+    let cells = s * s;
+    let mut out = vec![
+        1,
+        s,
+        cells / 8,
+        cells / 4,
+        cells / 2,
+        cells * 3 / 4,
+        cells,
+    ];
+    out.retain(|&z| z >= 1);
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== Per-scheme block kernel calibration ==\n");
+    let block_sizes = [8u64, 16, 32, 64];
+    let b = Bencher::quick();
+    let mut rng = Xoshiro256::seed_from_u64(0xB10C);
+
+    let mut table = Table::new(&["s", "scheme", "zeta", "t/block", "rate"]);
+    // (s, scheme, zeta, seconds-per-block) samples for the affine fit.
+    let mut samples: Vec<(u64, Scheme, u64, f64)> = Vec::new();
+    let mut json_rows = Vec::new();
+    for &s in &block_sizes {
+        let x: Vec<f64> = (0..s).map(|i| 1.0 + (i % 7) as f64 * 0.25).collect();
+        let mut y = vec![0.0f64; s as usize];
+        for scheme in Scheme::ALL {
+            for &zeta in &fills(s) {
+                let block = random_block(&mut rng, scheme, s, zeta);
+                // Batch enough kernel calls per timed sample that the
+                // clock overhead vanishes even for near-empty blocks.
+                let reps = (16_384 / zeta.max(1)).clamp(8, 4096);
+                let label = format!("{}-s{s}-z{zeta}", scheme.name());
+                let m = b.run(&label, || {
+                    for _ in 0..reps {
+                        spmv_block_into(std::hint::black_box(&block), &x, &mut y);
+                    }
+                    std::hint::black_box(&mut y);
+                });
+                let secs = m.mean_s() / reps as f64;
+                samples.push((s, scheme, zeta, secs));
+                table.row(&[
+                    s.to_string(),
+                    scheme.name().to_string(),
+                    zeta.to_string(),
+                    fmt_time(secs),
+                    fmt_rate(zeta as f64 / secs, "elem"),
+                ]);
+                json_rows.push(obj(vec![
+                    ("s", Json::num(s)),
+                    ("scheme", Json::str(scheme.name())),
+                    ("zeta", Json::num(zeta)),
+                    ("ps_per_block", Json::num((secs * 1e12).round() as u64)),
+                ]));
+            }
+        }
+    }
+    table.print();
+
+    let fitted = MeasuredCosts::fit(&samples)
+        .map_err(|e| anyhow::anyhow!("fitting measured cost table: {e}"))?;
+    println!("\nfitted table: {}", fitted.label());
+    let analytic = CostModel::default();
+    let measured = CostModel::from_measurements(fitted.clone());
+    for &s in &block_sizes {
+        let cells = s * s;
+        let flips = (1..=cells)
+            .filter(|&z| measured.choose(s, z) != analytic.choose(s, z))
+            .count();
+        println!(
+            "s={s}: measured table flips {flips} of {cells} scheme decisions \
+             ({:.1}%) vs analytic",
+            flips as f64 * 100.0 / cells as f64
+        );
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::str("kernels")),
+        (
+            "note",
+            Json::str(
+                "per-block SpMV kernel cost, fitted as base_ps + per_elem_ps*zeta \
+                 per (s, scheme); consumed by `abhsf store --calibrate` / \
+                 CostModel::from_measurements",
+            ),
+        ),
+        (
+            "grid",
+            obj(vec![
+                ("block_sizes", Json::arr_u64(&block_sizes)),
+                (
+                    "fills",
+                    Json::str("1, s, s^2/8, s^2/4, s^2/2, 3s^2/4, s^2 (deduped)"),
+                ),
+            ]),
+        ),
+        ("measurements", Json::Arr(json_rows)),
+        ("table", fitted.to_json()),
+    ]);
+    let path = json_path();
+    std::fs::write(&path, format!("{doc}\n"))
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(())
+}

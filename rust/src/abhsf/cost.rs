@@ -1,14 +1,31 @@
-//! Space cost model and adaptive scheme selection (Langr et al. [5]).
+//! Cost model and adaptive scheme selection (Langr et al. [5]).
 //!
-//! For each nonzero block the builder picks the scheme minimizing stored
-//! bytes. The model mirrors the *exact* byte layout this crate writes (u16
-//! in-block indexes, u32 per-block row pointers, f64 values, LSB-packed
-//! bitmap), so the adaptive choice literally minimizes file size.
+//! For each nonzero block the builder picks the scheme minimizing cost.
+//! Two cost definitions coexist behind one [`CostModel::block_cost`]:
+//!
+//! * **Analytic** (the default): stored *bytes*, mirroring the exact byte
+//!   layout this crate writes (u16 in-block indexes, u32 per-block row
+//!   pointers, f64 values, LSB-packed bitmap) — the adaptive choice
+//!   literally minimizes file size.
+//! * **Measured**: per-block SpMV *time* from a calibration run of the
+//!   `kernels` bench (`BENCH_kernels.json`), attached via
+//!   [`CostModel::from_measurements`] — the choice then minimizes kernel
+//!   latency on the hardware that produced the table.
+//!
+//! The two are never mixed: a model either carries a [`MeasuredCosts`]
+//! table (and every cost is picoseconds) or it does not (and every cost
+//! is bytes). [`CostModel::choose`] is the argmin of `block_cost` either
+//! way, so downstream invariants (ties toward the lower tag, monotone
+//! fill regions for the analytic model) are stated once.
+
+use std::sync::Arc;
 
 use crate::abhsf::Scheme;
+use crate::util::json::Json;
 
-/// Byte widths of the on-disk representation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Scheme-selection cost model: analytic byte widths plus an optional
+/// measured kernel-cost table that, when present, takes precedence.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CostModel {
     /// Bytes per in-block row/column index (COO lrows/lcols, CSR lcolinds).
     pub idx_bytes: u64,
@@ -16,6 +33,8 @@ pub struct CostModel {
     pub val_bytes: u64,
     /// Bytes per CSR in-block row pointer.
     pub rowptr_bytes: u64,
+    /// Calibrated per-scheme kernel costs; `None` selects by bytes.
+    pub measured: Option<Arc<MeasuredCosts>>,
 }
 
 impl Default for CostModel {
@@ -24,22 +43,54 @@ impl Default for CostModel {
             idx_bytes: 2,
             val_bytes: 8,
             rowptr_bytes: 4,
+            measured: None,
         }
     }
 }
 
 impl CostModel {
+    /// A purely analytic model with explicit byte widths (test hook for
+    /// forcing a particular scheme to win).
+    pub fn analytic(idx_bytes: u64, val_bytes: u64, rowptr_bytes: u64) -> Self {
+        Self {
+            idx_bytes,
+            val_bytes,
+            rowptr_bytes,
+            measured: None,
+        }
+    }
+
+    /// Default byte widths plus a measured kernel-cost table; `choose`
+    /// then minimizes calibrated SpMV time instead of stored bytes.
+    pub fn from_measurements(table: MeasuredCosts) -> Self {
+        Self {
+            measured: Some(Arc::new(table)),
+            ..Self::default()
+        }
+    }
+
     /// Storage cost in bytes of one `s × s` block holding `zeta` nonzeros
-    /// under `scheme`. Excludes the per-block descriptor overhead
-    /// (scheme tag, zeta, brow, bcol), which is identical for all schemes
-    /// and therefore irrelevant to the choice.
-    pub fn block_cost(&self, scheme: Scheme, s: u64, zeta: u64) -> u64 {
+    /// under `scheme`, ignoring any measured table. Excludes the per-block
+    /// descriptor overhead (scheme tag, zeta, brow, bcol), which is
+    /// identical for all schemes and therefore irrelevant to the choice.
+    pub fn analytic_cost(&self, scheme: Scheme, s: u64, zeta: u64) -> u64 {
         debug_assert!(zeta <= s * s, "zeta {zeta} exceeds s^2 {}", s * s);
         match scheme {
             Scheme::Coo => zeta * (2 * self.idx_bytes + self.val_bytes),
             Scheme::Csr => zeta * (self.idx_bytes + self.val_bytes) + (s + 1) * self.rowptr_bytes,
             Scheme::Bitmap => (s * s).div_ceil(8) + zeta * self.val_bytes,
             Scheme::Dense => s * s * self.val_bytes,
+        }
+    }
+
+    /// Cost of one block under `scheme`: calibrated picoseconds when a
+    /// measured table is attached, stored bytes otherwise. Only relative
+    /// order matters to [`choose`](Self::choose), so the unit switch is
+    /// safe — but absolute values must never be compared across models.
+    pub fn block_cost(&self, scheme: Scheme, s: u64, zeta: u64) -> u64 {
+        match &self.measured {
+            Some(table) => table.cost_ps(scheme, s, zeta),
+            None => self.analytic_cost(scheme, s, zeta),
         }
     }
 
@@ -57,14 +108,232 @@ impl CostModel {
         }
         best
     }
+
+    /// Which table chose the schemes — recorded in the dataset manifest
+    /// so a stored layout can be traced back to its calibration.
+    pub fn table_id(&self) -> String {
+        match &self.measured {
+            Some(table) => table.label(),
+            None => "analytic".to_string(),
+        }
+    }
 }
 
-/// Cost of one block under the default model.
+/// One calibrated (block size, scheme) entry: affine per-block kernel
+/// cost `base_ps + per_elem_ps · ζ`, in integer picoseconds.
+///
+/// The affine form is deliberate: the lower envelope of affine functions
+/// of ζ gives each scheme one contiguous winning interval, so measured
+/// crossover points are monotone in ζ by construction — the same
+/// structural property the analytic byte model has.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeasuredEntry {
+    /// Calibrated block size.
+    pub s: u64,
+    /// Scheme this entry prices.
+    pub scheme: Scheme,
+    /// Fixed per-block cost (dispatch, pointer walks), picoseconds.
+    pub base_ps: u64,
+    /// Marginal cost per nonzero, picoseconds.
+    pub per_elem_ps: u64,
+}
+
+/// A calibration table: per-scheme affine kernel costs for a set of
+/// measured block sizes, as produced by `cargo bench --bench kernels`
+/// (persisted in `BENCH_kernels.json`) and consumed by
+/// [`CostModel::from_measurements`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MeasuredCosts {
+    /// Sorted by (s, scheme tag); every block size carries all 4 schemes.
+    entries: Vec<MeasuredEntry>,
+}
+
+impl MeasuredCosts {
+    /// Validate and normalize a set of entries: at least one block size,
+    /// and for every present block size exactly one entry per scheme.
+    pub fn new(mut entries: Vec<MeasuredEntry>) -> Result<Self, String> {
+        if entries.is_empty() {
+            return Err("measured cost table is empty".to_string());
+        }
+        entries.sort_by_key(|e| (e.s, e.scheme as u8));
+        for pair in entries.windows(2) {
+            if pair[0].s == pair[1].s && pair[0].scheme == pair[1].scheme {
+                return Err(format!(
+                    "duplicate entry for s={} scheme={}",
+                    pair[0].s,
+                    pair[0].scheme.name()
+                ));
+            }
+        }
+        for chunk in entries.chunks(Scheme::ALL.len()) {
+            let s = chunk[0].s;
+            if s == 0 {
+                return Err("calibrated block size 0".to_string());
+            }
+            let complete = chunk.len() == Scheme::ALL.len()
+                && chunk.iter().all(|e| e.s == s)
+                && chunk
+                    .iter()
+                    .zip(Scheme::ALL)
+                    .all(|(e, scheme)| e.scheme == scheme);
+            if !complete {
+                return Err(format!("block size {s} is missing scheme entries"));
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    /// The calibrated entries, sorted by (s, scheme tag).
+    pub fn entries(&self) -> &[MeasuredEntry] {
+        &self.entries
+    }
+
+    /// Calibrated block sizes, ascending.
+    pub fn block_sizes(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = self.entries.iter().map(|e| e.s).collect();
+        out.dedup();
+        out
+    }
+
+    /// Kernel cost of one block in picoseconds. A block size that was not
+    /// calibrated uses the nearest calibrated size (ties toward the
+    /// smaller), so the table generalizes to any store configuration.
+    pub fn cost_ps(&self, scheme: Scheme, s: u64, zeta: u64) -> u64 {
+        let nearest = self
+            .block_sizes()
+            .into_iter()
+            .min_by_key(|&cal| (cal.abs_diff(s), cal))
+            .expect("table is never empty");
+        let e = self
+            .entries
+            .iter()
+            .find(|e| e.s == nearest && e.scheme == scheme)
+            .expect("every calibrated s carries all schemes");
+        e.base_ps.saturating_add(e.per_elem_ps.saturating_mul(zeta))
+    }
+
+    /// Short identifier, e.g. `measured(s=8,16,32,64)`.
+    pub fn label(&self) -> String {
+        let sizes: Vec<String> = self.block_sizes().iter().map(|s| s.to_string()).collect();
+        format!("measured(s={})", sizes.join(","))
+    }
+
+    /// Serialize as the JSON table embedded in `BENCH_kernels.json`:
+    /// `{"entries": [{"s":…, "scheme":"COO", "base_ps":…, "per_elem_ps":…}, …]}`.
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut obj = std::collections::BTreeMap::new();
+                obj.insert("s".to_string(), Json::num(e.s));
+                obj.insert("scheme".to_string(), Json::str(e.scheme.name()));
+                obj.insert("base_ps".to_string(), Json::num(e.base_ps));
+                obj.insert("per_elem_ps".to_string(), Json::num(e.per_elem_ps));
+                Json::Obj(obj)
+            })
+            .collect();
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("entries".to_string(), Json::Arr(entries));
+        Json::Obj(obj)
+    }
+
+    /// Parse the table produced by [`to_json`](Self::to_json). Also
+    /// accepts a whole `BENCH_kernels.json` document (looks up its
+    /// `"table"` field first).
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let table = v.get("table").unwrap_or(v);
+        let entries = table
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("measured cost table: missing entries[]")?;
+        let mut out = Vec::with_capacity(entries.len());
+        for e in entries {
+            let s = e
+                .get("s")
+                .and_then(Json::as_u64)
+                .ok_or("table entry: missing s")?;
+            let name = e
+                .get("scheme")
+                .and_then(Json::as_str)
+                .ok_or("table entry: missing scheme")?;
+            let scheme = Scheme::ALL
+                .into_iter()
+                .find(|sch| sch.name() == name)
+                .ok_or_else(|| format!("table entry: unknown scheme {name:?}"))?;
+            let base_ps = e
+                .get("base_ps")
+                .and_then(Json::as_u64)
+                .ok_or("table entry: missing base_ps")?;
+            let per_elem_ps = e
+                .get("per_elem_ps")
+                .and_then(Json::as_u64)
+                .ok_or("table entry: missing per_elem_ps")?;
+            out.push(MeasuredEntry {
+                s,
+                scheme,
+                base_ps,
+                per_elem_ps,
+            });
+        }
+        Self::new(out)
+    }
+
+    /// Least-squares affine fit per (s, scheme) from raw bench samples
+    /// `(s, scheme, zeta, seconds-per-block)`; negative fitted
+    /// coefficients are clamped to zero (they arise from measurement
+    /// noise at tiny ζ, never from real kernels).
+    pub fn fit(samples: &[(u64, Scheme, u64, f64)]) -> Result<Self, String> {
+        let mut keys: Vec<(u64, Scheme)> = samples.iter().map(|&(s, sch, _, _)| (s, sch)).collect();
+        keys.sort_by_key(|&(s, sch)| (s, sch as u8));
+        keys.dedup();
+        let mut entries = Vec::with_capacity(keys.len());
+        for (s, scheme) in keys {
+            let pts: Vec<(f64, f64)> = samples
+                .iter()
+                .filter(|&&(ps, psch, _, _)| ps == s && psch == scheme)
+                .map(|&(_, _, zeta, secs)| (zeta as f64, secs * 1e12))
+                .collect();
+            let (base_ps, per_elem_ps) = affine_fit(&pts);
+            entries.push(MeasuredEntry {
+                s,
+                scheme,
+                base_ps: base_ps.max(0.0).round() as u64,
+                per_elem_ps: per_elem_ps.max(0.0).round() as u64,
+            });
+        }
+        Self::new(entries)
+    }
+}
+
+/// Ordinary least squares `y ≈ a + b·x` over the given points; a single
+/// point degenerates to `(y, 0)`.
+fn affine_fit(pts: &[(f64, f64)]) -> (f64, f64) {
+    let n = pts.len() as f64;
+    if pts.is_empty() {
+        return (0.0, 0.0);
+    }
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < f64::EPSILON {
+        return (sy / n, 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Cost of one block under the default analytic model. Always bytes —
+/// the byte-accounting paths (`BlockDirectory::payload_bytes`, pruning
+/// I/O estimates) use this regardless of any calibration.
 pub fn scheme_cost(scheme: Scheme, s: u64, zeta: u64) -> u64 {
-    CostModel::default().block_cost(scheme, s, zeta)
+    CostModel::default().analytic_cost(scheme, s, zeta)
 }
 
-/// Adaptive scheme choice under the default model.
+/// Adaptive scheme choice under the default analytic model.
 pub fn choose_scheme(s: u64, zeta: u64) -> Scheme {
     CostModel::default().choose(s, zeta)
 }
@@ -155,5 +424,105 @@ mod tests {
             stage = next;
         }
         assert_eq!(stage, 2);
+    }
+
+    /// A synthetic but plausible table: COO cheapest per element, dense
+    /// cheapest per block once fill is high, bitmap in between.
+    pub(crate) fn sample_table(s: u64) -> MeasuredCosts {
+        MeasuredCosts::new(
+            Scheme::ALL
+                .into_iter()
+                .map(|scheme| {
+                    let (base_ps, per_elem_ps) = match scheme {
+                        Scheme::Coo => (500, 900),
+                        Scheme::Csr => (900, 700),
+                        Scheme::Bitmap => (1200, 500),
+                        Scheme::Dense => (300 * s, 150),
+                    };
+                    MeasuredEntry {
+                        s,
+                        scheme,
+                        base_ps,
+                        per_elem_ps,
+                    }
+                })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn measured_table_drives_choose() {
+        let s = 16u64;
+        let model = CostModel::from_measurements(sample_table(s));
+        for zeta in 1..=s * s {
+            let chosen = model.choose(s, zeta);
+            let cmin = Scheme::ALL
+                .iter()
+                .map(|&sch| model.block_cost(sch, s, zeta))
+                .min()
+                .unwrap();
+            assert_eq!(model.block_cost(chosen, s, zeta), cmin);
+        }
+        // Affine envelope: per-element order COO < bitmap makes COO win
+        // sparse blocks, bitmap's lower slope wins mid fill.
+        assert_eq!(model.choose(s, 1), Scheme::Coo);
+    }
+
+    #[test]
+    fn measured_costs_reject_incomplete_tables() {
+        assert!(MeasuredCosts::new(Vec::new()).is_err());
+        let mut entries = sample_table(8).entries().to_vec();
+        entries.pop();
+        assert!(MeasuredCosts::new(entries).is_err());
+        let mut dup = sample_table(8).entries().to_vec();
+        dup.push(dup[0]);
+        assert!(MeasuredCosts::new(dup).is_err());
+    }
+
+    #[test]
+    fn nearest_block_size_interpolation() {
+        let mut entries = sample_table(8).entries().to_vec();
+        entries.extend(sample_table(64).entries().iter().copied());
+        let t = MeasuredCosts::new(entries).unwrap();
+        assert_eq!(t.block_sizes(), vec![8, 64]);
+        // s=16 maps to calibrated 8; s=36 ties 8 vs 64 and takes the smaller.
+        assert_eq!(t.cost_ps(Scheme::Coo, 16, 3), t.cost_ps(Scheme::Coo, 8, 3));
+        assert_eq!(t.cost_ps(Scheme::Coo, 36, 3), t.cost_ps(Scheme::Coo, 8, 3));
+        assert_eq!(
+            t.cost_ps(Scheme::Coo, 37, 3),
+            t.cost_ps(Scheme::Coo, 64, 3)
+        );
+    }
+
+    #[test]
+    fn affine_fit_recovers_exact_line() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|x| (x as f64, 3.0 + 2.0 * x as f64)).collect();
+        let (a, b) = affine_fit(&pts);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_builds_table_from_samples() {
+        let mut samples = Vec::new();
+        for scheme in Scheme::ALL {
+            for zeta in [1u64, 8, 32, 64] {
+                // 1 ns base + 0.5 ns per element, scheme-independent.
+                samples.push((8u64, scheme, zeta, 1e-9 + 0.5e-9 * zeta as f64));
+            }
+        }
+        let t = MeasuredCosts::fit(&samples).unwrap();
+        for e in t.entries() {
+            assert!((e.base_ps as i64 - 1000).abs() <= 1, "{e:?}");
+            assert!((e.per_elem_ps as i64 - 500).abs() <= 1, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn table_id_labels() {
+        assert_eq!(CostModel::default().table_id(), "analytic");
+        let model = CostModel::from_measurements(sample_table(8));
+        assert_eq!(model.table_id(), "measured(s=8)");
     }
 }

@@ -295,11 +295,7 @@ mod tests {
         coo.push(0, 1, 1.0);
         coo.push(0, 3, 2.0);
         coo.push(2, 0, 3.0);
-        let model = CostModel {
-            idx_bytes: 2,
-            val_bytes: 8,
-            rowptr_bytes: 0,
-        };
+        let model = CostModel::analytic(2, 8, 0);
         let data = AbhsfData::from_coo(&coo, s, &model).unwrap();
         assert_eq!(data.schemes, vec![Scheme::Csr as u8]);
         let mut want_ptrs = vec![0u32, 2, 2];
@@ -320,11 +316,7 @@ mod tests {
             coo.push(i, i, i as f64 + 1.0);
             coo.push(i, (i + 1) % 4, -(i as f64) - 1.0);
         }
-        let model = CostModel {
-            idx_bytes: 1000,
-            val_bytes: 8,
-            rowptr_bytes: 1000,
-        };
+        let model = CostModel::analytic(1000, 8, 1000);
         let data = AbhsfData::from_coo(&coo, s, &model).unwrap();
         assert_eq!(data.schemes, vec![Scheme::Bitmap as u8]);
         assert_eq!(data.bitmap_bitmap.len(), 2); // ceil(16/8)

@@ -801,6 +801,378 @@ pub(crate) fn default_batch_bytes(r: &H5Reader) -> u64 {
     batch_bytes
 }
 
+/// Placement and size of one decoded block, shared by every
+/// [`DecodedBlock`] variant. Coordinates are **global**: `row0`/`col0`
+/// already include the owning file's submatrix offset, so a block can be
+/// executed (or expanded) without any reference back to its file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockGeom {
+    /// Global row of the block's first cell.
+    pub row0: u64,
+    /// Global column of the block's first cell.
+    pub col0: u64,
+    /// Block size `s` (edge blocks keep the nominal `s`; their unused
+    /// cells are simply never populated).
+    pub s: u64,
+    /// Nonzeros in the block.
+    pub zeta: u64,
+}
+
+/// One ABHSF block decoded into its **scheme-native payload** — the
+/// kernel-ready shape the decoded-block cache stores and the per-scheme
+/// SpMV kernels (`crate::spmv::kernels`) consume directly, with no
+/// expansion to `(row, col, val)` triplets.
+///
+/// The payload layouts mirror the on-disk datasets exactly
+/// (`AbhsfData::encode_block`): validated constructors reject the same
+/// corruptions the streaming decoders do, so a `DecodedBlock` is always
+/// internally consistent (`geom.zeta` matches the payload).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DecodedBlock {
+    /// COO payload: `zeta` parallel block-local triplets, in stored
+    /// order (the builder writes them row-major).
+    Coo {
+        /// Placement and size.
+        geom: BlockGeom,
+        /// Block-local row per nonzero.
+        lrows: Vec<u16>,
+        /// Block-local column per nonzero.
+        lcols: Vec<u16>,
+        /// Values, parallel to `lrows`/`lcols`.
+        vals: Vec<f64>,
+    },
+    /// CSR-in-block payload: `s + 1` block-relative row pointers
+    /// (starting at 0) over column indexes and values.
+    CsrInBlock {
+        /// Placement and size.
+        geom: BlockGeom,
+        /// Block-relative row pointers, `s + 1` entries.
+        rowptrs: Vec<u32>,
+        /// Block-local column per nonzero, row-major.
+        lcolinds: Vec<u16>,
+        /// Values, parallel to `lcolinds`.
+        vals: Vec<f64>,
+    },
+    /// Bitmap payload: `⌈s²/8⌉` LSB-first occupancy bytes plus one value
+    /// per set bit, in row-major cell order.
+    Bitmap {
+        /// Placement and size.
+        geom: BlockGeom,
+        /// Packed occupancy bitmap, bit `lr·s + lc` LSB-first.
+        bits: Vec<u8>,
+        /// Values of the set cells, row-major.
+        vals: Vec<f64>,
+    },
+    /// Dense payload: all `s²` values row-major, zeros included.
+    Dense {
+        /// Placement and size.
+        geom: BlockGeom,
+        /// Row-major cell values, `s²` entries.
+        vals: Vec<f64>,
+    },
+}
+
+impl DecodedBlock {
+    /// Validated COO block; `zeta` is the triplet count.
+    pub fn coo(
+        row0: u64,
+        col0: u64,
+        s: u64,
+        lrows: Vec<u16>,
+        lcols: Vec<u16>,
+        vals: Vec<f64>,
+    ) -> Result<Self> {
+        if lrows.len() != vals.len() || lcols.len() != vals.len() {
+            return Err(AbhsfError::Invalid(format!(
+                "COO block: triplet arrays disagree ({}/{}/{})",
+                lrows.len(),
+                lcols.len(),
+                vals.len()
+            )));
+        }
+        if let Some(&bad) = lrows.iter().chain(&lcols).find(|&&i| i as u64 >= s) {
+            return Err(AbhsfError::Invalid(format!(
+                "COO block: in-block index {bad} beyond block size {s}"
+            )));
+        }
+        let geom = BlockGeom {
+            row0,
+            col0,
+            s,
+            zeta: vals.len() as u64,
+        };
+        Ok(DecodedBlock::Coo {
+            geom,
+            lrows,
+            lcols,
+            vals,
+        })
+    }
+
+    /// Validated CSR-in-block; `rowptrs` must hold `s + 1` monotone
+    /// block-relative pointers covering `lcolinds`/`vals` exactly.
+    pub fn csr(
+        row0: u64,
+        col0: u64,
+        s: u64,
+        rowptrs: Vec<u32>,
+        lcolinds: Vec<u16>,
+        vals: Vec<f64>,
+    ) -> Result<Self> {
+        let total = rowptrs.last().copied().unwrap_or(0) as u64;
+        if rowptrs.len() as u64 != s + 1 || rowptrs[0] != 0 {
+            return Err(AbhsfError::Invalid(format!(
+                "CSR block: {} row pointers for block size {s}",
+                rowptrs.len()
+            )));
+        }
+        if rowptrs.windows(2).any(|w| w[1] < w[0]) {
+            return Err(AbhsfError::Invalid(
+                "CSR block: non-monotone row pointers".into(),
+            ));
+        }
+        if total != lcolinds.len() as u64 || total != vals.len() as u64 {
+            return Err(AbhsfError::Invalid(format!(
+                "CSR block: row pointers imply {total} elements, payload has {}",
+                vals.len()
+            )));
+        }
+        if let Some(&bad) = lcolinds.iter().find(|&&c| c as u64 >= s) {
+            return Err(AbhsfError::Invalid(format!(
+                "CSR block: in-block column {bad} beyond block size {s}"
+            )));
+        }
+        let geom = BlockGeom {
+            row0,
+            col0,
+            s,
+            zeta: total,
+        };
+        Ok(DecodedBlock::CsrInBlock {
+            geom,
+            rowptrs,
+            lcolinds,
+            vals,
+        })
+    }
+
+    /// Validated bitmap block; the popcount of `bits` must equal
+    /// `vals.len()` and no bit may be set at or beyond `s²`.
+    pub fn bitmap(row0: u64, col0: u64, s: u64, bits: Vec<u8>, vals: Vec<f64>) -> Result<Self> {
+        let cells = s * s;
+        if bits.len() as u64 != cells.div_ceil(8) {
+            return Err(AbhsfError::Invalid(format!(
+                "bitmap block: {} occupancy bytes for block size {s}",
+                bits.len()
+            )));
+        }
+        let pop: u64 = bits.iter().map(|b| b.count_ones() as u64).sum();
+        if pop != vals.len() as u64 {
+            return Err(AbhsfError::Invalid(format!(
+                "bitmap block: {pop} set bits, {} values",
+                vals.len()
+            )));
+        }
+        for (bi, &byte) in bits.iter().enumerate() {
+            let mut rest = byte;
+            while rest != 0 {
+                let cell = (bi * 8) as u64 + rest.trailing_zeros() as u64;
+                if cell >= cells {
+                    return Err(AbhsfError::Invalid(
+                        "bitmap block: bit set beyond s*s".into(),
+                    ));
+                }
+                rest &= rest - 1;
+            }
+        }
+        let geom = BlockGeom {
+            row0,
+            col0,
+            s,
+            zeta: pop,
+        };
+        Ok(DecodedBlock::Bitmap { geom, bits, vals })
+    }
+
+    /// Validated dense block; `zeta` is the count of nonzero cells.
+    pub fn dense(row0: u64, col0: u64, s: u64, vals: Vec<f64>) -> Result<Self> {
+        if vals.len() as u64 != s * s {
+            return Err(AbhsfError::Invalid(format!(
+                "dense block: {} values for block size {s}",
+                vals.len()
+            )));
+        }
+        let zeta = vals.iter().filter(|&&v| v != 0.0).count() as u64;
+        let geom = BlockGeom {
+            row0,
+            col0,
+            s,
+            zeta,
+        };
+        Ok(DecodedBlock::Dense { geom, vals })
+    }
+
+    /// Build a block under `scheme` from block-local `(lr, lc, val)`
+    /// elements (row-major sorted, no duplicates) — the encode side of
+    /// the payload layouts, for tests and the calibration bench.
+    pub fn build(
+        scheme: Scheme,
+        row0: u64,
+        col0: u64,
+        s: u64,
+        elems: &[(u16, u16, f64)],
+    ) -> Result<Self> {
+        for pair in elems.windows(2) {
+            if (pair[1].0, pair[1].1) <= (pair[0].0, pair[0].1) {
+                return Err(AbhsfError::Invalid(
+                    "build: elements not strictly row-major sorted".into(),
+                ));
+            }
+        }
+        match scheme {
+            Scheme::Coo => Self::coo(
+                row0,
+                col0,
+                s,
+                elems.iter().map(|e| e.0).collect(),
+                elems.iter().map(|e| e.1).collect(),
+                elems.iter().map(|e| e.2).collect(),
+            ),
+            Scheme::Csr => {
+                let mut rowptrs = Vec::with_capacity(s as usize + 1);
+                rowptrs.push(0u32);
+                let mut k = 0usize;
+                for lr in 0..s {
+                    while k < elems.len() && (elems[k].0 as u64) == lr {
+                        k += 1;
+                    }
+                    rowptrs.push(k as u32);
+                }
+                Self::csr(
+                    row0,
+                    col0,
+                    s,
+                    rowptrs,
+                    elems.iter().map(|e| e.1).collect(),
+                    elems.iter().map(|e| e.2).collect(),
+                )
+            }
+            Scheme::Bitmap => {
+                let mut bits = vec![0u8; ((s * s).div_ceil(8)) as usize];
+                for &(lr, lc, _) in elems {
+                    let cell = lr as u64 * s + lc as u64;
+                    bits[(cell / 8) as usize] |= 1 << (cell % 8);
+                }
+                Self::bitmap(row0, col0, s, bits, elems.iter().map(|e| e.2).collect())
+            }
+            Scheme::Dense => {
+                let mut vals = vec![0.0f64; (s * s) as usize];
+                for &(lr, lc, v) in elems {
+                    vals[(lr as u64 * s + lc as u64) as usize] = v;
+                }
+                Self::dense(row0, col0, s, vals)
+            }
+        }
+    }
+
+    /// Placement and size.
+    pub fn geom(&self) -> BlockGeom {
+        match self {
+            DecodedBlock::Coo { geom, .. }
+            | DecodedBlock::CsrInBlock { geom, .. }
+            | DecodedBlock::Bitmap { geom, .. }
+            | DecodedBlock::Dense { geom, .. } => *geom,
+        }
+    }
+
+    /// The block's storage scheme.
+    pub fn scheme(&self) -> Scheme {
+        match self {
+            DecodedBlock::Coo { .. } => Scheme::Coo,
+            DecodedBlock::CsrInBlock { .. } => Scheme::Csr,
+            DecodedBlock::Bitmap { .. } => Scheme::Bitmap,
+            DecodedBlock::Dense { .. } => Scheme::Dense,
+        }
+    }
+
+    /// Nonzeros in the block.
+    pub fn zeta(&self) -> u64 {
+        self.geom().zeta
+    }
+
+    /// In-memory payload bytes of the scheme-native representation —
+    /// what the decoded-block cache charges against its budget (plus its
+    /// fixed per-block overhead). Equals the on-disk payload size under
+    /// the default byte widths; crucially **not** 24·ζ triplet bytes.
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            DecodedBlock::Coo { vals, .. } => vals.len() as u64 * (2 * 2 + 8),
+            DecodedBlock::CsrInBlock { rowptrs, vals, .. } => {
+                rowptrs.len() as u64 * 4 + vals.len() as u64 * (2 + 8)
+            }
+            DecodedBlock::Bitmap { bits, vals, .. } => bits.len() as u64 + vals.len() as u64 * 8,
+            DecodedBlock::Dense { vals, .. } => vals.len() as u64 * 8,
+        }
+    }
+
+    /// Visit every nonzero as `(row, col, val)` in **global**
+    /// coordinates, in the scheme's natural (row-major) decode order —
+    /// exactly the element stream the triplet decoders emit for the same
+    /// stored block.
+    pub fn for_each_element<F: FnMut(u64, u64, f64)>(&self, mut f: F) {
+        let g = self.geom();
+        match self {
+            DecodedBlock::Coo {
+                lrows, lcols, vals, ..
+            } => {
+                for ((&lr, &lc), &v) in lrows.iter().zip(lcols).zip(vals) {
+                    f(g.row0 + lr as u64, g.col0 + lc as u64, v);
+                }
+            }
+            DecodedBlock::CsrInBlock {
+                rowptrs,
+                lcolinds,
+                vals,
+                ..
+            } => {
+                for lr in 0..g.s as usize {
+                    for e in rowptrs[lr] as usize..rowptrs[lr + 1] as usize {
+                        f(g.row0 + lr as u64, g.col0 + lcolinds[e] as u64, vals[e]);
+                    }
+                }
+            }
+            DecodedBlock::Bitmap { bits, vals, .. } => {
+                let mut next = 0usize;
+                for (bi, &byte) in bits.iter().enumerate() {
+                    let mut rest = byte;
+                    while rest != 0 {
+                        let cell = (bi * 8) as u64 + rest.trailing_zeros() as u64;
+                        f(g.row0 + cell / g.s, g.col0 + cell % g.s, vals[next]);
+                        next += 1;
+                        rest &= rest - 1;
+                    }
+                }
+            }
+            DecodedBlock::Dense { vals, .. } => {
+                for (cell, &v) in vals.iter().enumerate() {
+                    if v != 0.0 {
+                        f(g.row0 + cell as u64 / g.s, g.col0 + cell as u64 % g.s, v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The block's nonzeros as owned global triplets (test/debug helper;
+    /// the hot paths use [`for_each_element`](Self::for_each_element) or
+    /// the per-scheme kernels and never materialize this).
+    pub fn elements(&self) -> Vec<(u64, u64, f64)> {
+        let mut out = Vec::with_capacity(self.zeta() as usize);
+        self.for_each_element(|i, j, v| out.push((i, j, v)));
+        out
+    }
+}
+
 /// Fetch and decode the directory entries at `indices` (strictly
 /// ascending positions into `dir.entries`) through the double-buffered
 /// read-ahead pipeline, calling `sink(k, elements)` for each block in
@@ -836,6 +1208,30 @@ pub(crate) fn fetch_blocks_batched<F>(
 ) -> Result<u64>
 where
     F: FnMut(usize, &[(u64, u64, f64)]),
+{
+    let mut global: Vec<(u64, u64, f64)> = Vec::new();
+    fetch_decoded_blocks_batched(r, dir, indices, batch_bytes, |k, block| {
+        global.clear();
+        block.for_each_element(|i, j, v| global.push((i, j, v)));
+        sink(k, &global);
+    })
+}
+
+/// Like [`fetch_blocks`], but hand each block to `sink` in its
+/// **scheme-native decoded form** ([`DecodedBlock`], owned) instead of
+/// expanding to triplets — the serving layer's cache-miss path publishes
+/// these directly, so a cached block's footprint stays at its compact
+/// payload size. Triplet consumers ([`fetch_blocks`], the pruned loader)
+/// wrap this and expand per block.
+pub fn fetch_decoded_blocks_batched<F>(
+    r: &H5Reader,
+    dir: &BlockDirectory,
+    indices: &[usize],
+    batch_bytes: u64,
+    mut sink: F,
+) -> Result<u64>
+where
+    F: FnMut(usize, DecodedBlock),
 {
     if indices.is_empty() {
         return Ok(0);
@@ -904,83 +1300,75 @@ where
     }
 
     // Pass 2: the background fetcher streams the requested ranges batch
-    // by batch while this thread decodes the previous batch.
+    // by batch while this thread decodes the previous batch. Each block
+    // is decoded straight into its scheme-native [`DecodedBlock`] — the
+    // bulk `decode_slice` copies are the only per-byte work; no triplet
+    // materialization happens here.
     let mut total = 0u64;
     let mut stream = r.prefetch(&PAYLOAD_DATASETS, batches)?;
-    let mut buf: Vec<Element> = Vec::new();
-    let mut global: Vec<(u64, u64, f64)> = Vec::new();
     let mut block_cursor = 0usize;
     for &nblocks in &blocks_per_batch {
-        let batch = stream.next(r)?.ok_or_else(|| {
+        let mut batch = stream.next(r)?.ok_or_else(|| {
             AbhsfError::Invalid("read-ahead stream ended before the last batch".into())
         })?;
         let (mut ci, mut ri, mut bi, mut di) = (0usize, 0usize, 0usize, 0usize);
         for &k in &indices[block_cursor..block_cursor + nblocks] {
             let e = dir.entries[k];
-            buf.clear();
-            match e.scheme {
+            let (row0, col0) = (ro + e.brow * s, co + e.bcol * s);
+            let block = match e.scheme {
                 Scheme::Coo => {
-                    decode_coo_block(
-                        &decode_slice::<u16>(&batch.data[0][ci]),
-                        &decode_slice::<u16>(&batch.data[1][ci]),
-                        &decode_slice::<f64>(&batch.data[2][ci]),
-                        e.brow,
-                        e.bcol,
+                    let b = DecodedBlock::coo(
+                        row0,
+                        col0,
                         s,
-                        &mut buf,
-                    );
+                        decode_slice::<u16>(&batch.data[0][ci]),
+                        decode_slice::<u16>(&batch.data[1][ci]),
+                        decode_slice::<f64>(&batch.data[2][ci]),
+                    )?;
                     ci += 1;
+                    b
                 }
                 Scheme::Csr => {
-                    decode_csr_block(
-                        &decode_slice::<u32>(&batch.data[3][ri]),
-                        &decode_slice::<u16>(&batch.data[4][ri]),
-                        &decode_slice::<f64>(&batch.data[5][ri]),
-                        e.zeta,
-                        e.brow,
-                        e.bcol,
+                    let b = DecodedBlock::csr(
+                        row0,
+                        col0,
                         s,
-                        &mut buf,
+                        decode_slice::<u32>(&batch.data[3][ri]),
+                        decode_slice::<u16>(&batch.data[4][ri]),
+                        decode_slice::<f64>(&batch.data[5][ri]),
                     )?;
                     ri += 1;
+                    b
                 }
                 Scheme::Bitmap => {
-                    decode_bitmap_block(
-                        &batch.data[6][bi],
-                        &decode_slice::<f64>(&batch.data[7][bi]),
-                        e.zeta,
-                        e.brow,
-                        e.bcol,
+                    let b = DecodedBlock::bitmap(
+                        row0,
+                        col0,
                         s,
-                        &mut buf,
+                        std::mem::take(&mut batch.data[6][bi]),
+                        decode_slice::<f64>(&batch.data[7][bi]),
                     )?;
                     bi += 1;
+                    b
                 }
                 Scheme::Dense => {
-                    decode_dense_block(
-                        &decode_slice::<f64>(&batch.data[8][di]),
-                        e.zeta,
-                        e.brow,
-                        e.bcol,
-                        s,
-                        &mut buf,
-                    )?;
+                    let b =
+                        DecodedBlock::dense(row0, col0, s, decode_slice::<f64>(&batch.data[8][di]))?;
                     di += 1;
+                    b
                 }
-            }
-            if buf.len() as u64 != e.zeta {
+            };
+            if block.zeta() != e.zeta {
                 return Err(AbhsfError::Invalid(format!(
                     "block ({},{}): decoded {} elements, zeta {}",
                     e.brow,
                     e.bcol,
-                    buf.len(),
+                    block.zeta(),
                     e.zeta
                 )));
             }
             total += e.zeta;
-            global.clear();
-            global.extend(buf.iter().map(|el| (el.row + ro, el.col + co, el.val)));
-            sink(k, &global);
+            sink(k, block);
         }
         block_cursor += nblocks;
     }
@@ -1216,10 +1604,10 @@ mod tests {
         // roundtrip for each.
         let coo = random_coo(23, 32, 32, 512, (0, 0)); // 50% fill
         for (scheme, model) in [
-            (Scheme::Coo, CostModel { idx_bytes: 0, val_bytes: 0, rowptr_bytes: 9999 }),
-            (Scheme::Csr, CostModel { idx_bytes: 0, val_bytes: 0, rowptr_bytes: 0 }),
-            (Scheme::Bitmap, CostModel { idx_bytes: 9999, val_bytes: 0, rowptr_bytes: 9999 }),
-            (Scheme::Dense, CostModel { idx_bytes: 9999, val_bytes: 0, rowptr_bytes: 9999 }),
+            (Scheme::Coo, CostModel::analytic(0, 0, 9999)),
+            (Scheme::Csr, CostModel::analytic(0, 0, 0)),
+            (Scheme::Bitmap, CostModel::analytic(9999, 0, 9999)),
+            (Scheme::Dense, CostModel::analytic(9999, 0, 9999)),
         ] {
             // For bitmap-vs-dense the tie depends on fill; just assert the
             // roundtrip and that the intended scheme family dominates.

@@ -29,11 +29,11 @@ pub mod stats;
 pub mod store;
 
 pub use block::{partition_into_blocks, Block};
-pub use cost::{choose_scheme, scheme_cost, CostModel};
+pub use cost::{choose_scheme, scheme_cost, CostModel, MeasuredCosts, MeasuredEntry};
 pub use data::AbhsfData;
 pub use load::{
-    fetch_blocks, load_coo, load_csr, visit_elements, visit_elements_pruned, BlockDirectory,
-    BlockEntry, PruneStats,
+    fetch_blocks, fetch_decoded_blocks_batched, load_coo, load_csr, visit_elements,
+    visit_elements_pruned, BlockDirectory, BlockEntry, BlockGeom, DecodedBlock, PruneStats,
 };
 pub use rebucket::{rebucket_into_abhsf, Rebucketer};
 pub use store::{matrix_file_path, store_data};

@@ -4,19 +4,23 @@
 //! Every load path before this module was one-shot batch: each
 //! [`LoadPlan`](crate::coordinator::LoadPlan) re-reads and re-decodes
 //! every surviving ABHSF block, even when the same dataset is queried
-//! repeatedly. A [`BlockCache`] keeps *decoded* block triplets resident
-//! so repeated queries against the same dataset never touch storage for
-//! blocks already seen:
+//! repeatedly. A [`BlockCache`] keeps blocks resident in their
+//! **scheme-native decoded form** ([`DecodedBlock`]) so repeated
+//! queries against the same dataset never touch storage for blocks
+//! already seen — and the per-scheme SpMV kernels
+//! (`crate::spmv::kernels`) execute the cached payloads directly:
 //!
 //! * **Sharded**: keys hash to one of N shards, each behind its own
 //!   mutex, so concurrent serving threads contend only when they touch
 //!   the same slice of the key space.
 //! * **Byte-budgeted LRU**: the cache holds at most a configured number
-//!   of *decoded* bytes (24 B per element triplet plus a fixed per-block
-//!   overhead — what the blocks actually cost in RAM, which is what a
-//!   memory budget must bound; on-disk bytes are smaller for every
-//!   scheme except dense-of-full-blocks and would undercount the
-//!   footprint). The budget is partitioned evenly across shards
+//!   of *decoded* bytes, accounted per scheme as the block's compact
+//!   payload ([`DecodedBlock::payload_bytes`] — COO 12 B/nnz, CSR
+//!   10 B/nnz + 4 B/rowptr, bitmap s²/8 bits + 8 B/nnz, dense 8 B/cell)
+//!   plus a fixed per-block overhead. That is what the blocks actually
+//!   cost in RAM now that nothing expands them to 24 B triplets, so a
+//!   given budget holds strictly more blocks than the triplet cache
+//!   did. The budget is partitioned evenly across shards
 //!   (slab-style); a shard over its slice evicts its least-recently-used
 //!   resident blocks even if the global total is under budget.
 //! * **Single-flight**: concurrent requests for the same absent block
@@ -58,26 +62,21 @@ pub struct BlockKey {
     pub bcol: u32,
 }
 
-/// Fixed per-block bookkeeping charge (map entry, Arc, Vec header) added
-/// to the element payload when accounting a block against the budget —
-/// keeps a pathological all-tiny-blocks working set from looking free.
-const BLOCK_FIXED_BYTES: u64 = 96;
+/// Fixed per-block bookkeeping charge (map entry, Arc, payload Vec
+/// headers) added to the scheme-native payload when accounting a block
+/// against the budget — keeps a pathological all-tiny-blocks working
+/// set from looking free.
+pub const BLOCK_FIXED_BYTES: u64 = 96;
 
-/// One decoded block: its elements in **global** coordinates, exactly as
-/// the block-granular decoder
-/// ([`fetch_blocks`](crate::abhsf::load::fetch_blocks)) produced them.
-#[derive(Debug, Clone)]
-pub struct DecodedBlock {
-    /// Decoded `(row, col, value)` triplets, global coordinates.
-    pub elements: Vec<(u64, u64, f64)>,
-}
+pub use crate::abhsf::load::{BlockGeom, DecodedBlock};
 
 impl DecodedBlock {
-    /// Bytes this block is charged against the cache budget: decoded
-    /// in-memory triplets (24 B each) plus the fixed per-block
-    /// bookkeeping overhead.
+    /// Bytes this block is charged against the cache budget: the
+    /// scheme-native payload ([`payload_bytes`](Self::payload_bytes))
+    /// plus [`BLOCK_FIXED_BYTES`]. This is the budget-accounting policy
+    /// of the cache, so it lives here rather than with the decoder.
     pub fn decoded_bytes(&self) -> u64 {
-        BLOCK_FIXED_BYTES + 24 * self.elements.len() as u64
+        BLOCK_FIXED_BYTES + self.payload_bytes()
     }
 }
 
@@ -159,13 +158,13 @@ impl LoadToken<'_> {
         self.key
     }
 
-    /// Install the decoded elements, wake every coalesced waiter, and
+    /// Install the decoded block, wake every coalesced waiter, and
     /// return the shared block. May immediately evict older blocks (or,
     /// if this block alone exceeds the shard budget, the block itself —
     /// the returned `Arc` stays valid either way).
-    pub fn publish(mut self, elements: Vec<(u64, u64, f64)>) -> Arc<DecodedBlock> {
+    pub fn publish(mut self, block: DecodedBlock) -> Arc<DecodedBlock> {
         self.resolved = true;
-        self.cache.publish_inner(self.key, &self.flight, elements)
+        self.cache.publish_inner(self.key, &self.flight, block)
     }
 
     /// Abandon the flight with an error: the slot is removed (a retry
@@ -357,9 +356,9 @@ impl BlockCache {
         &self,
         key: BlockKey,
         flight: &Arc<Flight>,
-        elements: Vec<(u64, u64, f64)>,
+        block: DecodedBlock,
     ) -> Arc<DecodedBlock> {
-        let block = Arc::new(DecodedBlock { elements });
+        let block = Arc::new(block);
         let bytes = block.decoded_bytes();
         {
             let mut shard = self.shards[self.shard_of(&key)]
@@ -446,8 +445,10 @@ mod tests {
         }
     }
 
-    fn elems(n: usize) -> Vec<(u64, u64, f64)> {
-        (0..n as u64).map(|i| (i, i, 1.0)).collect()
+    /// A COO block with `n` diagonal elements (payload 12 B each).
+    fn blk(n: usize) -> DecodedBlock {
+        let idx: Vec<u16> = (0..n as u16).collect();
+        DecodedBlock::coo(0, 0, 1 << 12, idx.clone(), idx, vec![1.0; n]).unwrap()
     }
 
     #[test]
@@ -456,8 +457,8 @@ mod tests {
         let Claim::Miss(tok) = cache.claim(key(1)) else {
             panic!("first claim must miss");
         };
-        let block = tok.publish(elems(10));
-        assert_eq!(block.elements.len(), 10);
+        let block = tok.publish(blk(10));
+        assert_eq!(block.zeta(), 10);
         let Claim::Hit(b) = cache.claim(key(1)) else {
             panic!("second claim must hit");
         };
@@ -473,14 +474,14 @@ mod tests {
     /// inserted) block is evicted first.
     #[test]
     fn lru_eviction_under_budget() {
-        let one = DecodedBlock { elements: elems(10) }.decoded_bytes();
+        let one = blk(10).decoded_bytes();
         // Room for exactly two blocks in a single shard.
         let cache = BlockCache::with_budget_sharded(2 * one, 1);
         for b in [1u32, 2] {
             let Claim::Miss(tok) = cache.claim(key(b)) else {
                 panic!("miss expected");
             };
-            tok.publish(elems(10));
+            tok.publish(blk(10));
         }
         assert_eq!(cache.stats().evictions, 0);
         // Touch 1 so 2 becomes the LRU victim.
@@ -488,7 +489,7 @@ mod tests {
         let Claim::Miss(tok) = cache.claim(key(3)) else {
             panic!("miss expected");
         };
-        tok.publish(elems(10));
+        tok.publish(blk(10));
         let st = cache.stats();
         assert_eq!(st.evictions, 1);
         assert_eq!(st.resident_blocks, 2);
@@ -505,8 +506,8 @@ mod tests {
         let Claim::Miss(tok) = cache.claim(key(1)) else {
             panic!("miss expected");
         };
-        let block = tok.publish(elems(1000));
-        assert_eq!(block.elements.len(), 1000);
+        let block = tok.publish(blk(1000));
+        assert_eq!(block.zeta(), 1000);
         let st = cache.stats();
         assert_eq!(st.resident_blocks, 0);
         assert_eq!(st.resident_bytes, 0);
@@ -533,7 +534,7 @@ mod tests {
                     Claim::Miss(tok) => {
                         // Slow decode: give peers time to coalesce.
                         std::thread::sleep(std::time::Duration::from_millis(20));
-                        tok.publish(elems(5))
+                        tok.publish(blk(5))
                     }
                 }
             }));

@@ -131,6 +131,11 @@ pub struct DatasetManifest {
     pub z: u64,
     /// ABHSF block size `s`.
     pub block_size: u64,
+    /// Which cost table chose the per-block schemes: `"analytic"` (the
+    /// byte-count model) or a measured-table label such as
+    /// `"measured(s=8,16)"` (see
+    /// [`CostModel::table_id`](crate::abhsf::CostModel::table_id)).
+    pub cost_table: String,
     /// Per-file sizes and nonzero counts, indexed by rank.
     pub files: Vec<StoredFile>,
 }
@@ -152,6 +157,7 @@ impl DatasetManifest {
         obj.insert("n".to_string(), Json::num(self.n));
         obj.insert("z".to_string(), Json::num(self.z));
         obj.insert("block_size".to_string(), Json::num(self.block_size));
+        obj.insert("cost_table".to_string(), Json::str(self.cost_table.as_str()));
         obj.insert(
             "files".to_string(),
             Json::Arr(
@@ -229,6 +235,13 @@ impl DatasetManifest {
             n: num("n")?,
             z: num("z")?,
             block_size: num("block_size")?,
+            // Absent in manifests written before calibration existed:
+            // every such dataset used the analytic byte-count model.
+            cost_table: v
+                .get("cost_table")
+                .and_then(Json::as_str)
+                .unwrap_or("analytic")
+                .to_string(),
             files,
         })
     }
@@ -271,6 +284,8 @@ impl Dataset {
         opts: StoreOptions,
     ) -> Result<(Dataset, StoreReport), DatasetError> {
         let dir = dir.as_ref();
+        let block_size = opts.block_size;
+        let cost_table = opts.cost_model.table_id();
         let report = store_distributed_impl(cluster, &storage, gen, mapping, dir, opts)?;
         let dataset = Self::write_manifest(
             storage,
@@ -279,7 +294,8 @@ impl Dataset {
             gen.dim(),
             gen.dim(),
             &report,
-            opts.block_size,
+            block_size,
+            cost_table,
         )?;
         Ok((dataset, report))
     }
@@ -318,6 +334,8 @@ impl Dataset {
             .first()
             .map(|c| (c.info.m, c.info.n))
             .unwrap_or((0, 0));
+        let block_size = opts.block_size;
+        let cost_table = opts.cost_model.table_id();
         let report = store_parts_impl(cluster, &storage, parts, dir, opts)?;
         let dataset = Self::write_manifest(
             storage,
@@ -326,7 +344,8 @@ impl Dataset {
             m,
             n,
             &report,
-            opts.block_size,
+            block_size,
+            cost_table,
         )?;
         Ok((dataset, report))
     }
@@ -334,6 +353,7 @@ impl Dataset {
     /// Scan the freshly written containers and persist the manifest.
     /// Shared by the store entry points above and the repack subsystem
     /// (which writes its containers rank-by-rank before describing them).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn write_manifest(
         storage: Arc<dyn Storage>,
         dir: &Path,
@@ -342,6 +362,7 @@ impl Dataset {
         n: u64,
         report: &StoreReport,
         block_size: u64,
+        cost_table: String,
     ) -> Result<Dataset, DatasetError> {
         let nprocs = report.per_rank_nnz.len();
         let sizes = stored_file_sizes(storage.as_ref(), dir, nprocs)?;
@@ -358,6 +379,7 @@ impl Dataset {
             n,
             z: report.total_nnz(),
             block_size,
+            cost_table,
             files,
         };
         let text = format!("{}\n", manifest.to_json());
@@ -477,6 +499,7 @@ impl Dataset {
                 n: hdr.info.n,
                 z: hdr.info.z,
                 block_size: hdr.block_size,
+                cost_table: "analytic".to_string(),
                 files,
             },
             storage,
@@ -584,6 +607,7 @@ impl Dataset {
                 n,
                 z,
                 block_size,
+                cost_table: "analytic".to_string(),
                 files: vec![
                     StoredFile {
                         bytes: file_bytes,
@@ -1002,6 +1026,7 @@ mod tests {
             n: 30,
             z: 120,
             block_size: 8,
+            cost_table: "analytic".to_string(),
             files: vec![
                 StoredFile { bytes: 1000, nnz: 40 },
                 StoredFile { bytes: 1200, nnz: 50 },
@@ -1012,11 +1037,26 @@ mod tests {
 
     #[test]
     fn manifest_json_roundtrip() {
-        let m = sample_manifest();
+        let mut m = sample_manifest();
+        m.cost_table = "measured(s=8,16)".to_string();
         let text = m.to_json().to_string();
         let back = DatasetManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, m);
         assert_eq!(back.total_bytes(), 3000);
+    }
+
+    /// Manifests written before calibration existed carry no
+    /// `cost_table`; they parse as `"analytic"`.
+    #[test]
+    fn manifest_without_cost_table_defaults_to_analytic() {
+        let m = sample_manifest();
+        let text = m
+            .to_json()
+            .to_string()
+            .replace("\"cost_table\":\"analytic\",", "");
+        let back = DatasetManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.cost_table, "analytic");
+        assert_eq!(back, m);
     }
 
     #[test]
@@ -1076,6 +1116,7 @@ mod tests {
                 n: m,
                 z: 8 * 50_000_000,
                 block_size: 64,
+                cost_table: "analytic".to_string(),
                 files,
             },
             storage: crate::vfs::local(),
@@ -1132,6 +1173,7 @@ mod tests {
                 n: 1 << 22,
                 z: 60 * 200_000_000,
                 block_size: 64,
+                cost_table: "analytic".to_string(),
                 files,
             },
             storage: crate::vfs::local(),

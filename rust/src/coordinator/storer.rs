@@ -17,7 +17,7 @@ use crate::mapping::ProcessMapping;
 use crate::vfs::Storage;
 
 /// Options controlling the storage conversion.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct StoreOptions {
     /// ABHSF block size `s`.
     pub block_size: u64,

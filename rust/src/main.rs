@@ -24,6 +24,9 @@
 //!   reporting throughput, p50/p99 latency and cache counters;
 //! * `served`    — the `pallas-served` storage daemon: serve any VFS
 //!   backend over TCP to `--backend remote:HOST:PORT` clients;
+//! * `calibrate` — inspect a `BENCH_kernels.json` kernel calibration
+//!   table: per calibrated block size, the measured scheme-decision map
+//!   next to the analytic one and how many fills flip;
 //! * `fig1`      — regenerate the paper's Figure 1 table quickly.
 
 use std::path::PathBuf;
@@ -31,6 +34,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use abhsf::abhsf::load::read_header;
+use abhsf::abhsf::{CostModel, MeasuredCosts, Scheme};
 use abhsf::cache::BlockCache;
 use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions, Strategy};
 use abhsf::experiments::{run_fig1, Fig1Config};
@@ -64,6 +68,7 @@ fn main() {
         "spmv" => cmd_spmv(argv),
         "serve" => cmd_serve(argv),
         "served" => cmd_served(argv),
+        "calibrate" => cmd_calibrate(argv),
         "fig1" => cmd_fig1(argv),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -129,6 +134,8 @@ fn print_usage() {
          shared decoded-block cache\n\
          \x20 served     pallas-served storage daemon: serve a directory \
          over TCP to remote: clients\n\
+         \x20 calibrate  inspect a kernel calibration table \
+         (measured vs analytic scheme decisions)\n\
          \x20 fig1       regenerate the paper's Figure 1 (quick profile)\n\n\
          Common options: --seed-size N --seed cage|diag|random|rmat --order D\n\
          \x20               --procs P --block-size S --dir PATH \
@@ -157,8 +164,13 @@ fn print_usage() {
          (default .) --backend local|mem|sim\n\
          \x20               --drop-every N  hang up before every Nth request \
          (transient-fault injection; 0 = off)\n\
+         Store options:  --calibrate PATH  choose block schemes by the measured \
+         kernel-cost table\n\
+         \x20               (BENCH_kernels.json from `cargo bench --bench \
+         kernels`) instead of bytes\n\
          Repack options: --out PATH --nprocs P --mapping KIND --block-size S \
          --chunk-size C\n\
+         Calibrate opts: --table PATH (default BENCH_kernels.json)\n\
          Spmv options:   --iters N --pjrt-check\n\
          Serve options:  --dir A[,B,...] --threads N --queries Q --budget BYTES \
          (e.g. 1MiB)\n\
@@ -339,25 +351,32 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
     let mapping = parse_mapping(&a, &w.gen, p)?;
     let backend = parse_backend(&a)?;
     let cluster = Cluster::new(p, 64);
+    let mut opts = StoreOptions {
+        block_size: s,
+        ..Default::default()
+    };
+    if let Some(path) = a.get("calibrate") {
+        let table = load_measured_table(std::path::Path::new(path))?;
+        opts.cost_model = CostModel::from_measurements(table);
+    }
     let (dataset, report) = Dataset::store_on(
         Arc::clone(&backend.storage),
         &cluster,
         &w.gen,
         &mapping,
         &dir,
-        StoreOptions {
-            block_size: s,
-            ..Default::default()
-        },
+        opts,
     )?;
     println!(
-        "stored {} nnz into {} files in {:.3}s ({} payload, mapping {}, backend {})",
+        "stored {} nnz into {} files in {:.3}s ({} payload, mapping {}, backend {}, \
+         schemes by {})",
         human::count(report.total_nnz()),
         p,
         report.wall_s,
         human::bytes(report.total_bytes()),
         dataset.mapping().kind(),
         dataset.storage().label(),
+        dataset.manifest().cost_table,
     );
     backend.print_trailer();
     Ok(())
@@ -368,7 +387,8 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
     let (dataset, backend) = open_dataset(&a)?;
     let (m, n) = dataset.dims();
     println!(
-        "dataset: {} x {}, {} nnz, stored by P={} ({} mapping), s={}, {}",
+        "dataset: {} x {}, {} nnz, stored by P={} ({} mapping), s={}, {}, \
+         schemes by {}",
         human::count(m),
         human::count(n),
         human::count(dataset.nnz()),
@@ -376,6 +396,7 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
         dataset.mapping().kind(),
         dataset.block_size(),
         human::bytes(dataset.manifest().total_bytes()),
+        dataset.manifest().cost_table,
     );
     let mut t = Table::new(&[
         "file", "m_local", "n_local", "z_local", "s", "blocks", "COO", "CSR", "bitmap", "dense",
@@ -793,6 +814,71 @@ fn cmd_served(argv: Vec<String>) -> anyhow::Result<()> {
     use std::io::Write as _;
     let _ = std::io::stdout().flush();
     handle.run_forever()
+}
+
+/// Read a kernel calibration table — a whole `BENCH_kernels.json`
+/// document or a bare `{"entries": [...]}` table — from disk.
+fn load_measured_table(path: &std::path::Path) -> anyhow::Result<MeasuredCosts> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading calibration table {}: {e}", path.display()))?;
+    let json = abhsf::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    MeasuredCosts::from_json(&json)
+        .map_err(|e| anyhow::anyhow!("invalid calibration table {}: {e}", path.display()))
+}
+
+/// Contiguous fill intervals `[lo, hi]` of the scheme `model` chooses at
+/// block size `s`, for `zeta` in `1..=s*s`.
+fn scheme_intervals(model: &CostModel, s: u64) -> Vec<(Scheme, u64, u64)> {
+    let mut out: Vec<(Scheme, u64, u64)> = Vec::new();
+    for zeta in 1..=s * s {
+        let sch = model.choose(s, zeta);
+        match out.last_mut() {
+            Some((cur, _, hi)) if *cur == sch => *hi = zeta,
+            _ => out.push((sch, zeta, zeta)),
+        }
+    }
+    out
+}
+
+fn format_intervals(intervals: &[(Scheme, u64, u64)]) -> String {
+    intervals
+        .iter()
+        .map(|(sch, lo, hi)| format!("{} zeta {lo}..={hi}", sch.name()))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// `abhsf calibrate` — inspect a kernel calibration table: for every
+/// calibrated block size, the measured scheme-decision map next to the
+/// analytic (byte-minimizing) one, and how many fills flip between them.
+fn cmd_calibrate(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf calibrate", argv, &[])?;
+    let path = PathBuf::from(a.str_or("table", "BENCH_kernels.json"));
+    let table = load_measured_table(&path)?;
+    println!("table           : {} (from {})", table.label(), path.display());
+    let analytic = CostModel::default();
+    let measured = CostModel::from_measurements(table.clone());
+    for s in table.block_sizes() {
+        let cells = s * s;
+        println!("s = {s}:");
+        println!(
+            "  analytic (bytes)    : {}",
+            format_intervals(&scheme_intervals(&analytic, s))
+        );
+        println!(
+            "  measured (kernel ps): {}",
+            format_intervals(&scheme_intervals(&measured, s))
+        );
+        let flips = (1..=cells)
+            .filter(|&zeta| measured.choose(s, zeta) != analytic.choose(s, zeta))
+            .count();
+        println!(
+            "  decisions flipped   : {flips} of {cells} fills ({:.1}%)",
+            flips as f64 * 100.0 / cells as f64
+        );
+    }
+    Ok(())
 }
 
 /// Target-mapping parser for configurations derived from a dataset's

@@ -248,7 +248,8 @@ impl<'d> RepackPlan<'d> {
         let (m, n) = self.dataset.dims();
         let z = self.dataset.nnz();
         let prune = self.prune;
-        let cost_model = self.cost_model;
+        let cost_model = self.cost_model.clone();
+        let cost_table = cost_model.table_id();
         let chunk_elems = self.chunk_elems;
         let map = Arc::clone(&mapping);
         let src_fs = Arc::clone(&src_storage);
@@ -371,6 +372,7 @@ impl<'d> RepackPlan<'d> {
             n,
             &store_report,
             block_size,
+            cost_table,
         )?;
 
         let report = RepackReport {

@@ -17,7 +17,10 @@
 //!    ([`fetch_blocks`](crate::abhsf::load::fetch_blocks)) and
 //!    published, and blocks already being decoded by another thread are
 //!    awaited (single-flight coalescing);
-//! 3. filters the decoded triplets down to the query rectangle.
+//! 3. filters the block's decoded elements down to the query rectangle
+//!    — or, for SpMV, executes the block's **scheme-native payload**
+//!    through its per-scheme kernel (`crate::spmv::kernels`) with no
+//!    triplet expansion.
 //!
 //! **Deadlock freedom.** A query claims, fetches and publishes all of
 //! its misses for file `i` before waiting on any of file `i`'s in-flight
@@ -36,7 +39,7 @@ use std::ops::Range;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::abhsf::load::{default_batch_bytes, fetch_blocks_batched, BlockDirectory};
+use crate::abhsf::load::{default_batch_bytes, fetch_decoded_blocks_batched, BlockDirectory};
 use crate::abhsf::matrix_file_path;
 use crate::cache::{BlockCache, BlockKey, Claim, DecodedBlock, FlightWaiter, LoadToken};
 use crate::coordinator::error::DatasetError;
@@ -162,11 +165,17 @@ impl<'c> DatasetReader<'c> {
                 // fails their flights — waiters in other threads error
                 // out instead of hanging.
                 let mut pending = tokens.into_iter();
-                fetch_blocks_batched(&slot.reader, &slot.dir, &miss, slot.batch_bytes, |_, elems| {
-                    let token = pending.next().expect("one token per missed block");
-                    let block = token.publish(elems.to_vec());
-                    emit(&block);
-                })
+                fetch_decoded_blocks_batched(
+                    &slot.reader,
+                    &slot.dir,
+                    &miss,
+                    slot.batch_bytes,
+                    |_, decoded| {
+                        let token = pending.next().expect("one token per missed block");
+                        let block = token.publish(decoded);
+                        emit(&block);
+                    },
+                )
                 .map_err(|e| DatasetError::Internal(Box::new(e)))?;
             }
             for waiter in waiters {
@@ -194,11 +203,11 @@ impl<'c> DatasetReader<'c> {
         );
         let mut out: Vec<(u64, u64, f64)> = Vec::new();
         self.gather(q, |block| {
-            for &(i, j, v) in &block.elements {
+            block.for_each_element(|i, j, v| {
                 if i >= rows.start && i < rows.end && j >= cols.start && j < cols.end {
                     out.push((i, j, v));
                 }
-            }
+            });
         })?;
         out.sort_unstable_by_key(|e| (e.0, e.1));
         Ok(out)
@@ -224,19 +233,20 @@ impl<'c> DatasetReader<'c> {
         );
         let mut count = 0u64;
         self.gather(q, |block| {
-            for &(i, j, _) in &block.elements {
+            block.for_each_element(|i, j, _| {
                 if i >= rows.start && i < rows.end && j >= cols.start && j < cols.end {
                     count += 1;
                 }
-            }
+            });
         })?;
         Ok(count)
     }
 
     /// `y = A x` over the whole matrix, through the cache: every block is
     /// claimed (fetching only the absent ones) and accumulated through
-    /// the shared [`SpmvParts::Elements`](crate::spmv::SpmvParts) kernel
-    /// path — the same kernel the CLI `spmv` consumer uses on CSR parts.
+    /// the per-scheme kernels via
+    /// [`SpmvParts::Blocks`](crate::spmv::SpmvParts) — each cached
+    /// payload executes directly, **never** expanding to triplets.
     /// Blocks stream through one at a time, so the query's resident set
     /// stays bounded by the cache budget plus one block, not the whole
     /// decoded matrix.
@@ -244,11 +254,11 @@ impl<'c> DatasetReader<'c> {
         let (m, n) = self.dims;
         let mut y = vec![0.0; m as usize];
         self.gather((0, 0, m, n), |block| {
-            let part = [block.elements.as_slice()];
-            crate::spmv::SpmvParts::Elements {
+            let one = [block.as_ref()];
+            crate::spmv::SpmvParts::Blocks {
                 m,
                 n,
-                parts: &part,
+                blocks: &one,
             }
             .spmv_into(x, &mut y);
         })?;

@@ -1,0 +1,133 @@
+//! Per-scheme block SpMV kernels over [`DecodedBlock`] payloads.
+//!
+//! Each kernel accumulates `y += A_block · x` straight from the block's
+//! scheme-native payload — no expansion to `(row, col, val)` triplets.
+//! This is where the ABHSF premise pays off at execution time: the CSR
+//! kernel walks row pointers, the bitmap kernel scans occupancy bytes
+//! LSB-first, the dense kernel strides row-major, and the COO kernel
+//! scatters triplets, each touching exactly the bytes the cache stores.
+//!
+//! **Exactness contract**: every kernel applies its elements to `y` one
+//! at a time (`y[i] += v * x[j]`), in the scheme's natural row-major
+//! decode order — the same order and grouping
+//! [`DecodedBlock::for_each_element`] emits and the generic
+//! `SpmvParts::Elements` path applies. The per-scheme results are
+//! therefore **bit-identical** to the generic path, not merely close:
+//! no per-row scalar accumulators that would regroup f64 sums (their
+//! grouping changes results when `y` starts dirty). The differential
+//! harness (`rust/tests/kernels.rs`) asserts exact equality.
+
+use crate::abhsf::load::DecodedBlock;
+
+/// Accumulate `y += A_block · x` for one decoded block, dispatching to
+/// the scheme's kernel. `x` and `y` are global vectors; the block's
+/// [`geom`](DecodedBlock::geom) places it (`row0`/`col0` are global).
+pub fn spmv_block_into(block: &DecodedBlock, x: &[f64], y: &mut [f64]) {
+    match block {
+        DecodedBlock::Coo {
+            geom,
+            lrows,
+            lcols,
+            vals,
+        } => {
+            let (r0, c0) = (geom.row0 as usize, geom.col0 as usize);
+            for ((&lr, &lc), &v) in lrows.iter().zip(lcols).zip(vals) {
+                y[r0 + lr as usize] += v * x[c0 + lc as usize];
+            }
+        }
+        DecodedBlock::CsrInBlock {
+            geom,
+            rowptrs,
+            lcolinds,
+            vals,
+        } => {
+            let (r0, c0) = (geom.row0 as usize, geom.col0 as usize);
+            for lr in 0..geom.s as usize {
+                let (lo, hi) = (rowptrs[lr] as usize, rowptrs[lr + 1] as usize);
+                for e in lo..hi {
+                    y[r0 + lr] += vals[e] * x[c0 + lcolinds[e] as usize];
+                }
+            }
+        }
+        DecodedBlock::Bitmap { geom, bits, vals } => {
+            let (r0, c0) = (geom.row0 as usize, geom.col0 as usize);
+            let s = geom.s as usize;
+            let mut next = 0usize;
+            for (bi, &byte) in bits.iter().enumerate() {
+                let mut rest = byte;
+                while rest != 0 {
+                    let cell = bi * 8 + rest.trailing_zeros() as usize;
+                    y[r0 + cell / s] += vals[next] * x[c0 + cell % s];
+                    next += 1;
+                    rest &= rest - 1;
+                }
+            }
+        }
+        DecodedBlock::Dense { geom, vals } => {
+            let (r0, c0) = (geom.row0 as usize, geom.col0 as usize);
+            let s = geom.s as usize;
+            for (lr, row) in vals.chunks_exact(s).enumerate() {
+                for (lc, &v) in row.iter().enumerate() {
+                    // Skipping zeros keeps the summation stream identical
+                    // to the triplet path (and edge blocks' unused cells
+                    // must not touch y at all).
+                    if v != 0.0 {
+                        y[r0 + lr] += v * x[c0 + lc];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abhsf::Scheme;
+
+    /// Fixed 4x4 pattern exercised under every scheme.
+    fn elems() -> Vec<(u16, u16, f64)> {
+        vec![
+            (0, 0, 2.0),
+            (0, 3, 1.0),
+            (1, 1, -1.5),
+            (2, 0, 4.0),
+            (3, 2, 0.5),
+        ]
+    }
+
+    #[test]
+    fn all_schemes_agree_with_triplets() {
+        let x = [1.0, -2.0, 0.5, 3.0];
+        for scheme in Scheme::ALL {
+            let block = DecodedBlock::build(scheme, 0, 0, 4, &elems()).unwrap();
+            let mut y = [0.25; 4]; // dirty start: kernels accumulate
+            spmv_block_into(&block, &x, &mut y);
+            let mut want = [0.25; 4];
+            for (i, j, v) in block.elements() {
+                want[i as usize] += v * x[j as usize];
+            }
+            assert_eq!(y, want, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn offset_block_lands_in_global_rows() {
+        let block = DecodedBlock::build(Scheme::Csr, 4, 4, 4, &elems()).unwrap();
+        let x = [0.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0];
+        let mut y = [0.0; 8];
+        spmv_block_into(&block, &x, &mut y);
+        assert_eq!(&y[0..4], &[0.0; 4]);
+        assert_eq!(&y[4..8], &[3.0, -1.5, 4.0, 0.5]);
+    }
+
+    #[test]
+    fn empty_block_is_a_noop() {
+        for scheme in Scheme::ALL {
+            let block = DecodedBlock::build(scheme, 0, 0, 3, &[]).unwrap();
+            let mut y = [7.0; 3];
+            spmv_block_into(&block, &[1.0; 3], &mut y);
+            assert_eq!(y, [7.0; 3], "{scheme:?}");
+        }
+    }
+}

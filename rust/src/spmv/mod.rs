@@ -2,6 +2,9 @@
 //! the downstream workload that loaded matrices feed, and the oracle the
 //! PJRT artifact path is validated against.
 
+pub mod kernels;
+
+use crate::abhsf::load::DecodedBlock;
 use crate::formats::{Coo, Csr};
 
 /// `y = A x` for a set of local CSR submatrices covering a global matrix.
@@ -49,6 +52,19 @@ pub enum SpmvParts<'a> {
         /// exactly once.
         parts: &'a [&'a [(u64, u64, f64)]],
     },
+    /// Scheme-native decoded cache blocks: each executes through its
+    /// per-scheme kernel ([`kernels::spmv_block_into`]) with **no
+    /// triplet expansion** — the serving layer's
+    /// (`crate::serve::DatasetReader::spmv`) production path.
+    Blocks {
+        /// Global rows.
+        m: u64,
+        /// Global columns.
+        n: u64,
+        /// The blocks; together they must cover each nonzero exactly
+        /// once (their geoms place them in the global matrix).
+        blocks: &'a [&'a DecodedBlock],
+    },
 }
 
 impl SpmvParts<'_> {
@@ -64,20 +80,29 @@ impl SpmvParts<'_> {
                 parts[0].info.m
             }
             SpmvParts::Elements { m, .. } => *m,
+            SpmvParts::Blocks { m, .. } => *m,
         }
     }
 
-    /// `y = A x` over all parts.
+    /// `y = A x` over all parts: allocates a zeroed `y`, then
+    /// [`spmv_into`](Self::spmv_into) — the overwrite form callers use
+    /// when they do not manage the output buffer themselves.
     pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.rows() as usize];
         self.spmv_into(x, &mut y);
         y
     }
 
-    /// Accumulate `y += A x` over all parts into a caller-owned global
-    /// vector — the streaming form: the serving layer feeds cached
-    /// blocks through here one at a time, so a whole-matrix product
-    /// never has to hold every decoded block alive at once.
+    /// **Accumulate** `y += A x` over all parts into a caller-owned
+    /// global vector — `y` is *never* zeroed or overwritten here, for
+    /// every variant. This is the streaming form: the serving layer
+    /// feeds cached blocks through here one at a time, so a
+    /// whole-matrix product never has to hold every decoded block alive
+    /// at once — which only works because each call adds its parts'
+    /// contribution to whatever is already in `y`. Callers reusing a
+    /// buffer across iterations (the power-iteration loop) must clear
+    /// it between products or use [`spmv`](Self::spmv); the contract is
+    /// pinned by `rust/tests/kernels.rs`.
     pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
         match self {
             SpmvParts::Csr(parts) => {
@@ -97,6 +122,13 @@ impl SpmvParts<'_> {
                     for &(i, j, v) in *part {
                         y[i as usize] += v * x[j as usize];
                     }
+                }
+            }
+            SpmvParts::Blocks { m, n, blocks } => {
+                assert_eq!(x.len() as u64, *n, "x length != n");
+                assert_eq!(y.len() as u64, *m, "y length != m");
+                for block in *blocks {
+                    kernels::spmv_block_into(block, x, y);
                 }
             }
         }

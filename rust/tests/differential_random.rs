@@ -21,6 +21,7 @@
 use std::collections::HashSet;
 use std::sync::Arc;
 
+use abhsf::cache::BlockCache;
 use abhsf::coordinator::{Cluster, Dataset, InMemFormat, LoadedMatrix, StoreOptions, Strategy};
 use abhsf::formats::element::tight_window;
 use abhsf::formats::{Coo, LocalInfo};
@@ -272,6 +273,33 @@ fn all_strategies_agree_on_random_configurations() {
             cfg.p_store,
             "exchange must open every file exactly once {ctx}"
         );
+
+        // Kernel dimension: the cached reader's per-scheme block kernels
+        // reproduce the truth product on every drawn configuration, and
+        // the same query on two fresh caches is bit-identical with
+        // identical miss counts.
+        let x: Vec<f64> = (0..cfg.n).map(|j| 1.0 + (j % 5) as f64 * 0.5).collect();
+        let mut want = vec![0.0; cfg.m as usize];
+        for &(i, j, v) in &truth {
+            want[i as usize] += v * x[j as usize];
+        }
+        let ca = BlockCache::with_budget(64 << 20);
+        let cb = BlockCache::with_budget(64 << 20);
+        let ya = dataset
+            .reader(&ca)
+            .and_then(|r| r.spmv(&x))
+            .unwrap_or_else(|e| panic!("kernel spmv failed: {e} {ctx}"));
+        let yb = dataset
+            .reader(&cb)
+            .and_then(|r| r.spmv(&x))
+            .unwrap_or_else(|e| panic!("kernel spmv failed: {e} {ctx}"));
+        assert!(
+            abhsf::spmv::max_abs_diff(&ya, &want) < 1e-9,
+            "kernel spmv diverged from truth {ctx}"
+        );
+        assert_eq!(ya, yb, "kernel spmv not deterministic {ctx}");
+        assert_eq!(ca.stats().misses, cb.stats().misses, "miss counts diverged {ctx}");
+        assert!(ca.stats().misses > 0, "spmv decoded no blocks {ctx}");
 
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -1,0 +1,538 @@
+//! Differential harness for the per-scheme block SpMV kernels and the
+//! measured-cost calibration path.
+//!
+//! The kernels' exactness contract (see `rust/src/spmv/kernels.rs`) is
+//! that every scheme applies its elements to `y` one at a time in the
+//! natural row-major decode order — the same stream the generic
+//! `SpmvParts::Elements` path applies. That makes the per-scheme results
+//! **bit-identical** to the generic path, so almost every comparison
+//! here is `assert_eq!` on raw `f64` vectors, not a tolerance check.
+//!
+//! Where orders legitimately differ (the stored-order block walk versus
+//! a globally sorted oracle), values are drawn as small dyadic rationals
+//! (multiples of 1/4 below 2) whose f64 sums are exact in *any* order,
+//! so those comparisons stay exact too.
+
+use abhsf::abhsf::load::DecodedBlock;
+use abhsf::abhsf::store::store_data_chunked_on;
+use abhsf::abhsf::{
+    fetch_decoded_blocks_batched, AbhsfData, BlockDirectory, CostModel, MeasuredCosts,
+    MeasuredEntry, Scheme,
+};
+use abhsf::formats::{Coo, LocalInfo};
+use abhsf::h5::H5Reader;
+use abhsf::spmv::{kernels::spmv_block_into, SpmvParts};
+use abhsf::util::json::Json;
+use abhsf::util::rng::Xoshiro256;
+use abhsf::vfs::MemFs;
+
+type LocalElem = (u16, u16, f64);
+
+/// A nonzero dyadic value in `±[0.25, 2]`: sums of any number (< 2^40)
+/// of these are exact in f64 regardless of association order.
+fn dyadic(rng: &mut Xoshiro256) -> f64 {
+    let mag = (1 + rng.next_below(8)) as f64 * 0.25;
+    if rng.chance(0.5) {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// `zeta` distinct random cells of an `s × s` block, strictly row-major
+/// (the order [`DecodedBlock::build`] requires), with dyadic values.
+fn random_cells(rng: &mut Xoshiro256, s: u64, zeta: u64) -> Vec<LocalElem> {
+    let mut cells = rng.sample_indices((s * s) as usize, zeta as usize);
+    cells.sort_unstable();
+    cells
+        .into_iter()
+        .map(|cell| {
+            let (lr, lc) = ((cell as u64 / s) as u16, (cell as u64 % s) as u16);
+            (lr, lc, dyadic(rng))
+        })
+        .collect()
+}
+
+/// Per-scheme on-disk payload size in bytes under the default widths —
+/// the independent formula [`DecodedBlock::payload_bytes`] must match.
+fn expected_payload_bytes(scheme: Scheme, s: u64, zeta: u64) -> u64 {
+    match scheme {
+        Scheme::Coo => (2 + 2 + 8) * zeta,
+        Scheme::Csr => 4 * (s + 1) + (2 + 8) * zeta,
+        Scheme::Bitmap => (s * s).div_ceil(8) + 8 * zeta,
+        Scheme::Dense => 8 * s * s,
+    }
+}
+
+/// Run one block through the kernel, the `Blocks` variant, and the
+/// generic `Elements` path, all from the same dirty `y`; every result
+/// must be bit-identical.
+fn assert_kernel_matches_generic(block: &DecodedBlock, x: &[f64], dirty: &[f64], ctx: &str) {
+    let g = block.geom();
+    let (m, n) = (dirty.len() as u64, x.len() as u64);
+    assert!(g.row0 + g.s <= m && g.col0 + g.s <= n, "{ctx}: bad harness dims");
+
+    let mut direct = dirty.to_vec();
+    spmv_block_into(block, x, &mut direct);
+
+    let one = [block];
+    let mut via_blocks = dirty.to_vec();
+    SpmvParts::Blocks { m, n, blocks: &one }.spmv_into(x, &mut via_blocks);
+
+    let triplets = block.elements();
+    assert_eq!(triplets.len() as u64, block.zeta(), "{ctx}: zeta mismatch");
+    let slices = [triplets.as_slice()];
+    let mut generic = dirty.to_vec();
+    SpmvParts::Elements { m, n, parts: &slices }.spmv_into(x, &mut generic);
+
+    assert_eq!(direct, generic, "{ctx}: kernel != Elements path");
+    assert_eq!(via_blocks, direct, "{ctx}: Blocks variant != direct kernel");
+}
+
+/// Every scheme's kernel is bit-identical to the generic triplet path on
+/// hand-picked edge geometries: empty block, fully dense, single
+/// row/column, ζ = 1, non-power-of-two `s`, `s = 1` — each also placed
+/// at a nonzero global offset so `row0`/`col0` handling is exercised.
+#[test]
+fn kernels_match_elements_path_on_edge_geometries() {
+    let mut rng = Xoshiro256::seed_from_u64(0xED6E);
+    let full = |s: u64| -> Vec<(u16, u16)> {
+        (0..s * s)
+            .map(|cell| ((cell / s) as u16, (cell % s) as u16))
+            .collect()
+    };
+    // (label, s, cells): values are attached per scheme below.
+    let cases: [(&str, u64, Vec<(u16, u16)>); 8] = [
+        ("empty", 7, vec![]),
+        ("fully-dense", 6, full(6)),
+        ("single-row", 9, (0..9).map(|lc| (3u16, lc as u16)).collect()),
+        ("single-col", 9, (0..9).map(|lr| (lr as u16, 4u16)).collect()),
+        ("one-elem", 8, vec![(5, 2)]),
+        ("non-pow2", 5, vec![(0, 4), (1, 1), (1, 2), (3, 0), (4, 4)]),
+        ("s1-empty", 1, vec![]),
+        ("s1-full", 1, vec![(0, 0)]),
+    ];
+    for (label, s, cells) in &cases {
+        let s = *s;
+        for (row0, col0) in [(0u64, 0u64), (2 * s, s)] {
+            // Arbitrary (non-dyadic) values: same-order comparison is
+            // exact by the kernels' summation-order contract alone. A
+            // stored zero would legitimately vanish through the dense
+            // scheme, so values stay away from 0.
+            let elems: Vec<LocalElem> = cells
+                .iter()
+                .map(|&(lr, lc)| {
+                    let sign = if lc % 2 == 0 { 1.0 } else { -1.0 };
+                    (lr, lc, sign * rng.range_f64(0.5, 3.0))
+                })
+                .collect();
+            let (m, n) = (row0 + s, col0 + s);
+            let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let dirty: Vec<f64> = (0..m).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            for scheme in Scheme::ALL {
+                let ctx = format!("{label} s={s} offset=({row0},{col0}) {scheme:?}");
+                let block = DecodedBlock::build(scheme, row0, col0, s, &elems)
+                    .unwrap_or_else(|e| panic!("{ctx}: build failed: {e}"));
+                assert_eq!(block.scheme(), scheme, "{ctx}");
+                assert_eq!(block.zeta() as usize, elems.len(), "{ctx}");
+                assert_eq!(
+                    block.payload_bytes(),
+                    expected_payload_bytes(scheme, s, elems.len() as u64),
+                    "{ctx}: payload bytes"
+                );
+                assert_kernel_matches_generic(&block, &x, &dirty, &ctx);
+            }
+        }
+    }
+}
+
+/// Seeded random blocks: for every drawn (s, ζ) all four scheme
+/// encodings produce bit-identical products from the same dirty `y`,
+/// and (dyadic values) equal the order-independent dense oracle.
+#[test]
+fn kernels_agree_across_schemes_on_random_blocks() {
+    let sizes = [1u64, 2, 3, 4, 5, 7, 8, 12, 16, 33];
+    for seed in 0..12u64 {
+        let mut rng = Xoshiro256::seed_from_u64(0x5EED_0000 + seed);
+        let s = sizes[rng.range_usize(0, sizes.len())];
+        let zeta = rng.next_below(s * s + 1);
+        let elems = random_cells(&mut rng, s, zeta);
+        let (row0, col0) = (rng.next_below(3) * s, rng.next_below(3) * s);
+        let (m, n) = (row0 + s, col0 + s);
+        let x: Vec<f64> = (0..n).map(|_| dyadic(&mut rng)).collect();
+        let dirty: Vec<f64> = (0..m).map(|_| dyadic(&mut rng)).collect();
+        let ctx = format!("seed={seed} s={s} zeta={zeta} offset=({row0},{col0})");
+
+        // Order-independent oracle (exact: all terms dyadic).
+        let mut oracle = dirty.clone();
+        for &(lr, lc, v) in &elems {
+            oracle[(row0 + lr as u64) as usize] += v * x[(col0 + lc as u64) as usize];
+        }
+        for scheme in Scheme::ALL {
+            let block = DecodedBlock::build(scheme, row0, col0, s, &elems)
+                .unwrap_or_else(|e| panic!("{ctx} {scheme:?}: build failed: {e}"));
+            assert_kernel_matches_generic(&block, &x, &dirty, &format!("{ctx} {scheme:?}"));
+            let mut y = dirty.clone();
+            spmv_block_into(&block, &x, &mut y);
+            assert_eq!(y, oracle, "{ctx} {scheme:?}: != dense oracle");
+        }
+    }
+}
+
+/// `SpmvParts::spmv_into` **accumulates** into the caller's `y` — it
+/// never zeroes or overwrites — for every variant, and `spmv` is the
+/// overwrite form. Pinned with a dirty, reused buffer: two consecutive
+/// `spmv_into` calls add the product twice (all values dyadic, so the
+/// expectation is exact).
+#[test]
+fn spmv_into_accumulates_into_dirty_y_for_every_variant() {
+    // 6x6 global matrix, two row bands of 3.
+    let entries: [(u64, u64, f64); 7] = [
+        (0, 0, 2.0),
+        (0, 5, 1.25),
+        (1, 2, -0.75),
+        (2, 4, 4.0),
+        (3, 1, 0.5),
+        (4, 4, -2.0),
+        (5, 0, 1.5),
+    ];
+    let (m, n) = (6u64, 6u64);
+    let mut coo_parts = Vec::new();
+    for off in [0u64, 3] {
+        let info = LocalInfo {
+            m,
+            n,
+            z: entries.len() as u64,
+            m_local: 3,
+            n_local: n,
+            z_local: 0,
+            m_offset: off,
+            n_offset: 0,
+        };
+        let mut coo = Coo::with_info(info);
+        for &(i, j, v) in entries.iter().filter(|e| e.0 >= off && e.0 < off + 3) {
+            coo.push(i - off, j, v);
+        }
+        coo_parts.push(coo);
+    }
+    let csr_parts: Vec<abhsf::formats::Csr> =
+        coo_parts.iter().map(abhsf::formats::Csr::from_coo).collect();
+    let triplets: Vec<Vec<(u64, u64, f64)>> = coo_parts
+        .iter()
+        .map(|p| {
+            let ro = p.info.m_offset;
+            p.iter().map(|(i, j, v)| (i + ro, j, v)).collect()
+        })
+        .collect();
+    let slices: Vec<&[(u64, u64, f64)]> = triplets.iter().map(|t| t.as_slice()).collect();
+    // Decoded 3x3 blocks over the 2x2 block grid (blocks are square, so
+    // the column span must be split alongside the rows).
+    let mut blocks: Vec<DecodedBlock> = Vec::new();
+    for (brow, bcol) in [(0u64, 0u64), (0, 1), (1, 0), (1, 1)] {
+        let (row0, col0) = (brow * 3, bcol * 3);
+        let elems: Vec<LocalElem> = entries
+            .iter()
+            .filter(|e| e.0 >= row0 && e.0 < row0 + 3 && e.1 >= col0 && e.1 < col0 + 3)
+            .map(|&(i, j, v)| ((i - row0) as u16, (j - col0) as u16, v))
+            .collect();
+        blocks.push(DecodedBlock::build(Scheme::Coo, row0, col0, 3, &elems).unwrap());
+    }
+    let block_refs: Vec<&DecodedBlock> = blocks.iter().collect();
+
+    let x = [1.0, -2.0, 0.5, 3.0, 0.25, -1.5];
+    let dirty = [0.5, -1.0, 2.0, 0.25, -0.75, 1.5];
+    // Exact expected product (dyadic terms: order-independent).
+    let mut ax = vec![0.0; m as usize];
+    for &(i, j, v) in &entries {
+        ax[i as usize] += v * x[j as usize];
+    }
+
+    let variants = [
+        ("Csr", SpmvParts::Csr(&csr_parts)),
+        ("Coo", SpmvParts::Coo(&coo_parts)),
+        ("Elements", SpmvParts::Elements { m, n, parts: &slices }),
+        ("Blocks", SpmvParts::Blocks { m, n, blocks: &block_refs }),
+    ];
+    for (label, parts) in &variants {
+        // Overwrite form: zeroed allocation, exactly A·x.
+        assert_eq!(parts.spmv(&x), ax, "[{label}] spmv != A·x");
+        // Accumulate form: dirty y, applied twice, never cleared.
+        let mut y = dirty.to_vec();
+        parts.spmv_into(&x, &mut y);
+        parts.spmv_into(&x, &mut y);
+        let want: Vec<f64> = dirty.iter().zip(&ax).map(|(d, a)| d + 2.0 * a).collect();
+        assert_eq!(y, want, "[{label}] spmv_into must accumulate, not overwrite");
+    }
+}
+
+/// End-to-end: encode a random matrix into ABHSF (`AbhsfData::from_coo`),
+/// store it into an h5spm container on the in-memory backend, decode it
+/// back through the batched block pipeline, and prove the per-scheme
+/// kernels reproduce the original matrix — elements, payload accounting,
+/// and the SpMV product (exact: dyadic values).
+#[test]
+fn encode_decode_kernel_roundtrip_matches_truth() {
+    let mut rng = Xoshiro256::seed_from_u64(0xDEC0DE);
+    let (m, n, s) = (41u64, 37u64, 7u64);
+    let nnz = 300usize;
+    let mut cells = rng.sample_indices((m * n) as usize, nnz);
+    cells.sort_unstable();
+    let truth: Vec<(u64, u64, f64)> = cells
+        .into_iter()
+        .map(|cell| (cell as u64 / n, cell as u64 % n, dyadic(&mut rng)))
+        .collect();
+
+    let mut coo = Coo::with_info(LocalInfo::whole(m, n, nnz as u64));
+    for &(i, j, v) in &truth {
+        coo.push(i, j, v);
+    }
+    let data = AbhsfData::from_coo(&coo, s, &CostModel::default()).unwrap();
+    assert!(data.blocks() > 1, "matrix must span several blocks");
+
+    let fs = MemFs::new();
+    let path = std::path::Path::new("kernels-roundtrip/matrix-0.h5spm");
+    // Small chunks so the batched fetch crosses container chunk seams.
+    store_data_chunked_on(&fs, path, &data, 64).unwrap();
+    let reader = H5Reader::open_on(&fs, path).unwrap();
+    let dir = BlockDirectory::read(&reader).unwrap();
+    assert_eq!(dir.entries.len() as u64, data.blocks());
+
+    let indices: Vec<usize> = (0..dir.entries.len()).collect();
+    let mut blocks: Vec<DecodedBlock> = Vec::new();
+    // Tiny batch budget: forces a multi-batch prefetch pipeline.
+    let decoded = fetch_decoded_blocks_batched(&reader, &dir, &indices, 512, |k, block| {
+        let e = &dir.entries[k];
+        assert_eq!(block.scheme(), e.scheme, "block {k}: scheme");
+        assert_eq!(block.zeta(), e.zeta, "block {k}: zeta");
+        assert_eq!(
+            block.payload_bytes(),
+            expected_payload_bytes(e.scheme, s, e.zeta),
+            "block {k}: per-scheme payload bytes"
+        );
+        blocks.push(block);
+    })
+    .unwrap();
+    assert_eq!(decoded, nnz as u64);
+
+    // Element-exact reconstruction.
+    let mut got: Vec<(u64, u64, f64)> = blocks.iter().flat_map(|b| b.elements()).collect();
+    got.sort_by_key(|&(i, j, _)| (i, j));
+    assert_eq!(got, truth, "decoded elements != stored elements");
+
+    // Kernel product over the decoded blocks == order-independent oracle.
+    let x: Vec<f64> = (0..n).map(|_| dyadic(&mut rng)).collect();
+    let refs: Vec<&DecodedBlock> = blocks.iter().collect();
+    let y = SpmvParts::Blocks { m, n, blocks: &refs }.spmv(&x);
+    let mut want = vec![0.0; m as usize];
+    for &(i, j, v) in &truth {
+        want[i as usize] += v * x[j as usize];
+    }
+    assert_eq!(y, want, "block-kernel SpMV != truth product");
+}
+
+/// A measured table whose per-(s, scheme) affine costs are designed so
+/// every scheme wins somewhere: COO → CSR → bitmap → dense as ζ grows
+/// (at s = 16), plus a second calibrated size.
+fn envelope_table() -> MeasuredCosts {
+    let mk = |s, scheme, base_ps, per_elem_ps| MeasuredEntry {
+        s,
+        scheme,
+        base_ps,
+        per_elem_ps,
+    };
+    MeasuredCosts::new(vec![
+        mk(16, Scheme::Coo, 100, 1000),
+        mk(16, Scheme::Csr, 2000, 800),
+        mk(16, Scheme::Bitmap, 20_000, 500),
+        mk(16, Scheme::Dense, 100_000, 100),
+        mk(64, Scheme::Coo, 400, 1000),
+        mk(64, Scheme::Csr, 8000, 800),
+        mk(64, Scheme::Bitmap, 80_000, 500),
+        mk(64, Scheme::Dense, 1_600_000, 100),
+    ])
+    .unwrap()
+}
+
+/// The hand-estimated s = 8 table used by the decision-flip tests: under
+/// it COO/CSR/dense win kernel time where the analytic byte model picks
+/// bitmap for nearly every fill.
+fn flip_table() -> MeasuredCosts {
+    let mk = |scheme, base_ps, per_elem_ps| MeasuredEntry {
+        s: 8,
+        scheme,
+        base_ps,
+        per_elem_ps,
+    };
+    MeasuredCosts::new(vec![
+        mk(Scheme::Coo, 500, 900),
+        mk(Scheme::Csr, 1220, 700),
+        mk(Scheme::Bitmap, 8000, 500),
+        mk(Scheme::Dense, 19_200, 150),
+    ])
+    .unwrap()
+}
+
+/// `MeasuredCosts` survives the JSON round trip bit-for-bit, both as the
+/// bare table object and embedded under `"table"` the way
+/// `BENCH_kernels.json` carries it; malformed tables are rejected.
+#[test]
+fn measured_table_json_roundtrip() {
+    for table in [envelope_table(), flip_table()] {
+        let text = table.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let back = MeasuredCosts::from_json(&parsed).unwrap();
+        assert_eq!(back, table, "bare table round trip");
+
+        // Whole-document form: {"bench": ..., "table": {...}}.
+        let doc = format!("{{\"bench\":\"kernels\",\"table\":{text}}}");
+        let back = MeasuredCosts::from_json(&Json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(back, table, "embedded table round trip");
+    }
+    // Validation: a block size missing a scheme entry is rejected.
+    let incomplete = MeasuredCosts::new(vec![MeasuredEntry {
+        s: 8,
+        scheme: Scheme::Coo,
+        base_ps: 1,
+        per_elem_ps: 1,
+    }]);
+    assert!(incomplete.is_err(), "incomplete table must not validate");
+    assert!(MeasuredCosts::new(vec![]).is_err(), "empty table must not validate");
+}
+
+/// The committed calibration baseline at the repo root parses, drives a
+/// `CostModel`, and labels the manifest the way `store --calibrate`
+/// records it.
+#[test]
+fn committed_bench_table_parses_and_drives_cost_model() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("kernels"));
+    let table = MeasuredCosts::from_json(&doc).unwrap();
+    assert!(!table.block_sizes().is_empty());
+    let model = CostModel::from_measurements(table.clone());
+    assert_eq!(model.table_id(), table.label());
+    assert!(model.table_id().starts_with("measured(s="));
+    // The model answers for uncalibrated sizes too (nearest-s rule).
+    for s in [1u64, 8, 13, 100] {
+        let chosen = model.choose(s, 1);
+        assert!(Scheme::ALL.contains(&chosen));
+    }
+}
+
+/// `choose` is exactly the argmin of `block_cost` with ties resolved
+/// toward the lower scheme tag — for the analytic model and for measured
+/// tables alike.
+#[test]
+fn choose_is_argmin_of_block_cost_for_both_models() {
+    let models = [
+        ("analytic", CostModel::default()),
+        ("envelope", CostModel::from_measurements(envelope_table())),
+        ("flip", CostModel::from_measurements(flip_table())),
+    ];
+    for (label, model) in &models {
+        for s in [4u64, 8, 16, 64] {
+            for zeta in 0..=s * s {
+                let chosen = model.choose(s, zeta);
+                let best = model.block_cost(chosen, s, zeta);
+                for other in Scheme::ALL {
+                    let cost = model.block_cost(other, s, zeta);
+                    assert!(
+                        best <= cost,
+                        "[{label}] s={s} zeta={zeta}: chose {chosen:?} ({best}) \
+                         but {other:?} costs {cost}"
+                    );
+                    if cost == best {
+                        assert!(
+                            chosen as u8 <= other as u8,
+                            "[{label}] s={s} zeta={zeta}: tie must pick lower tag, \
+                             got {chosen:?} over {other:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Affine lower envelope ⇒ each scheme wins one contiguous ζ interval:
+/// walking ζ from 1 to s², no scheme that stopped winning ever wins
+/// again. Verified for measured tables (the analytic model shares the
+/// property by the same argument).
+#[test]
+fn measured_crossovers_are_monotone_in_zeta() {
+    for (label, table) in [("envelope", envelope_table()), ("flip", flip_table())] {
+        let model = CostModel::from_measurements(table);
+        for s in [8u64, 16, 64] {
+            let mut seen_done: Vec<Scheme> = Vec::new();
+            let mut current: Option<Scheme> = None;
+            for zeta in 1..=s * s {
+                let w = model.choose(s, zeta);
+                if current != Some(w) {
+                    if let Some(prev) = current {
+                        seen_done.push(prev);
+                    }
+                    assert!(
+                        !seen_done.contains(&w),
+                        "[{label}] s={s}: {w:?} wins again at zeta={zeta} after \
+                         losing — crossovers not monotone"
+                    );
+                    current = Some(w);
+                }
+            }
+        }
+        // At s=16 the envelope table gives every scheme its own regime.
+        if label == "envelope" {
+            let winners: Vec<Scheme> =
+                [1u64, 30, 100, 250].iter().map(|&z| model.choose(16, z)).collect();
+            assert_eq!(
+                winners,
+                [Scheme::Coo, Scheme::Csr, Scheme::Bitmap, Scheme::Dense],
+                "[{label}] expected all four regimes at s=16"
+            );
+        }
+    }
+}
+
+/// The acceptance pin: a measured table flips scheme decisions against
+/// the analytic byte model, and the flip propagates through
+/// `AbhsfData::from_coo` into what actually gets encoded.
+#[test]
+fn measured_table_flips_scheme_decisions_vs_analytic() {
+    let analytic = CostModel::default();
+    let measured = CostModel::from_measurements(flip_table());
+
+    // Analytic bytes at s=8, zeta=4: COO 48, CSR 76, bitmap 40, dense 512
+    // → bitmap. Measured ps: COO 4100, CSR 4020, bitmap 10000, dense
+    // 19800 → CSR. A genuine flip.
+    assert_eq!(analytic.choose(8, 4), Scheme::Bitmap);
+    assert_eq!(measured.choose(8, 4), Scheme::Csr);
+    let flips = (1..=64u64)
+        .filter(|&z| analytic.choose(8, z) != measured.choose(8, z))
+        .count();
+    assert!(flips > 10, "expected many flips at s=8, got {flips}");
+
+    // End to end: the same 4-nonzero block encodes as bitmap under the
+    // analytic model and as CSR under the measured one.
+    let mut coo = Coo::with_info(LocalInfo::whole(8, 8, 4));
+    for (i, j, v) in [(0u64, 1u64, 1.0), (2, 5, -2.0), (4, 4, 0.5), (7, 0, 3.0)] {
+        coo.push(i, j, v);
+    }
+    let a = AbhsfData::from_coo(&coo, 8, &analytic).unwrap();
+    let m = AbhsfData::from_coo(&coo, 8, &measured).unwrap();
+    assert_eq!(a.schemes, [Scheme::Bitmap as u8]);
+    assert_eq!(m.schemes, [Scheme::Csr as u8]);
+    // Same matrix either way: both decode paths agree on the product.
+    assert_eq!(a.zetas, m.zetas);
+
+    // The calibrated model does not disturb byte accounting: analytic
+    // costs are byte-valued regardless of the measured table.
+    for scheme in Scheme::ALL {
+        assert_eq!(
+            measured.analytic_cost(scheme, 8, 4),
+            analytic.analytic_cost(scheme, 8, 4),
+            "analytic bytes must not change under a measured table"
+        );
+    }
+}

@@ -6,9 +6,11 @@ use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::Duration;
 
-use abhsf::cache::BlockCache;
+use abhsf::abhsf::{matrix_file_path, BlockDirectory, Scheme};
+use abhsf::cache::{BlockCache, BLOCK_FIXED_BYTES};
 use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions};
 use abhsf::gen::{KroneckerGen, SeedMatrix};
+use abhsf::h5::H5Reader;
 use abhsf::mapping::{ProcessMapping, Rowwise};
 use abhsf::util::rng::Xoshiro256;
 use abhsf::vfs::{MemFs, Storage};
@@ -79,6 +81,38 @@ fn rect_filter(reference: &[Elem], rows: (u64, u64), cols: (u64, u64)) -> Vec<El
         .collect()
 }
 
+/// Scheme-native payload bytes of one stored block under the default
+/// byte widths — the independent formula the cache's per-block charge
+/// (`DecodedBlock::payload_bytes`) must reproduce.
+fn scheme_payload_bytes(scheme: Scheme, s: u64, zeta: u64) -> u64 {
+    match scheme {
+        Scheme::Coo => (2 + 2 + 8) * zeta,
+        Scheme::Csr => 4 * (s + 1) + (2 + 8) * zeta,
+        Scheme::Bitmap => (s * s).div_ceil(8) + 8 * zeta,
+        Scheme::Dense => 8 * s * s,
+    }
+}
+
+/// Walk every stored block directory of `dataset` and return
+/// `(block_count, per_scheme_bytes, triplet_bytes)`: the cache charge
+/// all blocks should account to under scheme-native storage, and what
+/// the same working set would cost expanded to 24-byte triplets.
+fn accounting_for(storage: &Arc<dyn Storage>, dataset: &Dataset) -> (u64, u64, u64) {
+    let (mut blocks, mut native, mut triplets) = (0u64, 0u64, 0u64);
+    for rank in 0..dataset.nprocs() {
+        let path = matrix_file_path(dataset.dir(), rank);
+        let reader = H5Reader::open_on(storage.as_ref(), &path).unwrap();
+        let dir = BlockDirectory::read(&reader).unwrap();
+        let s = dir.header.block_size;
+        for e in &dir.entries {
+            blocks += 1;
+            native += BLOCK_FIXED_BYTES + scheme_payload_bytes(e.scheme, s, e.zeta);
+            triplets += BLOCK_FIXED_BYTES + 24 * e.zeta;
+        }
+    }
+    (blocks, native, triplets)
+}
+
 /// Differential: every random rect / row-slice / nnz / SpMV answer of a
 /// cached reader is element-identical to the full `LoadPlan` load, on
 /// both the local filesystem and the in-memory backend — and once warm,
@@ -89,7 +123,7 @@ fn cached_queries_match_full_load_on_local_and_mem() {
         ("local", abhsf::vfs::local()),
         ("mem", Arc::new(MemFs::new()) as Arc<dyn Storage>),
     ] {
-        let (dataset, reference, n) = setup(storage, &format!("diff-{label}"), 3, 8);
+        let (dataset, reference, n) = setup(Arc::clone(&storage), &format!("diff-{label}"), 3, 8);
         let cache = BlockCache::with_budget(64 << 20);
         let reader = dataset.reader(&cache).unwrap();
         assert_eq!(reader.dims(), (n, n));
@@ -127,10 +161,37 @@ fn cached_queries_match_full_load_on_local_and_mem() {
             abhsf::spmv::max_abs_diff(&y, &want) < 1e-9,
             "[{label}] spmv diverged"
         );
+        // Kernel dimension: the block-kernel SpMV is deterministic —
+        // the same query through two fresh caches yields a bit-identical
+        // product (same block order, same per-element summation) and
+        // identical miss counts (misses are a pure function of the query
+        // stream, not of scheduling).
+        let ca = BlockCache::with_budget(64 << 20);
+        let cb = BlockCache::with_budget(64 << 20);
+        let ya = dataset.reader(&ca).unwrap().spmv(&x).unwrap();
+        let yb = dataset.reader(&cb).unwrap().spmv(&x).unwrap();
+        assert_eq!(ya, yb, "[{label}] spmv not deterministic across fresh caches");
+        assert_eq!(ya, y, "[{label}] fresh-cache spmv != warm-cache spmv");
+        let (sa, sb) = (ca.stats(), cb.stats());
+        assert_eq!(sa.misses, sb.misses, "[{label}] miss counts diverged");
+        assert_eq!(sa.hits, sb.hits, "[{label}] hit counts diverged");
+        assert!(sa.misses > 0, "[{label}] whole-matrix spmv must decode blocks");
         // Everything is resident now (the budget dwarfs the dataset):
         // warm queries must not touch storage at all.
         let st = cache.stats();
         assert_eq!(st.evictions, 0, "budget was ample: {st:?}");
+        // Per-scheme byte accounting: every block is resident, and the
+        // cache charges each one its scheme-native payload plus the
+        // fixed overhead — strictly less than the same working set
+        // expanded to 24-byte triplets (no triplet expansion anywhere).
+        let (blocks, native, triplets) = accounting_for(&storage, &dataset);
+        assert_eq!(st.resident_blocks, blocks, "[{label}] not all blocks resident");
+        assert_eq!(st.resident_bytes, native, "[{label}] resident bytes != per-scheme accounting");
+        assert!(
+            native < triplets,
+            "[{label}] scheme-native accounting ({native}) not below triplet \
+             expansion ({triplets})"
+        );
         let io_before = reader.io_stats();
         let again = reader.rect(0..n, 0..n).unwrap();
         assert_eq!(again, reference);
