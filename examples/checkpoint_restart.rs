@@ -24,7 +24,7 @@ use abhsf::formats::Csr;
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::mapping::{Colwise, ProcessMapping};
 use abhsf::runtime::Runtime;
-use abhsf::spmv::power_iteration_step;
+use abhsf::spmv::{power_iteration_step_parts, SpmvParts};
 use abhsf::util::human;
 
 /// Distributed power iteration on CSR parts; returns (eigenvector, norm).
@@ -32,7 +32,7 @@ fn iterate(parts: &[Csr], x0: Vec<f64>, steps: usize) -> (Vec<f64>, f64) {
     let mut x = x0;
     let mut norm = 0.0;
     for _ in 0..steps {
-        let (x2, n2) = power_iteration_step(parts, &x);
+        let (x2, n2) = power_iteration_step_parts(&SpmvParts::Csr(parts), &x);
         x = x2;
         norm = n2;
     }

@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     let n = gen.dim();
     let x: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
     let csrs: Vec<Csr> = parts.into_iter().map(|m| m.into_csr()).collect();
-    let y = abhsf::spmv::spmv_distributed_csr(&csrs, &x);
+    let y = abhsf::spmv::SpmvParts::Csr(&csrs).spmv(&x);
     let mut want = vec![0.0; n as usize];
     gen.visit_row_range(0, n, |i, j, v| want[i as usize] += v * x[j as usize]);
     let diff = abhsf::spmv::max_abs_diff(&y, &want);

@@ -1,0 +1,212 @@
+//! Bench: distributed-vs-resident SpMV throughput and CG
+//! time-to-tolerance across mappings and process counts.
+//!
+//! For every mapping kind (rowwise / colwise / 2d) and P ∈ {1, 2, 4, 8}
+//! over a generated SPD operand: one resident (single-address-space)
+//! SpMV timing, the distributed halo-exchange SpMV timing (per
+//! application, engine build amortized over a fixed iteration budget)
+//! with its measured and predicted halo bytes, and a CG solve to 1e-8
+//! with iteration count and wall time. Persists `BENCH_solve.json`
+//! (committed baseline at the repo root; CI regenerates and
+//! shape-checks it like `BENCH_kernels.json`).
+//!
+//! Run: `cargo bench --bench solve` (`--json PATH` to override the
+//! output path).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use abhsf::coordinator::Cluster;
+use abhsf::dist::solvers::conjugate_gradient;
+use abhsf::dist::{predict_spmv_comm, spmv_partitions, CsrOperator, LocalOperator, RankEngine};
+use abhsf::formats::Csr;
+use abhsf::gen::{spd_parts, KroneckerGen, SeedMatrix};
+use abhsf::mapping::{Block2d, Colwise, ProcessMapping, Rowwise};
+use abhsf::spmv::SpmvParts;
+use abhsf::util::bench::{fmt_time, Bencher, Table};
+use abhsf::util::json::Json;
+
+/// `--json PATH` from the bench's argv; the results file is always
+/// written.
+fn json_path() -> String {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_solve.json".to_string())
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Distributed SpMV applications per timing run (engine build and
+/// thread spawn amortize across them).
+const SPMV_REPS: usize = 20;
+
+fn mapping_for(kind: &str, n: u64, p: usize) -> Arc<dyn ProcessMapping> {
+    match kind {
+        "rowwise" => Arc::new(Rowwise::regular(n, n, p)),
+        "colwise" => Arc::new(Colwise::regular(n, n, p)),
+        _ => Arc::new(Block2d::regular_auto(n, n, p)),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== Distributed SpMV / CG solve benchmark ==\n");
+    let gen = KroneckerGen::new(SeedMatrix::cage_like(10, 42), 2);
+    let n = gen.dim();
+    let tol = 1e-8;
+    let b = Bencher::quick();
+
+    let mut table = Table::new(&[
+        "mapping",
+        "P",
+        "resident/spmv",
+        "dist/spmv",
+        "halo B/spmv",
+        "pred B/spmv",
+        "cg iters",
+        "cg time",
+    ]);
+    let mut json_rows = Vec::new();
+    for kind in ["rowwise", "colwise", "2d"] {
+        for p in [1usize, 2, 4, 8] {
+            let mapping = mapping_for(kind, n, p);
+            let desc = mapping.descriptor();
+            let (coo_parts, _sigma) = spd_parts(&gen, mapping.as_ref(), 0.0);
+            let nnz: u64 = coo_parts.iter().map(|c| c.nnz() as u64).sum();
+            let parts: Arc<Vec<Csr>> = Arc::new(coo_parts.iter().map(Csr::from_coo).collect());
+            let x: Arc<Vec<f64>> =
+                Arc::new((0..n).map(|i| 0.5 + ((i % 7) as f64) * 0.25).collect());
+            let b_rhs: Arc<Vec<f64>> =
+                Arc::new((0..n).map(|i| 1.0 + ((i % 17) as f64) * 0.25).collect());
+
+            // Resident: the whole product in one address space.
+            let resident_parts = Arc::clone(&parts);
+            let resident_x = Arc::clone(&x);
+            let mut y = vec![0.0f64; n as usize];
+            let m = b.run(&format!("resident-{kind}-p{p}"), || {
+                y = SpmvParts::Csr(&resident_parts).spmv(&resident_x);
+                std::hint::black_box(&mut y);
+            });
+            let resident_s = m.mean_s();
+
+            // Distributed: SPMV_REPS applications per rank, engine build
+            // amortized; leader wall time over the whole cluster run.
+            let cluster = Cluster::new(p, 64);
+            let run_desc = desc.clone();
+            let run_parts = Arc::clone(&parts);
+            let run_x = Arc::clone(&x);
+            let t0 = Instant::now();
+            let stats = cluster.run(move |ctx| {
+                let (xp, yp) = spmv_partitions(&run_desc, n, n);
+                let mut op = CsrOperator::new(std::slice::from_ref(&run_parts[ctx.rank]));
+                let mut engine = RankEngine::new(ctx, xp, yp, op.row_window(), op.col_window());
+                let (x0, x1) = engine.x_owned_range();
+                let x_local = run_x[x0 as usize..x1 as usize].to_vec();
+                let (y0, y1) = engine.y_owned_range();
+                let mut y_local = vec![0.0f64; (y1 - y0) as usize];
+                for _ in 0..SPMV_REPS {
+                    engine
+                        .spmv(&mut op, &x_local, &mut y_local)
+                        .expect("CSR operator cannot fail");
+                }
+                std::hint::black_box(&y_local);
+                engine.stats().clone()
+            });
+            let dist_s = t0.elapsed().as_secs_f64() / SPMV_REPS as f64;
+            let halo_per_spmv: u64 =
+                stats.iter().map(|s| s.halo_bytes_sent).sum::<u64>() / SPMV_REPS as u64;
+            let pred = predict_spmv_comm(&desc, n, n);
+
+            // CG to tolerance on the SPD operand.
+            let cg_cluster = Cluster::new(p, 64);
+            let cg_desc = desc.clone();
+            let cg_parts = Arc::clone(&parts);
+            let cg_b = Arc::clone(&b_rhs);
+            let t0 = Instant::now();
+            let outcomes = cg_cluster.run(move |ctx| {
+                let (xp, yp) = spmv_partitions(&cg_desc, n, n);
+                let mut op = CsrOperator::new(std::slice::from_ref(&cg_parts[ctx.rank]));
+                let mut engine = RankEngine::new(ctx, xp, yp, op.row_window(), op.col_window());
+                let (y0, y1) = engine.y_owned_range();
+                conjugate_gradient(
+                    &mut engine,
+                    &mut op,
+                    &cg_b[y0 as usize..y1 as usize],
+                    tol,
+                    500,
+                )
+                .expect("CSR operator cannot fail")
+            });
+            let cg_s = t0.elapsed().as_secs_f64();
+            let cg = &outcomes[0];
+            assert!(cg.converged, "CG must converge on the SPD operand");
+
+            table.row(&[
+                kind.to_string(),
+                p.to_string(),
+                fmt_time(resident_s),
+                fmt_time(dist_s),
+                halo_per_spmv.to_string(),
+                pred.total_bytes().to_string(),
+                cg.iterations.to_string(),
+                fmt_time(cg_s),
+            ]);
+            json_rows.push(obj(vec![
+                ("mapping", Json::str(kind)),
+                ("p", Json::num(p as u64)),
+                ("n", Json::num(n)),
+                ("nnz", Json::num(nnz)),
+                ("spmv_resident_s", Json::Num(resident_s)),
+                ("spmv_dist_s", Json::Num(dist_s)),
+                ("halo_bytes_per_spmv", Json::num(halo_per_spmv)),
+                ("predicted_bytes_per_spmv", Json::num(pred.total_bytes())),
+                ("comm_exact", Json::Bool(pred.exact)),
+                ("cg_iters", Json::num(cg.iterations as u64)),
+                ("cg_s", Json::Num(cg_s)),
+                ("cg_converged", Json::Bool(cg.converged)),
+            ]));
+        }
+    }
+    table.print();
+
+    let doc = obj(vec![
+        ("bench", Json::str("solve")),
+        (
+            "note",
+            Json::str(
+                "distributed-vs-resident SpMV and CG time-to-tolerance over the \
+                 halo-exchange engine; halo bytes measured per SpMV next to the \
+                 predict_spmv_comm model (exact for rectangular mappings)",
+            ),
+        ),
+        (
+            "grid",
+            obj(vec![
+                ("mappings", Json::Arr(vec![
+                    Json::str("rowwise"),
+                    Json::str("colwise"),
+                    Json::str("2d"),
+                ])),
+                ("procs", Json::arr_u64(&[1, 2, 4, 8])),
+                ("tol", Json::Num(tol)),
+                ("spmv_reps", Json::num(SPMV_REPS as u64)),
+            ]),
+        ),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = json_path();
+    std::fs::write(&path, format!("{doc}\n"))
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -17,11 +17,62 @@ use std::thread::JoinHandle;
 pub type GlobalElement = (u64, u64, f64);
 
 /// Message on the inter-worker element channels.
+///
+/// The first two variants carry the exchange *loader*'s traffic
+/// (element batches and end-of-stream markers); the rest carry the
+/// distributed SpMV engine's traffic ([`crate::dist`]): vector halo
+/// segments, windowed partial results, the one-time data-window
+/// announcement, and scalar reduction contributions. All of them obey
+/// the same discipline — bounded channels, [`WorkerCtx::send_draining`]
+/// under pressure — so the two protocols share one mesh.
 pub enum Msg {
     /// A batch of elements routed to the receiving rank.
     Elements(Vec<GlobalElement>),
     /// Sender `rank` has finished producing for the receiver.
     Done(usize),
+    /// A contiguous halo segment of the distributed vector `x` owned by
+    /// rank `from`: global entries `start .. start + vals.len()`.
+    XSegment {
+        /// Owning (sending) rank.
+        from: usize,
+        /// Global index of `vals[0]`.
+        start: u64,
+        /// The segment payload.
+        vals: Vec<f64>,
+    },
+    /// A window-complete partial of the distributed vector `y` computed
+    /// by rank `from`, to be folded by the receiving owner in ascending
+    /// `from` order (the fixed-order reduction that makes distributed
+    /// SpMV bit-deterministic).
+    YPartial {
+        /// Computing (sending) rank.
+        from: usize,
+        /// Global index of `vals[0]`.
+        start: u64,
+        /// The partial payload (includes explicit zeros for empty rows).
+        vals: Vec<f64>,
+    },
+    /// Rank `from`'s data windows, announced once when a distributed
+    /// engine is built: half-open global `rows`/`cols` ranges its local
+    /// matrix part touches. Every halo plan is derived symmetrically
+    /// from these, so senders and receivers always agree.
+    Window {
+        /// Announcing rank.
+        from: usize,
+        /// Row window `[start, end)` of the local part.
+        rows: (u64, u64),
+        /// Column window `[start, end)` of the local part.
+        cols: (u64, u64),
+    },
+    /// Rank `from`'s local contribution to a deterministic all-reduce:
+    /// every rank folds all `P` values in ascending rank order, so the
+    /// reduced scalar is bit-identical on every rank.
+    Scalar {
+        /// Contributing rank.
+        from: usize,
+        /// The local value.
+        value: f64,
+    },
 }
 
 type Job = Box<dyn FnOnce(&WorkerCtx) -> Box<dyn Any + Send> + Send>;
@@ -288,6 +339,7 @@ mod tests {
                 match ctx.recv() {
                     Msg::Elements(batch) => got.extend(batch),
                     Msg::Done(_) => done += 1,
+                    _ => unreachable!("loader test received a dist-engine message"),
                 }
             }
             got.sort_by_key(|&(s, _, _)| s);
@@ -300,6 +352,66 @@ mod tests {
                 assert!((*s as usize) < 3);
             }
         }
+    }
+
+    /// The dist-engine message kinds survive a point-to-point hop with
+    /// their payloads intact (shape only; the full halo protocol is
+    /// exercised by `rust/tests/dist.rs`).
+    #[test]
+    fn dist_message_variants_roundtrip() {
+        let cluster = Cluster::new(2, 4);
+        let out = cluster.run(|ctx| {
+            let peer = 1 - ctx.rank;
+            ctx.send(
+                peer,
+                Msg::XSegment {
+                    from: ctx.rank,
+                    start: 3,
+                    vals: vec![1.0, 2.0],
+                },
+            );
+            ctx.send(
+                peer,
+                Msg::Window {
+                    from: ctx.rank,
+                    rows: (0, 4),
+                    cols: (2, 6),
+                },
+            );
+            ctx.send(
+                peer,
+                Msg::Scalar {
+                    from: ctx.rank,
+                    value: 0.5 + ctx.rank as f64,
+                },
+            );
+            let mut seen = Vec::new();
+            for _ in 0..3 {
+                match ctx.recv() {
+                    Msg::XSegment { from, start, vals } => {
+                        assert_eq!(from, peer);
+                        assert_eq!(start, 3);
+                        assert_eq!(vals, vec![1.0, 2.0]);
+                        seen.push("x");
+                    }
+                    Msg::Window { from, rows, cols } => {
+                        assert_eq!(from, peer);
+                        assert_eq!((rows, cols), ((0, 4), (2, 6)));
+                        seen.push("w");
+                    }
+                    Msg::Scalar { from, value } => {
+                        assert_eq!(from, peer);
+                        assert_eq!(value, 0.5 + peer as f64);
+                        seen.push("s");
+                    }
+                    _ => unreachable!("unexpected loader message"),
+                }
+            }
+            seen.sort_unstable();
+            seen
+        });
+        assert_eq!(out[0], vec!["s", "w", "x"]);
+        assert_eq!(out[1], vec!["s", "w", "x"]);
     }
 
     #[test]
@@ -323,6 +435,7 @@ mod tests {
                             std::thread::sleep(std::time::Duration::from_micros(200));
                         }
                         Msg::Done(_) => break,
+                        _ => unreachable!("loader test received a dist-engine message"),
                     }
                 }
                 n

@@ -278,6 +278,10 @@ pub(crate) fn exchange_impl(
         let handle = |msg: Msg| match msg {
             Msg::Elements(batch) => mine.borrow_mut().extend(batch),
             Msg::Done(_) => done.set(done.get() + 1),
+            // Dist-engine messages (x halos, y partials, …) never fly
+            // during a load phase — ranks are inside this loader, not an
+            // engine exchange.
+            _ => unreachable!("loader received a dist-engine message"),
         };
         let mut file = rank;
         while file < stored_files {
@@ -431,7 +435,7 @@ mod tests {
     use crate::coordinator::storer::StoreOptions;
     use crate::gen::{KroneckerGen, SeedMatrix};
     use crate::mapping::{Block2d, Colwise, Rowwise};
-    use crate::spmv::{max_abs_diff, spmv_distributed_csr};
+    use crate::spmv::{max_abs_diff, SpmvParts};
 
     fn tmpdir(name: &str) -> PathBuf {
         let dir = std::env::temp_dir().join("abhsf-loader-tests").join(name);
@@ -490,7 +494,7 @@ mod tests {
         assert_eq!(report.total_nnz(), gen.nnz());
         let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
         let x = test_vector(n);
-        let y = spmv_distributed_csr(&parts, &x);
+        let y = SpmvParts::Csr(&parts).spmv(&x);
         assert!(max_abs_diff(&y, &reference_spmv(&gen, &x)) < 1e-9);
         assert!(report.unique_bytes > 0);
         assert_eq!(report.per_rank_io.len(), p);
@@ -522,7 +526,7 @@ mod tests {
             }
             let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
             let x = test_vector(n);
-            let y = spmv_distributed_csr(&parts, &x);
+            let y = SpmvParts::Csr(&parts).spmv(&x);
             assert!(max_abs_diff(&y, &reference_spmv(&gen, &x)) < 1e-9);
         }
     }
@@ -566,7 +570,7 @@ mod tests {
         assert_eq!(report.total_nnz(), gen.nnz());
         let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
         let x = test_vector(n);
-        let y = spmv_distributed_csr(&parts, &x);
+        let y = SpmvParts::Csr(&parts).spmv(&x);
         assert!(max_abs_diff(&y, &reference_spmv(&gen, &x)) < 1e-9);
     }
 
@@ -591,7 +595,7 @@ mod tests {
         assert_eq!(opens as usize, p_store);
         let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
         let x = test_vector(n);
-        let y = spmv_distributed_csr(&parts, &x);
+        let y = SpmvParts::Csr(&parts).spmv(&x);
         assert!(max_abs_diff(&y, &reference_spmv(&gen, &x)) < 1e-9);
     }
 

@@ -31,6 +31,58 @@ impl StoreReport {
     }
 }
 
+/// Outcome of a distributed solve/SpMV run (`solve` and `spmv` CLI):
+/// the solver's convergence record plus every rank's halo-exchange
+/// counters ([`crate::dist::DistStats`]), printable against the
+/// [`crate::dist::predict_spmv_comm`] model.
+#[derive(Debug, Clone)]
+pub struct DistReport {
+    /// Solver label (`power`, `cg`, `lanczos`, or `spmv`).
+    pub alg: String,
+    /// Cluster size.
+    pub nprocs: usize,
+    /// Wall time of the whole run (leader-observed), s.
+    pub wall_s: f64,
+    /// Iterations (matrix applications) executed.
+    pub iterations: usize,
+    /// Whether the convergence criterion was met.
+    pub converged: bool,
+    /// Headline scalar (eigenvalue estimate or final residual norm).
+    pub value: f64,
+    /// Residual trajectory, one entry per iteration.
+    pub residuals: Vec<f64>,
+    /// Per-rank engine counters.
+    pub per_rank: Vec<crate::dist::DistStats>,
+}
+
+impl DistReport {
+    /// Total halo bytes sent across all ranks (equals total received).
+    pub fn halo_bytes_sent(&self) -> u64 {
+        self.per_rank.iter().map(|s| s.halo_bytes_sent).sum()
+    }
+
+    /// Total halo bytes received across all ranks.
+    pub fn halo_bytes_recv(&self) -> u64 {
+        self.per_rank.iter().map(|s| s.halo_bytes_recv).sum()
+    }
+
+    /// Distributed SpMVs executed per rank (identical on all ranks for
+    /// collective solvers; 0 when the run never applied the matrix).
+    pub fn spmvs(&self) -> u64 {
+        self.per_rank.first().map_or(0, |s| s.spmvs)
+    }
+
+    /// Average halo bytes sent per SpMV across the whole cluster.
+    pub fn bytes_per_spmv(&self) -> u64 {
+        let spmvs = self.spmvs();
+        if spmvs == 0 {
+            0
+        } else {
+            self.halo_bytes_sent() / spmvs
+        }
+    }
+}
+
 /// How `Strategy::Auto` arrived at its choice: the per-candidate
 /// cost-model predictions and the winner. Attached to [`LoadReport`] by
 /// [`crate::coordinator::LoadPlan`] so experiments can audit the

@@ -44,7 +44,7 @@ pub use cluster::{Cluster, WorkerCtx};
 pub use dataset::{Dataset, DatasetManifest, LoadPlan, StoredFile, Strategy, MANIFEST_FILE};
 pub use error::DatasetError;
 pub use loader::{DiffLoadOptions, LoadedMatrix};
-pub use metrics::{AutoDecision, LoadReport, StoreReport};
+pub use metrics::{AutoDecision, DistReport, LoadReport, StoreReport};
 pub use storer::StoreOptions;
 // The repack subsystem lives in `crate::repack` (it is the first
 // store-path-at-load-scale subsystem and owns its own module tree), but

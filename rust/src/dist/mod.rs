@@ -1,0 +1,942 @@
+//! Distributed SpMV engine with halo exchange — the compute subsystem
+//! the loaded data feeds (DESIGN.md §13).
+//!
+//! Every `spmv` path before this module multiplied against a fully
+//! resident `x` on each rank, so nothing actually scaled past one node's
+//! memory. Here `x` and `y` are *partitioned* across ranks by the
+//! dataset's [`MappingDesc`] ([`spmv_partitions`]; owner-computes for
+//! `y`), and each [`RankEngine`] computes from the announced per-rank
+//! windows exactly which `x` segments its local submatrix touches and
+//! halo-exchanges **only those segments** over the existing
+//! [`Cluster`](crate::coordinator::Cluster)/[`WorkerCtx`] channel mesh
+//! ([`Msg::XSegment`]/[`Msg::YPartial`]), deadlock-free via the
+//! `send_draining` discipline (a rank blocked on a full peer channel
+//! drains its own inbox into the [`RankEngine`]'s mailbox).
+//!
+//! **Bit-determinism.** Partial `y` contributions are reduced to their
+//! owners in a *fixed ascending rank order*, with the owner's own
+//! partial folded at its own rank position. Combined with windowed
+//! kernels whose per-element accumulation order is identical to the
+//! global-vector kernels ([`Csr::spmv_windowed_into`],
+//! [`spmv_block_windowed_into`](crate::spmv::kernels)), the distributed
+//! result is bit-identical to the single-rank
+//! [`SpmvParts`](crate::spmv::SpmvParts) fold over the same parts in
+//! rank order — `rust/tests/dist.rs` asserts `==`, not `≈`.
+//!
+//! **Comm/compute overlap.** An engine posts all of its outgoing `x`
+//! halo segments *before* asking the local operator to
+//! [`prefetch`](LocalOperator::prefetch) (block fetch + decode through
+//! the serve layer's read-ahead pipeline), and only then waits for
+//! incoming segments — decode runs while halos are in flight. This is
+//! safe: our sends are already posted, so a peer spinning in
+//! `send_draining` against our full inbox makes progress the moment we
+//! start receiving.
+//!
+//! **Comm model.** [`predict_spmv_comm`] computes per-rank halo bytes
+//! from the mapping descriptor alone — *exactly* for rectangular
+//! mappings (row-wise / column-wise / 2D block keep their declared
+//! windows through `window_or_tight`), and as an upper bound for
+//! irregular ones (cyclic rows declare the whole matrix; the stored
+//! tight windows can only shrink the traffic). The measured
+//! [`DistStats`] halo counters are validated against it in tests and
+//! printed by the `solve`/`spmv` CLI.
+//!
+//! Iterative solvers (power iteration, CG, Lanczos) with distributed
+//! dot/norm reductions live in [`solvers`].
+
+pub mod solvers;
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::abhsf::load::DecodedBlock;
+use crate::coordinator::cluster::{Msg, WorkerCtx};
+use crate::coordinator::error::DatasetError;
+use crate::formats::Csr;
+use crate::mapping::{even_starts, MappingDesc};
+use crate::serve::DatasetReader;
+use crate::spmv::kernels::spmv_block_windowed_into;
+
+/// Contiguous partition of a global vector across `P` ranks: rank `k`
+/// owns entries `[starts[k], starts[k+1])`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VectorPartition {
+    /// Chunk starts, `P + 1` entries, ascending, `starts[0] = 0`.
+    pub starts: Vec<u64>,
+}
+
+impl VectorPartition {
+    /// Even split of `total` entries over `parts` ranks.
+    pub fn even(total: u64, parts: usize) -> Self {
+        Self {
+            starts: even_starts(total, parts),
+        }
+    }
+
+    /// Partition from explicit chunk starts (`P + 1` entries).
+    pub fn from_starts(starts: Vec<u64>) -> Self {
+        assert!(starts.len() >= 2, "need at least one chunk");
+        Self { starts }
+    }
+
+    /// Number of ranks.
+    pub fn nprocs(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Owned half-open range of `rank`.
+    pub fn range(&self, rank: usize) -> (u64, u64) {
+        (self.starts[rank], self.starts[rank + 1])
+    }
+
+    /// Owned entry count of `rank`.
+    pub fn len_of(&self, rank: usize) -> usize {
+        (self.starts[rank + 1] - self.starts[rank]) as usize
+    }
+
+    /// Total vector length.
+    pub fn total(&self) -> u64 {
+        *self.starts.last().unwrap()
+    }
+}
+
+/// The `x`/`y` partitioning contract: how the input and output vectors
+/// of `y = A x` are split across ranks for a given mapping.
+///
+/// * Row-wise: `y` follows the row chunks (owner-computes: each rank
+///   fully owns its rows' results); for square matrices `x` uses the
+///   same boundaries so solvers can alias iterate and product.
+/// * Column-wise: `x` follows the column chunks (each rank holds the
+///   `x` entries its columns multiply); `y` mirrors them when square.
+/// * 2D block / cyclic / opaque: even splits of both vectors.
+///
+/// Returns `(x_partition, y_partition)`. For square matrices the two
+/// are always equal — the invariant the iterative solvers rely on.
+pub fn spmv_partitions(desc: &MappingDesc, m: u64, n: u64) -> (VectorPartition, VectorPartition) {
+    let p = desc.nprocs();
+    match desc {
+        MappingDesc::Rowwise { starts, .. } => {
+            let y = VectorPartition::from_starts(starts.clone());
+            let x = if n == m {
+                y.clone()
+            } else {
+                VectorPartition::even(n, p)
+            };
+            (x, y)
+        }
+        MappingDesc::Colwise { starts, .. } => {
+            let x = VectorPartition::from_starts(starts.clone());
+            let y = if m == n {
+                x.clone()
+            } else {
+                VectorPartition::even(m, p)
+            };
+            (x, y)
+        }
+        _ => (VectorPartition::even(n, p), VectorPartition::even(m, p)),
+    }
+}
+
+/// Intersection of two half-open intervals, normalized so empty results
+/// have `hi == lo`.
+pub fn overlap(a: (u64, u64), b: (u64, u64)) -> (u64, u64) {
+    let lo = a.0.max(b.0);
+    let hi = a.1.min(b.1);
+    if hi <= lo {
+        (lo, lo)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// `parfs`-style prediction of one distributed SpMV's halo traffic.
+#[derive(Debug, Clone)]
+pub struct CommPrediction {
+    /// Halo payload bytes each rank sends per SpMV (x segments + y
+    /// partials; 8 B per `f64`, scalar reductions excluded).
+    pub per_rank_sent: Vec<u64>,
+    /// Halo payload bytes each rank receives per SpMV.
+    pub per_rank_recv: Vec<u64>,
+    /// `true` when the mapping's ownership is rectangular, in which case
+    /// the engine's measured byte counters match this prediction
+    /// *exactly*; irregular mappings make it an upper bound (their
+    /// stored windows are tightened to actual elements).
+    pub exact: bool,
+    /// The naive alternative this engine replaces: every rank holding
+    /// the full input vector (`P × n × 8` bytes moved per SpMV).
+    pub broadcast_bytes: u64,
+}
+
+impl CommPrediction {
+    /// Total bytes sent across all ranks (equals total received).
+    pub fn total_bytes(&self) -> u64 {
+        self.per_rank_sent.iter().sum()
+    }
+}
+
+/// Predict per-rank halo bytes for one SpMV under `desc` on an `m × n`
+/// matrix, from the mapping descriptor alone (module docs for the
+/// exactness contract). Mirrors the engine's plan derivation: rank `s`
+/// sends to `r ≠ s` the overlap of `s`'s owned `x` range with `r`'s
+/// column window, and the overlap of `s`'s row window with `r`'s owned
+/// `y` range; zero-length segments are skipped on both sides.
+pub fn predict_spmv_comm(desc: &MappingDesc, m: u64, n: u64) -> CommPrediction {
+    let p = desc.nprocs();
+    let (x_part, y_part) = spmv_partitions(desc, m, n);
+    let mut exact = true;
+    let windows: Vec<((u64, u64), (u64, u64))> = (0..p)
+        .map(|r| match desc.rank_rect(r) {
+            Some((r0, c0, rm, cn)) => ((r0, r0 + rm), (c0, c0 + cn)),
+            None => {
+                exact = false;
+                ((0, m), (0, n))
+            }
+        })
+        .collect();
+    let mut sent = vec![0u64; p];
+    let mut recv = vec![0u64; p];
+    for s in 0..p {
+        for r in 0..p {
+            if s == r {
+                continue;
+            }
+            let x = overlap(x_part.range(s), windows[r].1);
+            let xb = 8 * (x.1 - x.0);
+            sent[s] += xb;
+            recv[r] += xb;
+            let y = overlap(windows[s].0, y_part.range(r));
+            let yb = 8 * (y.1 - y.0);
+            sent[s] += yb;
+            recv[r] += yb;
+        }
+    }
+    CommPrediction {
+        per_rank_sent: sent,
+        per_rank_recv: recv,
+        exact,
+        broadcast_bytes: p as u64 * n * 8,
+    }
+}
+
+/// Per-rank counters of one engine's lifetime: halo traffic and the
+/// exchange/compute/decode time split. Halo bytes count the `f64`
+/// payloads of [`Msg::XSegment`]/[`Msg::YPartial`] only (8 B per
+/// element); scalar reductions and window announcements are excluded.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DistStats {
+    /// Halo payload bytes sent.
+    pub halo_bytes_sent: u64,
+    /// Halo payload bytes received.
+    pub halo_bytes_recv: u64,
+    /// Halo messages sent.
+    pub halo_msgs_sent: u64,
+    /// Halo messages received.
+    pub halo_msgs_recv: u64,
+    /// Distributed SpMVs executed.
+    pub spmvs: u64,
+    /// Seconds posting halo sends and waiting on halo receives.
+    pub exchange_s: f64,
+    /// Seconds inside the local operator's windowed apply.
+    pub compute_s: f64,
+    /// Seconds inside the local operator's prefetch (block fetch +
+    /// decode; zero for resident CSR operators).
+    pub decode_s: f64,
+}
+
+/// Per-source FIFO queues for every dist message kind. The channel mesh
+/// delivers one interleaved stream; the mailbox reorders it so waits
+/// can target "the next `x` segment *from rank 3*" while queueing
+/// whatever else arrives (including next-iteration traffic from ranks
+/// that are already ahead — per-sender channel FIFO keeps each queue in
+/// iteration order).
+struct Mailbox {
+    x: Vec<VecDeque<(u64, Vec<f64>)>>,
+    y: Vec<VecDeque<(u64, Vec<f64>)>>,
+    windows: Vec<VecDeque<((u64, u64), (u64, u64))>>,
+    scalars: Vec<VecDeque<f64>>,
+}
+
+impl Mailbox {
+    fn new(p: usize) -> Self {
+        Self {
+            x: (0..p).map(|_| VecDeque::new()).collect(),
+            y: (0..p).map(|_| VecDeque::new()).collect(),
+            windows: (0..p).map(|_| VecDeque::new()).collect(),
+            scalars: (0..p).map(|_| VecDeque::new()).collect(),
+        }
+    }
+
+    fn put(&mut self, msg: Msg) {
+        match msg {
+            Msg::XSegment { from, start, vals } => self.x[from].push_back((start, vals)),
+            Msg::YPartial { from, start, vals } => self.y[from].push_back((start, vals)),
+            Msg::Window { from, rows, cols } => self.windows[from].push_back((rows, cols)),
+            Msg::Scalar { from, value } => self.scalars[from].push_back(value),
+            Msg::Elements(_) | Msg::Done(_) => {
+                unreachable!("loader message during a dist exchange")
+            }
+        }
+    }
+
+    fn wait_x(&mut self, ctx: &WorkerCtx, src: usize) -> (u64, Vec<f64>) {
+        loop {
+            if let Some(seg) = self.x[src].pop_front() {
+                return seg;
+            }
+            self.put(ctx.recv());
+        }
+    }
+
+    fn wait_y(&mut self, ctx: &WorkerCtx, src: usize) -> (u64, Vec<f64>) {
+        loop {
+            if let Some(seg) = self.y[src].pop_front() {
+                return seg;
+            }
+            self.put(ctx.recv());
+        }
+    }
+
+    fn wait_window(&mut self, ctx: &WorkerCtx, src: usize) -> ((u64, u64), (u64, u64)) {
+        loop {
+            if let Some(w) = self.windows[src].pop_front() {
+                return w;
+            }
+            self.put(ctx.recv());
+        }
+    }
+
+    fn wait_scalar(&mut self, ctx: &WorkerCtx, src: usize) -> f64 {
+        loop {
+            if let Some(v) = self.scalars[src].pop_front() {
+                return v;
+            }
+            self.put(ctx.recv());
+        }
+    }
+}
+
+/// One rank's local piece of the matrix, as the engine drives it: a
+/// row/column window declaration, an optional prefetch (block fetch +
+/// decode, overlapped with halo exchange), and a windowed apply.
+pub trait LocalOperator {
+    /// Half-open global row range this rank's elements fall in.
+    fn row_window(&self) -> (u64, u64);
+
+    /// Half-open global column range this rank's elements fall in.
+    fn col_window(&self) -> (u64, u64);
+
+    /// Materialize whatever `apply` needs (fetch + decode blocks through
+    /// the cache); returns the seconds spent doing so. Called once per
+    /// SpMV *between* posting halo sends and waiting on receives, so
+    /// decode overlaps communication; cheap no-op after the first call
+    /// for operators that cache their blocks.
+    fn prefetch(&mut self) -> Result<f64, DatasetError> {
+        Ok(0.0)
+    }
+
+    /// Accumulate `y += A_local x` against windowed vectors: `x_win`
+    /// holds global entries `[x_off, x_off + x_win.len())`, `y_win`
+    /// global entries `[y_off, ...)`; both windows cover the declared
+    /// ones. Must make exactly the same f64 operations in the same
+    /// order as the resident global-vector kernel.
+    fn apply(&mut self, x_win: &[f64], x_off: u64, y_win: &mut [f64], y_off: u64);
+}
+
+/// Resident CSR parts as a [`LocalOperator`] — the shape `LoadPlan`
+/// hands back, windows straight from the parts' [`LocalInfo`]
+/// (tightened at store time by `window_or_tight`).
+pub struct CsrOperator<'a> {
+    parts: &'a [Csr],
+}
+
+impl<'a> CsrOperator<'a> {
+    /// Wrap this rank's loaded CSR parts (usually exactly one).
+    pub fn new(parts: &'a [Csr]) -> Self {
+        Self { parts }
+    }
+
+    fn union(&self, f: impl Fn(&Csr) -> (u64, u64)) -> (u64, u64) {
+        let mut win: Option<(u64, u64)> = None;
+        for p in self.parts {
+            let (lo, hi) = f(p);
+            if hi <= lo {
+                continue;
+            }
+            win = Some(match win {
+                None => (lo, hi),
+                Some((a, b)) => (a.min(lo), b.max(hi)),
+            });
+        }
+        win.unwrap_or((0, 0))
+    }
+}
+
+impl LocalOperator for CsrOperator<'_> {
+    fn row_window(&self) -> (u64, u64) {
+        self.union(|p| (p.info.m_offset, p.info.m_offset + p.info.m_local))
+    }
+
+    fn col_window(&self) -> (u64, u64) {
+        self.union(|p| (p.info.n_offset, p.info.n_offset + p.info.n_local))
+    }
+
+    fn apply(&mut self, x_win: &[f64], x_off: u64, y_win: &mut [f64], y_off: u64) {
+        for p in self.parts {
+            p.spmv_windowed_into(x_win, x_off, y_win, y_off);
+        }
+    }
+}
+
+/// One stored file's decoded blocks as a [`LocalOperator`]: windows from
+/// the block directory (no payload read), blocks fetched through the
+/// serving cache on first [`prefetch`](LocalOperator::prefetch) and
+/// applied **in directory order** every iteration
+/// ([`DatasetReader::file_blocks`]) — reproducible bits regardless of
+/// cache state.
+pub struct BlockOperator<'r, 'c> {
+    reader: &'r DatasetReader<'c>,
+    file: usize,
+    blocks: Option<Vec<Arc<DecodedBlock>>>,
+    row_win: (u64, u64),
+    col_win: (u64, u64),
+}
+
+impl<'r, 'c> BlockOperator<'r, 'c> {
+    /// Operator over stored file `file` of `reader`'s dataset.
+    pub fn new(reader: &'r DatasetReader<'c>, file: usize) -> Self {
+        let (row_win, col_win) = reader.file_window(file);
+        Self {
+            reader,
+            file,
+            blocks: None,
+            row_win,
+            col_win,
+        }
+    }
+}
+
+impl LocalOperator for BlockOperator<'_, '_> {
+    fn row_window(&self) -> (u64, u64) {
+        self.row_win
+    }
+
+    fn col_window(&self) -> (u64, u64) {
+        self.col_win
+    }
+
+    fn prefetch(&mut self) -> Result<f64, DatasetError> {
+        if self.blocks.is_none() {
+            let t0 = Instant::now();
+            self.blocks = Some(self.reader.file_blocks(self.file)?);
+            return Ok(t0.elapsed().as_secs_f64());
+        }
+        Ok(0.0)
+    }
+
+    fn apply(&mut self, x_win: &[f64], x_off: u64, y_win: &mut [f64], y_off: u64) {
+        let blocks = self.blocks.as_ref().expect("prefetch() before apply()");
+        for block in blocks {
+            spmv_block_windowed_into(block, x_win, x_off, y_win, y_off);
+        }
+    }
+}
+
+/// One rank's half of the distributed SpMV engine (module docs for the
+/// protocol). Construction performs a one-time all-to-all window
+/// announcement and derives all four exchange plans symmetrically, so
+/// both sides of every pair agree on exactly which segments fly.
+pub struct RankEngine<'a> {
+    ctx: &'a WorkerCtx,
+    x_part: VectorPartition,
+    y_part: VectorPartition,
+    row_win: (u64, u64),
+    col_win: (u64, u64),
+    /// `(dest, start, len)`: my owned `x` entries `dest`'s columns touch.
+    x_send: Vec<(usize, u64, u64)>,
+    /// `(src, start, len)`: `x` segments my columns need from `src`.
+    x_recv: Vec<(usize, u64, u64)>,
+    /// `(owner, start, len)`: partial `y` rows I computed for `owner`.
+    y_send: Vec<(usize, u64, u64)>,
+    /// `(src, start, len)`: partials folded into my owned `y`, ascending
+    /// `src` **including myself** — the fixed fold order that makes the
+    /// reduction bit-deterministic.
+    y_fold: Vec<(usize, u64, u64)>,
+    mailbox: Mailbox,
+    x_buf: Vec<f64>,
+    y_buf: Vec<f64>,
+    stats: DistStats,
+}
+
+impl<'a> RankEngine<'a> {
+    /// Build this rank's engine: announce `(row_win, col_win)` (the
+    /// local operator's declared windows) to every peer, collect
+    /// theirs, and derive the exchange plans. Collective: every rank of
+    /// the cluster must construct its engine with the same partitions.
+    pub fn new(
+        ctx: &'a WorkerCtx,
+        x_part: VectorPartition,
+        y_part: VectorPartition,
+        row_win: (u64, u64),
+        col_win: (u64, u64),
+    ) -> Self {
+        let p = ctx.nprocs;
+        let me = ctx.rank;
+        assert_eq!(x_part.nprocs(), p, "x partition has wrong rank count");
+        assert_eq!(y_part.nprocs(), p, "y partition has wrong rank count");
+        let mut mailbox = Mailbox::new(p);
+        for r in 0..p {
+            if r != me {
+                ctx.send_draining(
+                    r,
+                    Msg::Window {
+                        from: me,
+                        rows: row_win,
+                        cols: col_win,
+                    },
+                    |m| mailbox.put(m),
+                );
+            }
+        }
+        let mut windows = vec![((0, 0), (0, 0)); p];
+        windows[me] = (row_win, col_win);
+        for src in 0..p {
+            if src != me {
+                windows[src] = mailbox.wait_window(ctx, src);
+            }
+        }
+        let seg = |a: (u64, u64), b: (u64, u64)| {
+            let (lo, hi) = overlap(a, b);
+            (hi > lo).then_some((lo, hi - lo))
+        };
+        let mut x_send = Vec::new();
+        let mut x_recv = Vec::new();
+        let mut y_send = Vec::new();
+        let mut y_fold = Vec::new();
+        for r in 0..p {
+            if r != me {
+                if let Some((start, len)) = seg(x_part.range(me), windows[r].1) {
+                    x_send.push((r, start, len));
+                }
+                if let Some((start, len)) = seg(col_win, x_part.range(r)) {
+                    x_recv.push((r, start, len));
+                }
+                if let Some((start, len)) = seg(row_win, y_part.range(r)) {
+                    y_send.push((r, start, len));
+                }
+            }
+            if let Some((start, len)) = seg(windows[r].0, y_part.range(me)) {
+                y_fold.push((r, start, len));
+            }
+        }
+        let x_buf = vec![0.0; (col_win.1 - col_win.0) as usize];
+        let y_buf = vec![0.0; (row_win.1 - row_win.0) as usize];
+        Self {
+            ctx,
+            x_part,
+            y_part,
+            row_win,
+            col_win,
+            x_send,
+            x_recv,
+            y_send,
+            y_fold,
+            mailbox,
+            x_buf,
+            y_buf,
+            stats: DistStats::default(),
+        }
+    }
+
+    /// This rank's owned half-open range of the input vector.
+    pub fn x_owned_range(&self) -> (u64, u64) {
+        self.x_part.range(self.ctx.rank)
+    }
+
+    /// This rank's owned half-open range of the output vector.
+    pub fn y_owned_range(&self) -> (u64, u64) {
+        self.y_part.range(self.ctx.rank)
+    }
+
+    /// Global input-vector length `n`.
+    pub fn x_total(&self) -> u64 {
+        self.x_part.total()
+    }
+
+    /// Global output-vector length `m`.
+    pub fn y_total(&self) -> u64 {
+        self.y_part.total()
+    }
+
+    /// This rank.
+    pub fn rank(&self) -> usize {
+        self.ctx.rank
+    }
+
+    /// Cluster size `P`.
+    pub fn nprocs(&self) -> usize {
+        self.ctx.nprocs
+    }
+
+    /// Counters accumulated so far.
+    pub fn stats(&self) -> &DistStats {
+        &self.stats
+    }
+
+    /// One distributed `y = A x`: `x_local`/`y_local` are this rank's
+    /// owned segments ([`x_owned_range`](Self::x_owned_range) /
+    /// [`y_owned_range`](Self::y_owned_range)). Collective — every rank
+    /// must call with its own engine and operator. `y_local` is
+    /// overwritten.
+    pub fn spmv<O: LocalOperator + ?Sized>(
+        &mut self,
+        op: &mut O,
+        x_local: &[f64],
+        y_local: &mut [f64],
+    ) -> Result<(), DatasetError> {
+        let me = self.ctx.rank;
+        let (x0, x1) = self.x_part.range(me);
+        let (y0, y1) = self.y_part.range(me);
+        assert_eq!(x_local.len() as u64, x1 - x0, "x_local != owned x range");
+        assert_eq!(y_local.len() as u64, y1 - y0, "y_local != owned y range");
+
+        // 1. Post x halo sends (ascending dest). Draining keeps this
+        //    deadlock-free under any channel capacity.
+        let ctx = self.ctx;
+        let te = Instant::now();
+        {
+            let mailbox = &mut self.mailbox;
+            for &(dest, start, len) in &self.x_send {
+                let lo = (start - x0) as usize;
+                let vals = x_local[lo..lo + len as usize].to_vec();
+                self.stats.halo_bytes_sent += 8 * len;
+                self.stats.halo_msgs_sent += 1;
+                ctx.send_draining(
+                    dest,
+                    Msg::XSegment {
+                        from: me,
+                        start,
+                        vals,
+                    },
+                    |m| mailbox.put(m),
+                );
+            }
+        }
+        self.stats.exchange_s += te.elapsed().as_secs_f64();
+
+        // 2. Overlap: fetch + decode local blocks while halos fly.
+        self.stats.decode_s += op.prefetch()?;
+
+        // 3. Assemble the column-window view of x: own overlap copied
+        //    in place, every expected remote segment awaited.
+        let tw = Instant::now();
+        let (c0, _) = self.col_win;
+        self.x_buf.fill(0.0);
+        let own = overlap((x0, x1), self.col_win);
+        if own.1 > own.0 {
+            let src = &x_local[(own.0 - x0) as usize..(own.1 - x0) as usize];
+            self.x_buf[(own.0 - c0) as usize..(own.1 - c0) as usize].copy_from_slice(src);
+        }
+        for &(src, start, len) in &self.x_recv {
+            let (got_start, vals) = self.mailbox.wait_x(ctx, src);
+            assert_eq!(got_start, start, "x segment from {src} misaligned");
+            assert_eq!(vals.len() as u64, len, "x segment from {src} wrong length");
+            self.stats.halo_bytes_recv += 8 * len;
+            self.stats.halo_msgs_recv += 1;
+            let lo = (start - c0) as usize;
+            self.x_buf[lo..lo + len as usize].copy_from_slice(&vals);
+        }
+        self.stats.exchange_s += tw.elapsed().as_secs_f64();
+
+        // 4. Local windowed apply.
+        let tc = Instant::now();
+        let (r0, _) = self.row_win;
+        self.y_buf.fill(0.0);
+        op.apply(&self.x_buf, c0, &mut self.y_buf, r0);
+        self.stats.compute_s += tc.elapsed().as_secs_f64();
+
+        // 5. Reduce partials to owners, then fold my owned y in fixed
+        //    ascending source order (own partial at own rank position).
+        let tr = Instant::now();
+        {
+            let mailbox = &mut self.mailbox;
+            for &(owner, start, len) in &self.y_send {
+                let lo = (start - r0) as usize;
+                let vals = self.y_buf[lo..lo + len as usize].to_vec();
+                self.stats.halo_bytes_sent += 8 * len;
+                self.stats.halo_msgs_sent += 1;
+                ctx.send_draining(
+                    owner,
+                    Msg::YPartial {
+                        from: me,
+                        start,
+                        vals,
+                    },
+                    |m| mailbox.put(m),
+                );
+            }
+        }
+        y_local.fill(0.0);
+        for &(src, start, len) in &self.y_fold {
+            if src == me {
+                for i in 0..len as usize {
+                    y_local[(start - y0) as usize + i] += self.y_buf[(start - r0) as usize + i];
+                }
+            } else {
+                let (got_start, vals) = self.mailbox.wait_y(ctx, src);
+                assert_eq!(got_start, start, "y partial from {src} misaligned");
+                assert_eq!(vals.len() as u64, len, "y partial from {src} wrong length");
+                self.stats.halo_bytes_recv += 8 * len;
+                self.stats.halo_msgs_recv += 1;
+                for (i, v) in vals.into_iter().enumerate() {
+                    y_local[(start - y0) as usize + i] += v;
+                }
+            }
+        }
+        self.stats.exchange_s += tr.elapsed().as_secs_f64();
+        self.stats.spmvs += 1;
+        Ok(())
+    }
+
+    /// Deterministic all-reduce sum: every rank sends its local value to
+    /// every peer and folds all `P` values in ascending rank order (own
+    /// value at own position) — identical f64 bits on every rank, every
+    /// run. Collective.
+    pub fn allreduce_sum(&mut self, value: f64) -> f64 {
+        let me = self.ctx.rank;
+        let p = self.ctx.nprocs;
+        let ctx = self.ctx;
+        {
+            let mailbox = &mut self.mailbox;
+            for r in 0..p {
+                if r != me {
+                    ctx.send_draining(r, Msg::Scalar { from: me, value }, |m| mailbox.put(m));
+                }
+            }
+        }
+        let mut total = 0.0;
+        for r in 0..p {
+            total += if r == me {
+                value
+            } else {
+                self.mailbox.wait_scalar(ctx, r)
+            };
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Cluster;
+    use crate::formats::{Coo, LocalInfo};
+
+    #[test]
+    fn partitions_follow_the_mapping() {
+        let desc = MappingDesc::Rowwise {
+            m: 10,
+            n: 10,
+            starts: vec![0, 3, 6, 8, 10],
+        };
+        let (x, y) = spmv_partitions(&desc, 10, 10);
+        assert_eq!(y.starts, vec![0, 3, 6, 8, 10]);
+        assert_eq!(x, y, "square row-wise aliases x to the row chunks");
+        let desc = MappingDesc::Colwise {
+            m: 10,
+            n: 10,
+            starts: vec![0, 5, 10],
+        };
+        let (x, y) = spmv_partitions(&desc, 10, 10);
+        assert_eq!(x.starts, vec![0, 5, 10]);
+        assert_eq!(x, y);
+        let desc = MappingDesc::Block2d {
+            m: 9,
+            n: 9,
+            pr: 2,
+            pc: 2,
+        };
+        let (x, y) = spmv_partitions(&desc, 9, 9);
+        assert_eq!(x.starts, even_starts(9, 4));
+        assert_eq!(y.starts, even_starts(9, 4));
+        // Rectangular (non-square) row-wise: x falls back to even.
+        let desc = MappingDesc::Rowwise {
+            m: 6,
+            n: 9,
+            starts: vec![0, 2, 6],
+        };
+        let (x, y) = spmv_partitions(&desc, 6, 9);
+        assert_eq!(y.starts, vec![0, 2, 6]);
+        assert_eq!(x.starts, even_starts(9, 2));
+    }
+
+    #[test]
+    fn overlap_normalizes_empty() {
+        assert_eq!(overlap((0, 5), (3, 9)), (3, 5));
+        assert_eq!(overlap((0, 5), (5, 9)), (5, 5));
+        let (lo, hi) = overlap((7, 9), (0, 3));
+        assert_eq!(hi, lo, "disjoint intervals are empty");
+    }
+
+    /// Row-wise square: every rank broadcasts its x chunk to all peers
+    /// (their column windows span everything), y traffic is zero (rows
+    /// are owner-computed). Exact, and strictly below the resident
+    /// broadcast for P ≥ 2.
+    #[test]
+    fn predict_rowwise_is_exact_x_only() {
+        let desc = MappingDesc::Rowwise {
+            m: 10,
+            n: 10,
+            starts: vec![0, 3, 6, 8, 10],
+        };
+        let pred = predict_spmv_comm(&desc, 10, 10);
+        assert!(pred.exact);
+        assert_eq!(pred.per_rank_sent, vec![3 * 3 * 8, 3 * 3 * 8, 2 * 3 * 8, 2 * 3 * 8]);
+        assert_eq!(pred.per_rank_recv, vec![7 * 8, 7 * 8, 8 * 8, 8 * 8]);
+        assert_eq!(pred.total_bytes(), (4 - 1) * 10 * 8);
+        assert_eq!(pred.broadcast_bytes, 4 * 10 * 8);
+        assert!(pred.total_bytes() < pred.broadcast_bytes);
+    }
+
+    /// Column-wise is the mirror image: x traffic zero, y partials
+    /// reduced to owners.
+    #[test]
+    fn predict_colwise_mirrors_rowwise() {
+        let desc = MappingDesc::Colwise {
+            m: 10,
+            n: 10,
+            starts: vec![0, 3, 6, 8, 10],
+        };
+        let pred = predict_spmv_comm(&desc, 10, 10);
+        assert!(pred.exact);
+        assert_eq!(pred.total_bytes(), (4 - 1) * 10 * 8);
+    }
+
+    /// Irregular mappings predict with whole-matrix windows and say so.
+    #[test]
+    fn predict_cyclic_is_upper_bound() {
+        let desc = MappingDesc::CyclicRows { m: 12, n: 12, p: 3 };
+        let pred = predict_spmv_comm(&desc, 12, 12);
+        assert!(!pred.exact);
+        // Every rank ships its whole x chunk and a partial for every
+        // other rank's whole y chunk.
+        assert_eq!(pred.total_bytes(), 2 * (3 - 1) * 12 * 8);
+    }
+
+    #[test]
+    fn predict_single_rank_is_silent() {
+        let desc = MappingDesc::Rowwise {
+            m: 8,
+            n: 8,
+            starts: vec![0, 8],
+        };
+        let pred = predict_spmv_comm(&desc, 8, 8);
+        assert!(pred.exact);
+        assert_eq!(pred.total_bytes(), 0);
+    }
+
+    fn two_rank_rowwise_parts() -> (Vec<Csr>, Vec<f64>, Vec<f64>) {
+        // 4x4 matrix split into two row bands of 2; dense reference.
+        let entries = [
+            (0u64, 0u64, 2.0),
+            (0, 3, 1.0),
+            (1, 1, -1.0),
+            (2, 0, 4.0),
+            (2, 2, 0.5),
+            (3, 3, 3.0),
+        ];
+        let mut parts = Vec::new();
+        for rank in 0..2u64 {
+            let (r0, r1) = (rank * 2, rank * 2 + 2);
+            let info = LocalInfo {
+                m: 4,
+                n: 4,
+                z: entries.len() as u64,
+                m_local: 2,
+                n_local: 4,
+                z_local: 0,
+                m_offset: r0,
+                n_offset: 0,
+            };
+            let mut coo = Coo::with_info(info);
+            for &(i, j, v) in &entries {
+                if i >= r0 && i < r1 {
+                    coo.push(i - r0, j, v);
+                }
+            }
+            parts.push(Csr::from_coo(&coo));
+        }
+        let x = vec![1.0, -2.0, 0.5, 3.0];
+        let mut want = vec![0.0; 4];
+        for &(i, j, v) in &entries {
+            want[i as usize] += v * x[j as usize];
+        }
+        (parts, x, want)
+    }
+
+    /// End-to-end engine on a 2-rank row-wise split: distributed y is
+    /// bit-identical to the single-rank fold, and measured halo bytes
+    /// match the prediction exactly.
+    #[test]
+    fn engine_matches_single_rank_bitwise() {
+        let (parts, x, want) = two_rank_rowwise_parts();
+        let reference = crate::spmv::SpmvParts::Csr(&parts).spmv(&x);
+        assert_eq!(reference, want);
+        let desc = MappingDesc::Rowwise {
+            m: 4,
+            n: 4,
+            starts: vec![0, 2, 4],
+        };
+        let pred = predict_spmv_comm(&desc, 4, 4);
+        let parts = Arc::new(parts);
+        let x = Arc::new(x);
+        let desc = Arc::new(desc);
+        let cluster = Cluster::new(2, 1);
+        let out = cluster.run(move |ctx| {
+            let (xp, yp) = spmv_partitions(&desc, 4, 4);
+            let mine = std::slice::from_ref(&parts[ctx.rank]);
+            let mut op = CsrOperator::new(mine);
+            let mut engine = RankEngine::new(
+                ctx,
+                xp,
+                yp,
+                op.row_window(),
+                op.col_window(),
+            );
+            let (x0, x1) = engine.x_owned_range();
+            let x_local = x[x0 as usize..x1 as usize].to_vec();
+            let (y0, y1) = engine.y_owned_range();
+            let mut y_local = vec![0.0; (y1 - y0) as usize];
+            engine.spmv(&mut op, &x_local, &mut y_local).unwrap();
+            (y_local, engine.stats().clone())
+        });
+        let mut y = Vec::new();
+        for (rank, (y_local, stats)) in out.iter().enumerate() {
+            y.extend_from_slice(y_local);
+            assert_eq!(stats.halo_bytes_sent, pred.per_rank_sent[rank]);
+            assert_eq!(stats.halo_bytes_recv, pred.per_rank_recv[rank]);
+            assert_eq!(stats.spmvs, 1);
+        }
+        assert_eq!(y, reference);
+    }
+
+    /// The fixed-order scalar all-reduce lands on identical bits on
+    /// every rank, equal to the sequential ascending fold.
+    #[test]
+    fn allreduce_is_rank_order_deterministic() {
+        let p = 4;
+        let vals: Vec<f64> = (0..p).map(|r| 0.1 + r as f64 * 0.3).collect();
+        let want = vals.iter().fold(0.0, |acc, v| acc + v);
+        let vals = Arc::new(vals);
+        let cluster = Cluster::new(p, 1);
+        let out = cluster.run(move |ctx| {
+            let xp = VectorPartition::even(4, ctx.nprocs);
+            let yp = xp.clone();
+            let mut engine = RankEngine::new(ctx, xp, yp, (0, 0), (0, 0));
+            engine.allreduce_sum(vals[ctx.rank])
+        });
+        for got in out {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+}

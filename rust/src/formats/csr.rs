@@ -147,15 +147,43 @@ impl Csr {
     pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len() as u64, self.info.n, "x length != n");
         assert_eq!(y.len() as u64, self.info.m, "y length != m");
-        let ro = self.info.m_offset as usize;
-        let co = self.info.n_offset as usize;
+        self.spmv_windowed_into(x, 0, y, 0);
+    }
+
+    /// Local SpMV contribution into *windowed* vectors: `x_win` holds the
+    /// global entries `[x_off, x_off + x_win.len())` of `x`, `y_win` the
+    /// global entries `[y_off, y_off + y_win.len())` of `y`. Both windows
+    /// must cover this part's local column/row span. The accumulation
+    /// order per row is identical to [`spmv_into`] (one accumulator per
+    /// row, one add into `y` per row), so a windowed apply is bitwise
+    /// equal to the global one — the distributed engine's determinism
+    /// contract (DESIGN.md §13) rests on this.
+    pub fn spmv_windowed_into(&self, x_win: &[f64], x_off: u64, y_win: &mut [f64], y_off: u64) {
+        assert!(
+            x_off <= self.info.n_offset
+                && self.info.n_offset + self.info.n_local <= x_off + x_win.len() as u64,
+            "x window [{x_off}, +{}) does not cover columns [{}, +{})",
+            x_win.len(),
+            self.info.n_offset,
+            self.info.n_local
+        );
+        assert!(
+            y_off <= self.info.m_offset
+                && self.info.m_offset + self.info.m_local <= y_off + y_win.len() as u64,
+            "y window [{y_off}, +{}) does not cover rows [{}, +{})",
+            y_win.len(),
+            self.info.m_offset,
+            self.info.m_local
+        );
+        let ro = (self.info.m_offset - y_off) as usize;
+        let co = (self.info.n_offset - x_off) as usize;
         for r in 0..self.info.m_local as usize {
             let (lo, hi) = self.row_range(r);
             let mut acc = 0.0;
             for k in lo..hi {
-                acc += self.vals[k] * x[co + self.colinds[k] as usize];
+                acc += self.vals[k] * x_win[co + self.colinds[k] as usize];
             }
-            y[ro + r] += acc;
+            y_win[ro + r] += acc;
         }
     }
 
@@ -206,6 +234,27 @@ mod tests {
         let back = csr.to_coo();
         coo.sort_dedup();
         assert_eq!(coo, back);
+    }
+
+    /// A windowed apply over exactly the local span is bitwise equal to
+    /// the global-vector apply (same per-row accumulation order).
+    #[test]
+    fn windowed_spmv_bitwise_matches_global() {
+        let csr = Csr::from_coo(&sample_coo());
+        let x: Vec<f64> = (0..8).map(|i| 1.0 + i as f64 * 0.375).collect();
+        let mut y_global = vec![0.0f64; 8];
+        csr.spmv_into(&x, &mut y_global);
+
+        // Tight windows: columns [4, 8), rows [4, 8).
+        let x_win = &x[4..8];
+        let mut y_win = vec![0.0f64; 4];
+        csr.spmv_windowed_into(x_win, 4, &mut y_win, 4);
+        assert_eq!(&y_global[4..8], y_win.as_slice());
+
+        // A wider-than-tight window lands on the same bits too.
+        let mut y_wide = vec![0.0f64; 6];
+        csr.spmv_windowed_into(&x[2..8], 2, &mut y_wide, 2);
+        assert_eq!(&y_global[4..8], &y_wide[2..6]);
     }
 
     #[test]

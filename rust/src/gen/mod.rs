@@ -13,6 +13,8 @@
 
 pub mod kronecker;
 pub mod seed;
+pub mod spd;
 
 pub use kronecker::KroneckerGen;
 pub use seed::SeedMatrix;
+pub use spd::spd_parts;

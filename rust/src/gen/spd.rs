@@ -1,0 +1,156 @@
+//! Symmetric-positive-definite workload derivation for the iterative
+//! solvers: `S = (A + Aᵀ)/2 + σ·I` from any square generated matrix
+//! `A`, with `σ` chosen automatically so `S` is strictly diagonally
+//! dominant with a positive diagonal — a sufficient (Gershgorin)
+//! condition for positive definiteness, so CG provably converges on the
+//! generated systems the `solve` CLI and CI smoke run.
+
+use std::collections::BTreeMap;
+
+use crate::formats::element::window_or_tight;
+use crate::formats::{Coo, LocalInfo};
+use crate::gen::KroneckerGen;
+use crate::mapping::ProcessMapping;
+
+/// Build per-rank COO parts of `S = (A + Aᵀ)/2 + σ·I` under `mapping`,
+/// where `A` is the generated matrix. With `extra_shift ≥ 0` the
+/// applied shift is `σ = σ_auto + extra_shift`, where `σ_auto` makes
+/// `S` strictly diagonally dominant (`σ_auto = 1 + max(0, max_i(Σ_{j≠i}
+/// |s_ij| − s_ii))` over the symmetrized entries). Returns the parts
+/// (tight windows, exact-zero cancellations dropped) and the applied
+/// `σ`.
+///
+/// The symmetrization materializes the global entry map once
+/// (`BTreeMap` over `(i, j)`), which is fine at harness scale — the
+/// solvers' matrices are generated small enough to check convergence,
+/// not to stress memory.
+pub fn spd_parts(
+    gen: &KroneckerGen,
+    mapping: &dyn ProcessMapping,
+    extra_shift: f64,
+) -> (Vec<Coo>, f64) {
+    let n = gen.dim();
+    assert!(extra_shift >= 0.0, "extra shift must be non-negative");
+    let mut entries: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    gen.visit_row_range(0, n, |i, j, v| {
+        *entries.entry((i, j)).or_insert(0.0) += v / 2.0;
+        *entries.entry((j, i)).or_insert(0.0) += v / 2.0;
+    });
+    // Diagonal dominance deficit of the symmetrized matrix.
+    let mut diag = vec![0.0f64; n as usize];
+    let mut offdiag_abs = vec![0.0f64; n as usize];
+    for (&(i, j), &v) in &entries {
+        if i == j {
+            diag[i as usize] += v;
+        } else {
+            offdiag_abs[i as usize] += v.abs();
+        }
+    }
+    let deficit = diag
+        .iter()
+        .zip(&offdiag_abs)
+        .map(|(d, o)| o - d)
+        .fold(0.0f64, f64::max);
+    let sigma = 1.0 + deficit.max(0.0) + extra_shift;
+    for i in 0..n {
+        *entries.entry((i, i)).or_insert(0.0) += sigma;
+    }
+    // Symmetrization can cancel exactly (v/2 + (-v/2)); zero entries are
+    // not nonzeros.
+    entries.retain(|_, v| *v != 0.0);
+
+    let p = mapping.nprocs();
+    let mut per_rank: Vec<Vec<(u64, u64, f64)>> = vec![Vec::new(); p];
+    for (&(i, j), &v) in &entries {
+        per_rank[mapping.owner(i, j)].push((i, j, v));
+    }
+    let total = entries.len() as u64;
+    let parts = per_rank
+        .into_iter()
+        .enumerate()
+        .map(|(rank, elems)| {
+            let declared = mapping.window(rank);
+            let (ro, co, ml, nl) = window_or_tight(declared, n, n, &elems);
+            let info = LocalInfo {
+                m: n,
+                n,
+                z: total,
+                m_local: ml,
+                n_local: nl,
+                z_local: 0,
+                m_offset: ro,
+                n_offset: co,
+            };
+            let mut coo = Coo::with_info(info);
+            for (i, j, v) in elems {
+                coo.push(i - ro, j - co, v);
+            }
+            coo
+        })
+        .collect();
+    (parts, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::SeedMatrix;
+    use crate::mapping::Rowwise;
+
+    fn collect_global(parts: &[Coo]) -> BTreeMap<(u64, u64), f64> {
+        let mut out = BTreeMap::new();
+        for part in parts {
+            let (ro, co) = (part.info.m_offset, part.info.n_offset);
+            for (i, j, v) in part.iter() {
+                assert!(
+                    out.insert((i + ro, j + co), v).is_none(),
+                    "duplicate global entry"
+                );
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn spd_parts_are_symmetric_and_dominant() {
+        let gen = KroneckerGen::new(SeedMatrix::cage_like(8, 42), 2);
+        let n = gen.dim();
+        let mapping = Rowwise::regular(n, n, 4);
+        let (parts, sigma) = spd_parts(&gen, &mapping, 0.0);
+        assert!(sigma >= 1.0);
+        assert_eq!(parts.len(), 4);
+        let s = collect_global(&parts);
+        // Symmetry, exact.
+        for (&(i, j), &v) in &s {
+            assert_eq!(s.get(&(j, i)), Some(&v), "asymmetric at ({i},{j})");
+        }
+        // Strict diagonal dominance with positive diagonal.
+        let mut diag = vec![0.0f64; n as usize];
+        let mut off = vec![0.0f64; n as usize];
+        for (&(i, j), &v) in &s {
+            if i == j {
+                diag[i as usize] = v;
+            } else {
+                off[i as usize] += v.abs();
+            }
+        }
+        for i in 0..n as usize {
+            assert!(
+                diag[i] > off[i],
+                "row {i} not dominant: diag {} vs off {}",
+                diag[i],
+                off[i]
+            );
+        }
+    }
+
+    #[test]
+    fn extra_shift_adds_to_diagonal() {
+        let gen = KroneckerGen::new(SeedMatrix::cage_like(8, 42), 1);
+        let n = gen.dim();
+        let mapping = Rowwise::regular(n, n, 2);
+        let (_, sigma0) = spd_parts(&gen, &mapping, 0.0);
+        let (_, sigma3) = spd_parts(&gen, &mapping, 3.0);
+        assert!((sigma3 - sigma0 - 3.0).abs() < 1e-12);
+    }
+}

@@ -35,7 +35,11 @@
 //!   [`cache`] + [`serve`]: a sharded, byte-budgeted decoded-block cache
 //!   with single-flight coalescing behind
 //!   `Dataset::reader(&cache)`'s rect / row-slice / nnz / SpMV queries
-//!   and a multi-threaded closed-loop harness (DESIGN.md §10).
+//!   and a multi-threaded closed-loop harness (DESIGN.md §10). Loaded
+//!   matrices are *computable at scale* through [`dist`]: a distributed
+//!   SpMV engine with mapping-derived vector partitioning and
+//!   halo-segment exchange, plus distributed iterative solvers (power /
+//!   CG / Lanczos) behind the `solve` CLI subcommand (DESIGN.md §13).
 //! * **Layer 2/1 (python/, build-time)** — a JAX blocked-SpMV consumer with
 //!   Pallas kernels, AOT-lowered to HLO text and executed from Rust via the
 //!   PJRT CPU client ([`runtime`]).
@@ -45,6 +49,7 @@
 pub mod abhsf;
 pub mod cache;
 pub mod coordinator;
+pub mod dist;
 pub mod experiments;
 pub mod formats;
 pub mod gen;

@@ -36,7 +36,12 @@ use std::time::Duration;
 use abhsf::abhsf::load::read_header;
 use abhsf::abhsf::{CostModel, MeasuredCosts, Scheme};
 use abhsf::cache::BlockCache;
-use abhsf::coordinator::{Cluster, Dataset, InMemFormat, StoreOptions, Strategy};
+use abhsf::coordinator::{Cluster, Dataset, DistReport, InMemFormat, StoreOptions, Strategy};
+use abhsf::dist::solvers::{conjugate_gradient, lanczos, power_iteration, SolveOutcome};
+use abhsf::dist::{
+    predict_spmv_comm, spmv_partitions, BlockOperator, CommPrediction, CsrOperator, LocalOperator,
+    RankEngine,
+};
 use abhsf::experiments::{run_fig1, Fig1Config};
 use abhsf::formats::Csr;
 use abhsf::gen::{KroneckerGen, SeedMatrix};
@@ -66,6 +71,7 @@ fn main() {
         "roundtrip" => cmd_roundtrip(argv),
         "repack" => cmd_repack(argv),
         "spmv" => cmd_spmv(argv),
+        "solve" => cmd_solve(argv),
         "serve" => cmd_serve(argv),
         "served" => cmd_served(argv),
         "calibrate" => cmd_calibrate(argv),
@@ -128,8 +134,12 @@ fn print_usage() {
          \x20 roundtrip  store, reload, verify\n\
          \x20 repack     stream-transcode a dataset to a new process count, \
          mapping, block size\n\
-         \x20 spmv       load a dataset and run power iteration \
-         (optional PJRT cross-check)\n\
+         \x20 spmv       distributed power iteration with halo exchange \
+         (--resident for the\n\
+         \x20            single-address-space path; optional PJRT cross-check)\n\
+         \x20 solve      distributed iterative solver (cg | power | lanczos) \
+         over the halo-\n\
+         \x20            exchange SpMV engine, with per-rank comm stats\n\
          \x20 serve      concurrent random-access query harness over a \
          shared decoded-block cache\n\
          \x20 served     pallas-served storage daemon: serve a directory \
@@ -168,10 +178,22 @@ fn print_usage() {
          kernel-cost table\n\
          \x20               (BENCH_kernels.json from `cargo bench --bench \
          kernels`) instead of bytes\n\
+         \x20               --spd SHIFT  symmetrize + diagonally shift the \
+         generated matrix into an\n\
+         \x20               SPD system (S = (A+At)/2 + sigma*I) before storing \
+         — the CG workload\n\
          Repack options: --out PATH --nprocs P --mapping KIND --block-size S \
          --chunk-size C\n\
          Calibrate opts: --table PATH (default BENCH_kernels.json)\n\
-         Spmv options:   --iters N --pjrt-check\n\
+         Spmv options:   --iters N --resident (old single-address-space path) \
+         --pjrt-check (implies\n\
+         \x20               --resident)\n\
+         Solve options:  --alg cg|power|lanczos --tol T (default 1e-8) \
+         --max-iters N (default 500)\n\
+         \x20               --steps N (lanczos steps, default 50) --from-blocks \
+         (apply straight from\n\
+         \x20               decoded ABHSF blocks through the cache read-ahead \
+         pipeline)\n\
          Serve options:  --dir A[,B,...] --threads N --queries Q --budget BYTES \
          (e.g. 1MiB)\n\
          \x20               --query-seed S --spmv-every K (0 = no SpMV queries) \
@@ -359,14 +381,31 @@ fn cmd_store(argv: Vec<String>) -> anyhow::Result<()> {
         let table = load_measured_table(std::path::Path::new(path))?;
         opts.cost_model = CostModel::from_measurements(table);
     }
-    let (dataset, report) = Dataset::store_on(
-        Arc::clone(&backend.storage),
-        &cluster,
-        &w.gen,
-        &mapping,
-        &dir,
-        opts,
-    )?;
+    let (dataset, report) = if let Some(shift) = a.get("spd") {
+        let shift: f64 = shift
+            .parse()
+            .map_err(|e| usage_error(format!("--spd: {e}")))?;
+        anyhow::ensure!(shift >= 0.0, "--spd shift must be non-negative");
+        let (parts, sigma) = abhsf::gen::spd_parts(&w.gen, mapping.as_ref(), shift);
+        println!("spd shift {sigma:.6e} (S = (A + At)/2 + sigma I, extra {shift})");
+        Dataset::store_parts_on(
+            Arc::clone(&backend.storage),
+            &cluster,
+            parts,
+            &mapping,
+            &dir,
+            opts,
+        )?
+    } else {
+        Dataset::store_on(
+            Arc::clone(&backend.storage),
+            &cluster,
+            &w.gen,
+            &mapping,
+            &dir,
+            opts,
+        )?
+    };
     println!(
         "stored {} nnz into {} files in {:.3}s ({} payload, mapping {}, backend {}, \
          schemes by {})",
@@ -541,7 +580,7 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
     let n = w.gen.dim();
     let x: Vec<f64> = (0..n).map(|i| ((i % 11) as f64) * 0.3 + 0.5).collect();
     let parts: Vec<Csr> = mats.into_iter().map(|m| m.into_csr()).collect();
-    let y = abhsf::spmv::spmv_distributed_csr(&parts, &x);
+    let y = SpmvParts::Csr(&parts).spmv(&x);
     let mut want = vec![0.0; n as usize];
     w.gen
         .visit_row_range(0, n, |i, j, v| want[i as usize] += v * x[j as usize]);
@@ -560,15 +599,16 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `abhsf spmv` — the end-to-end consumer: load a dataset (same-config
-/// fast path via `Auto`) and run `--iters` normalized power-iteration
-/// steps over the distributed CSR parts, printing the dominant-eigenvalue
-/// estimate and the final residual. The repack smoke test: the loaded
-/// elements are configuration-independent, so before/after numbers agree
-/// to FP-summation-regrouping precision (row-splitting layouts regroup
-/// the per-row accumulation).
+/// `abhsf spmv` — the end-to-end consumer. Default: the *distributed*
+/// path — every stored rank builds a [`RankEngine`], runs `--iters`
+/// normalized power-iteration steps with halo exchange, and one SpMV of
+/// a fixed deterministic vector is then checked **bitwise** against the
+/// resident (single-address-space) [`SpmvParts`] kernel — the
+/// differential oracle. `--resident` keeps the old behavior entirely in
+/// one address space (implied by `--pjrt-check`, which cross-checks
+/// per-part products against the PJRT engine).
 fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
-    let a = Args::parse("abhsf spmv", argv, &["pjrt-check"])?;
+    let a = Args::parse("abhsf spmv", argv, &["pjrt-check", "resident"])?;
     let iters: usize = a.parse_or("iters", 10usize)?;
     let (dataset, backend) = open_dataset(&a)?;
     let (gm, gn) = dataset.dims();
@@ -586,6 +626,11 @@ fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
         report.nprocs,
         report.scenario
     );
+
+    let resident = a.flag("resident") || a.flag("pjrt-check");
+    if !resident {
+        return spmv_distributed(&dataset, &cluster, parts, iters, &backend);
+    }
 
     // Normalized power iteration: x' = A x / |A x|_2, over the shared
     // kernel path (`SpmvParts`) the cached serving reader also uses.
@@ -644,6 +689,247 @@ fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
     }
     backend.print_trailer();
     Ok(())
+}
+
+/// The default `abhsf spmv` path: distributed power iteration over the
+/// halo-exchange engine, closed by a bitwise differential check of one
+/// SpMV against the resident kernel.
+fn spmv_distributed(
+    dataset: &Dataset,
+    cluster: &Cluster,
+    parts: Vec<Csr>,
+    iters: usize,
+    backend: &Backend,
+) -> anyhow::Result<()> {
+    let (gm, gn) = dataset.dims();
+    let p = dataset.nprocs();
+    let desc = dataset.mapping().clone();
+    let pred = predict_spmv_comm(&desc, gm, gn);
+    let parts = Arc::new(parts);
+    let oracle_parts = Arc::clone(&parts);
+
+    let t0 = std::time::Instant::now();
+    let out = cluster.run(move |ctx| {
+        let (xp, yp) = spmv_partitions(&desc, gm, gn);
+        let mut op = CsrOperator::new(std::slice::from_ref(&parts[ctx.rank]));
+        let mut engine = RankEngine::new(ctx, xp, yp, op.row_window(), op.col_window());
+        let outcome = power_iteration(&mut engine, &mut op, 0.0, iters)
+            .expect("the in-memory CSR operator cannot fail");
+        // Differential oracle: one distributed SpMV of a fixed
+        // deterministic vector, to compare bitwise on the leader.
+        let (x0, x1) = engine.x_owned_range();
+        let x_local: Vec<f64> = (x0..x1).map(|i| ((i % 11) as f64) * 0.3 + 0.5).collect();
+        let (y0, y1) = engine.y_owned_range();
+        let mut y_local = vec![0.0; (y1 - y0) as usize];
+        engine
+            .spmv(&mut op, &x_local, &mut y_local)
+            .expect("the in-memory CSR operator cannot fail");
+        (outcome, y_local, engine.stats().clone())
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let outcome = &out[0].0;
+    println!("dominant eigenvalue estimate : {:.12e}", outcome.value);
+    if let Some(rel) = outcome.residuals.last() {
+        println!(
+            "relative change at iter {:>3}  : {rel:.6e}",
+            outcome.iterations
+        );
+    }
+
+    // The oracle: distributed y (owned segments concatenated in rank
+    // order) must be bit-identical to the resident kernel — the fold
+    // order of the engine matches the parts order of `SpmvParts`.
+    let oracle_x: Vec<f64> = (0..gn).map(|i| ((i % 11) as f64) * 0.3 + 0.5).collect();
+    let want = SpmvParts::Csr(&oracle_parts).spmv(&oracle_x);
+    let got: Vec<f64> = out.iter().flat_map(|(_, y, _)| y.iter().copied()).collect();
+    anyhow::ensure!(
+        got.len() == want.len()
+            && got
+                .iter()
+                .zip(&want)
+                .all(|(g, w)| g.to_bits() == w.to_bits()),
+        "distributed SpMV diverged from the resident oracle"
+    );
+    println!(
+        "differential check: distributed SpMV bitwise-identical to the \
+         resident oracle ({} entries)",
+        human::count(want.len() as u64),
+    );
+
+    let report = DistReport {
+        alg: "spmv".to_string(),
+        nprocs: p,
+        wall_s,
+        iterations: outcome.iterations,
+        converged: outcome.converged,
+        value: outcome.value,
+        residuals: outcome.residuals.clone(),
+        per_rank: out.iter().map(|(_, _, s)| s.clone()).collect(),
+    };
+    print_dist_comm(&report, &pred);
+    backend.print_trailer();
+    Ok(())
+}
+
+/// Dispatch one rank's solver run (`--alg`). CG's right-hand side is the
+/// fixed deterministic pattern `b[i] = 1 + (i mod 17)/4` over the rank's
+/// owned rows, so runs are reproducible across process counts.
+fn run_solver<O: LocalOperator + ?Sized>(
+    engine: &mut RankEngine<'_>,
+    op: &mut O,
+    alg: &str,
+    tol: f64,
+    max_iters: usize,
+    steps: usize,
+) -> Result<SolveOutcome, abhsf::coordinator::DatasetError> {
+    match alg {
+        "power" => power_iteration(engine, op, tol, max_iters),
+        "lanczos" => lanczos(engine, op, steps),
+        _ => {
+            let (y0, y1) = engine.y_owned_range();
+            let b: Vec<f64> = (y0..y1).map(|i| 1.0 + ((i % 17) as f64) * 0.25).collect();
+            conjugate_gradient(engine, op, &b, tol, max_iters)
+        }
+    }
+}
+
+/// `abhsf solve` — distributed iterative solvers (CG, power iteration,
+/// Lanczos) over the halo-exchange SpMV engine: the cluster matches the
+/// stored process count, every rank holds only its owned vector
+/// segments, and all dot/norm reductions go through the fixed-rank-order
+/// allreduce. `--from-blocks` applies the matrix straight from decoded
+/// ABHSF blocks through the cache read-ahead pipeline instead of loading
+/// CSR parts first.
+fn cmd_solve(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf solve", argv, &["from-blocks"])?;
+    let alg = a.str_or("alg", "cg");
+    if !matches!(alg.as_str(), "cg" | "power" | "lanczos") {
+        return Err(usage_error(format!("unknown --alg {alg} (cg|power|lanczos)")));
+    }
+    let tol: f64 = a.parse_or("tol", 1e-8f64)?;
+    let max_iters: usize = a.parse_or("max-iters", 500usize)?;
+    let steps: usize = a.parse_or("steps", 50usize)?;
+    let from_blocks = a.flag("from-blocks");
+    let (dataset, backend) = open_dataset(&a)?;
+    let (gm, gn) = dataset.dims();
+    anyhow::ensure!(
+        gm == gn,
+        "iterative solvers need a square matrix; dataset is {gm} x {gn}"
+    );
+    let p = dataset.nprocs();
+    let desc = dataset.mapping().clone();
+    let pred = predict_spmv_comm(&desc, gm, gn);
+    let cluster = Cluster::new(p, 64);
+    println!(
+        "solve: alg={alg} P={p} mapping={} n={} nnz={} tol={tol:.1e} operator={}",
+        desc.kind(),
+        human::count(gn),
+        human::count(dataset.nnz()),
+        if from_blocks { "blocks" } else { "csr" },
+    );
+
+    let t0 = std::time::Instant::now();
+    let out: Vec<(SolveOutcome, abhsf::dist::DistStats)> = if from_blocks {
+        let cache = Arc::new(BlockCache::with_budget(256 << 20));
+        let ds = dataset.clone();
+        let alg = alg.clone();
+        cluster.run(move |ctx| {
+            let reader = ds
+                .reader(&cache)
+                .expect("opening the per-rank dataset reader");
+            let mut op = BlockOperator::new(&reader, ctx.rank);
+            let (xp, yp) = spmv_partitions(&desc, gm, gn);
+            let mut engine = RankEngine::new(ctx, xp, yp, op.row_window(), op.col_window());
+            let outcome = run_solver(&mut engine, &mut op, &alg, tol, max_iters, steps)
+                .expect("block fetch failed during the solve");
+            (outcome, engine.stats().clone())
+        })
+    } else {
+        let (mats, _) = dataset.load().format(InMemFormat::Csr).run(&cluster)?;
+        let parts: Arc<Vec<Csr>> = Arc::new(mats.into_iter().map(|m| m.into_csr()).collect());
+        let alg = alg.clone();
+        cluster.run(move |ctx| {
+            let mut op = CsrOperator::new(std::slice::from_ref(&parts[ctx.rank]));
+            let (xp, yp) = spmv_partitions(&desc, gm, gn);
+            let mut engine = RankEngine::new(ctx, xp, yp, op.row_window(), op.col_window());
+            let outcome = run_solver(&mut engine, &mut op, &alg, tol, max_iters, steps)
+                .expect("the in-memory CSR operator cannot fail");
+            (outcome, engine.stats().clone())
+        })
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let outcome = &out[0].0;
+    print_residual_trajectory(&outcome.residuals);
+    if let Some((lmin, lmax)) = outcome.extremal {
+        println!("extremal eigenvalues (Ritz): min {lmin:.12e} max {lmax:.12e}");
+    } else if outcome.converged {
+        println!(
+            "converged: residual {:.6e} (tol {tol:.1e}, {} iters, {:.3}s)",
+            outcome.residuals.last().copied().unwrap_or(0.0),
+            outcome.iterations,
+            wall_s,
+        );
+    } else {
+        println!(
+            "no convergence: residual {:.6e} after {} iters (tol {tol:.1e})",
+            outcome.residuals.last().copied().unwrap_or(f64::NAN),
+            outcome.iterations,
+        );
+    }
+    println!("headline value: {:.12e} ({})", outcome.value, outcome.alg);
+
+    let report = DistReport {
+        alg: outcome.alg.to_string(),
+        nprocs: p,
+        wall_s,
+        iterations: outcome.iterations,
+        converged: outcome.converged,
+        value: outcome.value,
+        residuals: outcome.residuals.clone(),
+        per_rank: out.iter().map(|(_, s)| s.clone()).collect(),
+    };
+    print_dist_comm(&report, &pred);
+    backend.print_trailer();
+    Ok(())
+}
+
+/// Residual trajectory: every iteration when short, every 10th (plus
+/// the last) when long.
+fn print_residual_trajectory(residuals: &[f64]) {
+    let n = residuals.len();
+    for (i, r) in residuals.iter().enumerate() {
+        if n <= 30 || i % 10 == 0 || i + 1 == n {
+            println!("iter {i:>4}: residual {r:.6e}");
+        }
+    }
+}
+
+/// The per-rank halo counters and the measured-vs-predicted comm line
+/// shared by `spmv` and `solve`.
+fn print_dist_comm(report: &DistReport, pred: &CommPrediction) {
+    for (k, s) in report.per_rank.iter().enumerate() {
+        println!(
+            "halo: rank {k} sent {} recv {} in {} msgs, exchange {:.4}s \
+             compute {:.4}s decode {:.4}s",
+            human::bytes(s.halo_bytes_sent),
+            human::bytes(s.halo_bytes_recv),
+            human::count(s.halo_msgs_sent + s.halo_msgs_recv),
+            s.exchange_s,
+            s.compute_s,
+            s.decode_s,
+        );
+    }
+    println!(
+        "comm: measured {} B/spmv over {} spmvs, predicted {} B/spmv ({}), \
+         resident broadcast {} B",
+        report.bytes_per_spmv(),
+        report.spmvs(),
+        pred.total_bytes(),
+        if pred.exact { "exact" } else { "upper bound" },
+        pred.broadcast_bytes,
+    );
 }
 
 /// `abhsf serve` — the concurrent serving harness: `--threads` workers

@@ -188,6 +188,91 @@ impl<'c> DatasetReader<'c> {
         Ok(())
     }
 
+    /// Number of stored files this reader serves.
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    /// The bounding window of stored file `file` as
+    /// `(rows, cols) = ((r0, r1), (c0, c1))` half-open global ranges —
+    /// the union of its directory's block rectangles. An empty file
+    /// answers `((0, 0), (0, 0))`. This is what the distributed engine
+    /// declares as a block-backed rank's row/column window: no payload is
+    /// fetched, only the directory (already parsed at open) is walked.
+    pub fn file_window(&self, file: usize) -> ((u64, u64), (u64, u64)) {
+        let dir = &self.files[file].dir;
+        if dir.entries.is_empty() {
+            return ((0, 0), (0, 0));
+        }
+        let (mut r0, mut r1, mut c0, mut c1) = (u64::MAX, 0u64, u64::MAX, 0u64);
+        for k in 0..dir.entries.len() {
+            let (br, bc, bm, bn) = dir.global_rect(k);
+            r0 = r0.min(br);
+            r1 = r1.max(br + bm);
+            c0 = c0.min(bc);
+            c1 = c1.max(bc + bn);
+        }
+        ((r0, r1), (c0, c1))
+    }
+
+    /// Every decoded block of stored file `file`, **in directory order**
+    /// — regardless of which blocks were cache hits, misses or coalesced
+    /// flights when the call ran. The distributed engine applies a file's
+    /// blocks in exactly this order on every iteration, which is what
+    /// makes a block-backed SpMV bit-reproducible across runs and cache
+    /// states (DESIGN.md §13); `gather`'s hits-then-misses-then-waiters
+    /// emission order would not be.
+    pub fn file_blocks(&self, file: usize) -> Result<Vec<Arc<DecodedBlock>>, DatasetError> {
+        let slot = &self.files[file];
+        let nblocks = slot.dir.entries.len();
+        let mut out: Vec<Option<Arc<DecodedBlock>>> = vec![None; nblocks];
+        let mut miss: Vec<usize> = Vec::new();
+        let mut tokens: Vec<LoadToken<'_>> = Vec::new();
+        let mut waiters: Vec<(usize, FlightWaiter)> = Vec::new();
+        for k in 0..nblocks {
+            let e = &slot.dir.entries[k];
+            let key = BlockKey {
+                dataset: self.dataset_id,
+                file: file as u32,
+                brow: e.brow as u32,
+                bcol: e.bcol as u32,
+            };
+            match self.cache.claim(key) {
+                Claim::Hit(block) => out[k] = Some(block),
+                Claim::Miss(token) => {
+                    miss.push(k);
+                    tokens.push(token);
+                }
+                Claim::InFlight(waiter) => waiters.push((k, waiter)),
+            }
+        }
+        if !miss.is_empty() {
+            let mut pending = tokens.into_iter();
+            fetch_decoded_blocks_batched(
+                &slot.reader,
+                &slot.dir,
+                &miss,
+                slot.batch_bytes,
+                |k, decoded| {
+                    let token = pending.next().expect("one token per missed block");
+                    out[k] = Some(token.publish(decoded));
+                },
+            )
+            .map_err(|e| DatasetError::Internal(Box::new(e)))?;
+        }
+        for (k, waiter) in waiters {
+            out[k] = Some(
+                waiter
+                    .wait()
+                    .map_err(|e| DatasetError::Internal(e.into()))?,
+            );
+        }
+        Ok(out
+            .into_iter()
+            .map(|b| b.expect("every directory block claimed"))
+            .collect())
+    }
+
     /// All nonzeros with `row ∈ rows` and `col ∈ cols`, in global
     /// coordinates, sorted lexicographically.
     pub fn rect(

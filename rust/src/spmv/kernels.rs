@@ -23,6 +23,29 @@ use crate::abhsf::load::DecodedBlock;
 /// the scheme's kernel. `x` and `y` are global vectors; the block's
 /// [`geom`](DecodedBlock::geom) places it (`row0`/`col0` are global).
 pub fn spmv_block_into(block: &DecodedBlock, x: &[f64], y: &mut [f64]) {
+    spmv_block_windowed_into(block, x, 0, y, 0);
+}
+
+/// [`spmv_block_into`] over *windowed* vectors: `x_win` holds the global
+/// entries `[x_off, x_off + x_win.len())` of `x`, `y_win` the global
+/// entries `[y_off, y_off + y_win.len())` of `y`. The windows must cover
+/// the block's geom. Element order is identical to the global form, so
+/// the result bits match it exactly — the distributed engine applies
+/// file-local blocks through here against halo-assembled windows.
+pub fn spmv_block_windowed_into(
+    block: &DecodedBlock,
+    x_win: &[f64],
+    x_off: u64,
+    y_win: &mut [f64],
+    y_off: u64,
+) {
+    let g = block.geom();
+    assert!(
+        y_off <= g.row0 && x_off <= g.col0,
+        "window offsets ({y_off}, {x_off}) past block geom ({}, {})",
+        g.row0,
+        g.col0
+    );
     match block {
         DecodedBlock::Coo {
             geom,
@@ -30,9 +53,9 @@ pub fn spmv_block_into(block: &DecodedBlock, x: &[f64], y: &mut [f64]) {
             lcols,
             vals,
         } => {
-            let (r0, c0) = (geom.row0 as usize, geom.col0 as usize);
+            let (r0, c0) = ((geom.row0 - y_off) as usize, (geom.col0 - x_off) as usize);
             for ((&lr, &lc), &v) in lrows.iter().zip(lcols).zip(vals) {
-                y[r0 + lr as usize] += v * x[c0 + lc as usize];
+                y_win[r0 + lr as usize] += v * x_win[c0 + lc as usize];
             }
         }
         DecodedBlock::CsrInBlock {
@@ -41,30 +64,30 @@ pub fn spmv_block_into(block: &DecodedBlock, x: &[f64], y: &mut [f64]) {
             lcolinds,
             vals,
         } => {
-            let (r0, c0) = (geom.row0 as usize, geom.col0 as usize);
+            let (r0, c0) = ((geom.row0 - y_off) as usize, (geom.col0 - x_off) as usize);
             for lr in 0..geom.s as usize {
                 let (lo, hi) = (rowptrs[lr] as usize, rowptrs[lr + 1] as usize);
                 for e in lo..hi {
-                    y[r0 + lr] += vals[e] * x[c0 + lcolinds[e] as usize];
+                    y_win[r0 + lr] += vals[e] * x_win[c0 + lcolinds[e] as usize];
                 }
             }
         }
         DecodedBlock::Bitmap { geom, bits, vals } => {
-            let (r0, c0) = (geom.row0 as usize, geom.col0 as usize);
+            let (r0, c0) = ((geom.row0 - y_off) as usize, (geom.col0 - x_off) as usize);
             let s = geom.s as usize;
             let mut next = 0usize;
             for (bi, &byte) in bits.iter().enumerate() {
                 let mut rest = byte;
                 while rest != 0 {
                     let cell = bi * 8 + rest.trailing_zeros() as usize;
-                    y[r0 + cell / s] += vals[next] * x[c0 + cell % s];
+                    y_win[r0 + cell / s] += vals[next] * x_win[c0 + cell % s];
                     next += 1;
                     rest &= rest - 1;
                 }
             }
         }
         DecodedBlock::Dense { geom, vals } => {
-            let (r0, c0) = (geom.row0 as usize, geom.col0 as usize);
+            let (r0, c0) = ((geom.row0 - y_off) as usize, (geom.col0 - x_off) as usize);
             let s = geom.s as usize;
             for (lr, row) in vals.chunks_exact(s).enumerate() {
                 for (lc, &v) in row.iter().enumerate() {
@@ -72,7 +95,7 @@ pub fn spmv_block_into(block: &DecodedBlock, x: &[f64], y: &mut [f64]) {
                     // to the triplet path (and edge blocks' unused cells
                     // must not touch y at all).
                     if v != 0.0 {
-                        y[r0 + lr] += v * x[c0 + lc];
+                        y_win[r0 + lr] += v * x_win[c0 + lc];
                     }
                 }
             }
@@ -119,6 +142,21 @@ mod tests {
         spmv_block_into(&block, &x, &mut y);
         assert_eq!(&y[0..4], &[0.0; 4]);
         assert_eq!(&y[4..8], &[3.0, -1.5, 4.0, 0.5]);
+    }
+
+    /// A windowed apply over exactly the block's span lands on the same
+    /// bits as the global apply, for every scheme.
+    #[test]
+    fn windowed_apply_bitwise_matches_global() {
+        let x = [0.0, 0.0, 0.0, 0.0, 1.5, -2.0, 0.25, 3.0];
+        for scheme in Scheme::ALL {
+            let block = DecodedBlock::build(scheme, 4, 4, 4, &elems()).unwrap();
+            let mut y_global = [0.0f64; 8];
+            spmv_block_into(&block, &x, &mut y_global);
+            let mut y_win = [0.0f64; 4];
+            spmv_block_windowed_into(&block, &x[4..8], 4, &mut y_win, 4);
+            assert_eq!(&y_global[4..8], &y_win, "{scheme:?}");
+        }
     }
 
     #[test]

@@ -7,28 +7,6 @@ pub mod kernels;
 use crate::abhsf::load::DecodedBlock;
 use crate::formats::{Coo, Csr};
 
-/// `y = A x` for a set of local CSR submatrices covering a global matrix.
-pub fn spmv_distributed_csr(parts: &[Csr], x: &[f64]) -> Vec<f64> {
-    assert!(!parts.is_empty(), "no local parts");
-    let m = parts[0].info.m as usize;
-    let mut y = vec![0.0; m];
-    for p in parts {
-        p.spmv_into(x, &mut y);
-    }
-    y
-}
-
-/// `y = A x` for a set of local COO submatrices.
-pub fn spmv_distributed_coo(parts: &[Coo], x: &[f64]) -> Vec<f64> {
-    assert!(!parts.is_empty(), "no local parts");
-    let m = parts[0].info.m as usize;
-    let mut y = vec![0.0; m];
-    for p in parts {
-        p.spmv_into(x, &mut y);
-    }
-    y
-}
-
 /// A distributed matrix in any of the in-memory part representations the
 /// crate produces — the one SpMV kernel path shared by the CLI `spmv`
 /// consumer (CSR parts from a [`crate::coordinator::LoadPlan`]), COO
@@ -146,12 +124,6 @@ pub fn power_iteration_step_parts(parts: &SpmvParts<'_>, x: &[f64]) -> (Vec<f64>
     (y.iter().map(|v| v / norm).collect(), norm)
 }
 
-/// One normalized power-iteration step over CSR parts (the historical
-/// signature; delegates to [`power_iteration_step_parts`]).
-pub fn power_iteration_step(parts: &[Csr], x: &[f64]) -> (Vec<f64>, f64) {
-    power_iteration_step_parts(&SpmvParts::Csr(parts), x)
-}
-
 /// Max-abs difference between two vectors.
 pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -206,7 +178,7 @@ mod tests {
     fn distributed_spmv_matches_dense() {
         let (parts, dense) = two_part_matrix();
         let x = vec![1.0, 2.0, 3.0, 4.0];
-        let y = spmv_distributed_csr(&parts, &x);
+        let y = SpmvParts::Csr(&parts).spmv(&x);
         assert_eq!(y, dense.matvec(&x));
     }
 
@@ -215,8 +187,8 @@ mod tests {
         let (parts, _) = two_part_matrix();
         let coo_parts: Vec<Coo> = parts.iter().map(|p| p.to_coo()).collect();
         let x = vec![0.5, -1.0, 2.0, 0.0];
-        let y1 = spmv_distributed_csr(&parts, &x);
-        let y2 = spmv_distributed_coo(&coo_parts, &x);
+        let y1 = SpmvParts::Csr(&parts).spmv(&x);
+        let y2 = SpmvParts::Coo(&coo_parts).spmv(&x);
         assert!(max_abs_diff(&y1, &y2) < 1e-15);
     }
 
@@ -224,7 +196,7 @@ mod tests {
     fn power_iteration_normalizes() {
         let (parts, _) = two_part_matrix();
         let x = vec![1.0; 4];
-        let (x2, norm) = power_iteration_step(&parts, &x);
+        let (x2, norm) = power_iteration_step_parts(&SpmvParts::Csr(&parts), &x);
         assert!(norm > 0.0);
         let n2 = x2.iter().map(|v| v * v).sum::<f64>().sqrt();
         assert!((n2 - 1.0).abs() < 1e-12);
@@ -252,7 +224,7 @@ mod tests {
         assert_eq!(elems.rows(), 4);
         let x = vec![1.0, -2.0, 0.5, 3.0];
         assert!(max_abs_diff(&elems.spmv(&x), &dense.matvec(&x)) < 1e-12);
-        let (xa, na) = power_iteration_step(&parts, &x);
+        let (xa, na) = power_iteration_step_parts(&SpmvParts::Csr(&parts), &x);
         let (xb, nb) = power_iteration_step_parts(&elems, &x);
         assert!((na - nb).abs() < 1e-12);
         assert!(max_abs_diff(&xa, &xb) < 1e-12);
@@ -262,7 +234,8 @@ mod tests {
     fn zero_matrix_power_step() {
         let info = LocalInfo::whole(3, 3, 0);
         let parts = vec![Csr::from_coo(&Coo::with_info(info))];
-        let (y, norm) = power_iteration_step(&parts, &[1.0, 1.0, 1.0]);
+        let (y, norm) =
+            power_iteration_step_parts(&SpmvParts::Csr(&parts), &[1.0, 1.0, 1.0]);
         assert_eq!(norm, 0.0);
         assert_eq!(y, vec![0.0; 3]);
     }
