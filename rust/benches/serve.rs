@@ -8,6 +8,13 @@
 //! (almost) entirely from memory, at ×0.25 eviction churn caps the hit
 //! rate no matter how often the queries repeat.
 //!
+//! **Table H** then fixes the *total* budget at ×0.5 the working set
+//! and compares the single-tier cache against a two-tier T1/T2 split of
+//! the same bytes under uniform and Zipfian (θ = 1.1) traffic: skew
+//! concentrates claims on a hot template set, and blocks evicted from
+//! T1 while still warm revive from the encoded T2 tier with an
+//! in-memory re-decode instead of a storage round trip.
+//!
 //! Run: `cargo bench --bench serve`
 //!
 //! Besides the printed table, the results are persisted as JSON (default
@@ -22,7 +29,7 @@ use abhsf::cache::BlockCache;
 use abhsf::coordinator::{Cluster, Dataset, StoreOptions};
 use abhsf::gen::{KroneckerGen, SeedMatrix};
 use abhsf::mapping::ProcessMapping;
-use abhsf::serve::{run_closed_loop, ServeConfig};
+use abhsf::serve::{run_closed_loop, ServeConfig, Workload};
 use abhsf::util::bench::Table;
 use abhsf::util::human;
 use abhsf::util::json::Json;
@@ -92,6 +99,7 @@ fn main() -> anyhow::Result<()> {
         queries: 400,
         seed: 4242,
         spmv_every: 20,
+        workload: Workload::Uniform,
     };
     let mut table = Table::new(&[
         "budget",
@@ -150,6 +158,85 @@ fn main() -> anyhow::Result<()> {
          hit% is the warm run's claims answered from residency)"
     );
 
+    // Table H: at one fixed *total* budget (ws x0.5 — tight enough that
+    // eviction decides everything), pit the single-tier cache against a
+    // two-tier split of the same bytes, under uniform and Zipfian
+    // traffic. Skew is where T2 earns its keep: the hot template set
+    // cycles through T1 while the warm-but-evicted tail revives from T2
+    // with an in-memory re-decode instead of a storage round trip.
+    println!("\n== Table H: two-tier vs single-tier T1-only at equal total budget ==\n");
+    let total = ws / 2;
+    let mut skew_table = Table::new(&[
+        "workload",
+        "variant",
+        "t1",
+        "t2",
+        "cold q/s",
+        "warm q/s",
+        "warm p99 ms",
+        "warm hit%",
+        "t2 hits",
+        "demotions",
+        "storage reads",
+    ]);
+    let mut skew_rows = Vec::new();
+    for workload in [Workload::Uniform, Workload::Zipf(1.1)] {
+        for (variant, t1, t2) in [("t1-only", total, 0), ("two-tier", total / 2, total - total / 2)]
+        {
+            let cache = BlockCache::with_tiered_budget(t1, t2);
+            let scfg = ServeConfig {
+                workload,
+                ..cfg.clone()
+            };
+            let cold = run_closed_loop(std::slice::from_ref(&dataset), &cache, &scfg)?;
+            let before = cache.stats();
+            let warm = run_closed_loop(std::slice::from_ref(&dataset), &cache, &scfg)?;
+            let after = cache.stats();
+            let served =
+                (after.hits - before.hits) + (after.decode_saves - before.decode_saves);
+            let warm_claims = served + (after.misses - before.misses);
+            let warm_hit_rate = if warm_claims == 0 {
+                0.0
+            } else {
+                served as f64 / warm_claims as f64
+            };
+            skew_table.row(&[
+                workload.to_string(),
+                variant.to_string(),
+                human::bytes(t1),
+                human::bytes(t2),
+                format!("{:.0}", cold.qps()),
+                format!("{:.0}", warm.qps()),
+                format!("{:.3}", warm.p99_ms),
+                format!("{:.1}", warm_hit_rate * 100.0),
+                human::count(after.decode_saves),
+                human::count(after.demotions),
+                human::bytes(cold.io.bytes + warm.io.bytes),
+            ]);
+            skew_rows.push(obj(vec![
+                ("workload", Json::str(workload.to_string())),
+                ("variant", Json::str(variant)),
+                ("t1_budget", Json::num(t1)),
+                ("t2_budget", Json::num(t2)),
+                ("cold_qps", Json::Num(cold.qps())),
+                ("warm_qps", Json::Num(warm.qps())),
+                ("warm_p99_ms", Json::Num(warm.p99_ms)),
+                ("warm_hit_rate", Json::Num(warm_hit_rate)),
+                ("decode_saves", Json::num(after.decode_saves)),
+                ("demotions", Json::num(after.demotions)),
+                (
+                    "storage_read_bytes",
+                    Json::num(cold.io.bytes + warm.io.bytes),
+                ),
+            ]));
+        }
+    }
+    skew_table.print();
+    println!(
+        "\n(equal total budget per row pair; t2 hits = warm-but-evicted blocks \
+         revived by an in-memory re-decode, never a storage fetch)"
+    );
+
     let doc = obj(vec![
         ("bench", Json::str("serve")),
         (
@@ -172,6 +259,7 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         ("results", Json::Arr(json_rows)),
+        ("skewed", Json::Arr(skew_rows)),
     ]);
     let path = json_path();
     std::fs::write(&path, format!("{doc}\n"))

@@ -40,7 +40,7 @@
 use crate::abhsf::{names, AbhsfError, Result, Scheme};
 use crate::formats::element::sort_lex;
 use crate::formats::{Coo, Csr, Element, LocalInfo};
-use crate::h5::dtype::decode_slice;
+use crate::h5::dtype::{decode_slice, encode_slice};
 use crate::h5::reader::BatchRequest;
 use crate::h5::{Cursor, H5Reader};
 
@@ -1171,6 +1171,129 @@ impl DecodedBlock {
         self.for_each_element(|i, j, v| out.push((i, j, v)));
         out
     }
+
+    /// Re-encode the payload into its on-disk byte form (the inverse of
+    /// decoding): the [`EncodedBlock`] holds exactly the little-endian
+    /// dataset bytes the container stores for this block, so a later
+    /// [`EncodedBlock::decode`] needs no storage handle at all. This is
+    /// the demotion path of the two-tier cache (`crate::cache`): an
+    /// evicted-but-warm block is kept in encoded form (same payload
+    /// bytes — the schemes are their own compact representation — but
+    /// smaller fixed overhead and, crucially, no storage dependency) and
+    /// a re-claim pays one decode instead of an I/O round trip.
+    pub fn encode(&self) -> EncodedBlock {
+        let parts = match self {
+            DecodedBlock::Coo {
+                lrows, lcols, vals, ..
+            } => vec![encode_slice(lrows), encode_slice(lcols), encode_slice(vals)],
+            DecodedBlock::CsrInBlock {
+                rowptrs,
+                lcolinds,
+                vals,
+                ..
+            } => vec![
+                encode_slice(rowptrs),
+                encode_slice(lcolinds),
+                encode_slice(vals),
+            ],
+            DecodedBlock::Bitmap { bits, vals, .. } => vec![bits.clone(), encode_slice(vals)],
+            DecodedBlock::Dense { vals, .. } => vec![encode_slice(vals)],
+        };
+        EncodedBlock {
+            scheme: self.scheme(),
+            geom: self.geom(),
+            parts,
+        }
+    }
+}
+
+/// One ABHSF block in its **encoded, on-disk byte form**: the scheme,
+/// the placement, and the raw little-endian payload buffers exactly as
+/// the per-scheme datasets store them (COO: lrows/lcols/vals; CSR:
+/// rowptrs/lcolinds/vals; bitmap: bits/vals; dense: vals).
+///
+/// Only constructible via [`DecodedBlock::encode`], so the parts are
+/// always internally consistent with the scheme and geometry;
+/// [`decode`](Self::decode) re-runs the validated constructors and
+/// therefore reproduces the original [`DecodedBlock`] bit-for-bit.
+/// This is what the cache's T2 tier holds: kernel-unready, but
+/// requiring no storage handle to revive — the byte win over the
+/// decoded form is only the fixed per-block overhead (ABHSF's schemes
+/// are their own compact in-memory representation), the latency win is
+/// the whole I/O round trip.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedBlock {
+    scheme: Scheme,
+    geom: BlockGeom,
+    parts: Vec<Vec<u8>>,
+}
+
+impl EncodedBlock {
+    /// The block's storage scheme.
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+
+    /// Placement and size (as the decoded block's).
+    pub fn geom(&self) -> BlockGeom {
+        self.geom
+    }
+
+    /// Nonzeros in the block.
+    pub fn zeta(&self) -> u64 {
+        self.geom.zeta
+    }
+
+    /// Total payload bytes across the scheme's buffers — what the T2
+    /// tier charges against its budget (plus its fixed per-entry
+    /// overhead).
+    pub fn payload_bytes(&self) -> u64 {
+        self.parts.iter().map(|p| p.len() as u64).sum()
+    }
+
+    /// Decode back to the kernel-ready form **without any storage
+    /// handle** — an in-memory re-run of the per-scheme decoders through
+    /// the same validated constructors the fetch path uses, so a
+    /// corrupted buffer surfaces as the same typed error.
+    pub fn decode(&self) -> Result<DecodedBlock> {
+        let g = self.geom;
+        let block = match self.scheme {
+            Scheme::Coo => DecodedBlock::coo(
+                g.row0,
+                g.col0,
+                g.s,
+                decode_slice::<u16>(&self.parts[0]),
+                decode_slice::<u16>(&self.parts[1]),
+                decode_slice::<f64>(&self.parts[2]),
+            )?,
+            Scheme::Csr => DecodedBlock::csr(
+                g.row0,
+                g.col0,
+                g.s,
+                decode_slice::<u32>(&self.parts[0]),
+                decode_slice::<u16>(&self.parts[1]),
+                decode_slice::<f64>(&self.parts[2]),
+            )?,
+            Scheme::Bitmap => DecodedBlock::bitmap(
+                g.row0,
+                g.col0,
+                g.s,
+                self.parts[0].clone(),
+                decode_slice::<f64>(&self.parts[1]),
+            )?,
+            Scheme::Dense => {
+                DecodedBlock::dense(g.row0, g.col0, g.s, decode_slice::<f64>(&self.parts[0]))?
+            }
+        };
+        if block.zeta() != g.zeta {
+            return Err(AbhsfError::Invalid(format!(
+                "encoded block: payload decodes to zeta {} but geometry says {}",
+                block.zeta(),
+                g.zeta
+            )));
+        }
+        Ok(block)
+    }
 }
 
 /// Fetch and decode the directory entries at `indices` (strictly
@@ -1903,5 +2026,36 @@ mod tests {
         // store_data validates; bypass by fixing z_local then corrupting.
         let res = store_data(&path, &data);
         assert!(res.is_err(), "store-side validation should catch it");
+    }
+
+    /// encode → decode round-trips every scheme bit-for-bit with no
+    /// storage handle, the encoded payload matches the on-disk
+    /// accounting, and the revived block's element stream is identical —
+    /// the contract the cache's T2 tier (and its kernel consumers)
+    /// stands on.
+    #[test]
+    fn encoded_block_roundtrips_all_schemes() {
+        let s = 8u64;
+        let elems: Vec<(u16, u16, f64)> = vec![
+            (0, 0, 1.5),
+            (0, 7, -2.0),
+            (2, 3, 0.25),
+            (5, 5, 4.0),
+            (7, 1, -0.5),
+        ];
+        for scheme in [Scheme::Coo, Scheme::Csr, Scheme::Bitmap, Scheme::Dense] {
+            let block = DecodedBlock::build(scheme, 24, 16, s, &elems).unwrap();
+            let enc = block.encode();
+            assert_eq!(enc.scheme(), scheme);
+            assert_eq!(enc.geom(), block.geom());
+            assert_eq!(
+                enc.payload_bytes(),
+                block.payload_bytes(),
+                "{scheme:?}: encoded bytes must equal the on-disk payload accounting"
+            );
+            let back = enc.decode().unwrap();
+            assert_eq!(back, block, "{scheme:?}: decode(encode(b)) != b");
+            assert_eq!(back.elements(), block.elements());
+        }
     }
 }

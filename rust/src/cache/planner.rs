@@ -1,0 +1,370 @@
+//! Footprint-budgeted partitioning of the cache byte budget across
+//! datasets and tiers.
+//!
+//! The store-time cost model knows, per block, exactly how many bytes
+//! each scheme occupies on disk — and the decoded-block cache charges
+//! the *same* scheme-native payload plus a fixed overhead
+//! ([`BLOCK_FIXED_BYTES`] for T1, [`T2_FIXED_BYTES`] for T2). So a
+//! dataset's full cache footprint is computable from its block
+//! directories alone, **without fetching any payload**:
+//! [`DatasetFootprint::measure`] walks the directories (already the
+//! cheap part of opening a reader) and sums both tiers' worst-case
+//! charges.
+//!
+//! [`BudgetPlanner`] turns those footprints plus per-dataset traffic
+//! weights into a [`BudgetPlan`]: a weighted waterfill grants each
+//! dataset its share of the total budget — capped at its footprint, so
+//! a small hot dataset can never soak up bytes it cannot use, with the
+//! overflow re-granted to the datasets that can — and then splits each
+//! grant across tiers (T1 first up to `t1_fraction`, T2 next, spill
+//! back to T1). With ample budget every dataset ends fully resident:
+//! `t1 = decoded footprint`, `t2 = encoded footprint`.
+//!
+//! The plan is applied with [`BlockCache::apply_plan`]
+//! (see the module docs): per-dataset shares steer *victim selection*,
+//! they do not resize the tiers — partitioning is a soft preference,
+//! not a hard reservation, so one idle dataset never pins budget that
+//! a busy one could use.
+
+use std::path::Path;
+
+use crate::abhsf::load::BlockDirectory;
+use crate::abhsf::matrix_file_path;
+use crate::coordinator::error::DatasetError;
+use crate::coordinator::Dataset;
+use crate::h5::H5Reader;
+
+use super::{BLOCK_FIXED_BYTES, T2_FIXED_BYTES};
+
+#[allow(unused_imports)] // doc links
+use super::BlockCache;
+
+/// Worst-case cache charges of one dataset, per tier, measured from its
+/// block directories (no payload fetched).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DatasetFootprint {
+    /// Blocks across all stored files.
+    pub blocks: u64,
+    /// Bytes if every block were T1-resident (decoded):
+    /// Σ ([`BLOCK_FIXED_BYTES`] + scheme-native payload).
+    pub decoded_bytes: u64,
+    /// Bytes if every block were T2-resident (encoded):
+    /// Σ ([`T2_FIXED_BYTES`] + scheme-native payload).
+    pub encoded_bytes: u64,
+}
+
+impl DatasetFootprint {
+    /// Measure a stored dataset: open every file, parse its block
+    /// directory, sum the per-block charges. Costs one directory read
+    /// per file — the same work a [`DatasetReader`](crate::serve::DatasetReader)
+    /// does at open — and no payload I/O.
+    pub fn measure(dataset: &Dataset) -> Result<Self, DatasetError> {
+        let storage = dataset.storage();
+        let mut out = Self::default();
+        for k in 0..dataset.nprocs() {
+            let path = matrix_file_path(dataset.dir(), k);
+            let reader = H5Reader::open_on(storage.as_ref(), &path)
+                .map_err(|e| DatasetError::Internal(Box::new(e)))?;
+            let dir = BlockDirectory::read(&reader)
+                .map_err(|e| DatasetError::Internal(Box::new(e)))?;
+            for i in 0..dir.entries.len() {
+                let payload = dir.payload_bytes(i);
+                out.blocks += 1;
+                out.decoded_bytes += BLOCK_FIXED_BYTES + payload;
+                out.encoded_bytes += T2_FIXED_BYTES + payload;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Bytes to hold every block in *some* tier at once — the waterfill
+    /// cap: granting more than this to the dataset is waste.
+    pub fn total_bytes(&self) -> u64 {
+        self.decoded_bytes + self.encoded_bytes
+    }
+}
+
+/// One dataset's granted slice of the budget (see [`BudgetPlan`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DatasetBudget {
+    /// Cache dataset id ([`BlockCache::dataset_id`]).
+    pub id: u64,
+    /// Human-readable label (the dataset directory, in the CLI).
+    pub label: String,
+    /// Planned T1 (decoded) bytes.
+    pub t1_bytes: u64,
+    /// Planned T2 (encoded) bytes.
+    pub t2_bytes: u64,
+}
+
+/// A budget partitioning: per-dataset, per-tier byte grants summing to
+/// at most the total (strictly less when the combined footprints fit —
+/// the plan never grants bytes a dataset cannot use).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BudgetPlan {
+    /// The budget the plan partitioned.
+    pub total_bytes: u64,
+    /// Per-dataset grants, in the order the planner saw the datasets.
+    pub datasets: Vec<DatasetBudget>,
+}
+
+impl BudgetPlan {
+    /// Planned T1 bytes across datasets.
+    pub fn t1_total(&self) -> u64 {
+        self.datasets.iter().map(|d| d.t1_bytes).sum()
+    }
+
+    /// Planned T2 bytes across datasets.
+    pub fn t2_total(&self) -> u64 {
+        self.datasets.iter().map(|d| d.t2_bytes).sum()
+    }
+}
+
+/// Builder for a [`BudgetPlan`] (module docs for the algorithm).
+#[derive(Debug, Clone)]
+pub struct BudgetPlanner {
+    total: u64,
+    t1_fraction: f64,
+    datasets: Vec<(u64, String, DatasetFootprint, f64)>,
+}
+
+impl BudgetPlanner {
+    /// Start a plan over `total_bytes` of combined T1+T2 budget.
+    pub fn new(total_bytes: u64) -> Self {
+        Self {
+            total: total_bytes,
+            t1_fraction: 0.5,
+            datasets: Vec::new(),
+        }
+    }
+
+    /// Fraction of each dataset's grant offered to T1 first (clamped to
+    /// `[0, 1]`; default 0.5). T1 is capped at the decoded footprint and
+    /// T2 at the encoded one, with overflow spilling to the other tier,
+    /// so the fraction only matters under scarcity.
+    pub fn t1_fraction(mut self, f: f64) -> Self {
+        self.t1_fraction = if f.is_finite() { f.clamp(0.0, 1.0) } else { 0.5 };
+        self
+    }
+
+    /// Add a dataset: its cache id, display label, measured footprint,
+    /// and traffic weight (relative — e.g. observed hits+misses from
+    /// [`BlockCache::dataset_stats`], or 1.0 each when no traffic has
+    /// been observed yet). Non-finite or negative weights count as 0.
+    pub fn dataset(
+        mut self,
+        id: u64,
+        label: impl Into<String>,
+        footprint: DatasetFootprint,
+        weight: f64,
+    ) -> Self {
+        let weight = if weight.is_finite() { weight.max(0.0) } else { 0.0 };
+        self.datasets.push((id, label.into(), footprint, weight));
+        self
+    }
+
+    /// Compute the plan: weighted waterfill with footprint caps, then a
+    /// per-dataset tier split.
+    pub fn plan(&self) -> BudgetPlan {
+        let n = self.datasets.len();
+        // All-zero weights (no traffic observed) degrade to uniform.
+        let uniform = self.datasets.iter().all(|(_, _, _, w)| *w == 0.0);
+        let weights: Vec<f64> = self
+            .datasets
+            .iter()
+            .map(|(_, _, _, w)| if uniform { 1.0 } else { *w })
+            .collect();
+        let caps: Vec<f64> = self
+            .datasets
+            .iter()
+            .map(|(_, _, fp, _)| fp.total_bytes() as f64)
+            .collect();
+        let mut grants = vec![0.0f64; n];
+        let mut done = vec![false; n];
+        let mut remaining = self.total as f64;
+        // Waterfill: each round offers every still-open dataset its
+        // weight-proportional share of what is left; datasets whose
+        // share exceeds their footprint cap are clipped to it and
+        // closed, and the next round re-offers the reclaimed bytes to
+        // the rest. Terminates in ≤ n+1 rounds (every capping round
+        // closes at least one dataset; a cap-free round closes all).
+        for _ in 0..=n {
+            let wsum: f64 = (0..n).filter(|&i| !done[i]).map(|i| weights[i]).sum();
+            if wsum <= 0.0 || remaining <= 0.0 {
+                break;
+            }
+            let offer = remaining;
+            let mut capped_any = false;
+            for i in 0..n {
+                if done[i] {
+                    continue;
+                }
+                let share = offer * weights[i] / wsum;
+                if share >= caps[i] {
+                    grants[i] = caps[i];
+                    remaining -= caps[i];
+                    done[i] = true;
+                    capped_any = true;
+                }
+            }
+            if !capped_any {
+                for i in 0..n {
+                    if done[i] {
+                        continue;
+                    }
+                    let share = offer * weights[i] / wsum;
+                    grants[i] = share;
+                    remaining -= share;
+                    done[i] = true;
+                }
+                break;
+            }
+        }
+        let datasets = self
+            .datasets
+            .iter()
+            .zip(&grants)
+            .map(|((id, label, fp, _), &grant)| {
+                let dec = fp.decoded_bytes as f64;
+                let enc = fp.encoded_bytes as f64;
+                // T1 takes its fraction up to the decoded footprint; T2
+                // takes the remainder up to the encoded one; anything T2
+                // cannot use spills back to T1.
+                let mut t1 = (grant * self.t1_fraction).min(dec);
+                let rem = grant - t1;
+                let t2 = rem.min(enc);
+                t1 = (t1 + (rem - t2)).min(dec);
+                DatasetBudget {
+                    id: *id,
+                    label: label.clone(),
+                    t1_bytes: t1 as u64,
+                    t2_bytes: t2 as u64,
+                }
+            })
+            .collect();
+        BudgetPlan {
+            total_bytes: self.total,
+            datasets,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(blocks: u64, payload_per_block: u64) -> DatasetFootprint {
+        DatasetFootprint {
+            blocks,
+            decoded_bytes: blocks * (BLOCK_FIXED_BYTES + payload_per_block),
+            encoded_bytes: blocks * (T2_FIXED_BYTES + payload_per_block),
+        }
+    }
+
+    /// Budget beyond the combined footprints: every dataset gets its
+    /// full decoded footprint in T1 and full encoded footprint in T2 —
+    /// nothing is granted that cannot be used.
+    #[test]
+    fn ample_budget_grants_full_footprints() {
+        let a = fp(10, 120);
+        let b = fp(4, 500);
+        let plan = BudgetPlanner::new(1 << 30)
+            .dataset(0, "a", a, 1.0)
+            .dataset(1, "b", b, 7.0)
+            .plan();
+        assert_eq!(plan.datasets[0].t1_bytes, a.decoded_bytes);
+        assert_eq!(plan.datasets[0].t2_bytes, a.encoded_bytes);
+        assert_eq!(plan.datasets[1].t1_bytes, b.decoded_bytes);
+        assert_eq!(plan.datasets[1].t2_bytes, b.encoded_bytes);
+        assert!(plan.t1_total() + plan.t2_total() <= plan.total_bytes);
+    }
+
+    /// Scarce budget: grants follow the traffic weights and never exceed
+    /// either the per-dataset footprint or the total.
+    #[test]
+    fn scarce_budget_follows_weights_within_caps() {
+        let a = fp(100, 120);
+        let b = fp(100, 120);
+        let total = a.total_bytes() / 2; // room for ~a quarter of each
+        let plan = BudgetPlanner::new(total)
+            .dataset(0, "cold", a, 1.0)
+            .dataset(1, "hot", b, 3.0)
+            .plan();
+        let ga = plan.datasets[0].t1_bytes + plan.datasets[0].t2_bytes;
+        let gb = plan.datasets[1].t1_bytes + plan.datasets[1].t2_bytes;
+        assert!(gb > ga * 2, "3:1 weights must skew the grants: {plan:?}");
+        assert!(ga + gb <= total);
+        for (d, f) in plan.datasets.iter().zip([a, b]) {
+            assert!(d.t1_bytes <= f.decoded_bytes);
+            assert!(d.t2_bytes <= f.encoded_bytes);
+        }
+    }
+
+    /// A small hot dataset cannot soak up bytes beyond its footprint:
+    /// the overflow waterfalls to the dataset that can use it.
+    #[test]
+    fn caps_redistribute_to_uncapped_datasets() {
+        let small = fp(2, 120);
+        let big = fp(1000, 120);
+        let total = small.total_bytes() * 10;
+        let plan = BudgetPlanner::new(total)
+            .dataset(0, "small-hot", small, 100.0)
+            .dataset(1, "big-cold", big, 1.0)
+            .plan();
+        let gs = plan.datasets[0].t1_bytes + plan.datasets[0].t2_bytes;
+        let gb = plan.datasets[1].t1_bytes + plan.datasets[1].t2_bytes;
+        assert_eq!(gs, small.total_bytes(), "hot dataset capped at its footprint");
+        assert!(
+            gb >= total - gs - 1,
+            "everything past the cap flows to the big dataset: {plan:?}"
+        );
+    }
+
+    /// No observed traffic (all weights zero) degrades to a uniform
+    /// split rather than granting nothing.
+    #[test]
+    fn zero_weights_degrade_to_uniform() {
+        let a = fp(100, 120);
+        let total = a.total_bytes(); // half of the combined footprint
+        let plan = BudgetPlanner::new(total)
+            .dataset(0, "a", a, 0.0)
+            .dataset(1, "b", a, 0.0)
+            .plan();
+        let ga = plan.datasets[0].t1_bytes + plan.datasets[0].t2_bytes;
+        let gb = plan.datasets[1].t1_bytes + plan.datasets[1].t2_bytes;
+        assert!(ga > 0 && gb > 0);
+        assert!((ga as i64 - gb as i64).unsigned_abs() <= 1, "{plan:?}");
+    }
+
+    /// The tier split honors `t1_fraction` under scarcity and spills
+    /// unusable T2 bytes back to T1.
+    #[test]
+    fn tier_split_honors_fraction_and_spills() {
+        let a = fp(100, 120);
+        let total = a.decoded_bytes / 2;
+        // Pure T1 preference: everything lands in T1.
+        let plan = BudgetPlanner::new(total)
+            .t1_fraction(1.0)
+            .dataset(0, "a", a, 1.0)
+            .plan();
+        assert_eq!(plan.datasets[0].t1_bytes, total);
+        assert_eq!(plan.datasets[0].t2_bytes, 0);
+        // Even split under scarcity: half the grant per tier.
+        let plan = BudgetPlanner::new(total)
+            .t1_fraction(0.5)
+            .dataset(0, "a", a, 1.0)
+            .plan();
+        let d = &plan.datasets[0];
+        assert!(d.t1_bytes > 0 && d.t2_bytes > 0);
+        assert!((d.t1_bytes as i64 - d.t2_bytes as i64).unsigned_abs() <= 1, "{plan:?}");
+        // Zero T1 preference but a grant beyond the encoded footprint:
+        // the surplus must spill back into T1, not vanish.
+        let plan = BudgetPlanner::new(a.total_bytes())
+            .t1_fraction(0.0)
+            .dataset(0, "a", a, 1.0)
+            .plan();
+        let d = &plan.datasets[0];
+        assert_eq!(d.t2_bytes, a.encoded_bytes);
+        assert_eq!(d.t1_bytes, a.total_bytes() - a.encoded_bytes);
+    }
+}

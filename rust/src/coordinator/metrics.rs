@@ -221,8 +221,12 @@ pub struct ServeReport {
     /// Aggregate reader I/O across every worker's readers — what
     /// actually reached storage (cache hits contribute nothing here).
     pub io: IoStats,
-    /// Cache counters at the end of the run.
+    /// Cache counters at the end of the run (both tiers; see
+    /// [`CacheStats`] for the T1/T2 breakdown).
     pub cache: CacheStats,
+    /// Per-dataset traffic and residency, `(label, stats)` in serving
+    /// order — how the budget partitioning actually played out.
+    pub per_dataset: Vec<(String, crate::cache::DatasetStats)>,
 }
 
 impl ServeReport {
@@ -321,6 +325,7 @@ mod tests {
             elements_returned: 10,
             io: IoStats::default(),
             cache: CacheStats::default(),
+            per_dataset: Vec::new(),
         };
         assert!((r.qps() - 50.0).abs() < 1e-12);
         let idle = ServeReport { wall_s: 0.0, ..r };

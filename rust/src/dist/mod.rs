@@ -50,7 +50,7 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::abhsf::load::DecodedBlock;
+use crate::cache::CachedBlock;
 use crate::coordinator::cluster::{Msg, WorkerCtx};
 use crate::coordinator::error::DatasetError;
 use crate::formats::Csr;
@@ -397,7 +397,7 @@ impl LocalOperator for CsrOperator<'_> {
 pub struct BlockOperator<'r, 'c> {
     reader: &'r DatasetReader<'c>,
     file: usize,
-    blocks: Option<Vec<Arc<DecodedBlock>>>,
+    blocks: Option<Vec<Arc<CachedBlock>>>,
     row_win: (u64, u64),
     col_win: (u64, u64),
 }

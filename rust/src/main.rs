@@ -35,7 +35,7 @@ use std::time::Duration;
 
 use abhsf::abhsf::load::read_header;
 use abhsf::abhsf::{CostModel, MeasuredCosts, Scheme};
-use abhsf::cache::BlockCache;
+use abhsf::cache::{BlockCache, BudgetPlanner, DatasetFootprint};
 use abhsf::coordinator::{Cluster, Dataset, DistReport, InMemFormat, StoreOptions, Strategy};
 use abhsf::dist::solvers::{conjugate_gradient, lanczos, power_iteration, SolveOutcome};
 use abhsf::dist::{
@@ -49,7 +49,7 @@ use abhsf::h5::H5Reader;
 use abhsf::mapping::{Block2d, Colwise, CyclicRows, ProcessMapping, Rowwise};
 use abhsf::net::{RemoteFs, RetryPolicy, ServeOptions};
 use abhsf::parfs::FsModel;
-use abhsf::serve::ServeConfig;
+use abhsf::serve::{ServeConfig, Workload};
 use abhsf::spmv::SpmvParts;
 use abhsf::util::args::Args;
 use abhsf::util::bench::Table;
@@ -199,7 +199,14 @@ fn print_usage() {
          \x20               --query-seed S --spmv-every K (0 = no SpMV queries) \
          --gen (store a generated\n\
          \x20               workload first when the directory holds no dataset; \
-         implied on --backend mem)\n"
+         implied on --backend mem)\n\
+         \x20               --workload uniform|zipf:THETA|hotspot:K  query-key \
+         distribution (default uniform)\n\
+         \x20               --t2-budget auto|off|BYTES  encoded-tier slice of \
+         --budget (default auto:\n\
+         \x20               footprint-planned; T1+T2 always equals --budget) \
+         --calibrate PATH (price T2\n\
+         \x20               re-decodes from the measured kernel table)\n"
     );
 }
 
@@ -960,6 +967,10 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         queries: a.parse_or("queries", 200u64)?,
         seed: a.parse_or("query-seed", 42u64)?,
         spmv_every: a.parse_or("spmv-every", 16u64)?,
+        workload: a
+            .str_or("workload", "uniform")
+            .parse::<Workload>()
+            .map_err(|e| usage_error(format!("--workload: {e}")))?,
     };
 
     let mut datasets = Vec::with_capacity(dirs.len());
@@ -1003,12 +1014,53 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         datasets.push(dataset);
     }
 
-    let cache = BlockCache::with_budget(budget);
+    // --t2-budget: how the total --budget splits across tiers.
+    //   auto (default) — measure each dataset's footprint from its block
+    //     directories and plan the split (uniform traffic weights: no
+    //     traffic has been observed yet; a long-running deployment would
+    //     replan from `dataset_stats`);
+    //   off | 0 — single-tier T1 (the pre-tiering behavior);
+    //   BYTES — explicit T2 slice of the budget, the rest is T1.
+    // T1 + T2 always equals --budget, so tiered and single-tier runs at
+    // the same --budget are directly comparable.
+    let t2_arg = a.str_or("t2-budget", "auto");
+    let (cache, plan) = match t2_arg.as_str() {
+        "off" | "0" => (BlockCache::with_budget(budget), None),
+        "auto" => {
+            let mut planner = BudgetPlanner::new(budget);
+            for (i, (d, label)) in datasets.iter().zip(&dirs).enumerate() {
+                let fp = DatasetFootprint::measure(d)?;
+                planner = planner.dataset(i as u64, label.clone(), fp, 1.0);
+            }
+            let plan = planner.plan();
+            let t2 = plan.t2_total().min(budget);
+            let cache = BlockCache::with_tiered_budget(budget - t2, t2);
+            // Register ids in dataset order so the plan's ids line up
+            // with the ones the serving readers will look up.
+            for d in &datasets {
+                let st = d.storage();
+                cache.dataset_id(st.medium(), &st.canonical(d.dir()));
+            }
+            cache.apply_plan(&plan);
+            (cache, Some(plan))
+        }
+        bytes => {
+            let t2 = human::parse_bytes(bytes)
+                .map_err(|e| usage_error(format!("--t2-budget: {e}")))?
+                .min(budget);
+            (BlockCache::with_tiered_budget(budget - t2, t2), None)
+        }
+    };
+    if let Some(path) = a.get("calibrate") {
+        // Measured kernel table: prices every T2 revival's re-decode.
+        cache.set_measured_costs(load_measured_table(std::path::Path::new(path))?);
+    }
     let report = abhsf::serve::run_closed_loop(&datasets, &cache, &cfg)?;
     println!(
-        "serve           : {} queries ({} spmv) over {} dataset(s), {} threads",
+        "serve           : {} queries ({} spmv, workload {}) over {} dataset(s), {} threads",
         human::count(report.queries),
         human::count(report.spmv_queries),
+        cfg.workload,
         datasets.len(),
         report.threads,
     );
@@ -1033,16 +1085,59 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     );
     let cs = report.cache;
     println!(
-        "cache           : {:.1}% hit rate ({} hits, {} misses, {} coalesced), \
+        "cache           : {:.1}% hit rate ({} hits, {} t2 hits, {} misses, {} coalesced), \
          {} evictions, resident {} of {} budget",
         cs.hit_rate() * 100.0,
         human::count(cs.hits),
+        human::count(cs.decode_saves),
         human::count(cs.misses),
         human::count(cs.coalesced_waits),
         human::count(cs.evictions),
         human::bytes(cs.resident_bytes),
         human::format_bytes(budget),
     );
+    let priced = if cs.decode_save_ps > 0 {
+        format!(" (~{:.3} ms modeled decode)", cs.decode_save_ps as f64 / 1e9)
+    } else {
+        String::new()
+    };
+    println!(
+        "tiers           : T1 {} in {} blocks ({} protected) of {}, \
+         T2 {} in {} blocks of {}, {} promotions, {} demotions, {} decode-saves{}",
+        human::bytes(cs.resident_bytes),
+        human::count(cs.resident_blocks),
+        human::count(cs.protected_blocks),
+        human::format_bytes(cache.t1_budget_bytes()),
+        human::bytes(cs.t2_resident_bytes),
+        human::count(cs.t2_resident_blocks),
+        human::format_bytes(cache.t2_budget_bytes()),
+        human::count(cs.promotions),
+        human::count(cs.demotions),
+        human::count(cs.decode_saves),
+        priced,
+    );
+    if let Some(plan) = &plan {
+        println!(
+            "budget plan     : T1 {} + T2 {} across {} dataset(s) (footprint-capped waterfill)",
+            human::bytes(plan.t1_total()),
+            human::bytes(plan.t2_total()),
+            plan.datasets.len(),
+        );
+    }
+    if report.per_dataset.len() > 1 {
+        for (label, ds) in &report.per_dataset {
+            println!(
+                "dataset {label}: {:.1}% hit rate ({} hits, {} t2 hits, {} misses), \
+                 T1 {} resident, T2 {} resident",
+                ds.hit_rate() * 100.0,
+                human::count(ds.hits),
+                human::count(ds.decode_saves),
+                human::count(ds.misses),
+                human::bytes(ds.resident_bytes),
+                human::bytes(ds.t2_resident_bytes),
+            );
+        }
+    }
     backend.print_trailer();
     Ok(())
 }

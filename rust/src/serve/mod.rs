@@ -12,8 +12,11 @@
 //!    rectangle intersects the query rectangle are considered (the same
 //!    intersection contract as block-pruned loading);
 //! 2. claims each surviving block from the shared
-//!    [`BlockCache`]: hits are served from memory and **never touch
-//!    storage**, misses are fetched through the VFS read-ahead pipeline
+//!    [`BlockCache`]: T1 hits are served from memory and **never touch
+//!    storage**; a claim that finds the block's *encoded* payload in T2
+//!    re-decodes it in memory (a decode paid, an I/O round trip saved —
+//!    `decode_saves` in the stats); true misses are fetched through the
+//!    VFS read-ahead pipeline
 //!    ([`fetch_blocks`](crate::abhsf::load::fetch_blocks)) and
 //!    published, and blocks already being decoded by another thread are
 //!    awaited (single-flight coalescing);
@@ -32,16 +35,23 @@
 //! [`run_closed_loop`] is the multi-threaded serving harness behind the
 //! `serve` CLI subcommand and `benches/serve.rs`: N worker threads, each
 //! with its own readers over the shared cache, issue seeded random
-//! queries and report throughput, latency percentiles and cache
-//! counters as a [`ServeReport`].
+//! queries under a configurable [`Workload`] — uniform fresh spans, a
+//! Zipfian distribution over a fixed template pool (every thread
+//! derives the *same* pool from the master seed, so the hot set is
+//! common), or a 90/10 hotspot — and report throughput, latency
+//! percentiles, cache counters and a per-dataset breakdown as a
+//! [`ServeReport`].
 
 use std::ops::Range;
+use std::str::FromStr;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::abhsf::load::{default_batch_bytes, fetch_decoded_blocks_batched, BlockDirectory};
 use crate::abhsf::matrix_file_path;
-use crate::cache::{BlockCache, BlockKey, Claim, DecodedBlock, FlightWaiter, LoadToken};
+use crate::cache::{
+    BlockCache, BlockKey, CachedBlock, Claim, DatasetStats, EncodedBlock, FlightWaiter, LoadToken,
+};
 use crate::coordinator::error::DatasetError;
 use crate::coordinator::metrics::ServeReport;
 use crate::coordinator::Dataset;
@@ -127,10 +137,10 @@ impl<'c> DatasetReader<'c> {
     /// lives here).
     fn gather<F>(&self, rect: (u64, u64, u64, u64), mut emit: F) -> Result<(), DatasetError>
     where
-        F: FnMut(&Arc<DecodedBlock>),
+        F: FnMut(&Arc<CachedBlock>),
     {
         for (fi, slot) in self.files.iter().enumerate() {
-            let mut hits: Vec<Arc<DecodedBlock>> = Vec::new();
+            let mut hits: Vec<Arc<CachedBlock>> = Vec::new();
             let mut miss: Vec<usize> = Vec::new();
             let mut tokens: Vec<LoadToken<'_>> = Vec::new();
             let mut waiters: Vec<FlightWaiter> = Vec::new();
@@ -147,10 +157,16 @@ impl<'c> DatasetReader<'c> {
                 };
                 match self.cache.claim(key) {
                     Claim::Hit(block) => hits.push(block),
-                    Claim::Miss(token) => {
-                        miss.push(k);
-                        tokens.push(token);
-                    }
+                    Claim::Miss(mut token) => match token.take_encoded() {
+                        // T2 revival: the claim carried the evicted
+                        // block's encoded payload — re-decode in memory
+                        // and publish, no storage round trip.
+                        Some(enc) => hits.push(revive(token, &enc)?),
+                        None => {
+                            miss.push(k);
+                            tokens.push(token);
+                        }
+                    },
                     Claim::InFlight(waiter) => waiters.push(waiter),
                 }
             }
@@ -222,10 +238,10 @@ impl<'c> DatasetReader<'c> {
     /// makes a block-backed SpMV bit-reproducible across runs and cache
     /// states (DESIGN.md §13); `gather`'s hits-then-misses-then-waiters
     /// emission order would not be.
-    pub fn file_blocks(&self, file: usize) -> Result<Vec<Arc<DecodedBlock>>, DatasetError> {
+    pub fn file_blocks(&self, file: usize) -> Result<Vec<Arc<CachedBlock>>, DatasetError> {
         let slot = &self.files[file];
         let nblocks = slot.dir.entries.len();
-        let mut out: Vec<Option<Arc<DecodedBlock>>> = vec![None; nblocks];
+        let mut out: Vec<Option<Arc<CachedBlock>>> = vec![None; nblocks];
         let mut miss: Vec<usize> = Vec::new();
         let mut tokens: Vec<LoadToken<'_>> = Vec::new();
         let mut waiters: Vec<(usize, FlightWaiter)> = Vec::new();
@@ -239,10 +255,13 @@ impl<'c> DatasetReader<'c> {
             };
             match self.cache.claim(key) {
                 Claim::Hit(block) => out[k] = Some(block),
-                Claim::Miss(token) => {
-                    miss.push(k);
-                    tokens.push(token);
-                }
+                Claim::Miss(mut token) => match token.take_encoded() {
+                    Some(enc) => out[k] = Some(revive(token, &enc)?),
+                    None => {
+                        miss.push(k);
+                        tokens.push(token);
+                    }
+                },
                 Claim::InFlight(waiter) => waiters.push((k, waiter)),
             }
         }
@@ -339,7 +358,7 @@ impl<'c> DatasetReader<'c> {
         let (m, n) = self.dims;
         let mut y = vec![0.0; m as usize];
         self.gather((0, 0, m, n), |block| {
-            let one = [block.as_ref()];
+            let one = [block.block()];
             crate::spmv::SpmvParts::Blocks {
                 m,
                 n,
@@ -348,6 +367,140 @@ impl<'c> DatasetReader<'c> {
             .spmv_into(x, &mut y);
         })?;
         Ok(y)
+    }
+}
+
+/// Publish a T2-carried encoded payload: re-decode in memory through
+/// the same validated constructors the fetch path uses. A decode error
+/// here means the cached bytes are corrupt — fail the flight (so
+/// coalesced waiters error out instead of hanging) and surface it.
+fn revive(token: LoadToken<'_>, enc: &EncodedBlock) -> Result<Arc<CachedBlock>, DatasetError> {
+    match enc.decode() {
+        Ok(decoded) => Ok(token.publish(decoded)),
+        Err(e) => {
+            token.fail(format!("T2 payload re-decode failed: {e}"));
+            Err(DatasetError::Internal(Box::new(e)))
+        }
+    }
+}
+
+/// Query-key distribution of a [`run_closed_loop`] run.
+///
+/// Non-uniform workloads draw from a per-dataset pool of
+/// [`TEMPLATE_POOL`] seeded query templates that every worker thread
+/// derives identically from the master seed — the hot set is *shared*,
+/// which is what makes skew cache-relevant (each thread hammering a
+/// private hot set would never contend for the same blocks).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Workload {
+    /// Fresh random span per query (the historical behavior).
+    Uniform,
+    /// Template ranks drawn with probability ∝ 1/rankᶿ (θ > 0; θ ≈ 1.1
+    /// is the classic heavy skew where a handful of templates dominate).
+    Zipf(f64),
+    /// 90% of queries hit the first `K` templates, 10% spread uniformly
+    /// over the whole pool.
+    Hotspot(u64),
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload::Uniform
+    }
+}
+
+impl FromStr for Workload {
+    type Err = String;
+
+    /// `uniform` | `zipf:THETA` | `hotspot:K`.
+    fn from_str(s: &str) -> Result<Self, String> {
+        if s == "uniform" {
+            return Ok(Workload::Uniform);
+        }
+        if let Some(theta) = s.strip_prefix("zipf:") {
+            let theta: f64 = theta
+                .parse()
+                .map_err(|_| format!("bad zipf exponent {theta:?}"))?;
+            if !theta.is_finite() || theta <= 0.0 {
+                return Err(format!("zipf exponent must be finite and > 0, got {theta}"));
+            }
+            return Ok(Workload::Zipf(theta));
+        }
+        if let Some(k) = s.strip_prefix("hotspot:") {
+            let k: u64 = k.parse().map_err(|_| format!("bad hotspot size {k:?}"))?;
+            if k == 0 {
+                return Err("hotspot size must be >= 1".to_string());
+            }
+            return Ok(Workload::Hotspot(k));
+        }
+        Err(format!(
+            "unknown workload {s:?} (expected uniform | zipf:THETA | hotspot:K)"
+        ))
+    }
+}
+
+impl std::fmt::Display for Workload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Workload::Uniform => write!(f, "uniform"),
+            Workload::Zipf(theta) => write!(f, "zipf:{theta}"),
+            Workload::Hotspot(k) => write!(f, "hotspot:{k}"),
+        }
+    }
+}
+
+/// Size of the per-dataset query-template pool non-uniform workloads
+/// draw from.
+pub const TEMPLATE_POOL: usize = 64;
+
+/// One reusable query shape: a rectangle plus which query kind runs it
+/// (same 1-in-4 kind mix as the uniform stream).
+#[derive(Debug, Clone)]
+struct QueryTemplate {
+    rows: Range<u64>,
+    cols: Range<u64>,
+    kind: u64,
+}
+
+/// The shared template pool of dataset `di`: a pure function of the
+/// master seed and the dataset's index+dims, so every thread (and every
+/// same-seed run) sees the same templates in the same rank order.
+fn template_pool(seed: u64, di: usize, dims: (u64, u64)) -> Vec<QueryTemplate> {
+    let mut rng = Xoshiro256::seed_from_u64(
+        seed ^ 0xA076_1D64_78BD_642F ^ (di as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    (0..TEMPLATE_POOL)
+        .map(|_| QueryTemplate {
+            rows: random_span(&mut rng, dims.0),
+            cols: random_span(&mut rng, dims.1),
+            kind: rng.next_below(4),
+        })
+        .collect()
+}
+
+/// Zipf rank sampler: cumulative weights `Σ 1/rankᶿ`, inverted by
+/// binary search — O(log n) per draw, no rejection.
+struct ZipfRanks {
+    cum: Vec<f64>,
+}
+
+impl ZipfRanks {
+    fn new(n: usize, theta: f64) -> Self {
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for rank in 1..=n {
+            total += (rank as f64).powf(-theta);
+            cum.push(total);
+        }
+        Self { cum }
+    }
+
+    fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        let total = *self.cum.last().expect("non-empty pool");
+        let u = rng.next_f64() * total;
+        self.cum
+            .partition_point(|&c| c <= u)
+            .min(self.cum.len() - 1)
     }
 }
 
@@ -363,6 +516,8 @@ pub struct ServeConfig {
     /// Every `spmv_every`-th query of a thread is a whole-matrix SpMV
     /// (`0` disables SpMV queries).
     pub spmv_every: u64,
+    /// Query-key distribution (see [`Workload`]).
+    pub workload: Workload,
 }
 
 impl Default for ServeConfig {
@@ -372,6 +527,7 @@ impl Default for ServeConfig {
             queries: 200,
             seed: 42,
             spmv_every: 16,
+            workload: Workload::Uniform,
         }
     }
 }
@@ -432,6 +588,16 @@ pub fn run_closed_loop(
             latencies[latencies.len() - 1] * 1e3,
         )
     };
+    // Per-dataset breakdown: same id derivation as `DatasetReader::open`,
+    // so this re-lookup is a pure read of already-registered ids.
+    let per_dataset: Vec<(String, DatasetStats)> = datasets
+        .iter()
+        .map(|d| {
+            let storage = d.storage();
+            let id = cache.dataset_id(storage.medium(), &storage.canonical(d.dir()));
+            (d.dir().display().to_string(), cache.dataset_stats(id))
+        })
+        .collect();
     Ok(ServeReport {
         threads,
         queries: latencies.len() as u64,
@@ -443,6 +609,7 @@ pub fn run_closed_loop(
         elements_returned: elements,
         io,
         cache: cache.stats(),
+        per_dataset,
     })
 }
 
@@ -467,8 +634,20 @@ fn worker(
         spmvs: 0,
         io: IoStats::default(),
     };
+    // Shared query-template pools (identical in every thread — pure
+    // function of the master seed) and the Zipf rank table, built once.
+    let pools: Vec<Vec<QueryTemplate>> = readers
+        .iter()
+        .enumerate()
+        .map(|(di, r)| template_pool(cfg.seed, di, r.dims()))
+        .collect();
+    let zipf = match cfg.workload {
+        Workload::Zipf(theta) => Some(ZipfRanks::new(TEMPLATE_POOL, theta)),
+        _ => None,
+    };
     for q in 0..share {
-        let reader = &readers[rng.next_below(readers.len() as u64) as usize];
+        let di = rng.next_below(readers.len() as u64) as usize;
+        let reader = &readers[di];
         let (m, n) = reader.dims();
         let is_spmv = cfg.spmv_every > 0 && (q + 1) % cfg.spmv_every == 0;
         let q0 = Instant::now();
@@ -478,8 +657,29 @@ fn worker(
             out.elements += y.len() as u64;
             out.spmvs += 1;
         } else {
-            let (rows, cols) = (random_span(&mut rng, m), random_span(&mut rng, n));
-            match rng.next_below(4) {
+            let (rows, cols, kind) = match cfg.workload {
+                Workload::Uniform => (
+                    random_span(&mut rng, m),
+                    random_span(&mut rng, n),
+                    rng.next_below(4),
+                ),
+                Workload::Zipf(_) => {
+                    let t = &pools[di][zipf.as_ref().expect("zipf table built").sample(&mut rng)];
+                    (t.rows.clone(), t.cols.clone(), t.kind)
+                }
+                Workload::Hotspot(k) => {
+                    let pool = &pools[di];
+                    let hot = (k as usize).clamp(1, pool.len()) as u64;
+                    let idx = if rng.chance(0.9) {
+                        rng.next_below(hot)
+                    } else {
+                        rng.next_below(pool.len() as u64)
+                    };
+                    let t = &pool[idx as usize];
+                    (t.rows.clone(), t.cols.clone(), t.kind)
+                }
+            };
+            match kind {
                 0 => out.elements += reader.nnz_in(rows, cols)?,
                 1 => out.elements += reader.row_slice(rows)?.len() as u64,
                 _ => out.elements += reader.rect(rows, cols)?.len() as u64,
@@ -518,5 +718,65 @@ mod tests {
                 assert!(r.end - r.start <= extent.div_ceil(2));
             }
         }
+    }
+
+    #[test]
+    fn workload_parses_and_displays() {
+        assert_eq!("uniform".parse::<Workload>().unwrap(), Workload::Uniform);
+        assert_eq!("zipf:1.1".parse::<Workload>().unwrap(), Workload::Zipf(1.1));
+        assert_eq!("hotspot:8".parse::<Workload>().unwrap(), Workload::Hotspot(8));
+        for bad in [
+            "", "zipfian", "zipf:", "zipf:0", "zipf:-1", "zipf:nan", "hotspot:", "hotspot:0",
+            "hotspot:x",
+        ] {
+            assert!(bad.parse::<Workload>().is_err(), "{bad:?} must not parse");
+        }
+        assert_eq!(Workload::Zipf(1.1).to_string(), "zipf:1.1");
+        assert_eq!(Workload::Hotspot(4).to_string(), "hotspot:4");
+        assert_eq!(Workload::default().to_string(), "uniform");
+    }
+
+    /// θ = 1.1 over a 64-template pool: the head ranks must dominate the
+    /// draw mass (that concentration is what the two-tier bench
+    /// exploits) while every rank stays reachable.
+    #[test]
+    fn zipf_sampler_skews_toward_low_ranks() {
+        let z = ZipfRanks::new(TEMPLATE_POOL, 1.1);
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let mut counts = [0u64; TEMPLATE_POOL];
+        let draws = 20_000u64;
+        for _ in 0..draws {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let head: u64 = counts[..8].iter().sum();
+        assert!(
+            head > draws / 2,
+            "top-8 of {TEMPLATE_POOL} ranks must take over half the draws, got {head}/{draws}"
+        );
+        assert!(
+            counts[0] > counts[TEMPLATE_POOL / 2].saturating_mul(5),
+            "rank 0 ({}) must dwarf mid ranks ({})",
+            counts[0],
+            counts[TEMPLATE_POOL / 2]
+        );
+    }
+
+    /// Template pools are a pure function of (seed, dataset index, dims)
+    /// — the property that makes the hot set common across threads.
+    #[test]
+    fn template_pools_are_deterministic() {
+        let a = template_pool(42, 1, (512, 512));
+        let b = template_pool(42, 1, (512, 512));
+        assert_eq!(a.len(), TEMPLATE_POOL);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((&x.rows, &x.cols, x.kind), (&y.rows, &y.cols, y.kind));
+        }
+        let c = template_pool(42, 2, (512, 512));
+        assert!(
+            a.iter()
+                .zip(&c)
+                .any(|(x, y)| x.rows != y.rows || x.cols != y.cols),
+            "different dataset index must yield a different pool"
+        );
     }
 }

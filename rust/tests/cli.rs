@@ -311,6 +311,54 @@ fn serve_mem_backend_self_contained() {
     assert!(out.contains("hit rate"), "{out}");
 }
 
+/// Serving several `--dir`s prints the per-dataset breakdown (one
+/// `dataset LABEL:` line each) on top of the aggregate report, the
+/// two-tier `tiers` line is always present, and skewed workloads parse.
+#[test]
+fn serve_multiple_dirs_reports_per_dataset() {
+    let out = run_ok(&[
+        "serve", "--backend", "mem", "--dir", "alpha,beta", "--seed-size", "8", "--procs",
+        "2", "--threads", "2", "--queries", "48", "--budget", "256KiB", "--workload",
+        "zipf:1.1",
+    ]);
+    assert!(out.contains("workload zipf:1.1"), "{out}");
+    assert!(out.contains("tiers"), "{out}");
+    assert!(out.contains("budget plan"), "{out}");
+    assert!(out.contains("dataset alpha:"), "{out}");
+    assert!(out.contains("dataset beta:"), "{out}");
+
+    // A single dataset keeps the report aggregate-only.
+    let single = run_ok(&[
+        "serve", "--backend", "mem", "--seed-size", "8", "--procs", "2", "--threads", "2",
+        "--queries", "32", "--budget", "256KiB",
+    ]);
+    assert!(single.contains("tiers"), "{single}");
+    assert!(!single.contains("dataset matrix:"), "{single}");
+}
+
+/// A malformed `--workload` is a usage mistake: exit 2 with usage text,
+/// naming the bad spec.
+#[test]
+fn malformed_workload_is_usage_error() {
+    for bad in ["zipf", "zipf:-1", "hotspot:0", "pareto"] {
+        let out = bin()
+            .args([
+                "serve", "--backend", "mem", "--seed-size", "8", "--procs", "2",
+                "--queries", "8", "--workload", bad,
+            ])
+            .output()
+            .unwrap();
+        assert_eq!(
+            out.status.code(),
+            Some(2),
+            "workload {bad}: stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains("workload"), "workload {bad}: {stderr}");
+    }
+}
+
 /// `serve` against a previously stored dataset on disk; a missing
 /// dataset without `--gen` stays a clean error.
 #[test]

@@ -264,6 +264,36 @@ fn stress_under_small_budget() {
             st.resident_bytes <= budget,
             "residency beyond budget: {st:?}"
         );
+        // `claimed_bytes` vs `resident_bytes`: residency is what the
+        // budget bounds; claimed is what is actually alive. With no
+        // queries in flight only the cache's own Arcs remain, so the two
+        // must agree exactly.
+        assert_eq!(
+            st.claimed_bytes, st.resident_bytes,
+            "idle cache: claimed must equal resident: {st:?}"
+        );
+        // Hold a whole file's blocks while they get evicted out from
+        // under us: residency stays budget-bounded, but the held Arcs
+        // keep their bytes claimed beyond it.
+        let held = reader.file_blocks(0).unwrap();
+        assert!(!held.is_empty());
+        let held_bytes: u64 = held.iter().map(|b| b.decoded_bytes()).sum();
+        let st = cache.stats();
+        assert!(st.resident_bytes <= budget, "budget must still bound residency: {st:?}");
+        assert!(
+            st.claimed_bytes >= st.resident_bytes,
+            "claimed can never undercount residency: {st:?}"
+        );
+        assert!(
+            st.claimed_bytes >= held_bytes,
+            "every held block stays claimed (held {held_bytes}): {st:?}"
+        );
+        drop(held);
+        let st = cache.stats();
+        assert_eq!(
+            st.claimed_bytes, st.resident_bytes,
+            "releasing the held Arcs must return claimed to resident: {st:?}"
+        );
         // Temporal locality survives the pressure: an immediate repeat
         // of a known-nonempty one-element rect is answered from
         // residency (its block is the most recently used, and one block
@@ -373,6 +403,7 @@ fn closed_loop_harness_reports() {
         queries: 64,
         seed: 9,
         spmv_every: 8,
+        workload: abhsf::serve::Workload::Uniform,
     };
     let report =
         abhsf::serve::run_closed_loop(std::slice::from_ref(&dataset), &cache, &cfg).unwrap();
@@ -392,4 +423,127 @@ fn closed_loop_harness_reports() {
         abhsf::serve::run_closed_loop(std::slice::from_ref(&dataset), &cache2, &cfg).unwrap();
     assert_eq!(report.elements_returned, report2.elements_returned);
     assert_eq!(report.spmv_queries, report2.spmv_queries);
+    assert_eq!(report.per_dataset.len(), 1);
+    let (_, ds) = &report.per_dataset[0];
+    assert_eq!(
+        ds.hits + ds.decode_saves + ds.misses,
+        st.hits + st.decode_saves + st.misses,
+        "single dataset: per-dataset traffic must equal the aggregate"
+    );
+}
+
+/// Scan resistance, differential: the hot rect-query hit rate of a
+/// seeded closed loop with a whole-matrix SpMV sweep before every round
+/// stays within a fixed margin of the sweep-free loop at the same
+/// budget. Under plain LRU every sweep flushes the hot set (each sweep
+/// touches the entire working set, twice the budget); under 2Q the hot
+/// blocks sit in the protected queue and the sweeps churn probation
+/// only.
+#[test]
+fn sweeps_keep_hot_rect_hit_rate() {
+    let storage: Arc<dyn Storage> = Arc::new(MemFs::new());
+    let (dataset, _, n) = setup(storage, "scan", 4, 8);
+    let probe = BlockCache::with_budget(u64::MAX);
+    let _ = dataset.reader(&probe).unwrap().rect(0..n, 0..n).unwrap();
+    let ws = probe.stats().resident_bytes;
+
+    // Four small disjoint hot rectangles (≈ one block each — far below
+    // the protected-queue cap at half the working set).
+    let hot: Vec<(u64, u64)> = (0..4).map(|k| (k * n / 4, k * n / 4 + n.div_ceil(8))).collect();
+    let hot_rate = |sweep: bool| -> f64 {
+        let cache = BlockCache::with_budget_sharded(ws / 2, 1);
+        let reader = dataset.reader(&cache).unwrap();
+        // Warm the hot set twice: first touch admits to probation, the
+        // second promotes to the protected queue.
+        for _ in 0..2 {
+            for &(lo, hi) in &hot {
+                let _ = reader.rect(lo..hi, lo..hi).unwrap();
+            }
+        }
+        let x: Vec<f64> = vec![1.0; n as usize];
+        let (mut served, mut claims) = (0u64, 0u64);
+        for _ in 0..6 {
+            if sweep {
+                // A whole-matrix streaming pass — the scan that would
+                // flush the hot set under plain LRU.
+                let _ = reader.spmv(&x).unwrap();
+            }
+            for &(lo, hi) in &hot {
+                let before = cache.stats();
+                let _ = reader.rect(lo..hi, lo..hi).unwrap();
+                let after = cache.stats();
+                served += after.hits - before.hits;
+                claims += (after.hits - before.hits) + (after.misses - before.misses);
+            }
+        }
+        assert!(claims > 0);
+        served as f64 / claims as f64
+    };
+    let base = hot_rate(false);
+    let with_sweeps = hot_rate(true);
+    assert!(
+        base > 0.99,
+        "sweep-free hot set must serve from residency, got {base}"
+    );
+    assert!(
+        with_sweeps >= base - 0.05,
+        "sweeps flushed the hot set: {with_sweeps} vs sweep-free {base}"
+    );
+}
+
+/// Two-tier serving: with T1 far below the working set but T2 sized to
+/// hold the overflow, a warm repeat of the whole-matrix query is served
+/// entirely from memory — T1 hits plus T2 re-decodes, zero storage I/O
+/// — and the revived elements are identical.
+#[test]
+fn two_tier_warm_pass_never_touches_storage() {
+    let storage: Arc<dyn Storage> = Arc::new(MemFs::new());
+    let (dataset, reference, n) = setup(storage, "tiered", 4, 8);
+    let probe = BlockCache::with_budget(u64::MAX);
+    let _ = dataset.reader(&probe).unwrap().rect(0..n, 0..n).unwrap();
+    let ws = probe.stats().resident_bytes;
+
+    let cache = BlockCache::with_tiered_budget_sharded(ws / 4, ws, 1);
+    let reader = dataset.reader(&cache).unwrap();
+    assert_eq!(reader.rect(0..n, 0..n).unwrap(), reference);
+    let st = cache.stats();
+    assert!(st.evictions > 0, "quarter-size T1 must evict: {st:?}");
+    assert!(st.demotions > 0, "evictions must demote into T2: {st:?}");
+    assert!(st.t2_resident_blocks > 0, "{st:?}");
+    let io_cold = reader.io_stats();
+    let misses_cold = st.misses;
+    // Warm pass: every block is either T1-resident or revivable from T2.
+    assert_eq!(reader.rect(0..n, 0..n).unwrap(), reference);
+    let st = cache.stats();
+    let io_warm = reader.io_stats();
+    assert_eq!(
+        (io_cold.bytes, io_cold.ops),
+        (io_warm.bytes, io_warm.ops),
+        "warm two-tier pass touched storage: {st:?}"
+    );
+    assert_eq!(st.misses, misses_cold, "a T2 revival must not count as a miss: {st:?}");
+    assert!(st.decode_saves > 0, "warm pass must revive from T2: {st:?}");
+    assert!(st.resident_bytes <= ws / 4, "T1 budget violated: {st:?}");
+    assert!(st.t2_resident_bytes <= ws, "T2 budget violated: {st:?}");
+}
+
+/// The planner's directory-measured footprint must agree exactly with
+/// the byte accounting the cache applies to fully resident blocks.
+#[test]
+fn measured_footprint_matches_cache_accounting() {
+    use abhsf::cache::DatasetFootprint;
+    let storage: Arc<dyn Storage> = Arc::new(MemFs::new());
+    let (dataset, _, n) = setup(Arc::clone(&storage), "footprint", 3, 8);
+    let (blocks, native, _) = accounting_for(&storage, &dataset);
+    let fp = DatasetFootprint::measure(&dataset).unwrap();
+    assert_eq!(fp.blocks, blocks);
+    assert_eq!(
+        fp.decoded_bytes, native,
+        "footprint must reproduce the cache's per-scheme accounting"
+    );
+    assert!(fp.encoded_bytes < fp.decoded_bytes, "{fp:?}");
+    // And the real cache agrees: ample budget, everything resident.
+    let cache = BlockCache::with_budget(u64::MAX);
+    let _ = dataset.reader(&cache).unwrap().rect(0..n, 0..n).unwrap();
+    assert_eq!(cache.stats().resident_bytes, fp.decoded_bytes);
 }
