@@ -237,6 +237,42 @@ fn main() -> anyhow::Result<()> {
          revived by an in-memory re-decode, never a storage fetch)"
     );
 
+    // Table I: tracing overhead. Same warm workload (ws x2 budget, so the
+    // cache answers nearly every claim and the span machinery is the
+    // dominant per-query delta) served once untraced and once with
+    // `--trace` routing every span to a JSONL sink. The acceptance budget
+    // is <= 5% q/s (DESIGN.md §14); the measured ratio lands in
+    // BENCH_serve.json under "obs_overhead" for CI to shape-check.
+    println!("\n== Table I: tracing overhead (warm serving, ws x2 budget) ==\n");
+    let cache = BlockCache::with_budget(ws * 2);
+    run_closed_loop(std::slice::from_ref(&dataset), &cache, &cfg)?; // prime
+    let untraced = run_closed_loop(std::slice::from_ref(&dataset), &cache, &cfg)?;
+    let trace_path = dir.join("bench-trace.jsonl");
+    abhsf::obs::trace::enable(&trace_path)?;
+    let traced = run_closed_loop(std::slice::from_ref(&dataset), &cache, &cfg)?;
+    abhsf::obs::trace::finish()?;
+    let trace_events = abhsf::obs::trace::read_trace(&trace_path)?.len();
+    let overhead_pct = if traced.qps() > 0.0 {
+        (untraced.qps() / traced.qps() - 1.0) * 100.0
+    } else {
+        0.0
+    };
+    let mut obs_table = Table::new(&["variant", "q/s", "p99 ms", "trace events"]);
+    obs_table.row(&[
+        "untraced".to_string(),
+        format!("{:.0}", untraced.qps()),
+        format!("{:.3}", untraced.p99_ms),
+        "-".to_string(),
+    ]);
+    obs_table.row(&[
+        "traced".to_string(),
+        format!("{:.0}", traced.qps()),
+        format!("{:.3}", traced.p99_ms),
+        human::count(trace_events as u64),
+    ]);
+    obs_table.print();
+    println!("\ntracing overhead: {overhead_pct:.1}% q/s (budget: <= 5%)");
+
     let doc = obj(vec![
         ("bench", Json::str("serve")),
         (
@@ -260,6 +296,15 @@ fn main() -> anyhow::Result<()> {
         ),
         ("results", Json::Arr(json_rows)),
         ("skewed", Json::Arr(skew_rows)),
+        (
+            "obs_overhead",
+            obj(vec![
+                ("untraced_qps", Json::Num(untraced.qps())),
+                ("traced_qps", Json::Num(traced.qps())),
+                ("overhead_pct", Json::Num(overhead_pct)),
+                ("trace_events", Json::num(trace_events as u64)),
+            ]),
+        ),
     ]);
     let path = json_path();
     std::fs::write(&path, format!("{doc}\n"))

@@ -43,6 +43,7 @@ use crate::formats::{Coo, Csr, Element, LocalInfo};
 use crate::h5::dtype::{decode_slice, encode_slice};
 use crate::h5::reader::BatchRequest;
 use crate::h5::{Cursor, H5Reader};
+use crate::obs::trace::{self, Tag};
 
 /// Open cursors over all per-scheme payload datasets.
 struct PayloadCursors<'r> {
@@ -689,6 +690,7 @@ impl BlockDirectory {
     /// Read and resolve the block directory of `r`.
     pub fn read(r: &H5Reader) -> Result<Self> {
         let header = read_header(r)?;
+        let _span = trace::span("dir_walk", &[("blocks", Tag::U(header.blocks))]);
         let s = header.block_size;
         let schemes: Vec<u8> = r.read_all(names::SCHEMES)?;
         let zetas: Vec<u32> = r.read_all(names::ZETAS)?;
@@ -1431,6 +1433,7 @@ where
     let mut stream = r.prefetch(&PAYLOAD_DATASETS, batches)?;
     let mut block_cursor = 0usize;
     for &nblocks in &blocks_per_batch {
+        let _span = trace::span("block_decode", &[("blocks", Tag::U(nblocks as u64))]);
         let mut batch = stream.next(r)?.ok_or_else(|| {
             AbhsfError::Invalid("read-ahead stream ended before the last batch".into())
         })?;
@@ -1502,6 +1505,7 @@ where
             "read-ahead stream yielded an extra batch".into(),
         ));
     }
+    crate::obs::metrics::global().counter("load.blocks_decoded").add(indices.len() as u64);
     Ok(total)
 }
 

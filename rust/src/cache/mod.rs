@@ -49,6 +49,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crate::abhsf::cost::MeasuredCosts;
+use crate::obs::metrics::Counter;
+use crate::obs::trace::{self, Tag};
 
 pub mod planner;
 
@@ -467,6 +469,29 @@ pub struct BlockCache {
     costs: OnceLock<MeasuredCosts>,
     /// `(storage medium, canonical dataset dir)` → assigned dataset id.
     datasets: Mutex<HashMap<(usize, PathBuf), u64>>,
+    obs: ObsCounters,
+}
+
+/// Global-registry handles for the claim-outcome counters, resolved once
+/// at construction so the hot claim path never touches the registry lock.
+#[derive(Debug)]
+struct ObsCounters {
+    hit_t1: Arc<Counter>,
+    hit_t2: Arc<Counter>,
+    miss: Arc<Counter>,
+    inflight: Arc<Counter>,
+}
+
+impl ObsCounters {
+    fn new() -> Self {
+        let reg = crate::obs::metrics::global();
+        Self {
+            hit_t1: reg.counter("cache.claim.hit_t1"),
+            hit_t2: reg.counter("cache.claim.hit_t2"),
+            miss: reg.counter("cache.claim.miss"),
+            inflight: reg.counter("cache.claim.inflight"),
+        }
+    }
 }
 
 impl BlockCache {
@@ -516,6 +541,7 @@ impl BlockCache {
             claimed: Arc::new(AtomicU64::new(0)),
             costs: OnceLock::new(),
             datasets: Mutex::new(HashMap::new()),
+            obs: ObsCounters::new(),
         }
     }
 
@@ -588,7 +614,25 @@ impl BlockCache {
     /// An absent key consults T2 in the same shard under the same lock:
     /// a hit there removes the encoded entry (tiers are exclusive) and
     /// hands it to the loader via [`LoadToken::take_encoded`].
+    ///
+    /// Every claim emits a `cache_claim` trace point tagged with its
+    /// outcome (`hit_t1` / `hit_t2` / `miss` / `inflight`) and bumps the
+    /// matching `cache.claim.*` registry counter — both outside the
+    /// shard lock (DESIGN.md §14).
     pub fn claim(&self, key: BlockKey) -> Claim<'_> {
+        let claim = self.claim_inner(key);
+        let (outcome, counter) = match &claim {
+            Claim::Hit(_) => ("hit_t1", &self.obs.hit_t1),
+            Claim::InFlight(_) => ("inflight", &self.obs.inflight),
+            Claim::Miss(token) if token.encoded.is_some() => ("hit_t2", &self.obs.hit_t2),
+            Claim::Miss(_) => ("miss", &self.obs.miss),
+        };
+        counter.inc();
+        trace::point("cache_claim", &[("outcome", Tag::S(outcome))]);
+        claim
+    }
+
+    fn claim_inner(&self, key: BlockKey) -> Claim<'_> {
         let mut shard = self.shards[self.shard_of(&key)]
             .lock()
             .expect("cache shard poisoned");
@@ -736,6 +780,7 @@ impl BlockCache {
         block: DecodedBlock,
     ) -> Arc<CachedBlock> {
         let bytes = block.decoded_bytes();
+        let _span = trace::span("cache_publish", &[("bytes", Tag::U(bytes))]);
         self.claimed.fetch_add(bytes, Ordering::Relaxed);
         let block = Arc::new(CachedBlock {
             block,

@@ -208,11 +208,19 @@ pub struct ServeReport {
     pub spmv_queries: u64,
     /// Wall time of the whole run (leader-observed), s.
     pub wall_s: f64,
-    /// Per-query latency percentiles across all threads, ms.
+    /// Per-query latency percentiles across all threads, ms. Computed
+    /// from the bounded-memory serving histogram
+    /// ([`crate::obs::metrics::LogHistogram`]), so each percentile is
+    /// within ~2% relative error of the exact order statistic.
     pub p50_ms: f64,
+    /// 90th percentile latency, ms.
+    pub p90_ms: f64,
     /// 99th percentile latency, ms.
     pub p99_ms: f64,
-    /// Slowest single query, ms.
+    /// 99.9th percentile latency, ms.
+    pub p999_ms: f64,
+    /// Slowest single query, ms (exact — the histogram tracks the true
+    /// maximum, not a bucket midpoint).
     pub max_ms: f64,
     /// Elements returned by rect/row-slice queries plus elements counted
     /// by nnz queries (a work proxy; an SpMV query contributes its output
@@ -320,7 +328,9 @@ mod tests {
             spmv_queries: 5,
             wall_s: 2.0,
             p50_ms: 1.0,
+            p90_ms: 1.5,
             p99_ms: 2.0,
+            p999_ms: 2.5,
             max_ms: 3.0,
             elements_returned: 10,
             io: IoStats::default(),

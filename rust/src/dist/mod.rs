@@ -47,7 +47,7 @@
 pub mod solvers;
 
 use std::collections::VecDeque;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::cache::CachedBlock;
@@ -55,8 +55,24 @@ use crate::coordinator::cluster::{Msg, WorkerCtx};
 use crate::coordinator::error::DatasetError;
 use crate::formats::Csr;
 use crate::mapping::{even_starts, MappingDesc};
+use crate::obs::metrics::LogHistogram;
+use crate::obs::trace::{self, Tag};
 use crate::serve::DatasetReader;
 use crate::spmv::kernels::spmv_block_windowed_into;
+
+/// Global-registry handles for the per-SpMV phase histograms
+/// (`dist.exchange_s` / `dist.compute_s`), resolved once so the SpMV
+/// hot path never touches the registry lock.
+fn dist_histograms() -> &'static (Arc<LogHistogram>, Arc<LogHistogram>) {
+    static HANDLES: OnceLock<(Arc<LogHistogram>, Arc<LogHistogram>)> = OnceLock::new();
+    HANDLES.get_or_init(|| {
+        let reg = crate::obs::metrics::global();
+        (
+            reg.histogram("dist.exchange_s"),
+            reg.histogram("dist.compute_s"),
+        )
+    })
+}
 
 /// Contiguous partition of a global vector across `P` ranks: rank `k`
 /// owns entries `[starts[k], starts[k+1])`.
@@ -605,6 +621,10 @@ impl<'a> RankEngine<'a> {
         let ctx = self.ctx;
         let te = Instant::now();
         {
+            let _span = trace::span(
+                "halo_exchange",
+                &[("phase", Tag::S("x_send")), ("rank", Tag::U(me as u64))],
+            );
             let mailbox = &mut self.mailbox;
             for &(dest, start, len) in &self.x_send {
                 let lo = (start - x0) as usize;
@@ -622,7 +642,8 @@ impl<'a> RankEngine<'a> {
                 );
             }
         }
-        self.stats.exchange_s += te.elapsed().as_secs_f64();
+        let te_s = te.elapsed().as_secs_f64();
+        self.stats.exchange_s += te_s;
 
         // 2. Overlap: fetch + decode local blocks while halos fly.
         self.stats.decode_s += op.prefetch()?;
@@ -630,6 +651,10 @@ impl<'a> RankEngine<'a> {
         // 3. Assemble the column-window view of x: own overlap copied
         //    in place, every expected remote segment awaited.
         let tw = Instant::now();
+        let span_wait = trace::span(
+            "halo_exchange",
+            &[("phase", Tag::S("x_wait")), ("rank", Tag::U(me as u64))],
+        );
         let (c0, _) = self.col_win;
         self.x_buf.fill(0.0);
         let own = overlap((x0, x1), self.col_win);
@@ -646,18 +671,27 @@ impl<'a> RankEngine<'a> {
             let lo = (start - c0) as usize;
             self.x_buf[lo..lo + len as usize].copy_from_slice(&vals);
         }
-        self.stats.exchange_s += tw.elapsed().as_secs_f64();
+        drop(span_wait);
+        let tw_s = tw.elapsed().as_secs_f64();
+        self.stats.exchange_s += tw_s;
 
         // 4. Local windowed apply.
         let tc = Instant::now();
+        let span_apply = trace::span("kernel_exec", &[("rank", Tag::U(me as u64))]);
         let (r0, _) = self.row_win;
         self.y_buf.fill(0.0);
         op.apply(&self.x_buf, c0, &mut self.y_buf, r0);
-        self.stats.compute_s += tc.elapsed().as_secs_f64();
+        drop(span_apply);
+        let tc_s = tc.elapsed().as_secs_f64();
+        self.stats.compute_s += tc_s;
 
         // 5. Reduce partials to owners, then fold my owned y in fixed
         //    ascending source order (own partial at own rank position).
         let tr = Instant::now();
+        let span_reduce = trace::span(
+            "halo_exchange",
+            &[("phase", Tag::S("y_reduce")), ("rank", Tag::U(me as u64))],
+        );
         {
             let mailbox = &mut self.mailbox;
             for &(owner, start, len) in &self.y_send {
@@ -693,8 +727,13 @@ impl<'a> RankEngine<'a> {
                 }
             }
         }
-        self.stats.exchange_s += tr.elapsed().as_secs_f64();
+        drop(span_reduce);
+        let tr_s = tr.elapsed().as_secs_f64();
+        self.stats.exchange_s += tr_s;
         self.stats.spmvs += 1;
+        let (exchange, compute) = dist_histograms();
+        exchange.record(te_s + tw_s + tr_s);
+        compute.record(tc_s);
         Ok(())
     }
 

@@ -12,13 +12,25 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::h5::dtype::{decode_slice, Dtype, Scalar};
 use crate::h5::writer::{AttrEntry, ChunkEntry, DatasetEntry};
 use crate::h5::{H5Error, IoStats, Result, MAGIC};
+use crate::obs::metrics::Counter;
+use crate::obs::trace::{self, Tag};
 use crate::vfs::{LocalFs, Storage, StorageRead};
+
+/// Global-registry handles for the chunk-read counters, resolved once so
+/// the per-chunk path pays two relaxed atomic adds, not a registry lock.
+fn vfs_counters() -> &'static (Arc<Counter>, Arc<Counter>) {
+    static HANDLES: OnceLock<(Arc<Counter>, Arc<Counter>)> = OnceLock::new();
+    HANDLES.get_or_init(|| {
+        let reg = crate::obs::metrics::global();
+        (reg.counter("vfs.read_ops"), reg.counter("vfs.read_bytes"))
+    })
+}
 
 /// Read-only view of one h5spm container.
 pub struct H5Reader {
@@ -220,7 +232,13 @@ impl H5Reader {
     ) -> Result<Vec<u8>> {
         let nbytes = chunk.elems as usize * width;
         let mut buf = vec![0u8; nbytes];
-        self.file.read_exact_at(chunk.offset, &mut buf)?;
+        {
+            let _span = trace::span("vfs_read", &[("bytes", Tag::U(nbytes as u64))]);
+            self.file.read_exact_at(chunk.offset, &mut buf)?;
+        }
+        let (ops, bytes) = vfs_counters();
+        ops.inc();
+        bytes.add(nbytes as u64);
         let mut st = self.stats.borrow_mut();
         st.bytes += nbytes as u64;
         st.ops += 1;
@@ -332,8 +350,14 @@ impl H5Reader {
         let file = Arc::clone(&self.file);
         let verify = self.verify_checksums;
         let (tx, rx) = mpsc::sync_channel::<Result<(BatchData, IoStats)>>(1);
+        // The fetcher runs on its own thread: hand it the caller's current
+        // span id so its `prefetch_batch` spans stay linked into the
+        // claiming query's trace chain (DESIGN.md §14).
+        let trace_parent = trace::current_id();
         let handle = std::thread::spawn(move || {
+            trace::adopt_parent(trace_parent);
             for batch in batches {
+                let _span = trace::span("prefetch_batch", &[]);
                 let mut io = IoStats::default();
                 let mut data = Vec::with_capacity(entries.len());
                 let mut failed = None;
@@ -530,7 +554,13 @@ pub(crate) fn fetch_ranges_raw(
         }
         let nbytes = c.elems as usize * width;
         let mut buf = vec![0u8; nbytes];
-        file.read_exact_at(c.offset, &mut buf)?;
+        {
+            let _span = trace::span("vfs_read", &[("bytes", Tag::U(nbytes as u64))]);
+            file.read_exact_at(c.offset, &mut buf)?;
+        }
+        let (ops, bytes) = vfs_counters();
+        ops.inc();
+        bytes.add(nbytes as u64);
         io.bytes += nbytes as u64;
         io.ops += 1;
         if verify && crc32fast::hash(&buf) != c.crc {

@@ -56,6 +56,7 @@ pub mod gen;
 pub mod h5;
 pub mod mapping;
 pub mod net;
+pub mod obs;
 pub mod parfs;
 pub mod repack;
 pub mod runtime;

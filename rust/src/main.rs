@@ -27,7 +27,16 @@
 //! * `calibrate` — inspect a `BENCH_kernels.json` kernel calibration
 //!   table: per calibrated block size, the measured scheme-decision map
 //!   next to the analytic one and how many fills flip;
+//! * `trace`     — summarize a `--trace PATH` JSONL span trace: per-kind
+//!   totals, slowest spans, cache-claim outcomes, and one example query
+//!   chain reconstructed from the parent links;
+//! * `stats`     — query a live `pallas-served` daemon's lifetime
+//!   counters over the wire `Stats` opcode;
 //! * `fig1`      — regenerate the paper's Figure 1 table quickly.
+//!
+//! `load`/`repack`/`serve`/`solve`/`spmv` accept `--trace PATH` to emit
+//! structured span events (DESIGN.md §14) for offline analysis with
+//! `abhsf trace`.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -75,6 +84,8 @@ fn main() {
         "serve" => cmd_serve(argv),
         "served" => cmd_served(argv),
         "calibrate" => cmd_calibrate(argv),
+        "trace" => cmd_trace(argv),
+        "stats" => cmd_stats(argv),
         "fig1" => cmd_fig1(argv),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -146,6 +157,11 @@ fn print_usage() {
          over TCP to remote: clients\n\
          \x20 calibrate  inspect a kernel calibration table \
          (measured vs analytic scheme decisions)\n\
+         \x20 trace      summarize a --trace JSONL span trace (per-kind \
+         totals, slowest spans,\n\
+         \x20            cache-claim outcomes, example query chain)\n\
+         \x20 stats      query a live pallas-served daemon's counters \
+         (--backend remote:HOST:PORT)\n\
          \x20 fig1       regenerate the paper's Figure 1 (quick profile)\n\n\
          Common options: --seed-size N --seed cage|diag|random|rmat --order D\n\
          \x20               --procs P --block-size S --dir PATH \
@@ -170,10 +186,16 @@ fn print_usage() {
          \x20                 (kinds: missing | truncate | fail-writes)\n\
          Net options:    --net-timeout SECS (request timeout; default 10) \
          --net-retries N (default 4)\n\
+         Obs options:    --trace PATH  emit JSONL span events \
+         (load/repack/serve/solve/spmv; summarize\n\
+         \x20               with `abhsf trace PATH`) --metrics  print the \
+         metrics-registry snapshot (serve)\n\
          Served options: --listen ADDR (default 127.0.0.1:7311) --root DIR \
          (default .) --backend local|mem|sim\n\
          \x20               --drop-every N  hang up before every Nth request \
          (transient-fault injection; 0 = off)\n\
+         \x20               --status-every SECS  print a periodic status \
+         line with the live counters (0 = off)\n\
          Store options:  --calibrate PATH  choose block schemes by the measured \
          kernel-cost table\n\
          \x20               (BENCH_kernels.json from `cargo bench --bench \
@@ -208,6 +230,29 @@ fn print_usage() {
          --calibrate PATH (price T2\n\
          \x20               re-decodes from the measured kernel table)\n"
     );
+}
+
+/// `--trace PATH`: start JSONL span tracing for this invocation. The
+/// returned guard flushes and closes the sink when the command returns —
+/// success or error — so the emitted trace is always well formed.
+fn start_trace(a: &Args) -> anyhow::Result<Option<TraceGuard>> {
+    match a.get("trace") {
+        None => Ok(None),
+        Some(path) => {
+            abhsf::obs::trace::enable(std::path::Path::new(path))
+                .map_err(|e| anyhow::anyhow!("opening --trace {path}: {e}"))?;
+            Ok(Some(TraceGuard))
+        }
+    }
+}
+
+/// Closes the global trace sink on drop (see [`start_trace`]).
+struct TraceGuard;
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        let _ = abhsf::obs::trace::finish();
+    }
 }
 
 /// The resolved `--backend` selection: the type-erased storage every
@@ -479,6 +524,7 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
 
 fn cmd_load(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf load", argv, &["same-config", "no-prune"])?;
+    let _trace = start_trace(&a)?;
     let (dataset, backend) = open_dataset(&a)?;
     let format: InMemFormat = a.str_or("format", "csr").parse()?;
     let model = FsModel::anselm_lustre();
@@ -616,6 +662,7 @@ fn cmd_roundtrip(argv: Vec<String>) -> anyhow::Result<()> {
 /// per-part products against the PJRT engine).
 fn cmd_spmv(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf spmv", argv, &["pjrt-check", "resident"])?;
+    let _trace = start_trace(&a)?;
     let iters: usize = a.parse_or("iters", 10usize)?;
     let (dataset, backend) = open_dataset(&a)?;
     let (gm, gn) = dataset.dims();
@@ -810,6 +857,7 @@ fn run_solver<O: LocalOperator + ?Sized>(
 /// CSR parts first.
 fn cmd_solve(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf solve", argv, &["from-blocks"])?;
+    let _trace = start_trace(&a)?;
     let alg = a.str_or("alg", "cg");
     if !matches!(alg.as_str(), "cg" | "power" | "lanczos") {
         return Err(usage_error(format!("unknown --alg {alg} (cg|power|lanczos)")));
@@ -950,7 +998,8 @@ fn print_dist_comm(report: &DistReport, pred: &CommPrediction) {
 /// small generated workload stored into it first, so a self-contained
 /// smoke run is one invocation.
 fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
-    let a = Args::parse("abhsf serve", argv, &["gen"])?;
+    let a = Args::parse("abhsf serve", argv, &["gen", "metrics"])?;
+    let _trace = start_trace(&a)?;
     let backend = parse_backend(&a)?;
     let storage = Arc::clone(&backend.storage);
     let dirs: Vec<String> = a
@@ -1070,8 +1119,9 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         report.wall_s,
     );
     println!(
-        "latency         : p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms",
-        report.p50_ms, report.p99_ms, report.max_ms,
+        "latency         : p50 {:.3} ms, p90 {:.3} ms, p99 {:.3} ms, p99.9 {:.3} ms, \
+         max {:.3} ms",
+        report.p50_ms, report.p90_ms, report.p99_ms, report.p999_ms, report.max_ms,
     );
     println!(
         "elements        : {} returned/counted",
@@ -1138,8 +1188,33 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             );
         }
     }
+    if a.flag("metrics") {
+        print_metrics_snapshot();
+    }
     backend.print_trailer();
     Ok(())
+}
+
+/// `--metrics`: dump the global metrics registry, one line per metric in
+/// name order (counters and gauges as bare values, histograms as
+/// count/quantiles/max).
+fn print_metrics_snapshot() {
+    use abhsf::obs::metrics::MetricSnapshot;
+    for (name, metric) in abhsf::obs::metrics::global().snapshot() {
+        match metric {
+            MetricSnapshot::Counter(v) => println!("metric {name} = {v}"),
+            MetricSnapshot::Gauge(v) => println!("metric {name} = {v}"),
+            MetricSnapshot::Histogram(h) => println!(
+                "metric {name}: count={} p50={:.6} p90={:.6} p99={:.6} p999={:.6} max={:.6}",
+                h.count,
+                h.quantile(0.50),
+                h.quantile(0.90),
+                h.quantile(0.99),
+                h.quantile(0.999),
+                h.max,
+            ),
+        }
+    }
 }
 
 /// `abhsf served` — the `pallas-served` storage daemon: bind `--listen`
@@ -1189,6 +1264,11 @@ fn cmd_served(argv: Vec<String>) -> anyhow::Result<()> {
     );
     if drop_every > 0 {
         println!("fault injection : hanging up before every {drop_every}th request");
+    }
+    let status_every: f64 = a.parse_or("status-every", 0.0f64)?;
+    if status_every > 0.0 {
+        handle.spawn_status_reporter(Duration::from_secs_f64(status_every));
+        println!("status reports  : every {status_every} s");
     }
     // The daemon usually runs piped/backgrounded: push the listening line
     // out now, not at (never-reached) exit.
@@ -1262,6 +1342,68 @@ fn cmd_calibrate(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `abhsf trace` — summarize a `--trace PATH` JSONL span trace: validate
+/// well-formedness (unique ids, every span closed, parents resolve),
+/// then print per-kind totals, the slowest spans, cache-claim outcome
+/// counts, and one example query chain reconstructed from parent links.
+fn cmd_trace(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf trace", argv, &[])?;
+    let path = match a.get("file") {
+        Some(p) => p.to_string(),
+        None => a
+            .positional()
+            .first()
+            .cloned()
+            .ok_or_else(|| usage_error("trace needs a file: abhsf trace FILE (or --file PATH)"))?,
+    };
+    let path = PathBuf::from(path);
+    let events = abhsf::obs::trace::read_trace(&path)
+        .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+    abhsf::obs::trace::check(&events)
+        .map_err(|e| anyhow::anyhow!("malformed trace {}: {e}", path.display()))?;
+    println!("file: {}", path.display());
+    print!("{}", abhsf::obs::trace::summarize(&events));
+    Ok(())
+}
+
+/// `abhsf stats` — query a live `pallas-served` daemon's lifetime
+/// counters over the wire `Stats` opcode, plus a measured ping RTT. The
+/// server's counters mirror a client's [`abhsf::net::NetStats`] view
+/// (DESIGN.md §14), so the two sides can be cross-checked.
+fn cmd_stats(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = Args::parse("abhsf stats", argv, &[])?;
+    let backend = a.str_or("backend", "");
+    let addr = match backend.strip_prefix("remote:") {
+        Some(addr) if !addr.is_empty() => addr.to_string(),
+        _ => {
+            return Err(usage_error(
+                "stats queries a live pallas-served daemon: --backend remote:HOST:PORT",
+            ))
+        }
+    };
+    let policy = RetryPolicy {
+        max_retries: a.parse_or("net-retries", 4u32)?,
+        io_timeout: Duration::from_secs_f64(a.parse_or("net-timeout", 10.0f64)?),
+        ..Default::default()
+    };
+    let remote = RemoteFs::connect_with(&addr, policy)
+        .map_err(|e| anyhow::anyhow!("connecting to pallas-served at {addr}: {e}"))?;
+    let rtt = remote.ping().map_err(|e| anyhow::anyhow!("pinging {addr}: {e}"))?;
+    let stats = remote
+        .server_stats()
+        .map_err(|e| anyhow::anyhow!("querying server stats at {addr}: {e}"))?;
+    println!("pallas-served   : {}", remote.addr());
+    println!("ping            : {:.3} ms", rtt.as_secs_f64() * 1e3);
+    println!("requests        : {}", stats.requests);
+    println!("errors          : {}", stats.errors);
+    println!("bytes in        : {}", human::bytes(stats.bytes_in));
+    println!("bytes out       : {}", human::bytes(stats.bytes_out));
+    println!("connections     : {}", stats.connections);
+    println!("uptime          : {:.1} s", stats.uptime_ms as f64 / 1e3);
+    println!("probe client    : {}", remote.stats());
+    Ok(())
+}
+
 /// Target-mapping parser for configurations derived from a dataset's
 /// global dims (repack / future commands that have no generator at hand).
 fn parse_target_mapping(
@@ -1286,6 +1428,7 @@ fn parse_target_mapping(
 /// and the parfs forecast (repack-then-load vs direct loads).
 fn cmd_repack(argv: Vec<String>) -> anyhow::Result<()> {
     let a = Args::parse("abhsf repack", argv, &["no-prune"])?;
+    let _trace = start_trace(&a)?;
     let out = PathBuf::from(a.str_or("out", "matrix-repacked"));
     let (dataset, backend) = open_dataset(&a)?;
     let p: usize = if a.get("nprocs").is_some() {

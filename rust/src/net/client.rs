@@ -28,9 +28,11 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::net::wire::{self, Reply, Request};
+use crate::net::wire::{self, Reply, Request, ServerStats};
+use crate::obs::metrics::LogHistogram;
+use crate::obs::trace::{self, Tag};
 use crate::util::rng::SplitMix64;
 use crate::vfs::{Storage, StorageRead, StorageWrite};
 
@@ -114,6 +116,9 @@ struct Inner {
     rng: Mutex<SplitMix64>,
     /// The server's `Storage::medium`, learned in the first welcome.
     server_medium: AtomicU64,
+    /// Registry handle: end-to-end RPC latency in seconds, shared with
+    /// every other `RemoteFs` in the process under `"net.rpc_s"`.
+    rpc_s: Arc<LogHistogram>,
 }
 
 /// TCP client backend for `pallas-served`. Cheap to clone (all clones
@@ -155,6 +160,7 @@ impl RemoteFs {
                 retries: AtomicU64::new(0),
                 rng: Mutex::new(SplitMix64::new(seed_of(addr))),
                 server_medium: AtomicU64::new(0),
+                rpc_s: crate::obs::metrics::global().histogram("net.rpc_s"),
             }),
         };
         // Eager handshake: validates the server and learns its medium, so
@@ -247,9 +253,31 @@ impl RemoteFs {
         capped.mul_f64(jitter)
     }
 
+    /// Ask the daemon for its lifetime counters via the wire `Stats`
+    /// opcode (see [`ServerStats`] for how they map onto [`NetStats`]).
+    pub fn server_stats(&self) -> io::Result<ServerStats> {
+        self.call(&Request::Stats)?.into_stats()
+    }
+
+    /// Round-trip a `Ping`, returning the measured RTT.
+    pub fn ping(&self) -> io::Result<Duration> {
+        let t0 = Instant::now();
+        self.call(&Request::Ping)?.into_unit()?;
+        Ok(t0.elapsed())
+    }
+
     /// Issue one request with the full retry loop; the heart of the
-    /// backend.
+    /// backend. Every call is one `net_rpc` trace span and one
+    /// `net.rpc_s` histogram sample (retries included in the duration).
     fn call(&self, req: &Request) -> io::Result<Reply> {
+        let _span = trace::span("net_rpc", &[("op", Tag::S(req.name()))]);
+        let t0 = Instant::now();
+        let result = self.call_inner(req);
+        self.inner.rpc_s.record(t0.elapsed().as_secs_f64());
+        result
+    }
+
+    fn call_inner(&self, req: &Request) -> io::Result<Reply> {
         let mut attempt = 0u32;
         loop {
             match self.try_once(req) {

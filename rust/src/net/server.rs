@@ -23,7 +23,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::net::wire::{self, Reply, Request};
+use crate::net::wire::{self, Reply, Request, ServerStats};
 use crate::vfs::{Storage, StorageRead};
 
 /// How often a connection thread wakes from a blocking read to check the
@@ -64,8 +64,35 @@ struct Shared {
     opts: ServeOptions,
     shutdown: AtomicBool,
     /// Requests received across all connections (drives `drop_every`).
+    /// Counted the way the client's `NetStats.requests` is: one per
+    /// request frame fully read off the wire, whether or not it decodes.
     served: AtomicU64,
+    /// Requests answered with a typed error frame.
+    errors: AtomicU64,
+    /// Request-frame bytes read, including the 4-byte frame headers
+    /// (mirrors `NetStats.wire_sent`; the handshake is excluded).
+    bytes_in: AtomicU64,
+    /// Reply-frame bytes written, including the 4-byte frame headers
+    /// (mirrors `NetStats.wire_received`).
+    bytes_out: AtomicU64,
+    /// Connections accepted over the daemon's lifetime.
+    conns_total: AtomicU64,
+    /// When the daemon started serving (drives `uptime_ms`).
+    started: Instant,
     conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn server_stats(&self) -> ServerStats {
+        ServerStats {
+            requests: self.served.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+            connections: self.conns_total.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// A running daemon: bound socket + accept thread.
@@ -100,6 +127,11 @@ pub fn serve(
         opts,
         shutdown: AtomicBool::new(false),
         served: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+        bytes_in: AtomicU64::new(0),
+        bytes_out: AtomicU64::new(0),
+        conns_total: AtomicU64::new(0),
+        started: Instant::now(),
         conns: Mutex::new(Vec::new()),
     });
 
@@ -124,6 +156,32 @@ impl ServerHandle {
     /// Total requests received so far, across all connections.
     pub fn requests_served(&self) -> u64 {
         self.shared.served.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the daemon's lifetime counters — the same numbers the
+    /// wire-level [`Request::Stats`] opcode answers, but read in-process
+    /// (tests use this for exact cross-checks against client `NetStats`
+    /// without the probe itself perturbing the counters).
+    pub fn stats(&self) -> ServerStats {
+        self.shared.server_stats()
+    }
+
+    /// Spawn a detached reporter thread printing one status line to
+    /// stderr every `every` until shutdown (the CLI's `--status-every`).
+    pub fn spawn_status_reporter(&self, every: Duration) {
+        let shared = Arc::clone(&self.shared);
+        let _ = std::thread::Builder::new()
+            .name("pallas-served-status".into())
+            .spawn(move || {
+                let mut last = Instant::now();
+                while !shared.shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(POLL_TICK.min(every));
+                    if last.elapsed() >= every {
+                        eprintln!("status: {}", shared.server_stats());
+                        last = Instant::now();
+                    }
+                }
+            });
     }
 
     /// Stop accepting, close every connection, join all threads. Safe to
@@ -173,6 +231,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         if shared.shutdown.load(Ordering::SeqCst) {
             return;
         }
+        shared.conns_total.fetch_add(1, Ordering::Relaxed);
         let conn_shared = Arc::clone(&shared);
         let handle = std::thread::Builder::new()
             .name("pallas-served-conn".into())
@@ -209,6 +268,7 @@ fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) -> io::Result<(
             None => return Ok(()), // clean EOF, idle timeout or shutdown
         };
         let n = shared.served.fetch_add(1, Ordering::Relaxed) + 1;
+        shared.bytes_in.fetch_add(4 + frame.len() as u64, Ordering::Relaxed);
         if shared.opts.drop_every > 0 && n % shared.opts.drop_every == 0 {
             // Injected transient fault: hang up *before* decoding, so the
             // request provably did not execute.
@@ -218,18 +278,23 @@ fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) -> io::Result<(
             Ok(r) => r,
             Err(e) => {
                 // Can't attribute a request id; answer id 0 and close.
-                let _ = wire::write_frame(
-                    &mut stream,
-                    &wire::encode_err(0, e.kind(), &e.to_string()),
-                );
+                shared.errors.fetch_add(1, Ordering::Relaxed);
+                let payload = wire::encode_err(0, e.kind(), &e.to_string());
+                if wire::write_frame(&mut stream, &payload).is_ok() {
+                    shared.bytes_out.fetch_add(4 + payload.len() as u64, Ordering::Relaxed);
+                }
                 return Ok(());
             }
         };
         let payload = match execute(&req, &shared, &mut cache) {
             Ok(reply) => wire::encode_ok(id, &reply),
-            Err(e) => wire::encode_err(id, e.kind(), &e.to_string()),
+            Err(e) => {
+                shared.errors.fetch_add(1, Ordering::Relaxed);
+                wire::encode_err(id, e.kind(), &e.to_string())
+            }
         };
         wire::write_frame(&mut stream, &payload)?;
+        shared.bytes_out.fetch_add(4 + payload.len() as u64, Ordering::Relaxed);
     }
 }
 
@@ -429,6 +494,9 @@ fn execute(
             Ok(Reply::Path(backend.canonical(&resolve(root, path)?)))
         }
         Request::Ping => Ok(Reply::Unit),
+        // Counter snapshot; includes the Stats request itself (its frame
+        // was read — and counted — before execute ran).
+        Request::Stats => Ok(Reply::Stats(shared.server_stats())),
     }
 }
 

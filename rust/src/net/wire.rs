@@ -221,6 +221,9 @@ pub enum Request {
     },
     /// Liveness probe (no storage side effect).
     Ping,
+    /// Daemon introspection: ask the server for its lifetime counters
+    /// ([`ServerStats`]). No storage side effect.
+    Stats,
 }
 
 impl Request {
@@ -236,6 +239,23 @@ impl Request {
             Request::CreateDirAll { .. } => 7,
             Request::Canonical { .. } => 8,
             Request::Ping => 9,
+            Request::Stats => 10,
+        }
+    }
+
+    /// Stable lower-case operation name (trace-span and metric labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Request::ReadAt { .. } => "read_at",
+            Request::Len { .. } => "len",
+            Request::List { .. } => "list",
+            Request::ReadFile { .. } => "read_file",
+            Request::WriteFile { .. } => "write_file",
+            Request::Rename { .. } => "rename",
+            Request::CreateDirAll { .. } => "create_dir_all",
+            Request::Canonical { .. } => "canonical",
+            Request::Ping => "ping",
+            Request::Stats => "stats",
         }
     }
 
@@ -272,7 +292,7 @@ impl Request {
                 e.path(from);
                 e.path(to);
             }
-            Request::Ping => {}
+            Request::Ping | Request::Stats => {}
         }
         e.0
     }
@@ -302,6 +322,7 @@ impl Request {
             7 => Request::CreateDirAll { dir: d.path()? },
             8 => Request::Canonical { path: d.path()? },
             9 => Request::Ping,
+            10 => Request::Stats,
             other => {
                 return Err(io::Error::new(
                     io::ErrorKind::InvalidData,
@@ -316,6 +337,47 @@ impl Request {
 
 // --------------------------------------------------------------- replies
 
+/// The daemon's lifetime counters, answered to [`Request::Stats`]. The
+/// server counts what the client's `NetStats` counts — request frames
+/// and frame bytes *including* each frame's 4-byte length header,
+/// *excluding* the hello/welcome handshake — so against a healthy
+/// daemon `requests == NetStats.requests`, `bytes_in ==
+/// NetStats.wire_sent` and `bytes_out == NetStats.wire_received`
+/// exactly; under transport faults the client side may exceed the
+/// server side by at most its retry count (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServerStats {
+    /// Request frames fully read off the wire (whether or not they
+    /// decoded or executed).
+    pub requests: u64,
+    /// Requests answered with a typed error frame (plus undecodable
+    /// frames).
+    pub errors: u64,
+    /// Request-frame bytes read, including the 4-byte frame headers.
+    pub bytes_in: u64,
+    /// Reply-frame bytes written, including the 4-byte frame headers.
+    pub bytes_out: u64,
+    /// Milliseconds since the daemon started serving.
+    pub uptime_ms: u64,
+    /// Connections accepted over the daemon's lifetime.
+    pub connections: u64,
+}
+
+impl std::fmt::Display for ServerStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests, {} errors, {} bytes in, {} bytes out, {} connections, up {:.1}s",
+            self.requests,
+            self.errors,
+            self.bytes_in,
+            self.bytes_out,
+            self.connections,
+            self.uptime_ms as f64 / 1e3
+        )
+    }
+}
+
 /// A successful reply's payload shape, tagged by the status byte.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Reply {
@@ -329,6 +391,8 @@ pub enum Reply {
     Path(PathBuf),
     /// Path list (`List`).
     Paths(Vec<PathBuf>),
+    /// Daemon counters (`Stats`).
+    Stats(ServerStats),
 }
 
 impl Reply {
@@ -339,6 +403,7 @@ impl Reply {
             Reply::Num(_) => 2,
             Reply::Path(_) => 3,
             Reply::Paths(_) => 4,
+            Reply::Stats(_) => 5,
         }
     }
 
@@ -381,6 +446,14 @@ impl Reply {
             other => Err(shape_error("Paths", &other)),
         }
     }
+
+    /// Expect the `Stats` shape.
+    pub fn into_stats(self) -> io::Result<ServerStats> {
+        match self {
+            Reply::Stats(s) => Ok(s),
+            other => Err(shape_error("Stats", &other)),
+        }
+    }
 }
 
 fn shape_error(want: &str, got: &Reply) -> io::Error {
@@ -420,6 +493,14 @@ pub fn encode_ok(req_id: u64, reply: &Reply) -> Vec<u8> {
             for p in ps {
                 e.path(p);
             }
+        }
+        Reply::Stats(s) => {
+            e.u64(s.requests);
+            e.u64(s.errors);
+            e.u64(s.bytes_in);
+            e.u64(s.bytes_out);
+            e.u64(s.uptime_ms);
+            e.u64(s.connections);
         }
     }
     e.0
@@ -461,6 +542,14 @@ pub fn decode_reply(frame: &[u8]) -> io::Result<(u64, Result<Reply, WireError>)>
             }
             Ok(Reply::Paths(ps))
         }
+        5 => Ok(Reply::Stats(ServerStats {
+            requests: d.u64()?,
+            errors: d.u64()?,
+            bytes_in: d.u64()?,
+            bytes_out: d.u64()?,
+            uptime_ms: d.u64()?,
+            connections: d.u64()?,
+        })),
         ERR_STATUS => {
             let code = d.u8()?;
             let message = String::from_utf8_lossy(&d.bytes()?).into_owned();
@@ -609,6 +698,22 @@ mod tests {
             path: PathBuf::from("x/../y"),
         });
         roundtrip_request(Request::Ping);
+        roundtrip_request(Request::Stats);
+    }
+
+    #[test]
+    fn request_names_are_stable() {
+        assert_eq!(Request::Ping.name(), "ping");
+        assert_eq!(Request::Stats.name(), "stats");
+        assert_eq!(
+            Request::ReadAt {
+                path: PathBuf::from("f"),
+                offset: 0,
+                len: 1
+            }
+            .name(),
+            "read_at"
+        );
     }
 
     #[test]
@@ -619,6 +724,14 @@ mod tests {
             Reply::Num(42),
             Reply::Path(PathBuf::from("/a/b")),
             Reply::Paths(vec![PathBuf::from("a"), PathBuf::from("b/c")]),
+            Reply::Stats(ServerStats {
+                requests: 100,
+                errors: 2,
+                bytes_in: 12_345,
+                bytes_out: 67_890,
+                uptime_ms: 1_500,
+                connections: 4,
+            }),
         ] {
             let frame = encode_ok(9, &reply);
             let (id, res) = decode_reply(&frame).unwrap();

@@ -1,0 +1,593 @@
+//! Bounded-memory metric primitives and the process-wide registry.
+//!
+//! Three metric kinds, all lock-free on their hot paths:
+//!
+//! * [`Counter`] — a monotonically increasing sum, striped across
+//!   cache-line-padded atomics so concurrent writers do not contend.
+//! * [`Gauge`] — a single settable value (residency, pool sizes).
+//! * [`LogHistogram`] — a fixed table of geometrically sized buckets
+//!   (growth [`HIST_GROWTH`]) covering `[1 ns, ~1000 s]` when values are
+//!   seconds. Memory is O([`HIST_BUCKETS`]) regardless of sample count,
+//!   and any quantile is reported as its bucket's geometric midpoint —
+//!   at most `√1.04 − 1 ≈ 1.98%` relative error from the exact
+//!   nearest-rank statistic. The exact minimum and maximum are tracked
+//!   separately (so `max` is always exact).
+//!
+//! The [`MetricsRegistry`] maps stable dotted names
+//! (`"cache.claim.hit_t1"`, `"net.rpc_s"`, …) to shared handles.
+//! Subsystems resolve their handles once at construction and then touch
+//! only the atomics; the registry lock is never on a hot path. A
+//! process-wide registry is available through [`global`].
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Stripes per [`Counter`] (padded to distinct cache lines).
+const STRIPES: usize = 16;
+
+/// Geometric bucket growth factor of [`LogHistogram`].
+pub const HIST_GROWTH: f64 = 1.04;
+
+/// Smallest distinguishable histogram value; everything at or below
+/// lands in bucket 0.
+const HIST_MIN: f64 = 1e-9;
+
+/// Bucket count: `1.04^720 ≈ 1.9e12`, so seconds-valued samples span
+/// 1 ns to ~1900 s before saturating in the last bucket.
+pub const HIST_BUCKETS: usize = 720;
+
+#[repr(align(64))]
+#[derive(Default)]
+struct Stripe(AtomicU64);
+
+/// A striped monotonic counter: `add` touches one cache-line-private
+/// atomic chosen by the calling thread, `get` sums all stripes.
+#[derive(Default)]
+pub struct Counter {
+    stripes: [Stripe; STRIPES],
+}
+
+/// Stable per-thread stripe index (assigned on first use).
+fn stripe_index() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static IDX: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    IDX.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v % STRIPES
+    })
+}
+
+impl Counter {
+    /// New zeroed counter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` (relaxed; one uncontended atomic op per call).
+    pub fn add(&self, n: u64) {
+        self.stripes[stripe_index()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current total across all stripes.
+    pub fn get(&self) -> u64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl std::fmt::Debug for Counter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Counter").field(&self.get()).finish()
+    }
+}
+
+/// A settable instantaneous value (unsigned; `sub` saturates at 0).
+#[derive(Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// New zeroed gauge.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Increase by `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Decrease by `n`, saturating at 0.
+    pub fn sub(&self, n: u64) {
+        let _ = self
+            .value
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(n))
+            });
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Gauge").field(&self.get()).finish()
+    }
+}
+
+/// Add `v` to an f64 stored as atomic bits (CAS loop).
+fn atomic_f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Lower `cell` toward `v` (atomic running minimum) when `min` is true,
+/// raise it (running maximum) otherwise.
+fn atomic_f64_extreme(cell: &AtomicU64, v: f64, min: bool) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let cur_f = f64::from_bits(cur);
+        let better = if min { v < cur_f } else { v > cur_f };
+        if !better {
+            return;
+        }
+        match cell.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Bucket index of value `v` (≤ 0 and sub-[`HIST_MIN`] values land in
+/// bucket 0; values beyond the table saturate in the last bucket).
+fn bucket_of(v: f64) -> usize {
+    if v <= HIST_MIN {
+        return 0;
+    }
+    let r = (v / HIST_MIN).ln() / HIST_GROWTH.ln();
+    (r as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Geometric midpoint of bucket `i` — the reported representative of
+/// every sample that landed there.
+fn bucket_mid(i: usize) -> f64 {
+    HIST_MIN * HIST_GROWTH.powf(i as f64 + 0.5)
+}
+
+/// Concurrent log-bucketed histogram (module docs for the error bound).
+/// `record` is lock-free; `snapshot` captures a mergeable copy.
+pub struct LogHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// New empty histogram (O([`HIST_BUCKETS`]) memory, fixed forever).
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    /// Record one sample (non-finite samples are dropped).
+    pub fn record(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.sum_bits, v);
+        atomic_f64_extreme(&self.min_bits, v, true);
+        atomic_f64_extreme(&self.max_bits, v, false);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Capture a consistent-enough copy for reporting (counters are read
+    /// relaxed; concurrent recorders may straddle the snapshot by one
+    /// sample, which is irrelevant for percentile reporting).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let min = f64::from_bits(self.min_bits.load(Ordering::Relaxed));
+        let max = f64::from_bits(self.max_bits.load(Ordering::Relaxed));
+        HistogramSnapshot {
+            count,
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+            min: if count == 0 { 0.0 } else { min },
+            max: if count == 0 { 0.0 } else { max },
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+
+    /// Fold a snapshot's samples into this histogram (used to aggregate
+    /// per-thread histograms into a registry-held one).
+    pub fn merge_snapshot(&self, snap: &HistogramSnapshot) {
+        if snap.count == 0 {
+            return;
+        }
+        for (b, &n) in self.buckets.iter().zip(&snap.buckets) {
+            if n > 0 {
+                b.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(snap.count, Ordering::Relaxed);
+        atomic_f64_add(&self.sum_bits, snap.sum);
+        atomic_f64_extreme(&self.min_bits, snap.min, true);
+        atomic_f64_extreme(&self.max_bits, snap.max, false);
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("count", &self.count())
+            .finish()
+    }
+}
+
+/// A point-in-time copy of a [`LogHistogram`]: bucket counts plus exact
+/// count/sum/min/max. Merging is exact bucket-count addition, hence
+/// associative and commutative (the floating-point `sum` may differ in
+/// its last bits across merge orders; every quantile is identical).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Total samples.
+    pub count: u64,
+    /// Sum of all samples (exact values, not bucket midpoints).
+    pub sum: f64,
+    /// Exact smallest sample (0.0 when empty).
+    pub min: f64,
+    /// Exact largest sample (0.0 when empty).
+    pub max: f64,
+    buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    /// An empty snapshot (merge identity).
+    pub fn empty() -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+            buckets: vec![0; HIST_BUCKETS],
+        }
+    }
+
+    /// Merge two snapshots into their union.
+    pub fn merge(&self, other: &Self) -> Self {
+        if self.count == 0 {
+            return other.clone();
+        }
+        if other.count == 0 {
+            return self.clone();
+        }
+        Self {
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+            buckets: self
+                .buckets
+                .iter()
+                .zip(&other.buckets)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    /// Nearest-rank quantile, `q ∈ [0, 1]`: the geometric midpoint of
+    /// the bucket holding the rank-`⌈q·count⌉` sample, clamped into
+    /// `[min, max]` — within `√1.04 − 1 ≈ 1.98%` of the exact order
+    /// statistic, and exactly `max` for `q = 1` whenever the largest
+    /// sample sits alone past its bucket's midpoint.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Arithmetic mean of the exact samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// One registered metric handle.
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<LogHistogram>),
+}
+
+/// A read-only view of one metric's current value.
+#[derive(Debug, Clone)]
+pub enum MetricSnapshot {
+    /// Counter total.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(u64),
+    /// Histogram snapshot.
+    Histogram(HistogramSnapshot),
+}
+
+/// Name → metric map (module docs for the contract). Handle resolution
+/// takes the registry lock; using a resolved handle never does.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create the counter `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric kind.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.metrics.lock().expect("metrics registry poisoned");
+        let m = map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())));
+        match m {
+            Metric::Counter(c) => Arc::clone(c),
+            other => panic!("metric {name:?} already registered as {other:?}, wanted a counter"),
+        }
+    }
+
+    /// Get or create the gauge `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric kind.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.metrics.lock().expect("metrics registry poisoned");
+        let m = map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())));
+        match m {
+            Metric::Gauge(g) => Arc::clone(g),
+            other => panic!("metric {name:?} already registered as {other:?}, wanted a gauge"),
+        }
+    }
+
+    /// Get or create the histogram `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric kind.
+    pub fn histogram(&self, name: &str) -> Arc<LogHistogram> {
+        let mut map = self.metrics.lock().expect("metrics registry poisoned");
+        let m = map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(LogHistogram::new())));
+        match m {
+            Metric::Histogram(h) => Arc::clone(h),
+            other => panic!("metric {name:?} already registered as {other:?}, wanted a histogram"),
+        }
+    }
+
+    /// Snapshot every registered metric, in name order.
+    pub fn snapshot(&self) -> Vec<(String, MetricSnapshot)> {
+        let map = self.metrics.lock().expect("metrics registry poisoned");
+        map.iter()
+            .map(|(name, m)| {
+                let snap = match m {
+                    Metric::Counter(c) => MetricSnapshot::Counter(c.get()),
+                    Metric::Gauge(g) => MetricSnapshot::Gauge(g.get()),
+                    Metric::Histogram(h) => MetricSnapshot::Histogram(h.snapshot()),
+                };
+                (name.clone(), snap)
+            })
+            .collect()
+    }
+}
+
+/// The process-wide registry every subsystem registers into.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let c = Arc::new(Counter::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn gauge_set_add_sub() {
+        let g = Gauge::new();
+        g.set(10);
+        g.add(5);
+        g.sub(3);
+        assert_eq!(g.get(), 12);
+        g.sub(100);
+        assert_eq!(g.get(), 0, "sub saturates at zero");
+    }
+
+    /// Seeded random samples across five decades: every histogram
+    /// quantile must sit within the advertised ~2% relative error of
+    /// the exact nearest-rank order statistic, and `max` must be exact.
+    #[test]
+    fn quantiles_within_error_bound_of_exact_sort() {
+        let mut rng = SplitMix64::new(0xC0FFEE);
+        let h = LogHistogram::new();
+        let mut exact: Vec<f64> = Vec::new();
+        let (lo, hi) = ((1e-6f64).ln(), (10.0f64).ln());
+        for _ in 0..20_000 {
+            let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+            let v = (lo + u * (hi - lo)).exp();
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let snap = h.snapshot();
+        assert_eq!(snap.count, exact.len() as u64);
+        assert_eq!(snap.max, *exact.last().unwrap(), "max must be exact");
+        assert_eq!(snap.min, exact[0], "min must be exact");
+        for q in [0.01, 0.10, 0.50, 0.90, 0.99, 0.999, 1.0] {
+            let rank = ((q * exact.len() as f64).ceil() as usize).clamp(1, exact.len());
+            let truth = exact[rank - 1];
+            let got = snap.quantile(q);
+            let rel = (got - truth).abs() / truth;
+            assert!(
+                rel <= 0.0205,
+                "q={q}: histogram {got} vs exact {truth} (rel err {rel:.4})"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_on_bucket_counts() {
+        let mk = |seed: u64| {
+            let mut rng = SplitMix64::new(seed);
+            let h = LogHistogram::new();
+            for _ in 0..5_000 {
+                let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+                h.record(1e-5 + u * u * 3.0);
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (mk(1), mk(2), mk(3));
+        let left = a.merge(&b).merge(&c);
+        let right = a.merge(&b.merge(&c));
+        assert_eq!(left.buckets, right.buckets, "bucket counts are exact");
+        assert_eq!(left.count, right.count);
+        assert_eq!(left.min, right.min);
+        assert_eq!(left.max, right.max);
+        assert!((left.sum - right.sum).abs() <= 1e-9 * left.sum.abs());
+        // And every derived quantile agrees bit-for-bit.
+        for q in [0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(left.quantile(q), right.quantile(q));
+        }
+        // Identity element.
+        assert_eq!(a.merge(&HistogramSnapshot::empty()).buckets, a.buckets);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let snap = LogHistogram::new().snapshot();
+        assert_eq!(snap.count, 0);
+        assert_eq!(snap.quantile(0.5), 0.0);
+        assert_eq!(snap.max, 0.0);
+        assert_eq!(snap.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_snapshot_folds_into_live_histogram() {
+        let a = LogHistogram::new();
+        a.record(0.5);
+        let b = LogHistogram::new();
+        b.record(2.0);
+        b.record(0.001);
+        a.merge_snapshot(&b.snapshot());
+        let snap = a.snapshot();
+        assert_eq!(snap.count, 3);
+        assert_eq!(snap.max, 2.0);
+        assert_eq!(snap.min, 0.001);
+    }
+
+    #[test]
+    fn registry_returns_shared_handles_and_snapshots() {
+        let reg = MetricsRegistry::new();
+        let c1 = reg.counter("a.hits");
+        let c2 = reg.counter("a.hits");
+        c1.add(3);
+        c2.add(4);
+        assert_eq!(reg.counter("a.hits").get(), 7, "same name, same counter");
+        reg.gauge("a.resident").set(99);
+        reg.histogram("a.lat_s").record(0.25);
+        let snap = reg.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["a.hits", "a.lat_s", "a.resident"], "name-ordered");
+        assert!(matches!(snap[0].1, MetricSnapshot::Counter(7)));
+        assert!(matches!(snap[2].1, MetricSnapshot::Gauge(99)));
+        match &snap[1].1 {
+            MetricSnapshot::Histogram(h) => assert_eq!(h.count, 1),
+            other => panic!("wanted histogram, got {other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn registry_rejects_kind_clash() {
+        let reg = MetricsRegistry::new();
+        let _ = reg.counter("x");
+        let _ = reg.gauge("x");
+    }
+}

@@ -1,0 +1,24 @@
+//! Cross-cutting observability: the process-wide metrics registry and
+//! the structured trace-span layer (DESIGN.md §14).
+//!
+//! Every subsystem reports through one of two channels:
+//!
+//! * **Metrics** ([`metrics`]) — always-on, bounded-memory aggregates: a
+//!   [`metrics::MetricsRegistry`] of sharded counters, gauges and
+//!   log-bucketed histograms ([`metrics::LogHistogram`], ≤ ~2% relative
+//!   quantile error) that `cache`, `vfs`/`h5`, `net`, `serve`, `dist`
+//!   and `abhsf::load` register into. The serving harness's latency
+//!   percentiles are computed from these histograms — memory stays
+//!   O(buckets) no matter how many queries run.
+//! * **Traces** ([`trace`]) — opt-in, per-event structured spans: when a
+//!   CLI run passes `--trace PATH`, every directory walk, prefetch
+//!   batch, block decode, cache claim/publish, kernel execution, halo
+//!   exchange and remote round trip emits a JSONL span event with a
+//!   unique id, a parent link and a monotonic timestamp, so one query's
+//!   path through `DatasetReader → BlockCache → vfs → RemoteFs →
+//!   daemon` is reconstructable offline (`abhsf trace FILE`). With
+//!   tracing disabled the instrumentation fast-path is a single relaxed
+//!   atomic load.
+
+pub mod metrics;
+pub mod trace;

@@ -1,0 +1,807 @@
+//! Structured trace spans: opt-in JSONL event emission and the offline
+//! tools (`parse` / `check` / `summarize`) the `trace` CLI subcommand is
+//! built on.
+//!
+//! # Event schema (one JSON object per line)
+//!
+//! | field    | events  | meaning                                        |
+//! |----------|---------|------------------------------------------------|
+//! | `ev`     | all     | `"b"` begin span, `"e"` end span, `"p"` point  |
+//! | `id`     | all     | unique event id (never 0; 0 means "no parent") |
+//! | `parent` | `b`,`p` | id of the enclosing span, 0 for a root         |
+//! | `kind`   | `b`,`p` | span kind (`query`, `vfs_read`, `net_rpc`, …)  |
+//! | `t_us`   | all     | microseconds since the tracer was enabled      |
+//! | *tags*   | `b`,`p` | kind-specific: numbers or identifier strings   |
+//!
+//! Parent links are established by a per-thread span stack: a span begun
+//! while another is open on the same thread becomes its child. Work
+//! handed to another thread (the prefetch fetcher) carries its parent
+//! across via [`current_id`] + [`adopt_parent`]. Events are written
+//! whole-line under one mutex, so a trace file is valid JSONL even with
+//! many recording threads; ids are process-unique and allocated in begin
+//! order, so a `parent` always refers to an *earlier* line — [`check`]
+//! enforces this, plus unique ids, every span closed, and `end ≥ begin`.
+//!
+//! With tracing disabled (the default), every instrumentation site costs
+//! one relaxed atomic load and no allocation.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// A tag value on a begin/point event.
+#[derive(Debug, Clone, Copy)]
+pub enum Tag {
+    /// Unsigned number (bytes, counts, indices).
+    U(u64),
+    /// Static identifier string (outcomes, op names, phases).
+    S(&'static str),
+}
+
+/// The span emitter: id allocator, monotonic clock origin, and the
+/// line-buffered sink. One process-wide instance lives behind the
+/// module-level [`enable`]/[`span`]/[`point`] functions.
+pub struct Tracer {
+    enabled: AtomicBool,
+    next_id: AtomicU64,
+    start: Instant,
+    sink: Mutex<Option<Box<dyn Write + Send>>>,
+}
+
+impl Tracer {
+    fn new() -> Self {
+        Self {
+            enabled: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            start: Instant::now(),
+            sink: Mutex::new(None),
+        }
+    }
+
+    fn t_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    fn alloc_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn write_line(&self, line: &str) {
+        let mut sink = self.sink.lock().expect("trace sink poisoned");
+        if let Some(w) = sink.as_mut() {
+            // A failed write disables tracing rather than failing the
+            // traced operation; `finish` will surface flush errors.
+            if writeln!(w, "{line}").is_err() {
+                self.enabled.store(false, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn emit_open(&self, ev: char, id: u64, parent: u64, kind: &str, tags: &[(&str, Tag)]) {
+        let mut line = String::with_capacity(96);
+        let _ = write!(
+            line,
+            "{{\"ev\":\"{ev}\",\"id\":{id},\"parent\":{parent},\"kind\":\"{kind}\",\"t_us\":{}",
+            self.t_us()
+        );
+        for (key, val) in tags {
+            match val {
+                Tag::U(n) => {
+                    let _ = write!(line, ",\"{key}\":{n}");
+                }
+                Tag::S(s) => {
+                    let _ = write!(line, ",\"{key}\":\"{}\"", escape(s));
+                }
+            }
+        }
+        line.push('}');
+        self.write_line(&line);
+    }
+
+    fn emit_end(&self, id: u64) {
+        self.write_line(&format!("{{\"ev\":\"e\",\"id\":{id},\"t_us\":{}}}", self.t_us()));
+    }
+}
+
+/// Escape a tag string for a JSON literal (tags are identifiers, so
+/// this is almost always a no-op pass-through).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(Tracer::new)
+}
+
+thread_local! {
+    /// Open spans on this thread, innermost last.
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    /// Parent adopted from another thread, used when the stack is empty.
+    static BASE_PARENT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Route span events to a JSONL file at `path` (truncating it) and turn
+/// instrumentation on process-wide.
+pub fn enable(path: &Path) -> io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let t = tracer();
+    *t.sink.lock().expect("trace sink poisoned") = Some(Box::new(BufWriter::new(file)));
+    t.enabled.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Stop tracing and flush + close the sink. A no-op if tracing was
+/// never enabled.
+pub fn finish() -> io::Result<()> {
+    let t = tracer();
+    t.enabled.store(false, Ordering::Relaxed);
+    let sink = t.sink.lock().expect("trace sink poisoned").take();
+    if let Some(mut w) = sink {
+        w.flush()?;
+    }
+    Ok(())
+}
+
+/// Whether instrumentation is currently recording.
+pub fn is_enabled() -> bool {
+    tracer().enabled.load(Ordering::Relaxed)
+}
+
+/// Id of the innermost open span on this thread (or the adopted base
+/// parent), 0 if none — pass to [`adopt_parent`] on a worker thread to
+/// carry the parent link across a `thread::spawn`.
+pub fn current_id() -> u64 {
+    let top = STACK.with(|s| s.borrow().last().copied());
+    top.unwrap_or_else(|| BASE_PARENT.with(|b| b.get()))
+}
+
+/// Make `parent` the default parent for spans opened on this thread
+/// while its own stack is empty (cross-thread parenting).
+pub fn adopt_parent(parent: u64) {
+    BASE_PARENT.with(|b| b.set(parent));
+}
+
+/// Open a span of `kind`; it closes (emitting the end event) when the
+/// returned guard drops. Inert and allocation-free when tracing is off.
+pub fn span(kind: &'static str, tags: &[(&'static str, Tag)]) -> SpanGuard {
+    let t = tracer();
+    if !t.enabled.load(Ordering::Relaxed) {
+        return SpanGuard { id: 0 };
+    }
+    let id = t.alloc_id();
+    t.emit_open('b', id, current_id(), kind, tags);
+    STACK.with(|s| s.borrow_mut().push(id));
+    SpanGuard { id }
+}
+
+/// Emit an instantaneous event of `kind` parented to the current span.
+pub fn point(kind: &'static str, tags: &[(&'static str, Tag)]) {
+    let t = tracer();
+    if !t.enabled.load(Ordering::Relaxed) {
+        return;
+    }
+    let id = t.alloc_id();
+    t.emit_open('p', id, current_id(), kind, tags);
+}
+
+/// Closes its span on drop. The 0-id guard (tracing disabled) does
+/// nothing.
+#[must_use = "dropping the guard ends the span"]
+pub struct SpanGuard {
+    id: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.id == 0 {
+            return;
+        }
+        STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            if stack.last() == Some(&self.id) {
+                stack.pop();
+            } else {
+                // Out-of-order drop — remove wherever it is.
+                stack.retain(|&v| v != self.id);
+            }
+        });
+        tracer().emit_end(self.id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Offline side: parse, check, summarize.
+// ---------------------------------------------------------------------
+
+/// Event kind discriminant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ev {
+    /// Span begin.
+    Begin,
+    /// Span end.
+    End,
+    /// Instantaneous point.
+    Point,
+}
+
+/// One parsed trace line.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Begin / end / point.
+    pub ev: Ev,
+    /// Unique event id.
+    pub id: u64,
+    /// Parent span id, 0 for roots (always 0 on end events).
+    pub parent: u64,
+    /// Span kind (empty on end events).
+    pub kind: String,
+    /// Microseconds since tracing was enabled.
+    pub t_us: u64,
+    /// Kind-specific tags; numeric values are kept as decimal strings.
+    pub tags: Vec<(String, String)>,
+}
+
+/// Minimal parser for the flat JSON objects this module emits.
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl P<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|_| "bad \\u escape")?;
+                            let code = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+                            out.push(char::from_u32(code).ok_or("bad \\u escape")?);
+                            self.i += 4;
+                        }
+                        other => return Err(format!("bad escape {other:?}")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Advance one UTF-8 scalar.
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| "invalid UTF-8")?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<String, String> {
+        let start = self.i;
+        while matches!(self.peek(), Some(b'0'..=b'9') | Some(b'.') | Some(b'-')) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(format!("expected number at byte {start}"));
+        }
+        Ok(std::str::from_utf8(&self.b[start..self.i]).unwrap().to_string())
+    }
+}
+
+/// Parse one trace line into a [`TraceEvent`].
+pub fn parse_line(line: &str) -> Result<TraceEvent, String> {
+    let mut p = P {
+        b: line.trim().as_bytes(),
+        i: 0,
+    };
+    p.eat(b'{')?;
+    let mut ev = None;
+    let mut id = None;
+    let mut parent = 0u64;
+    let mut kind = String::new();
+    let mut t_us = None;
+    let mut tags = Vec::new();
+    loop {
+        let key = p.string()?;
+        p.eat(b':')?;
+        let val = if p.peek() == Some(b'"') {
+            p.string()?
+        } else {
+            p.number()?
+        };
+        match key.as_str() {
+            "ev" => {
+                ev = Some(match val.as_str() {
+                    "b" => Ev::Begin,
+                    "e" => Ev::End,
+                    "p" => Ev::Point,
+                    other => return Err(format!("unknown ev {other:?}")),
+                })
+            }
+            "id" => id = Some(val.parse().map_err(|_| "bad id")?),
+            "parent" => parent = val.parse().map_err(|_| "bad parent")?,
+            "kind" => kind = val,
+            "t_us" => t_us = Some(val.parse().map_err(|_| "bad t_us")?),
+            _ => tags.push((key, val)),
+        }
+        match p.peek() {
+            Some(b',') => p.i += 1,
+            Some(b'}') => {
+                p.i += 1;
+                break;
+            }
+            other => return Err(format!("expected ',' or '}}', got {other:?}")),
+        }
+    }
+    if p.i != p.b.len() {
+        return Err("trailing bytes after object".into());
+    }
+    let ev = ev.ok_or("missing ev")?;
+    let id = id.ok_or("missing id")?;
+    let t_us = t_us.ok_or("missing t_us")?;
+    if id == 0 {
+        return Err("id 0 is reserved".into());
+    }
+    if ev != Ev::End && kind.is_empty() {
+        return Err("begin/point event missing kind".into());
+    }
+    Ok(TraceEvent {
+        ev,
+        id,
+        parent,
+        kind,
+        t_us,
+        tags,
+    })
+}
+
+/// Read and parse a whole trace file; the error names the offending
+/// line number.
+pub fn read_trace(path: &Path) -> io::Result<Vec<TraceEvent>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut events = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = parse_line(line).map_err(|e| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{}:{}: {e}", path.display(), lineno + 1),
+            )
+        })?;
+        events.push(ev);
+    }
+    Ok(events)
+}
+
+/// Structural well-formedness: unique ids, every begin matched by
+/// exactly one later end with `t_us ≥` the begin's, no stray ends, and
+/// every parent link resolving to a span begun earlier in the file.
+pub fn check(events: &[TraceEvent]) -> Result<(), String> {
+    let mut begun: BTreeMap<u64, (u64, bool)> = BTreeMap::new(); // id -> (t_us, closed)
+    let mut seen_ids: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    for (i, e) in events.iter().enumerate() {
+        let at = |msg: String| format!("event {}: {msg}", i + 1);
+        match e.ev {
+            Ev::Begin | Ev::Point => {
+                if !seen_ids.insert(e.id) {
+                    return Err(at(format!("duplicate id {}", e.id)));
+                }
+                if e.parent != 0 && !begun.contains_key(&e.parent) {
+                    return Err(at(format!("parent {} not begun earlier", e.parent)));
+                }
+                if e.ev == Ev::Begin {
+                    begun.insert(e.id, (e.t_us, false));
+                }
+            }
+            Ev::End => match begun.get_mut(&e.id) {
+                None => return Err(at(format!("end for unknown span {}", e.id))),
+                Some((_, closed)) if *closed => {
+                    return Err(at(format!("span {} ended twice", e.id)))
+                }
+                Some((t0, closed)) => {
+                    if e.t_us < *t0 {
+                        return Err(at(format!(
+                            "span {} ends at {} before its begin at {}",
+                            e.id, e.t_us, t0
+                        )));
+                    }
+                    *closed = true;
+                }
+            },
+        }
+    }
+    let open: Vec<u64> = begun
+        .iter()
+        .filter(|(_, (_, closed))| !closed)
+        .map(|(id, _)| *id)
+        .collect();
+    if !open.is_empty() {
+        return Err(format!("{} span(s) never closed: {:?}", open.len(), open));
+    }
+    Ok(())
+}
+
+/// Aggregate for one span kind in a [`Summary`].
+#[derive(Debug, Clone, Default)]
+pub struct KindStat {
+    /// Spans (or points) of this kind.
+    pub count: u64,
+    /// Summed duration in microseconds (0 for points).
+    pub total_us: u64,
+    /// Longest single span in microseconds.
+    pub max_us: u64,
+}
+
+/// What `abhsf trace FILE` prints: per-kind totals, the slowest spans,
+/// the cache-claim outcome breakdown, and one example query's span
+/// chain.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    /// Total parsed events.
+    pub events: usize,
+    /// Completed spans.
+    pub spans: u64,
+    /// Point events.
+    pub points: u64,
+    /// Per-kind aggregates, name-ordered.
+    pub kinds: BTreeMap<String, KindStat>,
+    /// Slowest spans as `(kind, id, duration_us)`, longest first.
+    pub slowest: Vec<(String, u64, u64)>,
+    /// `cache_claim` outcome tag → count.
+    pub claim_outcomes: BTreeMap<String, u64>,
+    /// Indented `kind [tags]` lines for the most diverse query subtree.
+    pub chain: Vec<String>,
+}
+
+/// Number of slowest spans a [`Summary`] retains.
+pub const SLOWEST_KEPT: usize = 10;
+
+/// Build a [`Summary`] from parsed events (tolerant of unmatched spans;
+/// run [`check`] first to reject malformed traces).
+pub fn summarize(events: &[TraceEvent]) -> Summary {
+    struct Node {
+        kind: String,
+        tags: Vec<(String, String)>,
+        begin_us: u64,
+        dur_us: Option<u64>,
+        children: Vec<u64>,
+        is_point: bool,
+    }
+    let mut nodes: BTreeMap<u64, Node> = BTreeMap::new();
+    let mut roots: Vec<u64> = Vec::new();
+    let mut summary = Summary {
+        events: events.len(),
+        ..Summary::default()
+    };
+    for e in events {
+        match e.ev {
+            Ev::Begin | Ev::Point => {
+                nodes.insert(
+                    e.id,
+                    Node {
+                        kind: e.kind.clone(),
+                        tags: e.tags.clone(),
+                        begin_us: e.t_us,
+                        dur_us: if e.ev == Ev::Point { Some(0) } else { None },
+                        children: Vec::new(),
+                        is_point: e.ev == Ev::Point,
+                    },
+                );
+                if e.parent == 0 || !nodes.contains_key(&e.parent) {
+                    roots.push(e.id);
+                } else if let Some(p) = nodes.get_mut(&e.parent) {
+                    p.children.push(e.id);
+                }
+                if e.ev == Ev::Point {
+                    summary.points += 1;
+                    let stat = summary.kinds.entry(e.kind.clone()).or_default();
+                    stat.count += 1;
+                    if e.kind == "cache_claim" {
+                        if let Some((_, outcome)) = e.tags.iter().find(|(k, _)| k == "outcome") {
+                            *summary.claim_outcomes.entry(outcome.clone()).or_default() += 1;
+                        }
+                    }
+                }
+            }
+            Ev::End => {
+                if let Some(n) = nodes.get_mut(&e.id) {
+                    if n.dur_us.is_none() {
+                        let dur = e.t_us.saturating_sub(n.begin_us);
+                        n.dur_us = Some(dur);
+                        summary.spans += 1;
+                        let stat = summary.kinds.entry(n.kind.clone()).or_default();
+                        stat.count += 1;
+                        stat.total_us += dur;
+                        stat.max_us = stat.max_us.max(dur);
+                        summary.slowest.push((n.kind.clone(), e.id, dur));
+                    }
+                }
+            }
+        }
+    }
+    summary.slowest.sort_by(|a, b| b.2.cmp(&a.2));
+    summary.slowest.truncate(SLOWEST_KEPT);
+
+    // Example chain: the query span whose subtree covers the most
+    // distinct kinds (ties → the earlier one).
+    fn collect(
+        nodes: &BTreeMap<u64, Node>,
+        id: u64,
+        depth: usize,
+        kinds: &mut std::collections::BTreeSet<String>,
+        lines: &mut Vec<String>,
+    ) {
+        let Some(n) = nodes.get(&id) else { return };
+        kinds.insert(n.kind.clone());
+        let mut line = format!("{}{}", "  ".repeat(depth), n.kind);
+        if !n.tags.is_empty() {
+            let rendered: Vec<String> = n.tags.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            let _ = write!(line, " [{}]", rendered.join(" "));
+        }
+        if let (Some(d), false) = (n.dur_us, n.is_point) {
+            let _ = write!(line, " ({d} us)");
+        }
+        lines.push(line);
+        for &c in &n.children {
+            collect(nodes, c, depth + 1, kinds, lines);
+        }
+    }
+    let mut best: Option<(usize, Vec<String>)> = None;
+    for (&id, n) in &nodes {
+        if n.kind != "query" {
+            continue;
+        }
+        let mut kinds = std::collections::BTreeSet::new();
+        let mut lines = Vec::new();
+        collect(&nodes, id, 0, &mut kinds, &mut lines);
+        let score = kinds.len();
+        if best.as_ref().is_none_or(|(s, _)| score > *s) {
+            best = Some((score, lines));
+        }
+    }
+    if let Some((_, lines)) = best {
+        summary.chain = lines;
+    }
+    summary
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "trace: {} events, {} spans, {} points",
+            self.events, self.spans, self.points
+        )?;
+        writeln!(
+            f,
+            "{:<16} {:>8} {:>12} {:>10}",
+            "kind", "count", "total_ms", "max_ms"
+        )?;
+        for (kind, stat) in &self.kinds {
+            writeln!(
+                f,
+                "{:<16} {:>8} {:>12.3} {:>10.3}",
+                kind,
+                stat.count,
+                stat.total_us as f64 / 1e3,
+                stat.max_us as f64 / 1e3
+            )?;
+        }
+        if !self.claim_outcomes.is_empty() {
+            let parts: Vec<String> = self
+                .claim_outcomes
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect();
+            writeln!(f, "cache_claim outcomes: {}", parts.join(" "))?;
+        }
+        if !self.slowest.is_empty() {
+            writeln!(f, "slowest spans:")?;
+            for (kind, id, dur) in &self.slowest {
+                writeln!(f, "  {:>10.3} ms  {kind} (id {id})", *dur as f64 / 1e3)?;
+            }
+        }
+        if !self.chain.is_empty() {
+            writeln!(f, "example query chain:")?;
+            for line in &self.chain {
+                writeln!(f, "  {line}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_begin_point_end() {
+        let e = parse_line(
+            r#"{"ev":"b","id":3,"parent":1,"kind":"vfs_read","t_us":120,"bytes":4096,"ds":"values"}"#,
+        )
+        .unwrap();
+        assert_eq!(e.ev, Ev::Begin);
+        assert_eq!((e.id, e.parent, e.t_us), (3, 1, 120));
+        assert_eq!(e.kind, "vfs_read");
+        assert_eq!(
+            e.tags,
+            vec![
+                ("bytes".to_string(), "4096".to_string()),
+                ("ds".to_string(), "values".to_string())
+            ]
+        );
+        let p = parse_line(
+            r#"{"ev":"p","id":4,"parent":3,"kind":"cache_claim","t_us":125,"outcome":"hit_t1"}"#,
+        )
+        .unwrap();
+        assert_eq!(p.ev, Ev::Point);
+        let end = parse_line(r#"{"ev":"e","id":3,"t_us":300}"#).unwrap();
+        assert_eq!(end.ev, Ev::End);
+        assert_eq!(end.parent, 0);
+        assert!(end.kind.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        for bad in [
+            "",
+            "not json",
+            r#"{"ev":"x","id":1,"kind":"q","t_us":1}"#, // unknown ev
+            r#"{"ev":"b","id":0,"kind":"q","t_us":1}"#, // reserved id
+            r#"{"ev":"b","id":1,"t_us":1}"#,            // begin without kind
+            r#"{"ev":"b","id":1,"kind":"q"}"#,          // missing t_us
+            r#"{"ev":"b","id":1,"kind":"q","t_us":1}x"#, // trailing bytes
+        ] {
+            assert!(parse_line(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("plain_id"), "plain_id");
+        assert_eq!(escape("a\"b\\c"), "a\\\"b\\\\c");
+        let e = parse_line(&format!(
+            "{{\"ev\":\"p\",\"id\":1,\"parent\":0,\"kind\":\"k\",\"t_us\":0,\"v\":\"{}\"}}",
+            escape("a\"b\\c")
+        ))
+        .unwrap();
+        assert_eq!(e.tags[0].1, "a\"b\\c");
+    }
+
+    fn parse_all(lines: &[&str]) -> Vec<TraceEvent> {
+        lines.iter().map(|l| parse_line(l).unwrap()).collect()
+    }
+
+    #[test]
+    fn check_accepts_wellformed_nested_trace() {
+        let events = parse_all(&[
+            r#"{"ev":"b","id":1,"parent":0,"kind":"query","t_us":0}"#,
+            r#"{"ev":"b","id":2,"parent":1,"kind":"vfs_read","t_us":5}"#,
+            r#"{"ev":"p","id":3,"parent":1,"kind":"cache_claim","t_us":6,"outcome":"miss"}"#,
+            r#"{"ev":"e","id":2,"t_us":9}"#,
+            r#"{"ev":"e","id":1,"t_us":10}"#,
+        ]);
+        check(&events).unwrap();
+    }
+
+    #[test]
+    fn check_rejects_structural_defects() {
+        // Unclosed span.
+        let e = parse_all(&[r#"{"ev":"b","id":1,"parent":0,"kind":"q","t_us":0}"#]);
+        assert!(check(&e).unwrap_err().contains("never closed"));
+        // Duplicate id.
+        let e = parse_all(&[
+            r#"{"ev":"b","id":1,"parent":0,"kind":"q","t_us":0}"#,
+            r#"{"ev":"b","id":1,"parent":0,"kind":"q","t_us":1}"#,
+        ]);
+        assert!(check(&e).unwrap_err().contains("duplicate id"));
+        // Dangling parent.
+        let e = parse_all(&[r#"{"ev":"b","id":2,"parent":9,"kind":"q","t_us":0}"#]);
+        assert!(check(&e).unwrap_err().contains("not begun earlier"));
+        // End without begin.
+        let e = parse_all(&[r#"{"ev":"e","id":7,"t_us":1}"#]);
+        assert!(check(&e).unwrap_err().contains("unknown span"));
+        // Double end.
+        let e = parse_all(&[
+            r#"{"ev":"b","id":1,"parent":0,"kind":"q","t_us":0}"#,
+            r#"{"ev":"e","id":1,"t_us":1}"#,
+            r#"{"ev":"e","id":1,"t_us":2}"#,
+        ]);
+        assert!(check(&e).unwrap_err().contains("ended twice"));
+        // End before begin time.
+        let e = parse_all(&[
+            r#"{"ev":"b","id":1,"parent":0,"kind":"q","t_us":10}"#,
+            r#"{"ev":"e","id":1,"t_us":4}"#,
+        ]);
+        assert!(check(&e).unwrap_err().contains("before its begin"));
+    }
+
+    #[test]
+    fn summarize_totals_slowest_and_chain() {
+        let events = parse_all(&[
+            r#"{"ev":"b","id":1,"parent":0,"kind":"query","t_us":0,"kq":"rect"}"#,
+            r#"{"ev":"p","id":2,"parent":1,"kind":"cache_claim","t_us":1,"outcome":"miss"}"#,
+            r#"{"ev":"b","id":3,"parent":1,"kind":"vfs_read","t_us":2,"bytes":100}"#,
+            r#"{"ev":"b","id":4,"parent":3,"kind":"net_rpc","t_us":3,"op":"read_at"}"#,
+            r#"{"ev":"e","id":4,"t_us":33}"#,
+            r#"{"ev":"e","id":3,"t_us":40}"#,
+            r#"{"ev":"e","id":1,"t_us":50}"#,
+            r#"{"ev":"b","id":5,"parent":0,"kind":"query","t_us":60}"#,
+            r#"{"ev":"p","id":6,"parent":5,"kind":"cache_claim","t_us":61,"outcome":"hit_t1"}"#,
+            r#"{"ev":"e","id":5,"t_us":62}"#,
+        ]);
+        check(&events).unwrap();
+        let s = summarize(&events);
+        assert_eq!((s.events, s.spans, s.points), (10, 4, 2));
+        assert_eq!(s.kinds["query"].count, 2);
+        assert_eq!(s.kinds["query"].total_us, 52);
+        assert_eq!(s.kinds["query"].max_us, 50);
+        assert_eq!(s.kinds["net_rpc"].total_us, 30);
+        assert_eq!(s.claim_outcomes["miss"], 1);
+        assert_eq!(s.claim_outcomes["hit_t1"], 1);
+        assert_eq!(s.slowest[0], ("query".to_string(), 1, 50));
+        // The richer query (id 1) wins the example chain: its subtree
+        // holds query → cache_claim + vfs_read → net_rpc.
+        let chain = s.chain.join("\n");
+        assert!(chain.contains("query"), "{chain}");
+        assert!(chain.contains("  cache_claim [outcome=miss]"), "{chain}");
+        assert!(chain.contains("  vfs_read"), "{chain}");
+        assert!(chain.contains("    net_rpc [op=read_at]"), "{chain}");
+        let rendered = s.to_string();
+        assert!(rendered.contains("trace: 10 events"), "{rendered}");
+        assert!(rendered.contains("cache_claim outcomes:"), "{rendered}");
+        assert!(rendered.contains("slowest spans:"), "{rendered}");
+        assert!(rendered.contains("example query chain:"), "{rendered}");
+    }
+
+    // The global-tracer end-to-end test lives in `rust/tests/obs.rs`:
+    // enabling the process-wide tracer from a unit test would race other
+    // lib tests (cache claims, serve loops) emitting into the same sink,
+    // so it needs a process of its own.
+}

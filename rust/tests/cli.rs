@@ -30,6 +30,8 @@ fn help_lists_subcommands() {
         "spmv",
         "serve",
         "served",
+        "trace",
+        "stats",
         "fig1",
         "remote:HOST:PORT",
     ] {
@@ -382,6 +384,104 @@ fn serve_on_stored_dataset() {
     assert!(!err.status.success(), "missing dataset must fail without --gen");
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--trace` on a self-contained serve run writes a well-formed JSONL
+/// span trace: unique ids, every span closed, parents resolving to
+/// earlier spans (validated through the library checker), and the
+/// `trace` subcommand summarizes it — per-kind totals, cache-claim
+/// outcomes, and an example query chain reconstructed from parent links.
+#[test]
+fn traced_serve_writes_summarizable_trace() {
+    let path = std::env::temp_dir().join(format!("abhsf-cli-trace-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let paths = path.to_str().unwrap();
+    let out = run_ok(&[
+        "serve", "--backend", "mem", "--seed-size", "8", "--procs", "2", "--threads", "2",
+        "--queries", "64", "--budget", "256KiB", "--trace", paths, "--metrics",
+    ]);
+    assert!(out.contains("throughput"), "{out}");
+    assert!(out.contains("p99.9"), "{out}");
+    assert!(out.contains("metric serve.latency_s"), "{out}");
+    assert!(out.contains("metric serve.queries = 64"), "{out}");
+    assert!(out.contains("metric cache.claim.miss"), "{out}");
+
+    let events = abhsf::obs::trace::read_trace(&path).expect("trace parses as JSONL");
+    abhsf::obs::trace::check(&events).expect("trace is well formed");
+    assert!(
+        events.iter().any(|e| e.kind == "query"),
+        "no query spans in the trace"
+    );
+
+    let summary = run_ok(&["trace", paths]);
+    for needle in [
+        "events",
+        "query",
+        "cache_claim outcomes",
+        "vfs_read",
+        "block_decode",
+        "slowest spans",
+        "example query chain",
+    ] {
+        assert!(summary.contains(needle), "summary missing {needle}:\n{summary}");
+    }
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `trace` on a missing file is a runtime error; without a file at all
+/// it is a usage mistake (exit 2).
+#[test]
+fn trace_subcommand_error_paths() {
+    let out = bin().args(["trace"]).output().unwrap();
+    assert_eq!(
+        out.status.code(),
+        Some(2),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let out = bin()
+        .args(["trace", "/nonexistent-abhsf-trace.jsonl"])
+        .output()
+        .unwrap();
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// `stats` needs a remote backend (usage error without one) and, pointed
+/// at a live `pallas-served` daemon, reports the server's lifetime
+/// counters.
+#[test]
+fn stats_queries_live_daemon() {
+    let out = bin().args(["stats"]).output().unwrap();
+    assert_eq!(
+        out.status.code(),
+        Some(2),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("remote:"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let mut handle = abhsf::net::serve(
+        std::sync::Arc::new(abhsf::vfs::MemFs::new()),
+        "127.0.0.1:0",
+        abhsf::net::ServeOptions::default(),
+    )
+    .expect("bind ephemeral daemon");
+    let backend = format!("remote:{}", handle.addr());
+    let out = run_ok(&["stats", "--backend", &backend]);
+    for needle in ["pallas-served", "ping", "requests", "errors", "uptime", "probe client"] {
+        assert!(out.contains(needle), "stats missing {needle}:\n{out}");
+    }
+    handle.shutdown();
 }
 
 #[test]

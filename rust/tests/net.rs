@@ -366,6 +366,90 @@ fn concurrent_clients_agree() {
     h.shutdown();
 }
 
+// ----------------------------------------------------------------- stats
+
+/// On a healthy daemon the server-observed counters equal the client's
+/// [`abhsf::net::NetStats`] view *exactly*: every request frame the
+/// client counted was fully read and counted by the server, `bytes_in`
+/// mirrors `wire_sent_bytes`, `bytes_out` mirrors `wire_received_bytes`
+/// (handshakes excluded on both sides). The in-process
+/// [`ServerHandle::stats`] accessor makes the comparison exact — the
+/// wire `Stats` probe itself is then counted as one more request.
+#[test]
+fn server_counters_match_client_netstats_on_healthy_daemon() {
+    let mem = mem_dataset();
+    let mut h = serve_root(Arc::new(mem.clone()), ServeOptions::default());
+    let fs = client(&h);
+    let dataset = Dataset::open_on(Arc::new(fs.clone()), DIR).unwrap();
+    let _ = load_coo(&dataset, &Cluster::new(P, 8));
+
+    let cs = fs.stats();
+    assert_eq!(cs.retries, 0, "healthy daemon needed retries: {cs}");
+    let ss = h.stats();
+    assert_eq!(ss.requests, cs.requests, "server {ss} vs client {cs}");
+    assert_eq!(ss.bytes_in, cs.wire_sent_bytes, "server {ss} vs client {cs}");
+    assert_eq!(ss.bytes_out, cs.wire_received_bytes, "server {ss} vs client {cs}");
+    assert_eq!(ss.errors, 0, "{ss}");
+    assert!(ss.connections >= 1, "{ss}");
+
+    // Over the wire: the probe's own request frame is read — and counted
+    // — before the reply snapshot is taken, so `requests` grows by
+    // exactly the probe.
+    let ws = fs.server_stats().unwrap();
+    assert_eq!(ws.requests, ss.requests + 1, "wire {ws} vs snapshot {ss}");
+    assert!(ws.bytes_in > ss.bytes_in, "wire {ws} vs snapshot {ss}");
+    assert!(ws.uptime_ms >= ss.uptime_ms, "wire {ws} vs snapshot {ss}");
+
+    // Ping round-trips and measures a finite RTT.
+    let rtt = fs.ping().unwrap();
+    assert!(rtt.as_secs_f64() >= 0.0);
+    h.shutdown();
+}
+
+/// Under transient connection drops the client may count attempts the
+/// server never saw (a frame written into a connection the daemon had
+/// already hung up on), but never the other way around — the divergence
+/// is bounded by the retry count, and dropped frames the server *did*
+/// read before hanging up are counted on both sides.
+#[test]
+fn server_counters_bounded_by_retries_under_drops() {
+    let mem = mem_dataset();
+    let mut h = serve_root(
+        Arc::new(mem.clone()),
+        ServeOptions {
+            drop_every: 4,
+            ..Default::default()
+        },
+    );
+    let fs = client(&h);
+    let dataset = Dataset::open_on(Arc::new(fs.clone()), DIR).unwrap();
+    let _ = load_coo(&dataset, &Cluster::new(P, 8));
+
+    let cs = fs.stats();
+    let ss = h.stats();
+    assert!(cs.retries >= 1, "drop_every=4 produced no retries: {cs}");
+    assert!(
+        ss.requests <= cs.requests,
+        "server saw frames the client never sent: server {ss} vs client {cs}"
+    );
+    assert!(
+        cs.requests - ss.requests <= cs.retries,
+        "divergence beyond the retry budget: server {ss} vs client {cs}"
+    );
+    assert!(
+        ss.bytes_in <= cs.wire_sent_bytes,
+        "server read more than the client wrote: server {ss} vs client {cs}"
+    );
+    // Hang-ups are transport faults, not request errors.
+    assert_eq!(ss.errors, 0, "{ss}");
+    // Every client reconnect is a fresh accepted connection.
+    assert!(
+        ss.connections >= 1 + cs.reconnects,
+        "server {ss} vs client {cs}"
+    );
+    h.shutdown();
+}
+
 // -------------------------------------------------------------- protocol
 
 /// A client speaking the wrong protocol version gets the server's

@@ -1,0 +1,48 @@
+//! End-to-end exercise of the process-wide tracer (`abhsf::obs::trace`).
+//!
+//! This is deliberately the only test in this binary: the tracer is
+//! process-global, and any concurrently running test that touches an
+//! instrumented subsystem (cache claims, serve loops) would emit into
+//! the enabled sink — a span of theirs still open at `finish()` would
+//! fail the well-formedness check. One test per process keeps the file
+//! deterministic.
+
+use abhsf::obs::trace::{
+    adopt_parent, check, current_id, enable, finish, is_enabled, point, read_trace, span,
+    summarize, Tag,
+};
+
+/// Enable into a temp file, emit nested spans (including a cross-thread
+/// adopted parent), finish, then parse + check + summarize the file.
+#[test]
+fn global_tracer_end_to_end() {
+    let path = std::env::temp_dir().join(format!("abhsf-obs-trace-{}.jsonl", std::process::id()));
+    assert!(!is_enabled());
+    let g = span("query", &[("kq", Tag::S("noop"))]);
+    drop(g); // inert: must not emit once enabled later
+    enable(&path).unwrap();
+    assert!(is_enabled());
+    {
+        let _q = span("query", &[("kq", Tag::S("rect")), ("n", Tag::U(7))]);
+        point("cache_claim", &[("outcome", Tag::S("miss"))]);
+        let parent = current_id();
+        assert_ne!(parent, 0);
+        let handle = std::thread::spawn(move || {
+            adopt_parent(parent);
+            let _b = span("prefetch_batch", &[("ranges", Tag::U(3))]);
+            let _v = span("vfs_read", &[("bytes", Tag::U(4096))]);
+        });
+        handle.join().unwrap();
+    }
+    finish().unwrap();
+    assert!(!is_enabled());
+    let events = read_trace(&path).unwrap();
+    check(&events).unwrap();
+    let s = summarize(&events);
+    assert_eq!(s.spans, 3);
+    assert_eq!(s.points, 1);
+    let chain = s.chain.join("\n");
+    assert!(chain.contains("prefetch_batch"), "{chain}");
+    assert!(chain.contains("    vfs_read"), "{chain}");
+    let _ = std::fs::remove_file(&path);
+}
